@@ -1,0 +1,53 @@
+//! Scaling study: sweep node counts × fabrics × comm modes for any model
+//! in the zoo and print the weak-scaling efficiency tables (a
+//! generalization of the paper's Fig. 2 workflow).
+//!
+//! Run: `cargo run --release --example scaling_study -- [--model resnet50]
+//!       [--nodes 1,2,4,...,256] [--batch 32]`
+
+use mlsl::collectives::PriorityPolicy;
+use mlsl::engine::{simulate, CommMode, EngineConfig};
+use mlsl::fabric::topology::Topology;
+use mlsl::metrics::print_table;
+use mlsl::models::ModelDesc;
+use mlsl::util::cli::Args;
+use mlsl::util::stats::fmt_ns;
+
+fn main() {
+    let args = Args::parse();
+    let model_name = args.str_or("model", "resnet50");
+    let model = ModelDesc::by_name(&model_name).expect("--model");
+    let nodes = args.usize_list_or("nodes", &[1, 2, 4, 8, 16, 32, 64, 128, 256]);
+    let batch = args.usize_or("batch", model.default_batch);
+
+    for topo in [Topology::omnipath_100g(), Topology::eth_10g()] {
+        for (mode_name, mode) in [
+            ("MLSL (overlap+priority)", CommMode::MlslAsync { comm_cores: 2 }),
+            ("MPI non-blocking", CommMode::MpiNonBlocking),
+            ("bulk-synchronous", CommMode::BulkSync),
+        ] {
+            let mut rows = Vec::new();
+            let mut t1 = None;
+            for &p in &nodes {
+                let mut cfg = EngineConfig::new(model.clone(), topo.clone(), p);
+                cfg.batch = batch;
+                cfg.mode = mode;
+                cfg.policy = PriorityPolicy::ByLayer;
+                let r = simulate(cfg);
+                let base = *t1.get_or_insert(r.iter_ns);
+                rows.push(vec![
+                    p.to_string(),
+                    fmt_ns(r.iter_ns),
+                    fmt_ns(r.exposed_comm_ns),
+                    format!("{:.1}%", 100.0 * base as f64 / r.iter_ns as f64),
+                    format!("{:.0}", r.throughput_samples_per_s),
+                ]);
+            }
+            print_table(
+                &format!("{model_name} / {} / {mode_name} (batch {batch}/node)", topo.name),
+                &["nodes", "iter", "exposed comm", "efficiency", "samples/s"],
+                &rows,
+            );
+        }
+    }
+}

@@ -1,0 +1,5 @@
+"""mlsl-rs compile path (build-time only; never imported at runtime).
+
+L2 model (model.py) + L1 Pallas kernels (kernels/) are AOT-lowered by
+aot.py into artifacts/*.hlo.txt, which the Rust runtime loads via PJRT.
+"""

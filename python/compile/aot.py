@@ -1,0 +1,172 @@
+"""AOT lowering: JAX (L2 + L1 Pallas) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 crate binds) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Per preset we emit:
+    artifacts/<preset>/grad_step.hlo.txt     (params..., tokens) -> (loss, grads...)
+    artifacts/<preset>/apply_update.hlo.txt  (params..., moms..., grads...) -> (params'..., moms'...)
+    artifacts/<preset>/train_step.hlo.txt    (params..., moms..., tokens) -> (params'..., moms'..., loss)
+    artifacts/<preset>/eval_loss.hlo.txt     (params..., tokens) -> (loss,)
+    artifacts/<preset>/manifest.json         parameter order/shapes/layers, io specs, hparams
+plus shared micro artifacts:
+    artifacts/micro/quant_roundtrip.hlo.txt  (x,) -> (q, scales, deq)
+    artifacts/micro/matmul.hlo.txt           (x, w, b) -> (y,)
+
+Python runs ONCE at `make artifacts`; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import kernels, model
+from .presets import PRESETS, n_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def emit_preset(preset: str, out_dir: str, lr: float, mu: float, wd: float,
+                skip_heavy: bool = False) -> None:
+    cfg = PRESETS[preset]
+    specs = model.param_specs(cfg)
+    n = len(specs)
+    pdir = os.path.join(out_dir, preset)
+    print(f"[{preset}] {n} params, {n_params(cfg)/1e6:.1f}M elements")
+
+    f32 = jnp.float32
+    p_specs = [jax.ShapeDtypeStruct(tuple(s["shape"]), f32) for s in specs]
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+
+    def lower(fn, *args):
+        return to_hlo_text(jax.jit(fn).lower(*args))
+
+    _write(os.path.join(pdir, "grad_step.hlo.txt"),
+           lower(lambda *a: model.grad_step(cfg, *a), *p_specs, tok_spec))
+    _write(os.path.join(pdir, "apply_update.hlo.txt"),
+           lower(lambda *a: model.apply_update(cfg, lr, mu, wd, *a),
+                 *p_specs, *p_specs, *p_specs))
+    if not skip_heavy:
+        _write(os.path.join(pdir, "train_step.hlo.txt"),
+               lower(lambda *a: model.train_step(cfg, lr, mu, wd, *a),
+                     *p_specs, *p_specs, tok_spec))
+    _write(os.path.join(pdir, "eval_loss.hlo.txt"),
+           lower(lambda *a: model.eval_loss(cfg, *a), *p_specs, tok_spec))
+
+    manifest = {
+        "preset": preset,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "seq_len": cfg.seq_len, "batch": cfg.batch,
+            "d_ff": cfg.d_ff, "n_param_tensors": n,
+            "n_param_elements": int(sum(s["size"] for s in specs)),
+        },
+        "hparams": {"lr": lr, "momentum": mu, "weight_decay": wd},
+        "params": specs,
+        "artifacts": {
+            "grad_step": {
+                "file": "grad_step.hlo.txt",
+                "inputs": [s["name"] for s in specs] + ["tokens"],
+                "outputs": ["loss"] + [f"grad.{s['name']}" for s in specs],
+            },
+            "apply_update": {
+                "file": "apply_update.hlo.txt",
+                "inputs": [s["name"] for s in specs]
+                          + [f"mom.{s['name']}" for s in specs]
+                          + [f"grad.{s['name']}" for s in specs],
+                "outputs": [s["name"] for s in specs]
+                           + [f"mom.{s['name']}" for s in specs],
+            },
+            "train_step": None if skip_heavy else {
+                "file": "train_step.hlo.txt",
+                "inputs": [s["name"] for s in specs]
+                          + [f"mom.{s['name']}" for s in specs] + ["tokens"],
+                "outputs": [s["name"] for s in specs]
+                           + [f"mom.{s['name']}" for s in specs] + ["loss"],
+            },
+            "eval_loss": {
+                "file": "eval_loss.hlo.txt",
+                "inputs": [s["name"] for s in specs] + ["tokens"],
+                "outputs": ["loss"],
+            },
+        },
+        "tokens_shape": [cfg.batch, cfg.seq_len + 1],
+    }
+    _write(os.path.join(pdir, "manifest.json"), json.dumps(manifest, indent=1))
+
+
+def emit_micro(out_dir: str) -> None:
+    mdir = os.path.join(out_dir, "micro")
+    n = 64 * kernels.QBLOCK
+    x_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def quant_roundtrip(x):
+        q, s = kernels.quantize_int8(x)
+        return q, s, kernels.dequantize_int8(q, s)
+
+    _write(os.path.join(mdir, "quant_roundtrip.hlo.txt"),
+           to_hlo_text(jax.jit(quant_roundtrip).lower(x_spec)))
+
+    m, k, nn = 256, 256, 256
+    _write(os.path.join(mdir, "matmul.hlo.txt"),
+           to_hlo_text(jax.jit(
+               lambda x, w, b: (kernels.matmul_bias_act(x, w, b, "gelu"),)
+           ).lower(
+               jax.ShapeDtypeStruct((m, k), jnp.float32),
+               jax.ShapeDtypeStruct((k, nn), jnp.float32),
+               jax.ShapeDtypeStruct((nn,), jnp.float32),
+           )))
+    _write(os.path.join(mdir, "manifest.json"), json.dumps({
+        "quant_roundtrip": {"file": "quant_roundtrip.hlo.txt", "n": n,
+                            "qblock": kernels.QBLOCK},
+        "matmul": {"file": "matmul.hlo.txt", "m": m, "k": k, "n": nn},
+    }, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small",
+                    help="comma-separated; 'base100m' is compile-only scale")
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=1e-4)
+    ap.add_argument("--skip-heavy", action="store_true",
+                    help="skip the fused train_step artifact (largest lowering)")
+    args = ap.parse_args()
+
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if preset:
+            emit_preset(preset, args.out_dir, args.lr, args.momentum,
+                        args.weight_decay, skip_heavy=args.skip_heavy)
+    emit_micro(args.out_dir)
+    # Stamp for make's incremental check.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

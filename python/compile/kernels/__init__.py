@@ -1,0 +1,13 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the mlsl-rs model stack.
+
+Every kernel is lowered with interpret=True (CPU-PJRT executable HLO);
+see DESIGN.md §Hardware-Adaptation for the TPU mapping rationale.
+"""
+
+from . import ref  # noqa: F401
+from .attn import attention  # noqa: F401
+from .layernorm import layernorm  # noqa: F401
+from .matmul import matmul_bias_act  # noqa: F401
+from .quantize import dequantize_int8, quantize_int8  # noqa: F401
+from .ref import QBLOCK  # noqa: F401
+from .sgd import sgd_momentum  # noqa: F401

@@ -1,0 +1,61 @@
+"""Fused scaled-dot-product attention Pallas kernel.
+
+One grid cell per (batch*head): the whole (S, D) slice is staged into VMEM,
+QK^T, causal mask, softmax and PV happen in one fused kernel — no (S, S)
+probability matrix ever round-trips to HBM. That is the same insight as
+flash-attention expressed in the TPU/Pallas model: BlockSpec does the
+HBM->VMEM staging that warp-level tiling does on GPUs.
+
+interpret=True on this image (see matmul.py header).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0].astype(jnp.float32)  # (S, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = q.shape[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        logits = jnp.where(rows >= cols, logits, -1e30)
+    # Numerically-stable softmax, fused in VMEM.
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal: bool = True):
+    """softmax(q k^T / sqrt(D) [+causal]) v, fused per (batch, head).
+
+    q, k, v: (B, H, S, D). Returns (B, H, S, D) in q.dtype.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal, scale=scale),
+        grid=(b * h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes(s: int, d: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-cell VMEM: q,k,v,o slices + the (S,S) logits scratch."""
+    return 4 * s * d * dtype_bytes + s * s * 4

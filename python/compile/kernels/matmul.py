@@ -1,0 +1,99 @@
+"""Tiled matmul + bias + activation Pallas kernel (the MLP/projection hot path).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is (M/bm, N/bn, K/bk)
+with an f32 accumulator living in the output block across the K steps — the
+classic MXU-feeding schedule. BlockSpecs express the HBM->VMEM movement the
+paper's Xeon implementation did with cache blocking. On this image the kernel
+runs under interpret=True (CPU PJRT cannot execute Mosaic custom-calls); the
+*structure* (128-multiple tiles, f32 accumulation, K-innermost) is what the
+MXU-utilization estimate in EXPERIMENTS.md §Perf is based on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the MXU systolic array (128x128) and the
+# (8, 128) f32 VMEM tiling. Shrunk automatically for small test shapes.
+DEF_BM = 128
+DEF_BN = 128
+DEF_BK = 128
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of `dim` that is <= block (keeps grids exact)."""
+    b = min(block, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        if activation == "gelu":
+            acc = jax.nn.gelu(acc, approximate=True)
+        elif activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def matmul_bias_act(x, w, b, activation: str = "none", bm=DEF_BM, bn=DEF_BN, bk=DEF_BK):
+    """act(x @ w + b) as a single fused Pallas kernel.
+
+    x: (M, K); w: (K, N); b: (N,). Returns (M, N) in x.dtype.
+    Accumulation is always f32 (MXU-style), output cast back.
+    """
+    if activation not in ("none", "gelu", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, kdim)
+    nk = kdim // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, activation=activation, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out.astype(x.dtype)
+
+
+def vmem_bytes(bm=DEF_BM, bn=DEF_BN, bk=DEF_BK, dtype_bytes=4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf)."""
+    return (bm * bk + bk * bn + bn) * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(m, n, k, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK) -> float:
+    """Fraction of MXU issue slots doing useful work for given shapes.
+
+    The MXU is a 128x128 systolic array; tiles that are not multiples of
+    128 waste lanes. This is the structural estimate recorded in §Perf.
+    """
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    eff = lambda b: min(b, 128) / 128.0
+    return eff(bm) * eff(bn) * eff(bk)

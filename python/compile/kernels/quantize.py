@@ -1,0 +1,89 @@
+"""Per-block absmax int8 gradient quantization Pallas kernels.
+
+This is the compute half of the paper's "Reducing communication volume"
+design point: gradients are quantized to int8 (one f32 scale per QBLOCK
+elements, 4.06x volume reduction) before hitting the wire, and dequantized
+after the allreduce. The Rust collectives layer owns the wire format
+(rust/src/collectives/quant.rs mirrors this exact scheme); these kernels
+let the quantize/dequantize run inside the AOT-compiled step so the
+request path never touches Python.
+
+Lane mapping: QBLOCK = 256 = 2 TPU lanes-width; each grid cell handles a
+(rows, QBLOCK) tile so the absmax reduction is a lane reduction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import QBLOCK
+
+DEF_ROWS = 64  # quantization blocks per grid cell
+
+
+def _pick_rows(rows: int, nblk: int) -> int:
+    r = min(rows, nblk)
+    while nblk % r != 0:
+        r -= 1
+    return r
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (rows, QBLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = q * s_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def quantize_int8(x, rows: int = DEF_ROWS):
+    """x: (n,) f32, n % QBLOCK == 0 -> (q:int8 (n,), scales:f32 (n/QBLOCK,))."""
+    n = x.shape[0]
+    assert n % QBLOCK == 0, n
+    nblk = n // QBLOCK
+    rb = _pick_rows(rows, nblk)
+    xb = x.reshape(nblk, QBLOCK)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nblk // rb,),
+        in_specs=[pl.BlockSpec((rb, QBLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rb, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((nblk,), jnp.float32),
+        ],
+        interpret=True,
+    )(xb)
+    return q.reshape(n), s
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def dequantize_int8(q, scale, rows: int = DEF_ROWS):
+    """Inverse of quantize_int8 (lossy). q: (n,) int8, scale: (n/QBLOCK,)."""
+    n = q.shape[0]
+    nblk = n // QBLOCK
+    rb = _pick_rows(rows, nblk)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nblk // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, QBLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rb, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, QBLOCK), jnp.float32),
+        interpret=True,
+    )(q.reshape(nblk, QBLOCK), scale)
+    return out.reshape(n)

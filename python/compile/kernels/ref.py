@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps)
+assert that each Pallas kernel (run with interpret=True) matches its
+oracle to tight tolerances across shapes and dtypes.
+
+Nothing in here is performance-relevant; clarity over speed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Matmul + bias + activation (the MLP hot path)
+# ---------------------------------------------------------------------------
+
+
+def matmul_bias_act(x, w, b, activation: str = "none"):
+    """out = act(x @ w + b).
+
+    x: (M, K) float32/bfloat16
+    w: (K, N)
+    b: (N,)
+    activation: "none" | "gelu" | "relu"
+    """
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + b.astype(jnp.float32)
+    if activation == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused scaled-dot-product attention (per batch*head slice)
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, causal: bool = True):
+    """softmax(q k^T / sqrt(d) [+ causal mask]) v.
+
+    q, k, v: (B, H, S, D) — batch, heads, sequence, head_dim.
+    """
+    b, h, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantization (per-block absmax int8), the paper's low-precision
+# communication path ("Reducing communication volume")
+# ---------------------------------------------------------------------------
+
+QBLOCK = 256  # elements per quantization block (one scale per block)
+
+
+def quantize_int8(x):
+    """Per-block absmax int8 quantization.
+
+    x: (n,) float32 with n % QBLOCK == 0.
+    Returns (q:int8 (n,), scales:float32 (n/QBLOCK,)).
+    """
+    blocks = x.reshape(-1, QBLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_int8(q, scale):
+    """Inverse of quantize_int8 (lossy)."""
+    blocks = q.reshape(-1, QBLOCK).astype(jnp.float32)
+    return (blocks * scale[:, None]).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Fused SGD with momentum (the weight-update the paper's first-layer
+# prioritization exists to unblock)
+# ---------------------------------------------------------------------------
+
+
+def sgd_momentum(w, m, g, lr: float, mu: float, weight_decay: float = 0.0):
+    """m' = mu*m + g + wd*w ;  w' = w - lr*m'. Returns (w', m')."""
+    g = g + weight_decay * w
+    m_new = mu * m + g
+    w_new = w - lr * m_new
+    return w_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (used by the model; kernelized as fused normalize+affine)
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis. x: (..., D)."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,249 @@
+"""L2: Transformer LM forward/backward in JAX, calling the L1 Pallas kernels.
+
+Architecture: pre-LN decoder-only transformer (tok+pos embedding, N blocks
+of [LN -> MHA -> residual, LN -> MLP(gelu) -> residual], final LN, untied
+output projection), next-token cross-entropy.
+
+Every compute hot-spot goes through a Pallas kernel wrapped in
+`jax.custom_vjp`: the forward is the fused kernel, the backward is the
+jax-derived VJP of the pure-jnp oracle (rematerialization — the forward is
+recomputed in the backward, trading FLOPs for not staging residuals; noted
+in DESIGN.md §Perf). This keeps the kernels differentiable without writing
+hand-rolled backward kernels, while the AOT artifact still contains the
+fused forward HLO.
+
+Parameters are an *ordered* flat list — the order IS the forward order and
+is what the Rust side uses for the paper's message prioritization (first
+layer's weight gradients are the most urgent: they are needed first in the
+next forward pass).
+"""
+
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+from .presets import ModelConfig
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers: Pallas forward, oracle-VJP backward
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mm_act(x, w, b, activation):
+    return kernels.matmul_bias_act(x, w, b, activation)
+
+
+def _mm_act_fwd(x, w, b, activation):
+    return kernels.matmul_bias_act(x, w, b, activation), (x, w, b)
+
+
+def _mm_act_bwd(activation, res, ct):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x_, w_, b_: ref.matmul_bias_act(x_, w_, b_, activation),
+                     x, w, b)
+    return vjp(ct)
+
+
+_mm_act.defvjp(_mm_act_fwd, _mm_act_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _attn(q, k, v, causal):
+    return kernels.attention(q, k, v, causal)
+
+
+def _attn_fwd(q, k, v, causal):
+    return kernels.attention(q, k, v, causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention(q_, k_, v_, causal), q, k, v)
+    return vjp(ct)
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+@jax.custom_vjp
+def _ln(x, g, b):
+    return kernels.layernorm(x, g, b)
+
+
+def _ln_fwd(x, g, b):
+    return kernels.layernorm(x, g, b), (x, g, b)
+
+
+def _ln_bwd(res, ct):
+    x, g, b = res
+    _, vjp = jax.vjp(ref.layernorm, x, g, b)
+    return vjp(ct)
+
+
+_ln.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameter bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Dict]:
+    """Ordered parameter manifest.
+
+    Each entry: name, shape, layer (0 = embeddings = most-urgent gradient,
+    per the paper's first-layer prioritization), fwd_order (position in the
+    forward pass; doubles as the allreduce priority class on the Rust side).
+    """
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs: List[Dict] = []
+
+    def add(name, shape, layer):
+        specs.append({
+            "name": name,
+            "shape": list(shape),
+            "size": int(math.prod(shape)) if shape else 1,
+            "layer": layer,
+            "fwd_order": len(specs),
+        })
+
+    add("tok_emb", (v, d), 0)
+    add("pos_emb", (s, d), 0)
+    for i in range(cfg.n_layers):
+        li = 1 + i
+        add(f"blk{i}.ln1_g", (d,), li)
+        add(f"blk{i}.ln1_b", (d,), li)
+        add(f"blk{i}.wq", (d, d), li)
+        add(f"blk{i}.wk", (d, d), li)
+        add(f"blk{i}.wv", (d, d), li)
+        add(f"blk{i}.wo", (d, d), li)
+        add(f"blk{i}.ln2_g", (d,), li)
+        add(f"blk{i}.ln2_b", (d,), li)
+        add(f"blk{i}.w1", (d, f), li)
+        add(f"blk{i}.b1", (f,), li)
+        add(f"blk{i}.w2", (f, d), li)
+        add(f"blk{i}.b2", (d,), li)
+    lf = 1 + cfg.n_layers
+    add("lnf_g", (d,), lf)
+    add("lnf_b", (d,), lf)
+    add("w_out", (d, v), lf)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """GPT-2-style init, returned in param_specs order."""
+    specs = param_specs(cfg)
+    params = []
+    for spec in specs:
+        key, sub = jax.random.split(key)
+        shape = tuple(spec["shape"])
+        name = spec["name"]
+        if name.endswith(("_g",)):
+            p = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            p = jnp.zeros(shape, jnp.float32)
+        elif name.endswith((".wo", ".w2")):  # residual-branch outputs, scaled
+            std = 0.02 / (2 * cfg.n_layers) ** 0.5
+            p = std * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            p = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        params.append(p)
+    return params
+
+
+def _as_dict(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {s["name"]: p for s, p in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward + loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, flat_params: List[jnp.ndarray], tokens) -> jnp.ndarray:
+    """Logits for input tokens. tokens: (B, S) int32 -> (B, S, V) f32."""
+    p = _as_dict(cfg, flat_params)
+    b, s = tokens.shape
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.head_dim
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    zero_b = jnp.zeros((d,), jnp.float32)
+    for i in range(cfg.n_layers):
+        # --- attention sublayer
+        xn = _ln(x, p[f"blk{i}.ln1_g"], p[f"blk{i}.ln1_b"])
+        xn2 = xn.reshape(b * s, d)
+        q = _mm_act(xn2, p[f"blk{i}.wq"], zero_b, "none")
+        k = _mm_act(xn2, p[f"blk{i}.wk"], zero_b, "none")
+        v = _mm_act(xn2, p[f"blk{i}.wv"], zero_b, "none")
+        split = lambda t: t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+        att = _attn(split(q), split(k), split(v), True)
+        att = att.transpose(0, 2, 1, 3).reshape(b * s, d)
+        proj = _mm_act(att, p[f"blk{i}.wo"], zero_b, "none")
+        x = x + proj.reshape(b, s, d)
+        # --- MLP sublayer
+        xn = _ln(x, p[f"blk{i}.ln2_g"], p[f"blk{i}.ln2_b"]).reshape(b * s, d)
+        hidden = _mm_act(xn, p[f"blk{i}.w1"], p[f"blk{i}.b1"], "gelu")
+        out = _mm_act(hidden, p[f"blk{i}.w2"], p[f"blk{i}.b2"], "none")
+        x = x + out.reshape(b, s, d)
+    x = _ln(x, p["lnf_g"], p["lnf_b"]).reshape(b * s, d)
+    logits = _mm_act(x, p["w_out"], jnp.zeros((cfg.vocab,), jnp.float32), "none")
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: List[jnp.ndarray], tokens) -> jnp.ndarray:
+    """Mean next-token cross-entropy. tokens: (B, S+1) int32."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat_params, inputs).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Training-step entry points (these are what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def grad_step(cfg: ModelConfig, *args) -> Tuple:
+    """(params..., tokens) -> (loss, grads...).
+
+    The data-parallel decomposition point: each Rust rank runs this, the
+    Rust collectives allreduce the grads, then apply_update runs.
+    """
+    n = len(param_specs(cfg))
+    flat_params, tokens = list(args[:n]), args[n]
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(flat_params)
+    return (loss, *grads)
+
+
+def apply_update(cfg: ModelConfig, lr: float, mu: float, wd: float, *args) -> Tuple:
+    """(params..., moms..., grads...) -> (params'..., moms'...)."""
+    n = len(param_specs(cfg))
+    params, moms, grads = args[:n], args[n:2 * n], args[2 * n:3 * n]
+    new_p, new_m = [], []
+    for w, m, g in zip(params, moms, grads):
+        wn, mn = kernels.sgd_momentum(w, m, g, lr=lr, mu=mu, wd=wd)
+        new_p.append(wn)
+        new_m.append(mn)
+    return (*new_p, *new_m)
+
+
+def train_step(cfg: ModelConfig, lr: float, mu: float, wd: float, *args) -> Tuple:
+    """Single-rank fused step: (params..., moms..., tokens) -> (params'..., moms'..., loss)."""
+    n = len(param_specs(cfg))
+    params, moms, tokens = list(args[:n]), args[n:2 * n], args[2 * n]
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(params)
+    out = apply_update(cfg, lr, mu, wd, *params, *moms, *grads)
+    return (*out, loss)
+
+
+def eval_loss(cfg: ModelConfig, *args) -> Tuple:
+    """(params..., tokens) -> (loss,)."""
+    n = len(param_specs(cfg))
+    return (loss_fn(cfg, list(args[:n]), args[n]),)

@@ -1,0 +1,47 @@
+"""Model presets for the mlsl-rs Transformer LM.
+
+`small` is the end-to-end default (fits a few hundred CPU training steps
+in minutes); `base100m` is the paper-scale configuration (compile-path
+validated; training it on this CPU-only image is impractical and the
+substitution is recorded in DESIGN.md / EXPERIMENTS.md).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int  # per-rank micro-batch
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_layers=2, n_heads=2,
+                        seq_len=32, batch=4),
+    "small": ModelConfig("small", vocab=4096, d_model=256, n_layers=4, n_heads=4,
+                         seq_len=128, batch=8),
+    "medium": ModelConfig("medium", vocab=16384, d_model=512, n_layers=6, n_heads=8,
+                          seq_len=128, batch=8),
+    "base100m": ModelConfig("base100m", vocab=32768, d_model=768, n_layers=12,
+                            n_heads=12, seq_len=256, batch=8),
+}
+
+
+def n_params(cfg: ModelConfig) -> int:
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    per_block = 4 * d * d + d * f + f + f * d + d + 4 * d  # attn + mlp + 2 LN
+    return v * d + s * d + cfg.n_layers * per_block + 2 * d + d * v

@@ -1,0 +1,174 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def randf(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 64, 48), (128, 128, 128),
+                                   (256, 128, 512), (5, 7, 3)])
+@pytest.mark.parametrize("act", ["none", "gelu", "relu"])
+def test_matmul_bias_act(m, k, n, act):
+    x, w, b = randf(m, k), randf(k, n), randf(n)
+    got = kernels.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_activation():
+    with pytest.raises(ValueError):
+        kernels.matmul_bias_act(randf(4, 4), randf(4, 4), randf(4), "tanh")
+
+
+def test_matmul_accumulates_f32():
+    # bf16-representable inputs whose product needs f32 accumulation.
+    x = jnp.full((16, 512), 0.01, jnp.float32)
+    w = jnp.full((512, 16), 0.01, jnp.float32)
+    b = jnp.zeros((16,), jnp.float32)
+    got = kernels.matmul_bias_act(x, w, b, "none")
+    np.testing.assert_allclose(got, jnp.full((16, 16), 512 * 1e-4), rtol=1e-5)
+
+
+def test_matmul_tile_invariance():
+    # Different tilings must give identical results.
+    x, w, b = randf(64, 96), randf(96, 64), randf(64)
+    a = kernels.matmul_bias_act(x, w, b, "gelu", bm=16, bn=16, bk=32)
+    c = kernels.matmul_bias_act(x, w, b, "gelu", bm=64, bn=64, bk=96)
+    # f32 accumulation order differs across K tilings -> small drift.
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 8, 8), (2, 4, 32, 16),
+                                     (1, 2, 128, 64), (3, 1, 17, 5)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention(b, h, s, d, causal):
+    q, k, v = randf(b, h, s, d), randf(b, h, s, d), randf(b, h, s, d)
+    got = kernels.attention(q, k, v, causal)
+    want = ref.attention(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causal_masks_future():
+    # Output at position 0 must ignore later positions entirely.
+    b, h, s, d = 1, 1, 16, 8
+    q, k, v = randf(b, h, s, d), randf(b, h, s, d), randf(b, h, s, d)
+    base = kernels.attention(q, k, v, True)
+    v2 = v.at[:, :, 1:, :].set(randf(b, h, s - 1, d))
+    pert = kernels.attention(q, k, v2, True)
+    np.testing.assert_allclose(base[:, :, 0], pert[:, :, 0], rtol=1e-6)
+
+
+def test_attention_rows_sum_property():
+    # With v = ones, attention output is exactly ones (probs sum to 1).
+    b, h, s, d = 2, 2, 32, 16
+    q, k = randf(b, h, s, d), randf(b, h, s, d)
+    v = jnp.ones((b, h, s, d), jnp.float32)
+    out = kernels.attention(q, k, v, True)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nblk", [1, 3, 64, 257])
+def test_quantize_matches_ref(nblk):
+    x = randf(nblk * ref.QBLOCK)
+    q_got, s_got = kernels.quantize_int8(x)
+    q_want, s_want = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q_got), np.asarray(q_want))
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = 10.0 * randf(64 * ref.QBLOCK)
+    q, s = kernels.quantize_int8(x)
+    deq = kernels.dequantize_int8(q, s)
+    # Error bounded by half a quantization step per block.
+    blocks = np.asarray(x).reshape(-1, ref.QBLOCK)
+    step = np.abs(blocks).max(axis=1) / 127.0
+    err = np.abs(np.asarray(deq).reshape(-1, ref.QBLOCK) - blocks)
+    assert (err <= 0.5 * step[:, None] + 1e-6).all()
+
+
+def test_quantize_zero_block():
+    x = jnp.zeros((2 * ref.QBLOCK,), jnp.float32)
+    q, s = kernels.quantize_int8(x)
+    assert np.asarray(q).max() == 0 and np.asarray(q).min() == 0
+    deq = kernels.dequantize_int8(q, s)
+    np.testing.assert_array_equal(np.asarray(deq), np.zeros_like(deq))
+
+
+def test_quantize_preserves_sign_and_max():
+    x = randf(ref.QBLOCK)
+    q, s = kernels.quantize_int8(x)
+    qa = np.asarray(q, np.int32)
+    xa = np.asarray(x)
+    i = np.abs(xa).argmax()
+    assert abs(qa[i]) == 127
+    nz = np.abs(xa) > np.abs(xa).max() / 254  # above half-step: sign survives
+    assert (np.sign(qa[nz]) == np.sign(xa[nz])).all()
+
+
+# ---------------------------------------------------------------------------
+# sgd_momentum
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(17,), (128, 64), (3, 5, 7), (4096,), (5000,)])
+def test_sgd_momentum(shape):
+    w, m, g = randf(*shape), randf(*shape), randf(*shape)
+    wn, mn = kernels.sgd_momentum(w, m, g, lr=0.1, mu=0.9, wd=1e-4)
+    we, me = ref.sgd_momentum(w, m, g, 0.1, 0.9, 1e-4)
+    np.testing.assert_allclose(wn, we, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(mn, me, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_zero_grad_pure_momentum():
+    w, m = randf(64), randf(64)
+    g = jnp.zeros((64,), jnp.float32)
+    wn, mn = kernels.sgd_momentum(w, m, g, lr=1.0, mu=0.5, wd=0.0)
+    np.testing.assert_allclose(mn, 0.5 * m, rtol=1e-6)
+    np.testing.assert_allclose(wn, w - 0.5 * m, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 32, 128), (1, 256), (7, 48)])
+def test_layernorm(shape):
+    x = randf(*shape)
+    g, b = randf(shape[-1]), randf(shape[-1])
+    got = kernels.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_layernorm_output_stats():
+    x = 5.0 + 3.0 * randf(16, 256)
+    out = kernels.layernorm(x, jnp.ones((256,)), jnp.zeros((256,)))
+    np.testing.assert_allclose(np.asarray(out).mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out).std(axis=-1), 1.0, atol=1e-2)

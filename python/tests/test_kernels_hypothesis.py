@@ -1,0 +1,82 @@
+"""Hypothesis sweeps over kernel shapes/dtypes vs the pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+       act=st.sampled_from(["none", "gelu", "relu"]), seed=st.integers(0, 2**31))
+def test_matmul_any_shape(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    got = kernels.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), h=st.integers(1, 4), s=st.integers(1, 48),
+       d=st.integers(1, 32), causal=st.booleans(), seed=st.integers(0, 2**31))
+def test_attention_any_shape(b, h, s, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (b, h, s, d)) for _ in range(3))
+    got = kernels.attention(q, k, v, causal)
+    want = ref.attention(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(nblk=st.integers(1, 128), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31))
+def test_quantize_any_size(nblk, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (nblk * ref.QBLOCK,), scale)
+    q_got, s_got = kernels.quantize_int8(x)
+    q_want, s_want = ref.quantize_int8(x)
+    # Values that land exactly on a rounding tie can differ by 1 LSB
+    # between the tiled kernel and the oracle (f32 division association);
+    # require agreement within one quantum on a vanishing fraction.
+    qg = np.asarray(q_got, np.int32)
+    qw = np.asarray(q_want, np.int32)
+    diff = np.abs(qg - qw)
+    assert diff.max() <= 1, diff.max()
+    assert (diff > 0).mean() < 1e-3, (diff > 0).mean()
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-6)
+    # Round-trip error bound holds for every block.
+    deq = kernels.dequantize_int8(q_got, s_got)
+    blocks = np.asarray(x).reshape(-1, ref.QBLOCK)
+    step = np.abs(blocks).max(axis=1) / 127.0
+    err = np.abs(np.asarray(deq).reshape(-1, ref.QBLOCK) - blocks)
+    assert (err <= 0.5 * step[:, None] + 1e-6 * max(scale, 1.0)).all()
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 9000), lr=st.floats(1e-4, 1.0), mu=st.floats(0.0, 0.99),
+       wd=st.floats(0.0, 1e-2), seed=st.integers(0, 2**31))
+def test_sgd_any_size(n, lr, mu, wd, seed):
+    rng = np.random.default_rng(seed)
+    w, m, g = _arr(rng, (n,)), _arr(rng, (n,)), _arr(rng, (n,))
+    wn, mn = kernels.sgd_momentum(w, m, g, lr=lr, mu=mu, wd=wd)
+    we, me = ref.sgd_momentum(w, m, g, lr, mu, wd)
+    np.testing.assert_allclose(wn, we, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(mn, me, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 64), d=st.integers(1, 256), seed=st.integers(0, 2**31))
+def test_layernorm_any_shape(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = _arr(rng, (rows, d)), _arr(rng, (d,)), _arr(rng, (d,))
+    got = kernels.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

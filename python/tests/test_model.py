@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, decomposition equivalence, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.presets import PRESETS, n_params
+
+CFG = PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    key = jax.random.PRNGKey(1)
+    return jax.random.randint(key, (CFG.batch, CFG.seq_len + 1), 0, CFG.vocab)
+
+
+def test_param_specs_order_and_count(params):
+    specs = model.param_specs(CFG)
+    assert len(specs) == len(params)
+    assert specs[0]["name"] == "tok_emb" and specs[0]["layer"] == 0
+    assert specs[-1]["name"] == "w_out"
+    # fwd_order is the list position (the allreduce priority class).
+    for i, s in enumerate(specs):
+        assert s["fwd_order"] == i
+    # layer indices are non-decreasing through the forward pass.
+    layers = [s["layer"] for s in specs]
+    assert layers == sorted(layers)
+    assert sum(s["size"] for s in specs) == n_params(CFG)
+
+
+def test_forward_shape(params, tokens):
+    logits = model.forward(CFG, params, tokens[:, :-1])
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_loss_near_uniform_at_init(params, tokens):
+    loss = model.loss_fn(CFG, params, tokens)
+    # Small-init network ~ uniform predictions: loss ~ log(vocab).
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_grad_step_outputs(params, tokens):
+    out = model.grad_step(CFG, *params, tokens)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert jnp.isfinite(g).all()
+
+
+def test_train_step_equals_grad_plus_update(params, tokens):
+    """The decomposed path (grad_step -> allreduce(1 rank) -> apply_update)
+    must be bit-compatible with the fused train_step — this is the invariant
+    the Rust data-parallel trainer relies on."""
+    n = len(params)
+    moms = [jnp.zeros_like(p) for p in params]
+    lr, mu, wd = 3e-2, 0.9, 1e-4
+
+    fused = model.train_step(CFG, lr, mu, wd, *params, *moms, tokens)
+    fp, fm, floss = fused[:n], fused[n:2 * n], fused[2 * n]
+
+    out = model.grad_step(CFG, *params, tokens)
+    gloss, grads = out[0], out[1:]
+    upd = model.apply_update(CFG, lr, mu, wd, *params, *moms, *grads)
+    up, um = upd[:n], upd[n:]
+
+    np.testing.assert_allclose(float(floss), float(gloss), rtol=1e-6)
+    for a, c in zip(fp, up):
+        np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-7)
+    for a, c in zip(fm, um):
+        np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-7)
+
+
+def test_loss_decreases_over_steps(params, tokens):
+    """A few SGD steps on one batch must reduce the loss (trainability)."""
+    n = len(params)
+    ps = list(params)
+    moms = [jnp.zeros_like(p) for p in ps]
+    losses = []
+    for _ in range(5):
+        out = model.train_step(CFG, 0.1, 0.9, 0.0, *ps, *moms, tokens)
+        ps, moms, loss = list(out[:n]), list(out[n:2 * n]), out[2 * n]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_causality(params):
+    """Changing future tokens must not change past logits."""
+    t1 = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    t2 = t1.at[0, -1].set(3)
+    l1 = model.forward(CFG, params, t1)
+    l2 = model.forward(CFG, params, t2)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-6)

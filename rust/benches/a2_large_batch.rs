@@ -1,0 +1,70 @@
+//! **Ablation A2**: large-batch training and the compute/communication
+//! ratio.
+//!
+//! Paper (design §): "the compute to communication ratio is proportional
+//! to the mini-batch size ... scaling will be negatively impacted as we
+//! strong-scale the mini-batch and the mini-batch per node drops";
+//! communication becomes latency-bound with little compute to hide it.
+//!
+//! Run: `cargo bench --bench a2_large_batch`
+
+mod common;
+
+use common::{cfg, ms};
+use mlsl::analytic::{ratio, Parallelism};
+use mlsl::engine::{simulate, CommMode};
+use mlsl::fabric::topology::Topology;
+use mlsl::metrics::print_table;
+use mlsl::models::ModelDesc;
+
+fn main() {
+    let p = 64;
+    let model = ModelDesc::by_name("resnet50").unwrap();
+    // Aggregate compute-to-comm ratio over weighted layers (flops/byte).
+    let agg_ratio = |batch: usize| -> f64 {
+        let (mut fl, mut by) = (0.0f64, 0u64);
+        for (_, l) in model.weighted_layers() {
+            fl += mlsl::analytic::compute_flops(l, Parallelism::Data, batch);
+            by += mlsl::analytic::comm_bytes(l, Parallelism::Data, p, batch);
+        }
+        fl / by as f64
+    };
+
+    let mut rows = Vec::new();
+    let mut t_ideal_per_sample: Option<f64> = None;
+    for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut c = cfg("resnet50", Topology::omnipath_100g(), p, batch,
+                        CommMode::MlslAsync { comm_cores: 2 });
+        c.iterations = 3;
+        let r = simulate(c);
+        let per_sample = r.iter_ns as f64 / batch as f64;
+        let ideal = *t_ideal_per_sample.get_or_insert_with(|| {
+            // Ideal = pure compute per sample (no comm), from the 64-batch
+            // compute model (per-sample compute is batch-independent).
+            r.compute_ns as f64 / batch as f64
+        });
+        let eff = 100.0 * ideal / per_sample;
+        let lr = ratio(
+            model.weighted_layers().next().unwrap().1,
+            Parallelism::Data,
+            p,
+            batch,
+        );
+        let _ = lr;
+        rows.push(vec![
+            batch.to_string(),
+            format!("{:.0}", agg_ratio(batch)),
+            ms(r.iter_ns),
+            ms(r.exposed_comm_ns),
+            format!("{eff:.1}%"),
+        ]);
+    }
+    print_table(
+        "A2: ResNet-50, 64 nodes, Omnipath — per-node batch sweep",
+        &["batch/node", "flops-per-byte (data-par)", "iter ms", "exposed ms", "efficiency"],
+        &rows,
+    );
+    println!("\nexpected shape: ratio grows linearly with batch; efficiency is poor at");
+    println!("batch 1-2 (latency-bound comm, no compute to hide it) and approaches 100%");
+    println!("at large per-node batch — the paper's motivation for large-batch training.");
+}

@@ -1,0 +1,58 @@
+//! **Ablation A4**: allreduce algorithm selection ("implements
+//! performance critical data path operations in an optimal manner").
+//!
+//! Sweeps message size × rank count × fabric for ring / recursive
+//! doubling / halving-doubling, prints the measured (simulated) times,
+//! what `Auto` picks, and where the crossovers fall.
+//!
+//! Run: `cargo bench --bench a4_allreduce_algos`
+
+use mlsl::collectives::program::build;
+use mlsl::collectives::simexec::time_collective;
+use mlsl::collectives::{choose_algorithm, Algorithm, CollectiveKind, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::NetSim;
+use mlsl::metrics::print_table;
+use mlsl::util::stats::fmt_bytes;
+
+fn main() {
+    let sizes: [u64; 7] = [1 << 10, 16 << 10, 256 << 10, 1 << 20, 16 << 20, 64 << 20, 256 << 20];
+    for topo in [Topology::eth_10g(), Topology::omnipath_100g()] {
+        for p in [16usize, 64] {
+            let mut rows = Vec::new();
+            for bytes in sizes {
+                let n = (bytes / 4) as usize;
+                let mut times = Vec::new();
+                for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
+                    let mut sim = NetSim::new(topo.clone(), p);
+                    let t = time_collective(
+                        &mut sim,
+                        build(CollectiveKind::Allreduce, alg, p, n),
+                        WireDtype::F32,
+                        1,
+                    );
+                    times.push(t);
+                }
+                let auto = choose_algorithm(&topo, p, bytes);
+                let best = [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling]
+                    [times.iter().enumerate().min_by_key(|(_, t)| **t).unwrap().0];
+                rows.push(vec![
+                    fmt_bytes(bytes),
+                    format!("{:.3}", times[0] as f64 / 1e6),
+                    format!("{:.3}", times[1] as f64 / 1e6),
+                    format!("{:.3}", times[2] as f64 / 1e6),
+                    auto.to_string(),
+                    best.to_string(),
+                ]);
+            }
+            print_table(
+                &format!("A4: allreduce algorithms, {} nodes, {}", p, topo.name),
+                &["size", "ring ms", "rdoubling ms", "halving ms", "auto picks", "measured best"],
+                &rows,
+            );
+        }
+    }
+    println!("\nexpected shape: rdoubling wins small sizes (latency, log2(p) rounds),");
+    println!("ring/halving win large sizes (bandwidth-optimal); `auto` should track");
+    println!("the measured best across the crossover.");
+}

@@ -1,0 +1,53 @@
+//! **Claim C2**: the Horovod-interface + MLSL backend reaches >93%
+//! scaling efficiency at 64 Xeon nodes, beating out-of-box Horovod-MPI.
+//!
+//! MLSL mode = async progress (comm cores) + priorities; the two MPI
+//! baselines are non-blocking-MPI (no async progress: the wire only moves
+//! inside library calls) and bulk-synchronous (one exposed exchange after
+//! backprop — Horovod out-of-box without tuned tensor fusion).
+//!
+//! Run: `cargo bench --bench c2_horovod_tf`
+
+mod common;
+
+use common::{cfg, ms};
+use mlsl::collectives::PriorityPolicy;
+use mlsl::engine::{simulate, CommMode};
+use mlsl::fabric::topology::Topology;
+use mlsl::metrics::print_table;
+
+fn main() {
+    let p = 64;
+    let modes: [(&str, CommMode); 3] = [
+        ("Horovod+MLSL (async, priorities)", CommMode::MlslAsync { comm_cores: 2 }),
+        ("Horovod+MPI (non-blocking)", CommMode::MpiNonBlocking),
+        ("Horovod+MPI (bulk, out-of-box)", CommMode::BulkSync),
+    ];
+    let mut rows = Vec::new();
+    for (name, mode) in modes {
+        // T(1) reference must use the same mode (same comm-core tax).
+        let mut c1 = cfg("resnet50", Topology::omnipath_100g(), 1, 32, mode);
+        c1.policy = PriorityPolicy::ByLayer;
+        c1.jitter = 0.03;
+        let r1 = simulate(c1);
+        let mut c = cfg("resnet50", Topology::omnipath_100g(), p, 32, mode);
+        c.policy = PriorityPolicy::ByLayer;
+        c.jitter = 0.03;
+        c.iterations = 4;
+        let r = simulate(c);
+        let eff = 100.0 * r1.iter_ns as f64 / r.iter_ns as f64;
+        rows.push(vec![
+            name.to_string(),
+            ms(r.iter_ns),
+            ms(r.exposed_comm_ns),
+            format!("{eff:.1}%"),
+        ]);
+    }
+    print_table(
+        "C2: ResNet-50, 64 nodes, Omnipath, TF/Horovod integration modes",
+        &["backend", "iter ms", "exposed ms", "efficiency"],
+        &rows,
+    );
+    println!("\npaper: >93% efficiency at 64 nodes with the MLSL backend; out-of-box");
+    println!("Horovod-MPI noticeably lower. Expected: row 1 > 93%, rows 2-3 below it.");
+}

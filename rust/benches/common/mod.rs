@@ -1,0 +1,33 @@
+//! Shared helpers for the paper-table bench harnesses (harness = false).
+
+use mlsl::engine::{simulate, CommMode, EngineConfig};
+use mlsl::fabric::topology::Topology;
+use mlsl::models::ModelDesc;
+
+/// Milliseconds with 2 decimals.
+#[allow(dead_code)]
+pub fn ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// Ratio with 2 decimals ("x" suffix).
+#[allow(dead_code)]
+pub fn ratio(a: u64, b: u64) -> String {
+    format!("{:.2}x", a as f64 / b.max(1) as f64)
+}
+
+/// Build a standard engine config.
+#[allow(dead_code)]
+pub fn cfg(model: &str, topo: Topology, nodes: usize, batch: usize, mode: CommMode) -> EngineConfig {
+    let mut c = EngineConfig::new(ModelDesc::by_name(model).expect("model"), topo, nodes);
+    c.batch = batch;
+    c.mode = mode;
+    c
+}
+
+/// Simulate and return (iter_ns, exposed_ns).
+#[allow(dead_code)]
+pub fn run(c: EngineConfig) -> (u64, u64) {
+    let r = simulate(c);
+    (r.iter_ns, r.exposed_comm_ns)
+}

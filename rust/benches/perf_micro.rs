@@ -1,0 +1,132 @@
+//! Hot-path micro-benchmarks (§Perf): wall-clock timings of the pieces on
+//! the critical paths of both the simulated and the REAL stack.
+//!
+//! * simulator event throughput (events/s) — L3 sim hot loop
+//! * wire encode/decode throughput per dtype (GB/s) — real collectives
+//! * in-process ring allreduce throughput (GB/s reduced) — comm cores
+//! * PJRT executable invocation latency — runtime layer
+//!
+//! Run: `cargo bench --bench perf_micro`
+
+use std::time::Instant;
+
+use mlsl::collectives::{quant, ReduceOp, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::{MsgDesc, NetSim};
+use mlsl::metrics::print_table;
+use mlsl::mlsl::Communicator;
+
+fn time<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // --- 1. simulator event throughput -----------------------------------
+    {
+        let events = 200_000usize;
+        let t = time(
+            || {
+                let mut sim = NetSim::new(Topology::eth_10g(), 16);
+                for i in 0..events {
+                    sim.send(MsgDesc {
+                        src: i % 16,
+                        dst: (i + 1) % 16,
+                        bytes: 1024,
+                        priority: (i % 4) as u8,
+                        tag: i as u64,
+                    });
+                }
+                let mut n = 0;
+                while sim.next().is_some() {
+                    n += 1;
+                }
+                assert_eq!(n, events);
+            },
+            3,
+        );
+        rows.push(vec![
+            "sim: send+deliver".into(),
+            format!("{:.2} M events/s", events as f64 / t / 1e6),
+        ]);
+    }
+
+    // --- 2. wire encode/decode throughput ---------------------------------
+    {
+        let n = 4 << 20; // 16 MB of f32
+        let src: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        for wire in [WireDtype::F32, WireDtype::Bf16, WireDtype::Int8Block] {
+            let enc = time(|| { std::hint::black_box(quant::encode(&src, wire)); }, 5);
+            let encoded = quant::encode(&src, wire);
+            let mut dst = vec![0f32; n];
+            let dec = time(
+                || quant::decode_into(&encoded, &mut dst, wire, Some(ReduceOp::Sum)),
+                5,
+            );
+            let gb = (4 * n) as f64 / 1e9;
+            rows.push(vec![
+                format!("wire encode {wire}"),
+                format!("{:.2} GB/s", gb / enc),
+            ]);
+            rows.push(vec![
+                format!("wire decode+reduce {wire}"),
+                format!("{:.2} GB/s", gb / dec),
+            ]);
+        }
+    }
+
+    // --- 3. in-process ring allreduce (steady-state: world reused) -------
+    {
+        let n = 1 << 22; // 16 MB per rank
+        let reps = 8usize;
+        for p in [2usize, 4] {
+            let comms = Communicator::world(p);
+            let t0 = Instant::now();
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| {
+                    std::thread::spawn(move || {
+                        for _ in 0..reps {
+                            let _ = c.allreduce(vec![1.0f32; n]);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let t = t0.elapsed().as_secs_f64() / reps as f64;
+            rows.push(vec![
+                format!("shm ring allreduce p={p} 16MB"),
+                format!("{:.2} GB/s reduced", (4 * n) as f64 / 1e9 / t),
+            ]);
+        }
+    }
+
+    // --- 4. PJRT invocation latency ----------------------------------------
+    {
+        let micro = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/micro");
+        if micro.join("matmul.hlo.txt").exists() {
+            let rt = mlsl::runtime::Runtime::cpu().expect("pjrt");
+            let exe = rt.load_hlo(micro.join("matmul.hlo.txt")).expect("compile");
+            let x = mlsl::runtime::Input::f32(vec![0.5; 256 * 256], &[256, 256]);
+            let w = mlsl::runtime::Input::f32(vec![0.25; 256 * 256], &[256, 256]);
+            let b = mlsl::runtime::Input::f32(vec![0.0; 256], &[256]);
+            let t = time(|| { exe.run(&[x.clone(), w.clone(), b.clone()]).unwrap(); }, 20);
+            let flops = 2.0 * 256.0 * 256.0 * 256.0;
+            rows.push(vec![
+                "pjrt matmul 256^3 (pallas-lowered)".into(),
+                format!("{:.1} µs/call, {:.2} GFLOP/s", t * 1e6, flops / t / 1e9),
+            ]);
+        } else {
+            rows.push(vec!["pjrt matmul".into(), "SKIPPED (run `make artifacts`)".into()]);
+        }
+    }
+
+    print_table("perf_micro: hot-path throughputs", &["path", "rate"], &rows);
+}

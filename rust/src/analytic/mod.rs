@@ -1,0 +1,309 @@
+//! The compute-to-communication ratio model of Das et al.
+//! (arXiv:1602.06709), which the paper says its design choices derive
+//! from ("Based on this analysis, we derived the compute to communication
+//! ratio...").
+//!
+//! Key observations encoded here (paper §Design choices):
+//!
+//! * **Data parallelism**: comm per layer = one weight-gradient allreduce
+//!   ≈ 2·W bytes (ring factor 2(P−1)/P → 2); compute ∝ batch. The ratio is
+//!   therefore ∝ mini-batch and ∝ output-featuremap work but INDEPENDENT
+//!   of kernel size / channel counts (both scale compute and weights the
+//!   same way only through W; the out-featuremap term scales compute
+//!   only).
+//! * **Model parallelism**: comm per layer = activation exchange ∝ batch —
+//!   the ratio is batch-independent; attractive only when weights ≫
+//!   activations (fc layers).
+//! * **Hybrid**: groups of g nodes do model parallelism inside a group,
+//!   data parallelism across P/g groups; both terms shrink.
+
+use crate::fabric::topology::{NodeSpec, Topology};
+use crate::models::{LayerDesc, ModelDesc};
+
+/// How a layer's work is partitioned (the paper's three choices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    Data,
+    Model,
+    /// Node-group hybrid: model parallel inside groups of `group` nodes,
+    /// data parallel across the `p / group` groups.
+    Hybrid { group: usize },
+}
+
+/// Communication bytes ONE node must move for `layer` in one iteration.
+pub fn comm_bytes(layer: &LayerDesc, par: Parallelism, p: usize, batch: usize) -> u64 {
+    if p <= 1 {
+        return 0;
+    }
+    let w = layer.weight_bytes() as f64;
+    // One node's slice of activations (its `batch` samples).
+    let act = (4 * layer.out_act_elems * batch) as f64;
+    let bytes = match par {
+        // Ring allreduce of the weight gradient: 2(P−1)/P ≈ 2 × W.
+        Parallelism::Data => 2.0 * (p as f64 - 1.0) / p as f64 * w,
+        // The group (= world) jointly holds P·batch samples: ring
+        // allgather forward + the mirror exchange backward move
+        // (P−1)·act per node per direction.
+        Parallelism::Model => 2.0 * (p as f64 - 1.0) * act,
+        Parallelism::Hybrid { group } => {
+            let g = group.max(1).min(p) as f64;
+            let groups = (p as f64 / g).max(1.0);
+            // Weight shard allreduced across groups + activations inside.
+            let wterm = 2.0 * (groups - 1.0) / groups * (w / g);
+            let aterm = 2.0 * (g - 1.0) * act;
+            wterm + aterm
+        }
+    };
+    bytes.ceil() as u64
+}
+
+/// Compute FLOPs one node performs for `layer` in one iteration (fwd+bwd).
+///
+/// Semantics (Das et al.): every node always carries `batch` samples of
+/// work. Under model/hybrid parallelism a group of g nodes jointly
+/// processes g·batch samples with weights sharded 1/g — per-node compute
+/// is unchanged; what changes is WHICH bytes move (weight gradients
+/// shrink 1/g, activations must be exchanged within the group).
+pub fn compute_flops(layer: &LayerDesc, par: Parallelism, batch: usize) -> f64 {
+    let _ = par;
+    (layer.fwd_flops + layer.bwd_flops()) * batch as f64
+}
+
+/// The paper's compute-to-communication ratio (FLOPs per byte moved).
+/// Higher = scales better. `f64::INFINITY` when no communication.
+pub fn ratio(layer: &LayerDesc, par: Parallelism, p: usize, batch: usize) -> f64 {
+    let c = comm_bytes(layer, par, p, batch);
+    if c == 0 {
+        return f64::INFINITY;
+    }
+    compute_flops(layer, par, batch) / c as f64
+}
+
+/// Pick the best parallelism for one layer by maximizing the ratio over
+/// {data, model, hybrid(2,4,...,p)} — the "choosing the right work
+/// partitioning strategy" procedure.
+pub fn best_parallelism(layer: &LayerDesc, p: usize, batch: usize) -> Parallelism {
+    let mut candidates = vec![Parallelism::Data, Parallelism::Model];
+    let mut g = 2;
+    while g < p {
+        candidates.push(Parallelism::Hybrid { group: g });
+        g *= 2;
+    }
+    *candidates
+        .iter()
+        .max_by(|a, b| {
+            ratio(layer, **a, p, batch)
+                .partial_cmp(&ratio(layer, **b, p, batch))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// Pick the best UNIFORM node-group size for a whole model on a cluster
+/// of `p` nodes: evaluates every power-of-two group size with the
+/// alpha-beta fabric model and returns (group, predicted exposed comm ns)
+/// — the paper's "identify the optimal parallelization strategy",
+/// model-level granularity. Used by `Session::auto_group` and the A1
+/// bench cross-check.
+pub fn best_group_size(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+) -> (usize, u64) {
+    let mut best = (1usize, u64::MAX);
+    let mut g = 1usize;
+    while g <= p {
+        if p % g == 0 {
+            // Per-node comm cost: weight shards across groups (hideable;
+            // count the unhidden fraction vs the bwd window) + blocking
+            // activation exchanges (always exposed).
+            let mut act_ns = 0u64;
+            let mut grad_ns = 0u64;
+            let groups = p / g;
+            for layer in &model.layers {
+                if g > 1 && layer.out_act_elems > 0 {
+                    let bytes = (4 * layer.out_act_elems * batch * g) as u64;
+                    // ring allgather within the group, twice (fwd + bwd)
+                    act_ns += 2 * (g as u64 - 1) * topo.msg_ns(bytes / g as u64);
+                }
+                if groups > 1 && layer.weight_elems > 0 {
+                    let bytes = (4 * layer.weight_elems.div_ceil(g)) as u64;
+                    grad_ns += crate::collectives::selector::predict_allreduce_ns(
+                        topo,
+                        crate::collectives::Algorithm::Auto,
+                        groups,
+                        bytes,
+                    );
+                }
+            }
+            let bwd_window =
+                node.compute_ns(model.bwd_flops_per_sample() * batch as f64, 2);
+            let exposed = act_ns + grad_ns.saturating_sub(bwd_window);
+            if exposed < best.1 {
+                best = (g, exposed);
+            }
+        }
+        g *= 2;
+    }
+    best
+}
+
+/// Closed-form iteration-time prediction for data-parallel training with
+/// perfect overlap except the first layer (the paper's best case), used to
+/// cross-check the simulator.
+pub fn predict_iteration_ns(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+    comm_cores: usize,
+) -> u64 {
+    let compute_ns = node.compute_ns(model.step_flops(batch), comm_cores);
+    if p <= 1 {
+        return compute_ns;
+    }
+    let mut comm_ns = 0u64;
+    for (_, layer) in model.weighted_layers() {
+        let bytes = comm_bytes(layer, Parallelism::Data, p, batch);
+        comm_ns += crate::collectives::selector::predict_allreduce_ns(
+            topo,
+            crate::collectives::Algorithm::Auto,
+            p,
+            // predict takes total buffer bytes; comm_bytes already has the
+            // ring factor, so undo it here.
+            (bytes as f64 / (2.0 * (p as f64 - 1.0) / p as f64)) as u64,
+        );
+    }
+    // With overlap, exposed comm = max(0, comm - bwd compute window).
+    let bwd_ns = node.compute_ns(model.bwd_flops_per_sample() * batch as f64, comm_cores);
+    let exposed = comm_ns.saturating_sub(bwd_ns);
+    compute_ns + exposed
+}
+
+/// Weak-scaling efficiency prediction: T(1) / T(P) with per-node batch
+/// fixed.
+pub fn predict_efficiency(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+    comm_cores: usize,
+) -> f64 {
+    let t1 = predict_iteration_ns(model, topo, node, 1, batch, comm_cores);
+    let tp = predict_iteration_ns(model, topo, node, p, batch, comm_cores);
+    t1 as f64 / tp as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{fc, ModelDesc};
+
+    fn conv_layer() -> LayerDesc {
+        crate::models::conv("c", 3, 256, 256, 28, 28)
+    }
+
+    fn fc_layer() -> LayerDesc {
+        fc("f", 4096, 4096)
+    }
+
+    #[test]
+    fn data_parallel_ratio_grows_with_batch() {
+        let l = conv_layer();
+        let r1 = ratio(&l, Parallelism::Data, 16, 1);
+        let r32 = ratio(&l, Parallelism::Data, 16, 32);
+        assert!((r32 / r1 - 32.0).abs() < 0.5, "{r1} {r32}");
+    }
+
+    #[test]
+    fn model_parallel_ratio_batch_independent() {
+        let l = fc_layer();
+        let r1 = ratio(&l, Parallelism::Model, 16, 1);
+        let r32 = ratio(&l, Parallelism::Model, 16, 32);
+        // Compute scales with batch but so does activation comm.
+        assert!((r32 / r1 - 1.0).abs() < 0.05, "{r1} {r32}");
+    }
+
+    #[test]
+    fn conv_prefers_data_fc_prefers_model_or_hybrid() {
+        // The paper's table: conv layers (small weights, big activations)
+        // → data parallel; fc layers (big weights, small activations) at
+        // small batch → model/hybrid.
+        let c = conv_layer();
+        assert_eq!(best_parallelism(&c, 64, 32), Parallelism::Data);
+        let f = fc_layer();
+        let best = best_parallelism(&f, 64, 4);
+        assert_ne!(best, Parallelism::Data, "fc at tiny batch must shard the model");
+    }
+
+    #[test]
+    fn ratio_independent_of_kernel_size_for_data_parallel() {
+        // Das et al.: the data-parallel ratio depends on output featuremap
+        // size and batch, NOT on k (both compute and weights carry k²).
+        let l3 = crate::models::conv("a", 3, 128, 128, 28, 28);
+        let l5 = crate::models::conv("b", 5, 128, 128, 28, 28);
+        let r3 = ratio(&l3, Parallelism::Data, 16, 8);
+        let r5 = ratio(&l5, Parallelism::Data, 16, 8);
+        assert!((r3 / r5 - 1.0).abs() < 0.02, "{r3} vs {r5}");
+    }
+
+    #[test]
+    fn hybrid_interpolates_extremes() {
+        let l = fc_layer();
+        let (p, b) = (16, 8);
+        let d = comm_bytes(&l, Parallelism::Data, p, b);
+        let m = comm_bytes(&l, Parallelism::Model, p, b);
+        let h1 = comm_bytes(&l, Parallelism::Hybrid { group: 1 }, p, b);
+        let hp = comm_bytes(&l, Parallelism::Hybrid { group: p }, p, b);
+        // group=1 == pure data parallel; group=p == pure model parallel.
+        assert_eq!(h1, d);
+        assert_eq!(hp, m);
+    }
+
+    #[test]
+    fn efficiency_increases_with_batch() {
+        let model = ModelDesc::by_name("resnet50").unwrap();
+        let topo = crate::fabric::topology::Topology::omnipath_100g();
+        let node = crate::fabric::topology::NodeSpec::skylake_6148();
+        let e_small = predict_efficiency(&model, &topo, &node, 64, 2, 2);
+        let e_big = predict_efficiency(&model, &topo, &node, 64, 64, 2);
+        assert!(e_big > e_small, "{e_small} vs {e_big}");
+    }
+
+    #[test]
+    fn auto_group_matches_model_character() {
+        let topo = crate::fabric::topology::Topology::eth_25g();
+        let node = crate::fabric::topology::NodeSpec::skylake_6148();
+        // fc-heavy AlexNet at tiny batch: grouping must win.
+        let alex = ModelDesc::by_name("alexnet").unwrap();
+        let (g_alex, _) = best_group_size(&alex, &topo, &node, 64, 4);
+        assert!(g_alex > 1, "alexnet wants model sharding, got group {g_alex}");
+        // conv-dominated ResNet-50 at healthy batch: pure data parallel.
+        let resnet = ModelDesc::by_name("resnet50").unwrap();
+        let (g_res, _) = best_group_size(&resnet, &topo, &node, 64, 32);
+        assert_eq!(g_res, 1);
+    }
+
+    #[test]
+    fn session_auto_group_applies() {
+        let topo = crate::fabric::topology::Topology::eth_25g();
+        let node = crate::fabric::topology::NodeSpec::skylake_6148();
+        let alex = ModelDesc::by_name("alexnet").unwrap();
+        let mut s = crate::mlsl::Session::new(crate::mlsl::Distribution::data_parallel(64));
+        s.add_model(&alex);
+        let g = s.auto_group(&alex, &topo, &node, 4);
+        assert_eq!(s.distribution().group_size(), g);
+        assert!(g > 1);
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        let l = conv_layer();
+        assert_eq!(comm_bytes(&l, Parallelism::Data, 1, 32), 0);
+        assert!(ratio(&l, Parallelism::Data, 1, 32).is_infinite());
+    }
+}

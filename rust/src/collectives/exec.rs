@@ -1,0 +1,176 @@
+//! Real (data-moving) executor for collective programs over the
+//! shared-memory fabric.
+//!
+//! [`execute`] is the simple blocking single-op path (tests, barriers,
+//! broadcast of initial parameters). The multi-op *prioritized* execution
+//! the paper is about lives in [`crate::progress`], which drives the same
+//! step semantics incrementally.
+//!
+//! Message tag = collective id: within one collective, messages between a
+//! (src, dst) pair are produced and consumed in program order, so FIFO
+//! matching per (src, tag) is sufficient (see program.rs header).
+
+use super::program::{Program, Range};
+use super::quant::{decode_into, encode, WireDtype};
+use super::ReduceOp;
+use crate::fabric::shm::ShmEndpoint;
+
+/// Execute one program step's send half: encode `buf[range]` and ship it.
+pub fn do_send(
+    ep: &ShmEndpoint,
+    coll_id: u64,
+    buf: &[f32],
+    to: crate::Rank,
+    range: Range,
+    wire: WireDtype,
+) {
+    let payload = encode(&buf[range.off..range.end()], wire);
+    ep.send(to, coll_id, payload);
+}
+
+/// Apply a received payload to `buf[range]` (reduce or overwrite).
+pub fn apply_recv(
+    buf: &mut [f32],
+    range: Range,
+    payload: &[u8],
+    wire: WireDtype,
+    reduce: bool,
+    op: ReduceOp,
+) {
+    let dst = &mut buf[range.off..range.off + range.len];
+    decode_into(payload, dst, wire, if reduce { Some(op) } else { None });
+}
+
+/// Blocking execution of one collective program against the fabric.
+pub fn execute(
+    ep: &mut ShmEndpoint,
+    coll_id: u64,
+    prog: &Program,
+    buf: &mut [f32],
+    op: ReduceOp,
+    wire: WireDtype,
+) {
+    for step in &prog.steps {
+        if let Some(sd) = &step.send {
+            do_send(ep, coll_id, buf, sd.to, sd.range, wire);
+        }
+        if let Some(rv) = &step.recv {
+            let payload = ep.recv(rv.from, coll_id);
+            apply_recv(buf, rv.range, &payload, wire, rv.reduce, op);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::program::CollectiveKind;
+    use crate::collectives::{program, Algorithm};
+    use crate::fabric::shm;
+    use std::thread;
+
+    fn run_collective(
+        p: usize,
+        n: usize,
+        kind: CollectiveKind,
+        alg: Algorithm,
+        wire: WireDtype,
+        init: impl Fn(usize) -> Vec<f32> + Send + Sync + Copy + 'static,
+    ) -> Vec<Vec<f32>> {
+        let eps = shm::fabric(p);
+        let programs = program::build(kind, alg, p, n);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(programs)
+            .map(|(mut ep, prog)| {
+                thread::spawn(move || {
+                    let mut buf = init(ep.rank);
+                    execute(&mut ep, 1, &prog, &mut buf, ReduceOp::Sum, wire);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn ring_allreduce_sums_across_threads() {
+        let (p, n) = (4, 103);
+        let bufs = run_collective(p, n, CollectiveKind::Allreduce, Algorithm::Ring,
+                                  WireDtype::F32,
+                                  move |r| (0..103).map(|i| (r * 1000 + i) as f32).collect());
+        let want: Vec<f32> = (0..n)
+            .map(|i| (0..p).map(|r| (r * 1000 + i) as f32).sum())
+            .collect();
+        for buf in &bufs {
+            assert_eq!(buf, &want);
+        }
+    }
+
+    #[test]
+    fn halving_doubling_matches_ring() {
+        let (p, n) = (8, 64);
+        let init = move |r: usize| (0..64).map(|i| ((r + 1) * (i + 1)) as f32).collect::<Vec<_>>();
+        let a = run_collective(p, n, CollectiveKind::Allreduce, Algorithm::Ring,
+                               WireDtype::F32, init);
+        let b = run_collective(p, n, CollectiveKind::Allreduce,
+                               Algorithm::HalvingDoubling, WireDtype::F32, init);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rdoubling_matches_ring() {
+        let (p, n) = (4, 33);
+        let init = move |r: usize| (0..33).map(|i| (r as f32) - (i as f32)).collect::<Vec<_>>();
+        let a = run_collective(p, n, CollectiveKind::Allreduce, Algorithm::Ring,
+                               WireDtype::F32, init);
+        let b = run_collective(p, n, CollectiveKind::Allreduce,
+                               Algorithm::RecursiveDoubling, WireDtype::F32, init);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn broadcast_delivers_root_buffer() {
+        let (p, n) = (6, 41);
+        let bufs = run_collective(p, n, CollectiveKind::Broadcast { root: 2 },
+                                  Algorithm::Ring, WireDtype::F32,
+                                  move |r| if r == 2 {
+                                      (0..41).map(|i| i as f32 * 0.5).collect()
+                                  } else {
+                                      vec![0.0; 41]
+                                  });
+        let want: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        for buf in &bufs {
+            assert_eq!(buf, &want);
+        }
+    }
+
+    #[test]
+    fn bf16_allreduce_within_tolerance() {
+        let (p, n) = (4, 64);
+        let bufs = run_collective(p, n, CollectiveKind::Allreduce, Algorithm::Ring,
+                                  WireDtype::Bf16,
+                                  move |r| (0..64).map(|i| (r + i) as f32 / 7.0).collect());
+        for buf in &bufs {
+            for (i, v) in buf.iter().enumerate() {
+                let want: f32 = (0..p).map(|r| (r + i) as f32 / 7.0).sum();
+                assert!((v - want).abs() / want.max(1.0) < 0.05, "{i}: {v} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_allreduce_within_tolerance() {
+        let (p, n) = (4, 512);
+        let bufs = run_collective(p, n, CollectiveKind::Allreduce, Algorithm::Ring,
+                                  WireDtype::Int8Block,
+                                  move |r| (0..512).map(|i| ((r * i) % 13) as f32).collect());
+        for buf in &bufs {
+            for (i, v) in buf.iter().enumerate() {
+                let want: f32 = (0..p).map(|r| ((r * i) % 13) as f32).sum();
+                // int8 quant: generous absolute tolerance scaled by magnitude.
+                assert!((v - want).abs() <= 0.05 * want.abs() + 0.8, "{i}: {v} vs {want}");
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Collectives: algorithms, wire formats, priorities, selection.
+//!
+//! A collective is compiled into one *chunk program per rank*
+//! ([`program`]): an ordered list of steps, each an optional send and an
+//! optional receive(+reduce) over an element range. The same programs are
+//! executed two ways:
+//!
+//! * **really** — [`exec`] moves actual bytes over the in-process
+//!   [`crate::fabric::shm`] fabric (the training path), with low-precision
+//!   wire formats from [`quant`];
+//! * **symbolically** — [`verify`] checks algebraic correctness (every
+//!   rank ends with every rank's contribution exactly once), which is the
+//!   proptest invariant; and the [`crate::engine`] *times* them against
+//!   the discrete-event fabric.
+//!
+//! Algorithm choice ([`selector`]) follows the paper's "implements
+//! performance critical data path operations in an optimal manner":
+//! latency-optimal recursive doubling for small payloads,
+//! bandwidth-optimal ring for large ones, halving-doubling in between.
+
+pub mod exec;
+pub mod priority;
+pub mod program;
+pub mod quant;
+pub mod selector;
+pub mod simexec;
+pub mod verify;
+
+pub use priority::PriorityPolicy;
+pub use program::{CollectiveKind, Program, Range, RecvStep, SendStep, Step};
+pub use quant::WireDtype;
+pub use selector::choose_algorithm;
+
+/// Reduction operator applied element-wise during reducing receives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    #[inline]
+    pub fn apply(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+}
+
+/// Collective algorithm family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Pipeline ring: bandwidth-optimal, 2(P−1) steps of n/P elements.
+    Ring,
+    /// Recursive doubling on the full buffer: log₂P steps of n elements —
+    /// latency-optimal for small messages. P must be a power of two.
+    RecursiveDoubling,
+    /// Rabenseifner reduce-scatter-halving + allgather-doubling:
+    /// bandwidth-optimal with log₂P steps. P must be a power of two.
+    HalvingDoubling,
+    /// Let the library pick per message size / rank count (the default).
+    Auto,
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Algorithm::Ring => "ring",
+            Algorithm::RecursiveDoubling => "rdoubling",
+            Algorithm::HalvingDoubling => "halving",
+            Algorithm::Auto => "auto",
+        };
+        f.write_str(s)
+    }
+}

@@ -1,0 +1,77 @@
+//! Message prioritization policy — the paper's headline runtime feature.
+//!
+//! With data parallelism the FIRST layer's weight-gradient allreduce is
+//! issued LAST (backprop runs output→input) but needed FIRST (the next
+//! forward pass starts at layer 0). MPI completes operations roughly in
+//! issue order; MLSL instead assigns each gradient op a priority equal to
+//! its layer's forward position and lets urgent ops preempt bulk ones
+//! (fabric-level preemption in the simulator, step-level preemption in the
+//! real progress engine).
+
+use crate::Priority;
+
+/// How gradient-allreduce priorities are assigned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PriorityPolicy {
+    /// Everything at the same priority — MPI/Horovod issue-order behaviour.
+    #[default]
+    None,
+    /// Priority = forward position of the layer (0 = first = most urgent).
+    ByLayer,
+    /// Priority = reverse forward position (an intentionally-pessimal
+    /// ablation: the LAST layer wins the wire; used in tests/benches to
+    /// show ordering matters, not just "any ordering").
+    ReverseLayer,
+}
+
+impl PriorityPolicy {
+    /// Priority class for a parameter at `fwd_order` out of `n_layers`.
+    pub fn assign(&self, fwd_order: usize, n_layers: usize) -> Priority {
+        match self {
+            PriorityPolicy::None => 128,
+            PriorityPolicy::ByLayer => fwd_order.min(254) as Priority,
+            PriorityPolicy::ReverseLayer => {
+                n_layers.saturating_sub(1 + fwd_order).min(254) as Priority
+            }
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "none" | "fifo" => Some(PriorityPolicy::None),
+            "bylayer" | "layer" => Some(PriorityPolicy::ByLayer),
+            "reverse" => Some(PriorityPolicy::ReverseLayer),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_layer_makes_first_layer_most_urgent() {
+        let p = PriorityPolicy::ByLayer;
+        assert!(p.assign(0, 50) < p.assign(1, 50));
+        assert!(p.assign(1, 50) < p.assign(49, 50));
+    }
+
+    #[test]
+    fn none_is_flat() {
+        let p = PriorityPolicy::None;
+        assert_eq!(p.assign(0, 50), p.assign(49, 50));
+    }
+
+    #[test]
+    fn reverse_inverts() {
+        let p = PriorityPolicy::ReverseLayer;
+        assert!(p.assign(49, 50) < p.assign(0, 50));
+    }
+
+    #[test]
+    fn clamps_to_u8() {
+        let p = PriorityPolicy::ByLayer;
+        assert_eq!(p.assign(1000, 2000), 254);
+    }
+}

@@ -1,0 +1,447 @@
+//! Collective algorithms compiled to per-rank chunk programs.
+//!
+//! A [`Program`] is executed strictly in step order by a rank; messages
+//! between a (src, dst) pair within one collective are FIFO, so matching
+//! needs only the collective id. Send data is read from the buffer at the
+//! moment the step executes — algorithms below are constructed so that at
+//! that moment the range already carries every contribution it must.
+
+use crate::Rank;
+
+/// Contiguous element range (not bytes — the executor scales by dtype).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range {
+    pub off: usize,
+    pub len: usize,
+}
+
+impl Range {
+    pub fn new(off: usize, len: usize) -> Self {
+        Self { off, len }
+    }
+    pub fn end(&self) -> usize {
+        self.off + self.len
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SendStep {
+    pub to: Rank,
+    pub range: Range,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvStep {
+    pub from: Rank,
+    pub range: Range,
+    /// true → reduce into the buffer; false → overwrite.
+    pub reduce: bool,
+}
+
+/// One program step: the send and recv (if both present) are logically
+/// concurrent; the step completes when both have.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Step {
+    pub send: Option<SendStep>,
+    pub recv: Option<RecvStep>,
+}
+
+/// Per-rank program for one collective instance.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub rank: Rank,
+    pub steps: Vec<Step>,
+}
+
+/// What the collective computes (drives program generation + verification).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    Allreduce,
+    ReduceScatter,
+    Allgather,
+    Broadcast { root: Rank },
+    Reduce { root: Rank },
+    Barrier,
+}
+
+/// Split `n` elements into `p` balanced segments; returns offsets of len
+/// p+1 (segment i = [seg[i], seg[i+1])). Exact for any n, p.
+pub fn segments(n: usize, p: usize) -> Vec<usize> {
+    (0..=p).map(|i| i * n / p).collect()
+}
+
+fn seg_range(seg: &[usize], i: usize) -> Range {
+    Range::new(seg[i], seg[i + 1] - seg[i])
+}
+
+/// Range covering segments [lo, hi).
+fn seg_span(seg: &[usize], lo: usize, hi: usize) -> Range {
+    Range::new(seg[lo], seg[hi] - seg[lo])
+}
+
+// ---------------------------------------------------------------------------
+// Ring algorithms
+// ---------------------------------------------------------------------------
+
+/// Ring reduce-scatter: after p−1 steps rank r owns the fully-reduced
+/// segment (r+1) mod p.
+pub fn reduce_scatter_ring(p: usize, n: usize) -> Vec<Program> {
+    assert!(p >= 1);
+    let seg = segments(n, p);
+    (0..p)
+        .map(|r| {
+            let steps = (0..p.saturating_sub(1))
+                .map(|s| Step {
+                    send: Some(SendStep {
+                        to: (r + 1) % p,
+                        range: seg_range(&seg, (r + p - s) % p),
+                    }),
+                    recv: Some(RecvStep {
+                        from: (r + p - 1) % p,
+                        range: seg_range(&seg, (r + p - 1 - s) % p),
+                        reduce: true,
+                    }),
+                })
+                .collect();
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Ring allgather: rank r starts owning segment `own(r)` and ends with all.
+/// `owner_shift` selects which segment each rank starts with (the ring
+/// allreduce composition needs shift=1: rank r owns seg (r+1) mod p).
+pub fn allgather_ring_shifted(p: usize, n: usize, owner_shift: usize) -> Vec<Program> {
+    assert!(p >= 1);
+    let seg = segments(n, p);
+    (0..p)
+        .map(|r| {
+            let steps = (0..p.saturating_sub(1))
+                .map(|s| Step {
+                    send: Some(SendStep {
+                        to: (r + 1) % p,
+                        range: seg_range(&seg, (r + owner_shift + p - s) % p),
+                    }),
+                    recv: Some(RecvStep {
+                        from: (r + p - 1) % p,
+                        range: seg_range(&seg, (r + owner_shift + p - 1 - s) % p),
+                        reduce: false,
+                    }),
+                })
+                .collect();
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Ring allgather with the natural ownership (rank r owns segment r).
+pub fn allgather_ring(p: usize, n: usize) -> Vec<Program> {
+    allgather_ring_shifted(p, n, 0)
+}
+
+/// Ring allreduce = ring reduce-scatter ∘ ring allgather. Bandwidth cost
+/// 2·(p−1)/p · n elements per rank: optimal.
+pub fn allreduce_ring(p: usize, n: usize) -> Vec<Program> {
+    let rs = reduce_scatter_ring(p, n);
+    let ag = allgather_ring_shifted(p, n, 1);
+    rs.into_iter()
+        .zip(ag)
+        .map(|(mut a, b)| {
+            a.steps.extend(b.steps);
+            a
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Recursive doubling / halving-doubling (power-of-two rank counts)
+// ---------------------------------------------------------------------------
+
+fn assert_pow2(p: usize) {
+    assert!(p.is_power_of_two(), "algorithm requires power-of-two ranks, got {p}");
+}
+
+/// Recursive-doubling allreduce: log₂p exchanges of the FULL buffer.
+/// Latency-optimal (fewest rounds) — the small-message choice.
+pub fn allreduce_rdoubling(p: usize, n: usize) -> Vec<Program> {
+    assert_pow2(p);
+    let full = Range::new(0, n);
+    (0..p)
+        .map(|r| {
+            let mut steps = Vec::new();
+            let mut d = 1;
+            while d < p {
+                let partner = r ^ d;
+                steps.push(Step {
+                    send: Some(SendStep { to: partner, range: full }),
+                    recv: Some(RecvStep { from: partner, range: full, reduce: true }),
+                });
+                d <<= 1;
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Rabenseifner allreduce: reduce-scatter by recursive *halving* then
+/// allgather by recursive *doubling*. Bandwidth-optimal with only
+/// 2·log₂p rounds.
+pub fn allreduce_halving_doubling(p: usize, n: usize) -> Vec<Program> {
+    assert_pow2(p);
+    let seg = segments(n, p);
+    (0..p)
+        .map(|r| {
+            let mut steps = Vec::new();
+            // Reduce-scatter phase: block = segment window [lo, hi).
+            let (mut lo, mut hi) = (0usize, p);
+            let mut d = p / 2;
+            while d >= 1 {
+                let partner = r ^ d;
+                let mid = (lo + hi) / 2;
+                let (keep, give) = if r & d == 0 {
+                    ((lo, mid), (mid, hi))
+                } else {
+                    ((mid, hi), (lo, mid))
+                };
+                steps.push(Step {
+                    send: Some(SendStep { to: partner, range: seg_span(&seg, give.0, give.1) }),
+                    recv: Some(RecvStep {
+                        from: partner,
+                        range: seg_span(&seg, keep.0, keep.1),
+                        reduce: true,
+                    }),
+                });
+                lo = keep.0;
+                hi = keep.1;
+                d >>= 1;
+            }
+            // Allgather phase: mirror, doubling the block back up.
+            let mut d = 1;
+            while d < p {
+                let partner = r ^ d;
+                // Partner's block is the sibling of ours at this level.
+                let width = hi - lo;
+                let (plo, phi) = if (lo / width) % 2 == 0 {
+                    (hi, hi + width)
+                } else {
+                    (lo - width, lo)
+                };
+                steps.push(Step {
+                    send: Some(SendStep { to: partner, range: seg_span(&seg, lo, hi) }),
+                    recv: Some(RecvStep {
+                        from: partner,
+                        range: seg_span(&seg, plo, phi),
+                        reduce: false,
+                    }),
+                });
+                lo = lo.min(plo);
+                hi = hi.max(phi);
+                d <<= 1;
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Binomial trees
+// ---------------------------------------------------------------------------
+
+/// Binomial-tree broadcast of the full buffer from `root`.
+pub fn broadcast_binomial(p: usize, n: usize, root: Rank) -> Vec<Program> {
+    let full = Range::new(0, n);
+    (0..p)
+        .map(|r| {
+            let relative = (r + p - root) % p;
+            let mut steps = Vec::new();
+            // Receive once, from relative's lowest set bit "parent".
+            let mut mask = 1;
+            while mask < p {
+                if relative & mask != 0 {
+                    let src = (r + p - mask) % p;
+                    steps.push(Step {
+                        send: None,
+                        recv: Some(RecvStep { from: src, range: full, reduce: false }),
+                    });
+                    break;
+                }
+                mask <<= 1;
+            }
+            // Then fan out to children at descending masks.
+            let mut m = mask >> 1;
+            while m > 0 {
+                if relative + m < p {
+                    let dst = (r + m) % p;
+                    steps.push(Step {
+                        send: Some(SendStep { to: dst, range: full }),
+                        recv: None,
+                    });
+                }
+                m >>= 1;
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Binomial-tree reduce of the full buffer to `root`.
+pub fn reduce_binomial(p: usize, n: usize, root: Rank) -> Vec<Program> {
+    let full = Range::new(0, n);
+    (0..p)
+        .map(|r| {
+            let relative = (r + p - root) % p;
+            let mut steps = Vec::new();
+            let mut mask = 1;
+            // Mirror of broadcast: receive from children (ascending masks)
+            // while our bit is clear, then send once to the parent.
+            while mask < p {
+                if relative & mask == 0 {
+                    if relative + mask < p {
+                        let src = (r + mask) % p;
+                        steps.push(Step {
+                            send: None,
+                            recv: Some(RecvStep { from: src, range: full, reduce: true }),
+                        });
+                    }
+                } else {
+                    let dst = (r + p - mask) % p;
+                    steps.push(Step {
+                        send: Some(SendStep { to: dst, range: full }),
+                        recv: None,
+                    });
+                    break;
+                }
+                mask <<= 1;
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Barrier: recursive-doubling exchange of a 1-element token.
+pub fn barrier(p: usize) -> Vec<Program> {
+    if p.is_power_of_two() {
+        allreduce_rdoubling(p, 1)
+    } else {
+        allreduce_ring(p, p.max(1))
+    }
+}
+
+/// Build programs for (kind, algorithm). Panics on unsupported combos
+/// (the selector never produces them).
+pub fn build(
+    kind: CollectiveKind,
+    alg: super::Algorithm,
+    p: usize,
+    n: usize,
+) -> Vec<Program> {
+    use super::Algorithm as A;
+    use CollectiveKind as K;
+    match (kind, alg) {
+        (K::Allreduce, A::Ring) => allreduce_ring(p, n),
+        (K::Allreduce, A::RecursiveDoubling) => allreduce_rdoubling(p, n),
+        (K::Allreduce, A::HalvingDoubling) => allreduce_halving_doubling(p, n),
+        (K::ReduceScatter, _) => reduce_scatter_ring(p, n),
+        (K::Allgather, _) => allgather_ring(p, n),
+        (K::Broadcast { root }, _) => broadcast_binomial(p, n, root),
+        (K::Reduce { root }, _) => reduce_binomial(p, n, root),
+        (K::Barrier, _) => barrier(p),
+        (K::Allreduce, A::Auto) => unreachable!("resolve Auto via selector first"),
+    }
+}
+
+/// Total bytes a single rank puts on the wire for this program.
+pub fn rank_send_bytes(prog: &Program, elem_bytes: usize) -> u64 {
+    prog.steps
+        .iter()
+        .filter_map(|s| s.send.as_ref())
+        .map(|s| (s.range.len * elem_bytes) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_are_exact_partition() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for p in [1usize, 2, 3, 5, 8] {
+                let seg = segments(n, p);
+                assert_eq!(seg[0], 0);
+                assert_eq!(*seg.last().unwrap(), n);
+                assert!(seg.windows(2).all(|w| w[0] <= w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_step_count() {
+        let p = 5;
+        for prog in allreduce_ring(p, 100) {
+            assert_eq!(prog.steps.len(), 2 * (p - 1));
+        }
+    }
+
+    #[test]
+    fn rdoubling_step_count() {
+        for prog in allreduce_rdoubling(8, 64) {
+            assert_eq!(prog.steps.len(), 3);
+        }
+    }
+
+    #[test]
+    fn halving_doubling_bandwidth_is_optimal() {
+        // Per-rank wire bytes must be 2(p-1)/p * n elements (+0): same as ring.
+        let (p, n) = (8, 1024);
+        for prog in allreduce_halving_doubling(p, n) {
+            let sent: usize = prog
+                .steps
+                .iter()
+                .filter_map(|s| s.send.map(|x| x.range.len))
+                .sum();
+            assert_eq!(sent, 2 * (p - 1) * n / p);
+        }
+    }
+
+    #[test]
+    fn broadcast_root_never_receives() {
+        for root in 0..6 {
+            let progs = broadcast_binomial(6, 10, root);
+            assert!(progs[root].steps.iter().all(|s| s.recv.is_none()));
+            // Every non-root receives exactly once.
+            for (r, prog) in progs.iter().enumerate() {
+                if r != root {
+                    assert_eq!(
+                        prog.steps.iter().filter(|s| s.recv.is_some()).count(),
+                        1,
+                        "rank {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_root_never_sends() {
+        for root in 0..6 {
+            let progs = reduce_binomial(6, 10, root);
+            assert!(progs[root].steps.iter().all(|s| s.send.is_none()));
+            for (r, prog) in progs.iter().enumerate() {
+                if r != root {
+                    assert_eq!(
+                        prog.steps.iter().filter(|s| s.send.is_some()).count(),
+                        1,
+                        "rank {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_programs_are_empty() {
+        assert!(allreduce_ring(1, 10)[0].steps.is_empty());
+        assert!(broadcast_binomial(1, 10, 0)[0].steps.is_empty());
+    }
+}

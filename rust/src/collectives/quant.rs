@@ -1,0 +1,273 @@
+//! Low-precision wire formats — the paper's "Reducing communication volume".
+//!
+//! Three wire dtypes: f32 (4 B/elem), bf16 (2 B/elem, truncation-rounded),
+//! and int8 with one f32 absmax scale per [`QBLOCK`]-element block
+//! (≈1.016 B/elem). Reduction is ALWAYS performed in f32 after decoding —
+//! the paper's correctness requirement ("natively support low precision
+//! communication, for guaranteeing correctness"): precision is lost only
+//! on the wire, never in the accumulator.
+//!
+//! The int8 scheme mirrors the L1 Pallas kernel
+//! (`python/compile/kernels/quantize.py`) bit-for-bit so a gradient
+//! quantized on either side of the stack decodes identically.
+
+use super::ReduceOp;
+use crate::util::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
+
+/// Elements per int8 quantization block (one f32 scale per block).
+/// Must match `python/compile/kernels/ref.py::QBLOCK`.
+pub const QBLOCK: usize = 256;
+
+/// Wire element encoding for collective payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireDtype {
+    #[default]
+    F32,
+    Bf16,
+    /// Per-block absmax int8; `QBLOCK` elements share one f32 scale.
+    Int8Block,
+}
+
+impl WireDtype {
+    /// Wire bytes for `n` elements.
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        match self {
+            WireDtype::F32 => 4 * n,
+            WireDtype::Bf16 => 2 * n,
+            WireDtype::Int8Block => n + 4 * n.div_ceil(QBLOCK),
+        }
+    }
+
+    /// Volume reduction factor vs f32.
+    pub fn compression(&self, n: usize) -> f64 {
+        (4 * n) as f64 / self.wire_bytes(n) as f64
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "f32" | "fp32" => Some(WireDtype::F32),
+            "bf16" => Some(WireDtype::Bf16),
+            "int8" | "i8" => Some(WireDtype::Int8Block),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WireDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            WireDtype::F32 => "f32",
+            WireDtype::Bf16 => "bf16",
+            WireDtype::Int8Block => "int8",
+        })
+    }
+}
+
+/// Encode `src` into wire bytes.
+pub fn encode(src: &[f32], dtype: WireDtype) -> Vec<u8> {
+    match dtype {
+        WireDtype::F32 => {
+            // Hot path (§Perf): one memcpy. f32 is IEEE-754 and the wire
+            // format is little-endian; on the LE targets we support this
+            // is a byte-identical reinterpretation.
+            let mut out = vec![0u8; 4 * src.len()];
+            // SAFETY: u8 has no alignment requirements; lengths match.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr() as *const u8,
+                    out.as_mut_ptr(),
+                    4 * src.len(),
+                );
+            }
+            out
+        }
+        WireDtype::Bf16 => {
+            let mut out = Vec::with_capacity(2 * src.len());
+            for v in src {
+                out.extend_from_slice(&f32_to_bf16_bits(*v).to_le_bytes());
+            }
+            out
+        }
+        WireDtype::Int8Block => {
+            let nblk = src.len().div_ceil(QBLOCK);
+            let mut out = vec![0u8; 4 * nblk + src.len()];
+            let (scale_bytes, payload) = out.split_at_mut(4 * nblk);
+            for (bi, blk) in src.chunks(QBLOCK).enumerate() {
+                let absmax = blk.iter().fold(0f32, |a, v| a.max(v.abs()));
+                let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+                scale_bytes[4 * bi..4 * bi + 4].copy_from_slice(&scale.to_le_bytes());
+                let inv = 1.0 / scale; // mul beats div in the inner loop
+                let base = bi * QBLOCK;
+                for (j, v) in blk.iter().enumerate() {
+                    let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                    payload[base + j] = q as u8;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Decode wire bytes to f32 (allocating).
+pub fn decode(bytes: &[u8], n: usize, dtype: WireDtype) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    decode_into(bytes, &mut out, dtype, None);
+    out
+}
+
+/// Decode wire bytes into `dst`, optionally reducing with `op` (None →
+/// overwrite). This is the single hot decode path the executor uses.
+pub fn decode_into(bytes: &[u8], dst: &mut [f32], dtype: WireDtype, op: Option<ReduceOp>) {
+    let n = dst.len();
+    assert_eq!(bytes.len(), dtype.wire_bytes(n), "wire size mismatch");
+    match dtype {
+        WireDtype::F32 => match op {
+            // Overwrite: single memcpy (see encode).
+            None => unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    dst.as_mut_ptr() as *mut u8,
+                    4 * n,
+                );
+            },
+            Some(ReduceOp::Sum) => {
+                // Autovectorizable sum-reduce over exact 4-byte chunks.
+                for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *d += f32::from_le_bytes(c.try_into().unwrap());
+                }
+            }
+            Some(o) => {
+                for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *d = o.apply(*d, f32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+        },
+        WireDtype::Bf16 => {
+            for (i, d) in dst.iter_mut().enumerate() {
+                let v = bf16_bits_to_f32(u16::from_le_bytes(
+                    bytes[2 * i..2 * i + 2].try_into().unwrap(),
+                ));
+                *d = match op {
+                    Some(o) => o.apply(*d, v),
+                    None => v,
+                };
+            }
+        }
+        WireDtype::Int8Block => {
+            let nblk = n.div_ceil(QBLOCK);
+            let (scale_bytes, q) = bytes.split_at(4 * nblk);
+            // Block-wise: hoist the scale load out of the inner loop.
+            for (blk, (dblk, qblk)) in dst.chunks_mut(QBLOCK).zip(q.chunks(QBLOCK)).enumerate() {
+                let s = f32::from_le_bytes(
+                    scale_bytes[4 * blk..4 * blk + 4].try_into().unwrap(),
+                );
+                match op {
+                    None => {
+                        for (d, qi) in dblk.iter_mut().zip(qblk) {
+                            *d = (*qi as i8) as f32 * s;
+                        }
+                    }
+                    Some(ReduceOp::Sum) => {
+                        for (d, qi) in dblk.iter_mut().zip(qblk) {
+                            *d += (*qi as i8) as f32 * s;
+                        }
+                    }
+                    Some(o) => {
+                        for (d, qi) in dblk.iter_mut().zip(qblk) {
+                            *d = o.apply(*d, (*qi as i8) as f32 * s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Worst-case absolute round-trip error for a slice under a wire dtype
+/// (used by tests and by the trainer's quantization guard).
+pub fn max_roundtrip_error(src: &[f32], dtype: WireDtype) -> f32 {
+    match dtype {
+        WireDtype::F32 => 0.0,
+        WireDtype::Bf16 => src
+            .iter()
+            .map(|v| (crate::util::bf16::bf16_roundtrip(*v) - v).abs())
+            .fold(0.0, f32::max),
+        WireDtype::Int8Block => src
+            .chunks(QBLOCK)
+            .map(|blk| {
+                let absmax = blk.iter().fold(0f32, |a, v| a.max(v.abs()));
+                absmax / 127.0 * 0.5 + f32::EPSILON * absmax
+            })
+            .fold(0.0, f32::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 2654435761) % 1000) as f32 / 250.0 - 2.0).collect()
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let x = data(1000);
+        let deq = decode(&encode(&x, WireDtype::F32), 1000, WireDtype::F32);
+        assert_eq!(x, deq);
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_bounded() {
+        let x = data(1000);
+        let deq = decode(&encode(&x, WireDtype::Bf16), 1000, WireDtype::Bf16);
+        for (a, b) in x.iter().zip(&deq) {
+            // bf16 has 8 mantissa bits -> rel err <= 2^-8.
+            assert!((a - b).abs() <= a.abs() / 128.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded() {
+        let x = data(QBLOCK * 3 + 17); // non-multiple tail block
+        let deq = decode(&encode(&x, WireDtype::Int8Block), x.len(), WireDtype::Int8Block);
+        let bound = max_roundtrip_error(&x, WireDtype::Int8Block);
+        for (i, (a, b)) in x.iter().zip(&deq).enumerate() {
+            assert!((a - b).abs() <= bound + 1e-6, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_wire_size_and_compression() {
+        let n = 4096;
+        assert_eq!(WireDtype::Int8Block.wire_bytes(n), n + 4 * (n / QBLOCK));
+        assert!(WireDtype::Int8Block.compression(n) > 3.9);
+        assert_eq!(WireDtype::Bf16.compression(n), 2.0);
+        assert_eq!(WireDtype::F32.compression(n), 1.0);
+    }
+
+    #[test]
+    fn decode_with_sum_reduces() {
+        let x = data(512);
+        let wire = encode(&x, WireDtype::F32);
+        let mut acc = x.clone();
+        decode_into(&wire, &mut acc, WireDtype::F32, Some(ReduceOp::Sum));
+        for (a, b) in acc.iter().zip(&x) {
+            assert_eq!(*a, 2.0 * b);
+        }
+    }
+
+    #[test]
+    fn zero_block_is_stable() {
+        let x = vec![0f32; QBLOCK * 2];
+        let deq = decode(&encode(&x, WireDtype::Int8Block), x.len(), WireDtype::Int8Block);
+        assert_eq!(x, deq);
+    }
+
+    #[test]
+    fn max_and_min_ops() {
+        assert_eq!(ReduceOp::Max.apply(1.0, 2.0), 2.0);
+        assert_eq!(ReduceOp::Min.apply(1.0, 2.0), 1.0);
+        assert_eq!(ReduceOp::Sum.apply(1.0, 2.0), 3.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Size-adaptive algorithm selection — the paper's "implements performance
+//! critical data path operations in an optimal manner".
+//!
+//! The choice is driven by the alpha-beta cost model on the actual fabric:
+//!
+//! * ring allreduce:            2(P−1)·(α + γ + (n/P)/B)
+//! * recursive doubling:        log₂P·(α + γ + n/B)
+//! * halving-doubling:          2·log₂P·(α + γ) + 2(P−1)/P·n/B
+//!
+//! Small n → latency term dominates → recursive doubling (fewest rounds).
+//! Large n → bandwidth term dominates → ring / halving-doubling.
+
+use super::Algorithm;
+use crate::fabric::topology::Topology;
+use crate::Ns;
+
+/// Predicted wall time of an allreduce of `bytes` over `p` ranks.
+pub fn predict_allreduce_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u64) -> Ns {
+    if p <= 1 {
+        return 0;
+    }
+    let alpha = (topo.latency_ns + topo.per_msg_overhead_ns) as f64;
+    let n = bytes as f64;
+    let bw = super::super::fabric::gbps_to_bytes_per_ns(topo.link_gbps);
+    let pf = p as f64;
+    let lg = (p as f64).log2().ceil();
+    let t = match alg {
+        Algorithm::Ring => 2.0 * (pf - 1.0) * (alpha + n / pf / bw),
+        Algorithm::RecursiveDoubling => lg * (alpha + n / bw),
+        Algorithm::HalvingDoubling => 2.0 * lg * alpha + 2.0 * (pf - 1.0) / pf * n / bw,
+        Algorithm::Auto => {
+            let best = choose_algorithm(topo, p, bytes);
+            return predict_allreduce_ns(topo, best, p, bytes);
+        }
+    };
+    t.ceil() as Ns
+}
+
+/// Pick the cheapest supported algorithm for this (fabric, p, bytes).
+pub fn choose_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+    if p <= 1 {
+        return Algorithm::Ring;
+    }
+    let mut candidates = vec![Algorithm::Ring];
+    if p.is_power_of_two() {
+        candidates.push(Algorithm::RecursiveDoubling);
+        candidates.push(Algorithm::HalvingDoubling);
+    }
+    *candidates
+        .iter()
+        .min_by_key(|a| predict_allreduce_ns(topo, **a, p, bytes))
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_messages_pick_fewest_rounds() {
+        let topo = Topology::eth_10g();
+        // 4 KB over 64 ranks: latency-bound -> recursive doubling.
+        assert_eq!(choose_algorithm(&topo, 64, 4 * 1024), Algorithm::RecursiveDoubling);
+    }
+
+    #[test]
+    fn large_messages_pick_bandwidth_optimal() {
+        let topo = Topology::eth_10g();
+        let alg = choose_algorithm(&topo, 64, 256 << 20);
+        assert!(
+            matches!(alg, Algorithm::Ring | Algorithm::HalvingDoubling),
+            "{alg:?}"
+        );
+    }
+
+    #[test]
+    fn non_pow2_always_ring() {
+        let topo = Topology::omnipath_100g();
+        assert_eq!(choose_algorithm(&topo, 6, 1024), Algorithm::Ring);
+        assert_eq!(choose_algorithm(&topo, 100, 1 << 20), Algorithm::Ring);
+    }
+
+    #[test]
+    fn prediction_monotone_in_size() {
+        let topo = Topology::omnipath_100g();
+        for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
+            let a = predict_allreduce_ns(&topo, alg, 16, 1 << 10);
+            let b = predict_allreduce_ns(&topo, alg, 16, 1 << 24);
+            assert!(b > a, "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let topo = Topology::eth_10g();
+        assert_eq!(predict_allreduce_ns(&topo, Algorithm::Auto, 1, 1 << 20), 0);
+    }
+
+    #[test]
+    fn crossover_exists() {
+        // Sweeping sizes must switch algorithms somewhere (the A4 bench
+        // regenerates the full crossover table).
+        let topo = Topology::eth_10g();
+        let small = choose_algorithm(&topo, 32, 1024);
+        let large = choose_algorithm(&topo, 32, 64 << 20);
+        assert_ne!(small, large);
+    }
+}

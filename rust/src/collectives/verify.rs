@@ -1,0 +1,283 @@
+//! Symbolic executor for collective programs — the correctness oracle.
+//!
+//! Instead of floats, every buffer element carries a *contribution vector*:
+//! `coeff[k]` = how many times rank k's initial value for that element has
+//! been summed in. Executing a program set symbolically and checking the
+//! final coefficients proves algebraic correctness for ANY input data
+//! (sum-reduction is linear), which is what the proptest suite asserts for
+//! every algorithm × (p, n).
+//!
+//! Execution model matches the real executor: each rank runs its program
+//! strictly in step order; a step's send reads the buffer *now*; messages
+//! between a (src, dst) pair are FIFO. Scheduling is a fair round-robin
+//! over ranks, so a deadlock (circular wait) is detected as "no progress".
+
+use std::collections::{HashMap, VecDeque};
+
+use super::program::{CollectiveKind, Program};
+use crate::Rank;
+
+/// Contribution matrix for one rank's buffer: `buf[e][k]` = multiplicity of
+/// rank k's initial element e.
+pub type SymBuf = Vec<Vec<u32>>;
+
+/// Initial symbolic buffers for a collective kind.
+pub fn init_bufs(kind: CollectiveKind, p: usize, n: usize) -> Vec<SymBuf> {
+    let mut bufs = vec![vec![vec![0u32; p]; n]; p];
+    match kind {
+        CollectiveKind::Allreduce
+        | CollectiveKind::ReduceScatter
+        | CollectiveKind::Reduce { .. }
+        | CollectiveKind::Barrier => {
+            for (r, buf) in bufs.iter_mut().enumerate() {
+                for e in buf.iter_mut() {
+                    e[r] = 1;
+                }
+            }
+        }
+        CollectiveKind::Broadcast { root } => {
+            for e in bufs[root].iter_mut() {
+                e[root] = 1;
+            }
+        }
+        CollectiveKind::Allgather => {
+            // Rank r owns segment r; its identity is (rank r, its own data).
+            let seg = super::program::segments(n, p);
+            for (r, buf) in bufs.iter_mut().enumerate() {
+                for e in &mut buf[seg[r]..seg[r + 1]] {
+                    e[r] = 1;
+                }
+            }
+        }
+    }
+    bufs
+}
+
+/// Execute the programs symbolically. Returns final buffers, or an error
+/// describing the deadlock/step mismatch.
+pub fn run(programs: &[Program], mut bufs: Vec<SymBuf>) -> Result<Vec<SymBuf>, String> {
+    let p = programs.len();
+    let mut pc = vec![0usize; p]; // per-rank program counter
+    let mut sent = vec![false; p]; // current step's send already issued?
+    let mut wires: HashMap<(Rank, Rank), VecDeque<Vec<Vec<u32>>>> = HashMap::new();
+
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..p {
+            let prog = &programs[r];
+            if pc[r] >= prog.steps.len() {
+                continue;
+            }
+            all_done = false;
+            let step = &prog.steps[pc[r]];
+            // The send half of a step never blocks (unbounded fabric) and
+            // is issued as soon as the step is reached; the recv half
+            // completes the step. Send and recv ranges never overlap in
+            // our algorithms, so the send reads pre-recv state — matching
+            // the real executor.
+            if let (Some(sd), false) = (&step.send, sent[r]) {
+                let payload: Vec<Vec<u32>> =
+                    bufs[r][sd.range.off..sd.range.end()].to_vec();
+                wires.entry((r, sd.to)).or_default().push_back(payload);
+                sent[r] = true;
+                progressed = true;
+            }
+            let recv_ready = match &step.recv {
+                None => true,
+                Some(rv) => wires
+                    .get(&(rv.from, r))
+                    .map_or(false, |q| !q.is_empty()),
+            };
+            if !recv_ready {
+                continue;
+            }
+            if let Some(rv) = &step.recv {
+                let payload = wires
+                    .get_mut(&(rv.from, r))
+                    .and_then(|q| q.pop_front())
+                    .expect("checked above");
+                if payload.len() != rv.range.len {
+                    return Err(format!(
+                        "rank {r} step {}: recv size {} != range {}",
+                        pc[r],
+                        payload.len(),
+                        rv.range.len
+                    ));
+                }
+                for (i, contrib) in payload.into_iter().enumerate() {
+                    let e = &mut bufs[r][rv.range.off + i];
+                    if rv.reduce {
+                        for (a, b) in e.iter_mut().zip(contrib) {
+                            *a += b;
+                        }
+                    } else {
+                        *e = contrib;
+                    }
+                }
+            }
+            pc[r] += 1;
+            sent[r] = false;
+            progressed = true;
+        }
+        if all_done {
+            // No messages may be left on the wires.
+            let leftover: usize = wires.values().map(|q| q.len()).sum();
+            if leftover > 0 {
+                return Err(format!("{leftover} unconsumed messages"));
+            }
+            return Ok(bufs);
+        }
+        if !progressed {
+            return Err(format!("deadlock: pcs={pc:?}"));
+        }
+    }
+}
+
+/// Check final buffers against the semantics of `kind`.
+pub fn check(kind: CollectiveKind, p: usize, n: usize, bufs: &[SymBuf]) -> Result<(), String> {
+    let ones = vec![1u32; p];
+    let seg = super::program::segments(n, p);
+    match kind {
+        CollectiveKind::Allreduce => {
+            for (r, buf) in bufs.iter().enumerate() {
+                for (e, c) in buf.iter().enumerate() {
+                    if *c != ones {
+                        return Err(format!("rank {r} elem {e}: {c:?}"));
+                    }
+                }
+            }
+        }
+        CollectiveKind::ReduceScatter => {
+            // Rank r must own segment (r+1)%p fully reduced (ring layout).
+            for (r, buf) in bufs.iter().enumerate() {
+                let own = (r + 1) % p;
+                for e in seg[own]..seg[own + 1] {
+                    if buf[e] != ones {
+                        return Err(format!("rank {r} elem {e}: {:?}", buf[e]));
+                    }
+                }
+            }
+        }
+        CollectiveKind::Allgather => {
+            for (r, buf) in bufs.iter().enumerate() {
+                for i in 0..p {
+                    for e in seg[i]..seg[i + 1] {
+                        let mut want = vec![0u32; p];
+                        want[i] = 1;
+                        if buf[e] != want {
+                            return Err(format!("rank {r} elem {e}: {:?}", buf[e]));
+                        }
+                    }
+                }
+            }
+        }
+        CollectiveKind::Broadcast { root } => {
+            let mut want = vec![0u32; p];
+            want[root] = 1;
+            for (r, buf) in bufs.iter().enumerate() {
+                for (e, c) in buf.iter().enumerate() {
+                    if *c != want {
+                        return Err(format!("rank {r} elem {e}: {c:?}"));
+                    }
+                }
+            }
+        }
+        CollectiveKind::Reduce { root } => {
+            for (e, c) in bufs[root].iter().enumerate() {
+                if *c != ones {
+                    return Err(format!("root elem {e}: {c:?}"));
+                }
+            }
+        }
+        CollectiveKind::Barrier => {} // completion is the postcondition
+    }
+    Ok(())
+}
+
+/// One-call helper: build → run → check.
+pub fn verify(kind: CollectiveKind, alg: super::Algorithm, p: usize, n: usize) -> Result<(), String> {
+    let programs = super::program::build(kind, alg, p, n);
+    let bufs = init_bufs(kind, p, n);
+    let finals = run(&programs, bufs)?;
+    check(kind, p, n, &finals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Algorithm as A;
+    use CollectiveKind as K;
+
+    #[test]
+    fn ring_allreduce_correct() {
+        for p in 1..=9 {
+            for n in [1usize, 2, 7, 16, 33] {
+                verify(K::Allreduce, A::Ring, p, n)
+                    .unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn rdoubling_allreduce_correct() {
+        for p in [1usize, 2, 4, 8, 16] {
+            for n in [1usize, 5, 64] {
+                verify(K::Allreduce, A::RecursiveDoubling, p, n)
+                    .unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn halving_doubling_allreduce_correct() {
+        for p in [2usize, 4, 8, 16, 32] {
+            for n in [32usize, 33, 64, 100, 1024] {
+                verify(K::Allreduce, A::HalvingDoubling, p, n)
+                    .unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_correct() {
+        for p in 1..=8 {
+            verify(K::ReduceScatter, A::Ring, p, 24).unwrap();
+        }
+    }
+
+    #[test]
+    fn allgather_correct() {
+        for p in 1..=8 {
+            verify(K::Allgather, A::Ring, p, 24).unwrap();
+        }
+    }
+
+    #[test]
+    fn broadcast_correct_all_roots() {
+        for p in 1..=9 {
+            for root in 0..p {
+                verify(K::Broadcast { root }, A::Ring, p, 11).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_correct_all_roots() {
+        for p in 1..=9 {
+            for root in 0..p {
+                verify(K::Reduce { root }, A::Ring, p, 11).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        for p in [1usize, 2, 3, 4, 8, 12] {
+            // Barrier payload: 1 elem (pow2 rdoubling) or p elems (ring).
+            let n = if p.is_power_of_two() { 1 } else { p };
+            let progs = super::super::program::barrier(p);
+            run(&progs, init_bufs(K::Barrier, p, n)).unwrap();
+        }
+    }
+}

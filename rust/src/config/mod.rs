@@ -1,0 +1,148 @@
+//! Run configuration: CLI args + config files → typed experiment setups.
+//!
+//! Config files use a flat `key = value` format (`#` comments); CLI flags
+//! override file values. See `configs/` in the repo root for examples.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::collectives::{PriorityPolicy, WireDtype};
+use crate::engine::{CommMode, EngineConfig};
+use crate::fabric::topology::{NodeSpec, Topology};
+use crate::mlsl::Distribution;
+use crate::models::ModelDesc;
+use crate::util::cli::Args;
+
+/// Flat key=value config file.
+#[derive(Debug, Default, Clone)]
+pub struct FileConfig {
+    map: BTreeMap<String, String>,
+}
+
+impl FileConfig {
+    pub fn parse(text: &str) -> Result<FileConfig> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(FileConfig { map })
+    }
+
+    pub fn load(path: &Path) -> Result<FileConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Resolve a simulation EngineConfig from (optional config file) + flags.
+pub fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let file = match args.get("config") {
+        Some(p) => FileConfig::load(Path::new(p))?,
+        None => FileConfig::default(),
+    };
+    let get = |key: &str, default: &str| -> String {
+        args.get(key)
+            .map(String::from)
+            .or_else(|| file.get(key).map(String::from))
+            .unwrap_or_else(|| default.to_string())
+    };
+
+    let model_name = get("model", "resnet50");
+    let model = ModelDesc::by_name(&model_name)
+        .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+    let topo_name = get("topo", "omnipath100g");
+    let topo =
+        Topology::by_name(&topo_name).ok_or_else(|| anyhow!("unknown topology {topo_name:?}"))?;
+    let node_name = get("node", "skylake");
+    let node =
+        NodeSpec::by_name(&node_name).ok_or_else(|| anyhow!("unknown node {node_name:?}"))?;
+    let nodes: usize = get("nodes", "16").parse().context("--nodes")?;
+    let group: usize = get("group", "1").parse().context("--group")?;
+    let batch: usize = get("batch", &model.default_batch.to_string()).parse().context("--batch")?;
+    let mode_name = get("mode", "mlsl");
+    let mut mode =
+        CommMode::by_name(&mode_name).ok_or_else(|| anyhow!("unknown mode {mode_name:?}"))?;
+    if let CommMode::MlslAsync { .. } = mode {
+        let cc: usize = get("comm-cores", "2").parse().context("--comm-cores")?;
+        mode = CommMode::MlslAsync { comm_cores: cc };
+    }
+    let policy_name = get("policy", "bylayer");
+    let policy = PriorityPolicy::by_name(&policy_name)
+        .ok_or_else(|| anyhow!("unknown policy {policy_name:?}"))?;
+    let wire_name = get("wire", "f32");
+    let wire =
+        WireDtype::by_name(&wire_name).ok_or_else(|| anyhow!("unknown wire dtype {wire_name:?}"))?;
+    let iterations: usize = get("iterations", "3").parse().context("--iterations")?;
+
+    let mut cfg = EngineConfig::new(model, topo, nodes);
+    cfg.node = node;
+    cfg.dist = Distribution::new(nodes, group);
+    cfg.batch = batch;
+    cfg.mode = mode;
+    cfg.policy = policy;
+    cfg.wire = wire;
+    cfg.iterations = iterations;
+    cfg.record_timeline = args.bool("timeline");
+    cfg.jitter = get("jitter", "0.0").parse().context("--jitter")?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn defaults_build() {
+        let cfg = engine_config(&args("")).unwrap();
+        assert_eq!(cfg.model.name, "resnet50");
+        assert_eq!(cfg.dist.world(), 16);
+    }
+
+    #[test]
+    fn flags_override() {
+        let cfg =
+            engine_config(&args("--model vgg16 --nodes 8 --group 4 --mode bulk --wire int8"))
+                .unwrap();
+        assert_eq!(cfg.model.name, "vgg16");
+        assert_eq!(cfg.dist.group_size(), 4);
+        assert_eq!(cfg.mode, CommMode::BulkSync);
+        assert_eq!(cfg.wire, WireDtype::Int8Block);
+    }
+
+    #[test]
+    fn file_config_parses_and_cli_wins() {
+        let dir = std::env::temp_dir().join("mlsl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.conf");
+        std::fs::write(&p, "model = googlenet # comment\nnodes = 4\n\n# full-line comment\nmode = mpi\n").unwrap();
+        let cfg =
+            engine_config(&args(&format!("--config {} --nodes 32", p.display()))).unwrap();
+        assert_eq!(cfg.model.name, "googlenet");
+        assert_eq!(cfg.dist.world(), 32); // CLI overrides file
+        assert_eq!(cfg.mode, CommMode::MpiNonBlocking);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(engine_config(&args("--model nope")).is_err());
+        assert!(engine_config(&args("--topo nope")).is_err());
+        assert!(engine_config(&args("--mode nope")).is_err());
+    }
+}

@@ -1,0 +1,691 @@
+//! The framework role: a per-layer fwd/bwd training iteration timeline
+//! driving MLSL communication over the discrete-event fabric.
+//!
+//! Three communication modes reproduce the paper's comparison points:
+//!
+//! * [`CommMode::MlslAsync`] — MLSL: dedicated comm cores give
+//!   asynchronous progress (overlap), gradients carry per-layer
+//!   priorities, urgent ops preempt bulk ones at the NIC.
+//! * [`CommMode::MpiNonBlocking`] — plain MPI non-blocking collectives:
+//!   same issue order but NO async progress (the wire only moves while
+//!   the host is inside the library, i.e. while the node is NOT
+//!   computing) and no priorities. This is what the paper means by "MPI
+//!   interface and implementations do not support prioritizing such
+//!   messages".
+//! * [`CommMode::BulkSync`] — out-of-box Horovod-MPI: one bulk gradient
+//!   exchange after the whole backward pass, fully exposed.
+//!
+//! Nodes are symmetric (same model, same batch) so they proceed in
+//! lockstep; collectives are posted when every member has reached the
+//! issue point (exact under symmetry).
+
+pub mod report;
+
+pub use report::Report;
+
+use std::collections::HashMap;
+
+use crate::collectives::program::{allgather_ring, build, CollectiveKind};
+use crate::collectives::selector::choose_algorithm;
+use crate::collectives::simexec::SimCollectives;
+use crate::collectives::{Algorithm, PriorityPolicy, WireDtype};
+use crate::fabric::topology::{NodeSpec, Topology};
+use crate::fabric::{NetSim, SimEvent};
+use crate::metrics::Timeline;
+use crate::mlsl::Distribution;
+use crate::models::ModelDesc;
+use crate::{Ns, Priority, Rank};
+
+/// Communication runtime mode (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    MlslAsync { comm_cores: usize },
+    MpiNonBlocking,
+    BulkSync,
+}
+
+impl CommMode {
+    pub fn by_name(name: &str) -> Option<CommMode> {
+        match name {
+            "mlsl" => Some(CommMode::MlslAsync { comm_cores: 2 }),
+            "mpi" => Some(CommMode::MpiNonBlocking),
+            "bulk" | "horovod-oob" => Some(CommMode::BulkSync),
+            _ => None,
+        }
+    }
+}
+
+/// Simulated-training configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: ModelDesc,
+    pub topo: Topology,
+    pub node: NodeSpec,
+    pub dist: Distribution,
+    /// Per-node mini-batch.
+    pub batch: usize,
+    pub mode: CommMode,
+    pub policy: PriorityPolicy,
+    pub wire: WireDtype,
+    /// Measured iterations (one extra warmup iteration is always run).
+    pub iterations: usize,
+    pub record_timeline: bool,
+    /// Per-(node, layer, iteration) compute jitter: relative std-dev of a
+    /// deterministic log-normal-ish perturbation. Real clusters have
+    /// stragglers (OS noise, memory layout, thermal); every
+    /// allreduce synchronizes the stragglers away from ideal, which is
+    /// the dominant sub-100% term in weak scaling at large node counts.
+    /// 0.0 = perfectly balanced (unit tests); the Fig. 2 bench uses 0.03.
+    pub jitter: f64,
+}
+
+impl EngineConfig {
+    pub fn new(model: ModelDesc, topo: Topology, p: usize) -> Self {
+        Self {
+            model,
+            topo,
+            node: NodeSpec::skylake_6148(),
+            dist: Distribution::data_parallel(p),
+            batch: 32,
+            mode: CommMode::MlslAsync { comm_cores: 2 },
+            policy: PriorityPolicy::ByLayer,
+            wire: WireDtype::F32,
+            iterations: 3,
+            record_timeline: false,
+            jitter: 0.0,
+        }
+    }
+
+    fn comm_cores(&self) -> usize {
+        match self.mode {
+            CommMode::MlslAsync { comm_cores } => comm_cores,
+            _ => 0,
+        }
+    }
+
+    fn gated(&self) -> bool {
+        matches!(self.mode, CommMode::MpiNonBlocking)
+    }
+
+    /// Pure compute ns per iteration per node. Sums the SAME per-layer
+    /// quantized durations the engine schedules, so `iter_ns −
+    /// compute_ns_per_iter()` is exactly the exposed communication.
+    /// Per-node compute is independent of the group size: a group of g
+    /// nodes jointly processes g·batch samples (see analytic::compute_flops).
+    pub fn compute_ns_per_iter(&self) -> Ns {
+        let cc = self.comm_cores();
+        self.model
+            .layers
+            .iter()
+            .map(|l| {
+                let fwd = self.node.compute_ns(l.fwd_flops * self.batch as f64, cc).max(1);
+                let bwd = self.node.compute_ns(l.bwd_flops() * self.batch as f64, cc).max(1);
+                fwd + bwd
+            })
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-node schedule state machine
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodePhase {
+    /// Waiting for layer `l`'s dependencies before its forward compute.
+    FwdWait(usize),
+    FwdCompute(usize),
+    /// Waiting on the within-group activation allgather after fwd(l).
+    FwdAct(usize),
+    BwdCompute(usize),
+    /// Waiting on the within-group activation-grad exchange after bwd(l).
+    BwdAct(usize),
+    /// BulkSync: waiting for the post-backward gradient exchange.
+    BulkWait,
+    Done,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum CommKind {
+    Grad { layer: usize },
+    FwdAct { layer: usize },
+    BwdAct { layer: usize },
+}
+
+struct CommMeta {
+    kind: CommKind,
+    /// Nodes that still have to reach the issue point.
+    waiting: Vec<Rank>,
+    members: Vec<Rank>,
+    elems: usize,
+    priority: Priority,
+}
+
+struct NodeState {
+    phase: NodePhase,
+    iter: usize,
+    /// Gradient allreduce completed (this iteration's set), per layer.
+    grad_done: Vec<bool>,
+    /// Outstanding gradient ops (BulkSync wait / paranoia check).
+    grads_outstanding: usize,
+    /// fwd(0) compute start times, one per iteration (incl. warmup).
+    iter_starts: Vec<Ns>,
+    compute_busy_ns: Ns,
+}
+
+/// Opaque compute tag encoding (phase, layer).
+fn tag_of(phase: NodePhase) -> u64 {
+    match phase {
+        NodePhase::FwdCompute(l) => 1 << 32 | l as u64,
+        NodePhase::BwdCompute(l) => 2 << 32 | l as u64,
+        _ => unreachable!("only computes carry tags"),
+    }
+}
+
+/// The simulated training run.
+pub struct Engine {
+    cfg: EngineConfig,
+    sim: NetSim,
+    colls: SimCollectives,
+    nodes: Vec<NodeState>,
+    metas: HashMap<u64, CommMeta>,
+    /// (kind, issue-iteration) → coll id, so joiners find pending ops.
+    open: HashMap<(CommKind, usize, usize), u64>, // (kind, iter, comm_group_key)
+    next_id: u64,
+    pub timeline: Timeline,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let p = cfg.dist.world();
+        let nl = cfg.model.layers.len();
+        let sim = NetSim::new(cfg.topo.clone(), p);
+        let nodes = (0..p)
+            .map(|_| NodeState {
+                phase: NodePhase::FwdWait(0),
+                iter: 0,
+                grad_done: vec![true; nl], // iteration 0 has no prior grads
+                grads_outstanding: 0,
+                iter_starts: Vec::new(),
+                compute_busy_ns: 0,
+            })
+            .collect();
+        Self {
+            cfg,
+            sim,
+            colls: SimCollectives::new(),
+            nodes,
+            metas: HashMap::new(),
+            open: HashMap::new(),
+            next_id: 1,
+            timeline: Timeline::new(),
+        }
+    }
+
+    /// Run the configured number of iterations; produce the report.
+    pub fn run(mut self) -> Report {
+        let p = self.cfg.dist.world();
+        let total_iters = self.cfg.iterations + 1; // + warmup
+        for n in 0..p {
+            self.try_advance(n);
+        }
+        // Event loop.
+        while self.nodes.iter().any(|n| n.phase != NodePhase::Done) {
+            let Some(ev) = self.sim.next() else {
+                panic!(
+                    "simulation deadlock: phases={:?}",
+                    self.nodes.iter().map(|n| (n.iter, n.phase)).collect::<Vec<_>>()
+                );
+            };
+            match ev {
+                SimEvent::ComputeDone { node, tag, at } => {
+                    self.on_compute_done(node, tag, at, total_iters);
+                }
+                ev => {
+                    let completions = self.colls.on_event(&mut self.sim, &ev);
+                    for c in completions {
+                        self.on_comm_done(c.coll_id, c.rank);
+                    }
+                }
+            }
+        }
+        // Drain trailing collectives (the last iteration's gradient
+        // exchanges) so traffic accounting is policy-independent.
+        while self.colls.in_flight() > 0 {
+            let Some(ev) = self.sim.next() else { break };
+            let completions = self.colls.on_event(&mut self.sim, &ev);
+            for c in completions {
+                self.on_comm_done(c.coll_id, c.rank);
+            }
+        }
+        report::build_report(&self.cfg, &self.sim, &self.nodes.iter().map(|n| n.iter_starts.clone()).collect::<Vec<_>>(), self.timeline)
+    }
+
+    // -- state machine ------------------------------------------------------
+
+    fn layer_count(&self) -> usize {
+        self.cfg.model.layers.len()
+    }
+
+    /// Compute duration of layer `l` in direction fwd/bwd for one node,
+    /// with the node/iteration-specific straggler perturbation.
+    fn compute_ns_for(&self, n: Rank, iter: usize, l: usize, fwd: bool) -> Ns {
+        let layer = &self.cfg.model.layers[l];
+        let flops = if fwd { layer.fwd_flops } else { layer.bwd_flops() };
+        let flops = flops * self.cfg.batch as f64;
+        let base = self.cfg.node.compute_ns(flops, self.cfg.comm_cores()).max(1);
+        if self.cfg.jitter <= 0.0 {
+            return base;
+        }
+        // Deterministic per-(node, iter) normal perturbation. Straggler
+        // noise is CORRELATED within an iteration (OS jitter, turbo,
+        // memory placement last milliseconds, not microseconds), so the
+        // draw is per node-iteration and applied to every layer in it —
+        // per-layer-independent noise would average out over the ~160
+        // layers and understate the synchronization cost.
+        let seed = (n as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((iter as u64) << 24);
+        let _ = l;
+        let z = crate::util::prng::Prng::seed(seed).normal();
+        let factor = (1.0 + self.cfg.jitter * z).max(0.5);
+        ((base as f64 * factor).round() as Ns).max(1)
+    }
+
+    /// Try to move node `n` forward through waits; start computes.
+    fn try_advance(&mut self, n: Rank) {
+        loop {
+            match self.nodes[n].phase {
+                NodePhase::FwdWait(l) => {
+                    if l >= self.layer_count() {
+                        // Forward done; begin backward.
+                        self.nodes[n].phase = NodePhase::BwdCompute(self.layer_count() - 1);
+                        continue;
+                    }
+                    if !self.nodes[n].grad_done[l] {
+                        return; // blocked on last iteration's gradient
+                    }
+                    if l == 0 {
+                        let now = self.sim.now();
+                        self.nodes[n].iter_starts.push(now);
+                    }
+                    self.nodes[n].phase = NodePhase::FwdCompute(l);
+                    self.start_compute(n, NodePhase::FwdCompute(l));
+                    return;
+                }
+                NodePhase::BwdCompute(l) => {
+                    self.start_compute(n, NodePhase::BwdCompute(l));
+                    return;
+                }
+                NodePhase::FwdAct(_) | NodePhase::BwdAct(_) | NodePhase::BulkWait => return,
+                NodePhase::FwdCompute(_) => return, // compute in flight
+                NodePhase::Done => return,
+            }
+        }
+    }
+
+    fn start_compute(&mut self, n: Rank, phase: NodePhase) {
+        let (l, fwd) = match phase {
+            NodePhase::FwdCompute(l) => (l, true),
+            NodePhase::BwdCompute(l) => (l, false),
+            _ => unreachable!(),
+        };
+        let dur = self.compute_ns_for(n, self.nodes[n].iter, l, fwd);
+        self.nodes[n].compute_busy_ns += dur;
+        if self.cfg.gated() {
+            self.sim.set_comm_gated(n, true);
+        }
+        if self.cfg.record_timeline && n == 0 {
+            let now = self.sim.now();
+            let dir = if fwd { "f" } else { "b" };
+            self.timeline.record(n, now, now + dur, "compute", &format!("{dir}{l}"));
+        }
+        self.sim.compute(n, dur, tag_of(phase));
+    }
+
+    fn on_compute_done(&mut self, n: Rank, tag: u64, _at: Ns, total_iters: usize) {
+        if self.cfg.gated() {
+            self.sim.set_comm_gated(n, false);
+        }
+        let l = (tag & 0xFFFF_FFFF) as usize;
+        let is_fwd = tag >> 32 == 1;
+        if is_fwd {
+            debug_assert_eq!(self.nodes[n].phase, NodePhase::FwdCompute(l));
+            // Within-group activation exchange (hybrid/model parallel).
+            if self.issue_act(n, l, true) {
+                self.nodes[n].phase = NodePhase::FwdAct(l);
+            } else {
+                self.nodes[n].phase = NodePhase::FwdWait(l + 1);
+                self.try_advance(n);
+            }
+        } else {
+            debug_assert_eq!(self.nodes[n].phase, NodePhase::BwdCompute(l));
+            // Gradient exchange for this layer.
+            if self.cfg.model.layers[l].has_weights() && self.cfg.dist.num_groups() > 1 {
+                match self.cfg.mode {
+                    CommMode::BulkSync => {} // deferred to end of backward
+                    _ => self.issue_grad(n, l),
+                }
+            }
+            if self.issue_act(n, l, false) {
+                self.nodes[n].phase = NodePhase::BwdAct(l);
+            } else {
+                self.after_bwd_step(n, l, total_iters);
+            }
+        }
+    }
+
+    fn after_bwd_step(&mut self, n: Rank, l: usize, total_iters: usize) {
+        if l > 0 {
+            self.nodes[n].phase = NodePhase::BwdCompute(l - 1);
+            self.try_advance(n);
+            return;
+        }
+        // Backward finished.
+        if matches!(self.cfg.mode, CommMode::BulkSync) && self.cfg.dist.num_groups() > 1 {
+            // Issue ALL gradients now, FIFO, flat priority (Horovod-oob).
+            let layers: Vec<usize> = (0..self.layer_count())
+                .rev() // completion order of backprop
+                .filter(|l| self.cfg.model.layers[*l].has_weights())
+                .collect();
+            for l in layers {
+                self.issue_grad(n, l);
+            }
+            if self.nodes[n].grads_outstanding > 0 {
+                self.nodes[n].phase = NodePhase::BulkWait;
+                return;
+            }
+        }
+        self.finish_iteration(n, total_iters);
+    }
+
+    fn finish_iteration(&mut self, n: Rank, total_iters: usize) {
+        let node = &mut self.nodes[n];
+        node.iter += 1;
+        if node.iter >= total_iters {
+            node.phase = NodePhase::Done;
+            return;
+        }
+        node.phase = NodePhase::FwdWait(0);
+        self.try_advance(n);
+    }
+
+    // -- communication issue points ------------------------------------------
+
+    /// Issue (or join) the gradient allreduce for layer `l`. Non-blocking:
+    /// completion flips `grad_done[l]` consumed by the NEXT iteration's
+    /// forward pass.
+    fn issue_grad(&mut self, n: Rank, l: usize) {
+        let iter = self.nodes[n].iter;
+        self.nodes[n].grad_done[l] = false;
+        self.nodes[n].grads_outstanding += 1;
+        let members = self.cfg.dist.data_peers(n);
+        let group_key = self.cfg.dist.rank_in_group(n);
+        let elems = self.cfg.model.layers[l].weight_elems.div_ceil(self.cfg.dist.group_size());
+        let priority = match self.cfg.mode {
+            CommMode::MlslAsync { .. } => {
+                self.cfg.policy.assign(l, self.layer_count())
+            }
+            _ => 128,
+        };
+        self.join_or_post(CommKind::Grad { layer: l }, iter, group_key, n, members, elems, priority);
+    }
+
+    /// Issue (or join) the within-group activation exchange after layer
+    /// `l`; returns false when none is needed.
+    fn issue_act(&mut self, n: Rank, l: usize, fwd: bool) -> bool {
+        let g = self.cfg.dist.group_size();
+        if g <= 1 || self.cfg.model.layers[l].out_act_elems == 0 {
+            return false;
+        }
+        let iter = self.nodes[n].iter;
+        let members = self.cfg.dist.group_members(n);
+        let group_key = self.cfg.dist.group_of(n);
+        // The group jointly holds g·batch samples of activations; the ring
+        // allgather makes every member hold the group batch.
+        let elems = self.cfg.model.layers[l].out_act_elems * self.cfg.batch * g;
+        let kind = if fwd { CommKind::FwdAct { layer: l } } else { CommKind::BwdAct { layer: l } };
+        // "activation communication must be prioritized": class 0.
+        self.join_or_post(kind, iter, group_key, n, members, elems, 0);
+        true
+    }
+
+    /// Join a pending collective or create it; post to the fabric once the
+    /// last member joins.
+    #[allow(clippy::too_many_arguments)]
+    fn join_or_post(
+        &mut self,
+        kind: CommKind,
+        iter: usize,
+        group_key: usize,
+        n: Rank,
+        members: Vec<Rank>,
+        elems: usize,
+        priority: Priority,
+    ) {
+        if members.len() <= 1 {
+            // Degenerate communicator: instantly complete.
+            self.complete_comm_for(kind, n);
+            return;
+        }
+        let key = (kind, iter, group_key);
+        let id = *self.open.entry(key).or_insert_with(|| {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.metas.insert(
+                id,
+                CommMeta {
+                    kind,
+                    waiting: members.clone(),
+                    members: members.clone(),
+                    elems,
+                    priority,
+                },
+            );
+            id
+        });
+        let meta = self.metas.get_mut(&id).expect("meta exists");
+        meta.waiting.retain(|r| *r != n);
+        if meta.waiting.is_empty() {
+            self.open.remove(&key);
+            let members = meta.members.clone();
+            let (elems, priority, kind) = (meta.elems, meta.priority, meta.kind);
+            let pm = members.len();
+            let ckind = match kind {
+                CommKind::Grad { .. } => CollectiveKind::Allreduce,
+                _ => CollectiveKind::Allgather,
+            };
+            let alg = match ckind {
+                CollectiveKind::Allreduce => {
+                    choose_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
+                }
+                _ => Algorithm::Ring,
+            };
+            let programs = match ckind {
+                CollectiveKind::Allgather => allgather_ring(pm, elems),
+                _ => build(ckind, alg, pm, elems),
+            };
+            if self.cfg.record_timeline && members.contains(&0) {
+                let now = self.sim.now();
+                let label = match kind {
+                    CommKind::Grad { layer } => format!("g{layer}"),
+                    CommKind::FwdAct { layer } => format!("a{layer}"),
+                    CommKind::BwdAct { layer } => format!("x{layer}"),
+                };
+                self.timeline.record(0, now, now, "issue", &label);
+            }
+            let completions = self.colls.post_mapped(
+                &mut self.sim,
+                id,
+                programs,
+                members,
+                self.cfg.wire,
+                priority,
+            );
+            for c in completions {
+                self.on_comm_done(c.coll_id, c.rank);
+            }
+        }
+    }
+
+    fn on_comm_done(&mut self, coll_id: u64, node: Rank) {
+        let kind = self.metas.get(&coll_id).expect("known collective").kind;
+        self.complete_comm_for(kind, node);
+        // GC the meta once everyone finished (the collective left simexec).
+        if self.colls.in_flight() < self.metas.len().saturating_sub(8) {
+            // cheap periodic cleanup; correctness doesn't depend on it
+        }
+    }
+
+    fn complete_comm_for(&mut self, kind: CommKind, node: Rank) {
+        match kind {
+            CommKind::Grad { layer } => {
+                self.nodes[node].grad_done[layer] = true;
+                self.nodes[node].grads_outstanding =
+                    self.nodes[node].grads_outstanding.saturating_sub(1);
+                match self.nodes[node].phase {
+                    NodePhase::FwdWait(l) if l == layer => self.try_advance(node),
+                    NodePhase::BulkWait if self.nodes[node].grads_outstanding == 0 => {
+                        let total = self.total_iters();
+                        self.finish_iteration(node, total);
+                    }
+                    _ => {}
+                }
+            }
+            CommKind::FwdAct { layer } => {
+                debug_assert_eq!(self.nodes[node].phase, NodePhase::FwdAct(layer));
+                self.nodes[node].phase = NodePhase::FwdWait(layer + 1);
+                self.try_advance(node);
+            }
+            CommKind::BwdAct { layer } => {
+                debug_assert_eq!(self.nodes[node].phase, NodePhase::BwdAct(layer));
+                let total = self.total_iters();
+                self.after_bwd_step(node, layer, total);
+            }
+        }
+    }
+
+    fn total_iters(&self) -> usize {
+        self.cfg.iterations + 1
+    }
+}
+
+/// Convenience: configure + run.
+pub fn simulate(cfg: EngineConfig) -> Report {
+    Engine::new(cfg).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(model: &str, p: usize, mode: CommMode) -> EngineConfig {
+        let mut c = EngineConfig::new(
+            ModelDesc::by_name(model).unwrap(),
+            Topology::omnipath_100g(),
+            p,
+        );
+        c.mode = mode;
+        c
+    }
+
+    #[test]
+    fn single_node_has_no_comm() {
+        let r = simulate(cfg("resnet50", 1, CommMode::BulkSync));
+        assert_eq!(r.exposed_comm_ns, 0);
+        assert!(r.iter_ns > 0);
+    }
+
+    #[test]
+    fn iteration_time_close_to_compute_on_fast_fabric() {
+        let r = simulate(cfg("resnet50", 8, CommMode::MlslAsync { comm_cores: 2 }));
+        // Omnipath + overlap: exposed comm well under 20% of compute.
+        assert!(
+            (r.exposed_comm_ns as f64) < 0.25 * r.compute_ns as f64,
+            "exposed={} compute={}",
+            r.exposed_comm_ns,
+            r.compute_ns
+        );
+    }
+
+    #[test]
+    fn bulk_sync_exposes_all_comm() {
+        let m = simulate(cfg("resnet50", 8, CommMode::MlslAsync { comm_cores: 2 }));
+        let b = simulate(cfg("resnet50", 8, CommMode::BulkSync));
+        assert!(
+            b.exposed_comm_ns > 2 * m.exposed_comm_ns.max(1),
+            "bulk={} mlsl={}",
+            b.exposed_comm_ns,
+            m.exposed_comm_ns
+        );
+        assert!(b.iter_ns > m.iter_ns);
+    }
+
+    #[test]
+    fn mpi_slower_than_mlsl_on_ethernet() {
+        let mut a = cfg("resnet50", 8, CommMode::MlslAsync { comm_cores: 2 });
+        a.topo = Topology::eth_10g();
+        let mut b = cfg("resnet50", 8, CommMode::MpiNonBlocking);
+        b.topo = Topology::eth_10g();
+        let ra = simulate(a);
+        let rb = simulate(b);
+        assert!(rb.iter_ns > ra.iter_ns, "mpi={} mlsl={}", rb.iter_ns, ra.iter_ns);
+    }
+
+    #[test]
+    fn priority_beats_fifo_on_ethernet() {
+        let mut with = cfg("vgg16", 8, CommMode::MlslAsync { comm_cores: 2 });
+        with.topo = Topology::eth_10g();
+        with.policy = PriorityPolicy::ByLayer;
+        let mut without = with.clone();
+        without.policy = PriorityPolicy::None;
+        let rw = simulate(with);
+        let ro = simulate(without);
+        assert!(
+            rw.exposed_comm_ns < ro.exposed_comm_ns,
+            "bylayer={} fifo={}",
+            rw.exposed_comm_ns,
+            ro.exposed_comm_ns
+        );
+    }
+
+    #[test]
+    fn hybrid_runs_with_same_per_node_compute() {
+        let mut c = cfg("vgg16", 8, CommMode::MlslAsync { comm_cores: 2 });
+        c.dist = Distribution::new(8, 4);
+        c.iterations = 2;
+        let r = simulate(c);
+        assert!(r.iter_ns > 0);
+        // The group jointly processes g·batch samples: per-node compute is
+        // unchanged vs pure data parallelism.
+        let d = cfg("vgg16", 8, CommMode::MlslAsync { comm_cores: 2 });
+        let rd = simulate(d);
+        assert_eq!(r.compute_ns, rd.compute_ns);
+        // But its iteration carries activation exchanges too.
+        assert!(r.iter_ns >= rd.compute_ns);
+    }
+
+    #[test]
+    fn weak_scaling_efficiency_definition() {
+        let r1 = simulate(cfg("resnet50", 1, CommMode::MlslAsync { comm_cores: 2 }));
+        let r64 = simulate(cfg("resnet50", 64, CommMode::MlslAsync { comm_cores: 2 }));
+        let eff = r1.iter_ns as f64 / r64.iter_ns as f64;
+        assert!(eff > 0.5 && eff <= 1.001, "{eff}");
+    }
+
+    #[test]
+    fn int8_wire_reduces_exposed_comm() {
+        let mut f32c = cfg("vgg16", 8, CommMode::BulkSync);
+        f32c.topo = Topology::eth_10g();
+        let mut i8c = f32c.clone();
+        i8c.wire = WireDtype::Int8Block;
+        let rf = simulate(f32c);
+        let ri = simulate(i8c);
+        assert!(
+            (rf.exposed_comm_ns as f64 / ri.exposed_comm_ns as f64) > 3.0,
+            "f32={} int8={}",
+            rf.exposed_comm_ns,
+            ri.exposed_comm_ns
+        );
+    }
+}

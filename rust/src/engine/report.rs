@@ -1,0 +1,70 @@
+//! Engine run reports: steady-state iteration time, exposed communication,
+//! scaling efficiency helpers.
+
+use crate::engine::EngineConfig;
+use crate::fabric::NetSim;
+use crate::metrics::Timeline;
+use crate::Ns;
+
+/// Result of a simulated training run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Steady-state iteration time (warmup iteration excluded), averaged
+    /// over nodes and measured iterations.
+    pub iter_ns: Ns,
+    /// Pure compute per iteration per node (no communication).
+    pub compute_ns: Ns,
+    /// iter_ns − compute_ns: the communication the schedule failed to hide.
+    pub exposed_comm_ns: Ns,
+    /// Images (samples) per second across the whole cluster.
+    pub throughput_samples_per_s: f64,
+    /// Total bytes each NIC pushed (mean), for volume accounting.
+    pub bytes_per_node: u64,
+    /// NIC-level preemption count over the whole run.
+    pub preemptions: u64,
+    pub timeline: Timeline,
+}
+
+impl Report {
+    /// Weak-scaling efficiency vs a 1-node reference report.
+    pub fn efficiency_vs(&self, single: &Report) -> f64 {
+        single.iter_ns as f64 / self.iter_ns as f64
+    }
+}
+
+pub(crate) fn build_report(
+    cfg: &EngineConfig,
+    sim: &NetSim,
+    iter_starts: &[Vec<Ns>],
+    timeline: Timeline,
+) -> Report {
+    // Per node: mean delta between consecutive fwd(0) starts, skipping the
+    // warmup (delta 0 -> 1). Requires iterations >= 1.
+    let mut deltas = Vec::new();
+    for starts in iter_starts {
+        for w in starts.windows(2).skip(1) {
+            deltas.push((w[1] - w[0]) as f64);
+        }
+        // The last iteration has no successor start; approximate with the
+        // average of the others (steady state) — only matters when
+        // iterations == 1, where we fall back to delta 0 -> 1.
+        if starts.len() == 2 {
+            deltas.push((starts[1] - starts[0]) as f64);
+        }
+    }
+    let iter_ns = crate::util::stats::mean(&deltas).round() as Ns;
+    let compute_ns = cfg.compute_ns_per_iter();
+    let p = cfg.dist.world();
+    // Every node contributes `batch` samples regardless of grouping.
+    let global_batch = (cfg.batch * p) as f64;
+    let throughput = if iter_ns > 0 { global_batch * 1e9 / iter_ns as f64 } else { 0.0 };
+    Report {
+        iter_ns: iter_ns.max(1),
+        compute_ns,
+        exposed_comm_ns: iter_ns.saturating_sub(compute_ns),
+        throughput_samples_per_s: throughput,
+        bytes_per_node: sim.stats.bytes_sent / p as u64,
+        preemptions: sim.stats.preemptions,
+        timeline,
+    }
+}

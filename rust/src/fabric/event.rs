@@ -1,0 +1,141 @@
+//! Deterministic min-heap event queue for the discrete-event simulator.
+//!
+//! Ties in time are broken by insertion sequence, so a simulation is a
+//! pure function of its inputs — the property the proptest suite leans on.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::Ns;
+
+/// An event queue entry: fires at `at`, FIFO among equal times.
+struct Entry<E> {
+    at: Ns,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// Monotonic event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: Ns,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to now: the simulator
+    /// never schedules into the past).
+    pub fn push_at(&mut self, at: Ns, ev: E) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at: at.max(self.now), seq, ev });
+        seq
+    }
+
+    /// Schedule `ev` `delay` ns from now.
+    pub fn push_in(&mut self, delay: Ns, ev: E) -> u64 {
+        self.push_at(self.now.saturating_add(delay), ev)
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Ns, E)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at >= self.now, "time went backwards");
+        self.now = e.at;
+        Some((e.at, e.ev))
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Ns> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(30, "c");
+        q.push_at(10, "a");
+        q.push_at(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn equal_times_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push_at(5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn clock_is_monotonic_and_clamps() {
+        let mut q = EventQueue::new();
+        q.push_at(100, "late");
+        assert_eq!(q.pop(), Some((100, "late")));
+        // Scheduling "at 50" after the clock reached 100 clamps to 100.
+        q.push_at(50, "early");
+        assert_eq!(q.pop(), Some((100, "early")));
+        assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn push_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.push_at(40, "x");
+        q.pop();
+        q.push_in(5, "y");
+        assert_eq!(q.pop(), Some((45, "y")));
+    }
+}

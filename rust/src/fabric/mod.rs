@@ -1,0 +1,49 @@
+//! Cluster substrate: the paper's testbeds, rebuilt.
+//!
+//! The paper evaluates MLSL on Xeon/Omnipath (Fig. 2, up to 256 nodes) and
+//! Xeon/10GbE (the 1.8–2.2× prioritization claim). We do not have those
+//! clusters; per DESIGN.md §Substitutions this module provides:
+//!
+//! * [`sim`] — a discrete-event network simulator whose NICs are
+//!   strict-priority, *preemptive* servers: a higher-priority message takes
+//!   the wire from an in-flight bulk transfer, which is exactly the
+//!   mechanism MLSL's message prioritization needs and MPI lacks.
+//! * [`shm`] — a real in-process fabric (ranks = threads, wires = lock-free
+//!   channels) used by the *real* training path, so the identical
+//!   collectives/progress code runs with actual gradient bytes.
+//! * [`topology`] — parameter presets for the two fabrics the paper uses
+//!   plus the node compute model (Skylake-class FLOPs).
+
+pub mod event;
+pub mod shm;
+pub mod sim;
+pub mod topology;
+
+pub use sim::{NetSim, SimEvent};
+pub use topology::{NodeSpec, Topology};
+
+use crate::{Ns, Priority, Rank};
+
+/// A point-to-point message descriptor (what traverses the simulated wire).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MsgDesc {
+    pub src: Rank,
+    pub dst: Rank,
+    pub bytes: u64,
+    pub priority: Priority,
+    /// Opaque tag the layer above uses to route completions
+    /// (collective id << 32 | step index, by convention).
+    pub tag: u64,
+}
+
+/// Gigabytes-per-second → bytes-per-nanosecond.
+pub fn gbps_to_bytes_per_ns(gbps: f64) -> f64 {
+    // 1 Gbit/s = 1e9 bit/s = 0.125e9 byte/s = 0.125 byte/ns.
+    gbps * 0.125
+}
+
+/// Transfer duration in ns for `bytes` at `gbps` line rate.
+pub fn wire_ns(bytes: u64, gbps: f64) -> Ns {
+    let bpns = gbps_to_bytes_per_ns(gbps);
+    (bytes as f64 / bpns).ceil() as Ns
+}

@@ -1,0 +1,172 @@
+//! Real in-process fabric: ranks are threads, wires are lock-free channels.
+//!
+//! This is what the *real* training path runs on (DESIGN.md §Substitutions:
+//! multi-node MPI ranks → in-process worker threads). The collectives and
+//! progress-engine code above it is identical to what the simulated path
+//! schedules — this fabric just actually moves the bytes.
+//!
+//! Message matching follows MPI semantics: `(src, tag)` envelopes, with an
+//! unexpected-message queue so arrival order never deadlocks a program.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::Rank;
+
+/// A message on the in-process wire.
+#[derive(Debug)]
+pub struct WireMsg {
+    pub src: Rank,
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+/// One rank's endpoint: senders to every peer + its own inbox.
+pub struct ShmEndpoint {
+    pub rank: Rank,
+    pub p: usize,
+    txs: Vec<Sender<WireMsg>>,
+    rx: Receiver<WireMsg>,
+    /// Arrived-but-not-yet-requested messages, keyed by (src, tag).
+    unexpected: HashMap<(Rank, u64), VecDeque<Vec<u8>>>,
+}
+
+/// Build a fully-connected `p`-rank fabric; hand one endpoint to each
+/// rank thread.
+pub fn fabric(p: usize) -> Vec<ShmEndpoint> {
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| ShmEndpoint {
+            rank,
+            p,
+            txs: txs.clone(),
+            rx,
+            unexpected: HashMap::new(),
+        })
+        .collect()
+}
+
+impl ShmEndpoint {
+    /// Non-blocking send (channels are unbounded; collective schedules are
+    /// therefore deadlock-free by construction).
+    pub fn send(&self, dst: Rank, tag: u64, payload: Vec<u8>) {
+        self.txs[dst]
+            .send(WireMsg { src: self.rank, tag, payload })
+            .expect("peer endpoint dropped");
+    }
+
+    /// Drain everything currently in the inbox into the unexpected queue.
+    pub fn poll(&mut self) {
+        while let Ok(m) = self.rx.try_recv() {
+            self.unexpected
+                .entry((m.src, m.tag))
+                .or_default()
+                .push_back(m.payload);
+        }
+    }
+
+    /// Non-blocking matched receive.
+    pub fn take(&mut self, from: Rank, tag: u64) -> Option<Vec<u8>> {
+        self.poll();
+        let q = self.unexpected.get_mut(&(from, tag))?;
+        let m = q.pop_front();
+        if q.is_empty() {
+            self.unexpected.remove(&(from, tag));
+        }
+        m
+    }
+
+    /// Blocking matched receive.
+    pub fn recv(&mut self, from: Rank, tag: u64) -> Vec<u8> {
+        loop {
+            if let Some(m) = self.take(from, tag) {
+                return m;
+            }
+            match self.rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => self
+                    .unexpected
+                    .entry((m.src, m.tag))
+                    .or_default()
+                    .push_back(m.payload),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(e) => panic!("fabric torn down while receiving: {e}"),
+            }
+        }
+    }
+
+    /// Is a matched message already available?
+    pub fn has(&mut self, from: Rank, tag: u64) -> bool {
+        self.poll();
+        self.unexpected
+            .get(&(from, tag))
+            .map_or(false, |q| !q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn pairwise_send_recv() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, 42, vec![1, 2, 3]);
+        assert_eq!(e1.recv(0, 42), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn out_of_order_tags_match() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, 7, vec![7]);
+        e0.send(1, 8, vec![8]);
+        // Request the later tag first: earlier lands in unexpected queue.
+        assert_eq!(e1.recv(0, 8), vec![8]);
+        assert_eq!(e1.recv(0, 7), vec![7]);
+    }
+
+    #[test]
+    fn fifo_within_same_tag() {
+        let mut eps = fabric(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        for i in 0..10u8 {
+            e0.send(1, 5, vec![i]);
+        }
+        for i in 0..10u8 {
+            assert_eq!(e1.recv(0, 5), vec![i]);
+        }
+    }
+
+    #[test]
+    fn cross_thread_ring() {
+        let eps = fabric(4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || {
+                    let next = (ep.rank + 1) % ep.p;
+                    let prev = (ep.rank + ep.p - 1) % ep.p;
+                    ep.send(next, 1, vec![ep.rank as u8]);
+                    let got = ep.recv(prev, 1);
+                    assert_eq!(got, vec![prev as u8]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

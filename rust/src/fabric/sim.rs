@@ -1,0 +1,439 @@
+//! Discrete-event network simulator with strict-priority, preemptive NICs.
+//!
+//! Model (DESIGN.md §Key-design-decisions):
+//!
+//! * Each node owns an egress NIC serializing at the topology line rate.
+//!   Among queued transfers the one with the lowest `(priority, seq)`
+//!   holds the wire — so a newly-posted *urgent* message **preempts** an
+//!   in-flight bulk transfer exactly the way the paper's message
+//!   prioritization preempts "an ongoing large weight gradient exchange".
+//!   Preempted transfers keep their progress and resume when the wire
+//!   frees up (chunk-exact resume is provided by the collectives layer,
+//!   byte-exact resume inside a chunk by this NIC model).
+//! * A transfer costs `per_msg_overhead + bytes/bw` on the egress wire,
+//!   then `latency` in flight; receive side is not a contention point
+//!   (receiver-driven contention is secondary for allreduce patterns where
+//!   each rank receives from exactly one peer per step).
+//! * Egress can be *gated* per node: with `comm_gated = true` nothing
+//!   progresses — this models plain MPI non-blocking collectives without
+//!   an async progress thread (communication only advances inside
+//!   blocking MPI calls), the out-of-box Horovod behaviour of claim C2.
+//!
+//! The simulator is deterministic: equal-time events fire in issue order.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::event::EventQueue;
+use super::topology::Topology;
+use super::MsgDesc;
+use crate::{Ns, Priority, Rank};
+
+/// Externally visible simulation events.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimEvent {
+    /// `msg` fully arrived at `msg.dst`.
+    MsgDelivered { msg: MsgDesc, at: Ns },
+    /// A compute timer posted with [`NetSim::compute`] expired.
+    ComputeDone { node: Rank, tag: u64, at: Ns },
+}
+
+#[derive(Debug)]
+enum Internal {
+    /// Candidate egress completion for (node, xfer); validated by generation.
+    EgressDone { node: Rank, xfer: u64, gen: u64 },
+    Deliver { msg_idx: usize },
+    ComputeDone { node: Rank, tag: u64 },
+}
+
+struct Transfer {
+    msg_idx: usize,
+    /// Remaining egress time (overhead + wire) at `checkpoint`.
+    remaining_ns: Ns,
+    checkpoint: Ns,
+    running: bool,
+}
+
+/// Per-NIC egress queue. Transfers live in `slab`; `order` is a
+/// strict-priority min-heap of (priority, id) — O(log n) per event
+/// instead of the O(n) scan a Vec would need (perf_micro: the simulator
+/// event loop is the L3 hot path; see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+struct Nic {
+    slab: HashMap<u64, Transfer>,
+    order: BinaryHeap<Reverse<(Priority, u64)>>,
+    gated: bool,
+    /// Generation counter invalidating stale EgressDone events.
+    gen: u64,
+    /// Total ns the wire was busy (for utilization metrics).
+    busy_ns: Ns,
+    busy_since: Option<Ns>,
+    /// Currently-running transfer id (the head when not gated).
+    running: Option<u64>,
+}
+
+impl Nic {
+    /// Highest-priority live transfer id (lazily dropping stale entries).
+    fn head(&mut self) -> Option<u64> {
+        while let Some(Reverse((_, id))) = self.order.peek() {
+            if self.slab.contains_key(id) {
+                return Some(*id);
+            }
+            self.order.pop();
+        }
+        None
+    }
+}
+
+/// Aggregate traffic statistics, per priority class.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub bytes_by_priority: HashMap<Priority, u64>,
+    pub preemptions: u64,
+}
+
+/// The simulator. Drive it by posting sends/computes, then repeatedly
+/// calling [`NetSim::next`] and reacting to the returned events.
+pub struct NetSim {
+    topo: Topology,
+    p: usize,
+    queue: EventQueue<Internal>,
+    nics: Vec<Nic>,
+    msgs: Vec<MsgDesc>,
+    next_xfer_id: u64,
+    pub stats: SimStats,
+}
+
+impl NetSim {
+    pub fn new(topo: Topology, p: usize) -> Self {
+        let nics = (0..p).map(|_| Nic::default()).collect();
+        Self {
+            topo,
+            p,
+            queue: EventQueue::new(),
+            nics,
+            msgs: Vec::new(),
+            next_xfer_id: 0,
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Ns {
+        self.queue.now()
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.p
+    }
+
+    /// Post a point-to-point message. It contends for `msg.src`'s egress
+    /// wire under strict priority.
+    pub fn send(&mut self, msg: MsgDesc) {
+        assert!(msg.src < self.p && msg.dst < self.p, "rank out of range");
+        assert_ne!(msg.src, msg.dst, "self-send");
+        let node = msg.src;
+        let msg_idx = self.msgs.len();
+        let cost = self.topo.per_msg_overhead_ns + self.topo.wire_ns(msg.bytes);
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += msg.bytes;
+        *self.stats.bytes_by_priority.entry(msg.priority).or_insert(0) += msg.bytes;
+        self.msgs.push(msg.clone());
+        let id = self.next_xfer_id;
+        self.next_xfer_id += 1;
+        let now = self.queue.now();
+        let nic = &mut self.nics[node];
+        nic.slab.insert(
+            id,
+            Transfer { msg_idx, remaining_ns: cost.max(1), checkpoint: now, running: false },
+        );
+        nic.order.push(Reverse((msg.priority, id)));
+        // Fast path: the NIC is already busy with an equal-or-higher
+        // priority transfer — no preemption, nothing to reschedule.
+        if let Some(run) = nic.running {
+            if nic.head() == Some(run) {
+                return;
+            }
+        }
+        self.reschedule(node);
+    }
+
+    /// Post a compute timer on `node` for `dur_ns`; fires `ComputeDone{tag}`.
+    pub fn compute(&mut self, node: Rank, dur_ns: Ns, tag: u64) {
+        assert!(node < self.p);
+        self.queue.push_in(dur_ns.max(1), Internal::ComputeDone { node, tag });
+    }
+
+    /// Fire an event after `dur_ns` with no resource use (scheduling aid).
+    pub fn timer(&mut self, node: Rank, dur_ns: Ns, tag: u64) {
+        self.compute(node, dur_ns, tag);
+    }
+
+    /// Gate/ungate a node's egress (models absence of async progress:
+    /// transfers only advance while the host is inside the library).
+    pub fn set_comm_gated(&mut self, node: Rank, gated: bool) {
+        if self.nics[node].gated != gated {
+            self.nics[node].gated = gated;
+            self.reschedule(node);
+        }
+    }
+
+    /// True when no events remain (all transfers and timers drained).
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// NIC busy fraction so far for `node` (wire utilization).
+    pub fn nic_utilization(&self, node: Rank) -> f64 {
+        if self.now() == 0 {
+            return 0.0;
+        }
+        self.nics[node].busy_ns as f64 / self.now() as f64
+    }
+
+    /// Checkpoint progress of the currently-running transfer (if any) and
+    /// re-elect the highest-priority transfer; (re)schedule its completion.
+    fn reschedule(&mut self, node: Rank) {
+        let now = self.queue.now();
+        let nic = &mut self.nics[node];
+
+        // 1. Stop the running transfer, banking its progress.
+        let was_running = nic.running.take();
+        if let Some(id) = was_running {
+            if let Some(t) = nic.slab.get_mut(&id) {
+                let elapsed = now - t.checkpoint;
+                t.remaining_ns = t.remaining_ns.saturating_sub(elapsed);
+                t.running = false;
+            }
+        }
+        if let Some(since) = nic.busy_since.take() {
+            nic.busy_ns += now - since;
+        }
+        nic.gen += 1;
+
+        if nic.gated {
+            return;
+        }
+        // 2. Elect the head: lowest (priority, id) — FIFO within a class.
+        let Some(id) = nic.head() else { return };
+        if let Some(prev) = was_running {
+            if prev != id && nic.slab.contains_key(&prev) {
+                self.stats.preemptions += 1;
+            }
+        }
+        let head = nic.slab.get_mut(&id).expect("head is live");
+        head.running = true;
+        head.checkpoint = now;
+        nic.running = Some(id);
+        nic.busy_since = Some(now);
+        let (remaining, gen) = (head.remaining_ns, nic.gen);
+        self.queue
+            .push_in(remaining, Internal::EgressDone { node, xfer: id, gen });
+    }
+
+    /// Advance to and return the next externally-visible event.
+    pub fn next(&mut self) -> Option<SimEvent> {
+        while let Some((at, ev)) = self.queue.pop() {
+            match ev {
+                Internal::ComputeDone { node, tag } => {
+                    return Some(SimEvent::ComputeDone { node, tag, at });
+                }
+                Internal::Deliver { msg_idx } => {
+                    return Some(SimEvent::MsgDelivered {
+                        msg: self.msgs[msg_idx].clone(),
+                        at,
+                    });
+                }
+                Internal::EgressDone { node, xfer, gen } => {
+                    if self.nics[node].gen != gen {
+                        continue; // stale: the NIC was rescheduled since
+                    }
+                    let t = self.nics[node]
+                        .slab
+                        .remove(&xfer)
+                        .expect("generation-valid transfer exists");
+                    debug_assert!(t.running);
+                    self.nics[node].running = None;
+                    if let Some(since) = self.nics[node].busy_since.take() {
+                        self.nics[node].busy_ns += at - since;
+                    }
+                    // In-flight latency, then delivery.
+                    self.queue
+                        .push_in(self.topo.latency_ns, Internal::Deliver { msg_idx: t.msg_idx });
+                    self.reschedule(node);
+                }
+            }
+        }
+        None
+    }
+
+    /// Run the simulation to completion, collecting all events.
+    pub fn drain(&mut self) -> Vec<SimEvent> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(src: Rank, dst: Rank, bytes: u64, prio: Priority, tag: u64) -> MsgDesc {
+        MsgDesc { src, dst, bytes, priority: prio, tag }
+    }
+
+    fn sim() -> NetSim {
+        // Round numbers: 8 Gbps = 1 byte/ns, alpha = 1000 ns, gamma = 100 ns.
+        let topo = Topology {
+            name: "test".into(),
+            link_gbps: 8.0,
+            latency_ns: 1_000,
+            per_msg_overhead_ns: 100,
+            chunk_bytes: 1 << 20,
+        };
+        NetSim::new(topo, 4)
+    }
+
+    #[test]
+    fn single_message_timing() {
+        let mut s = sim();
+        s.send(msg(0, 1, 1_000, 1, 7));
+        let ev = s.next().unwrap();
+        // 100 overhead + 1000 wire + 1000 latency = 2100.
+        assert_eq!(
+            ev,
+            SimEvent::MsgDelivered { msg: msg(0, 1, 1_000, 1, 7), at: 2_100 }
+        );
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn same_priority_is_fifo_serialized() {
+        let mut s = sim();
+        s.send(msg(0, 1, 1_000, 1, 1));
+        s.send(msg(0, 2, 1_000, 1, 2));
+        let e1 = s.next().unwrap();
+        let e2 = s.next().unwrap();
+        match (e1, e2) {
+            (SimEvent::MsgDelivered { msg: m1, at: t1 },
+             SimEvent::MsgDelivered { msg: m2, at: t2 }) => {
+                assert_eq!(m1.tag, 1);
+                assert_eq!(m2.tag, 2);
+                assert_eq!(t1, 2_100);
+                assert_eq!(t2, 3_200); // second waits 1100 egress, same latency
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn high_priority_preempts_bulk() {
+        let mut s = sim();
+        // Bulk: 100_000 bytes at prio 9 -> would finish egress at 100_100.
+        s.send(msg(0, 1, 100_000, 9, 1));
+        // Urgent message posted at t=0 (before any event pops): wins the
+        // wire immediately since it has lower priority value.
+        s.send(msg(0, 2, 1_000, 0, 2));
+        let e1 = s.next().unwrap();
+        match e1 {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2, "urgent must arrive first");
+                // urgent: 100 + 1000 egress + 1000 latency
+                assert_eq!(at, 2_100);
+            }
+            other => panic!("{other:?}"),
+        }
+        let e2 = s.next().unwrap();
+        match e2 {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                // bulk egress = its own 100_100 pushed back by 1_100 of
+                // urgent wire time -> 101_200, + 1000 latency.
+                assert_eq!(at, 102_200);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(s.stats.preemptions >= 1);
+    }
+
+    #[test]
+    fn mid_flight_preemption_preserves_progress() {
+        let mut s = sim();
+        s.send(msg(0, 1, 100_000, 9, 1)); // egress done at 100_100
+        // Let some compute marker pass at t=50_000, then post urgent.
+        s.compute(3, 50_000, 42);
+        let e = s.next().unwrap();
+        assert_eq!(e, SimEvent::ComputeDone { node: 3, tag: 42, at: 50_000 });
+        s.send(msg(0, 2, 1_000, 0, 2));
+        // Urgent egress 100+1000 from t=50_000 -> 51_100, deliver 52_100.
+        let e1 = s.next().unwrap();
+        match e1 {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2);
+                assert_eq!(at, 52_100);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Bulk had 50_100 ns left at 50_000; resumes 51_100, egress done
+        // 101_200, delivered 102_200. Progress was preserved (not restarted).
+        let e2 = s.next().unwrap();
+        match e2 {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                assert_eq!(at, 102_200);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn gating_freezes_egress() {
+        let mut s = sim();
+        s.set_comm_gated(0, true);
+        s.send(msg(0, 1, 1_000, 1, 1));
+        s.compute(0, 10_000, 9);
+        // Only the compute fires while gated.
+        assert_eq!(
+            s.next().unwrap(),
+            SimEvent::ComputeDone { node: 0, tag: 9, at: 10_000 }
+        );
+        s.set_comm_gated(0, false);
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 10_000 + 2_100),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn independent_nics_run_in_parallel() {
+        let mut s = sim();
+        s.send(msg(0, 1, 1_000, 1, 1));
+        s.send(msg(2, 3, 1_000, 1, 2));
+        let e1 = s.next().unwrap();
+        let e2 = s.next().unwrap();
+        // Both delivered at 2_100: separate egress wires.
+        for e in [e1, e2] {
+            match e {
+                SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 2_100),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = sim();
+        s.send(msg(0, 1, 10_000, 1, 1));
+        s.drain();
+        // Wire busy 10_100 of the 11_100 total (delivery at 11_100).
+        assert!((s.nic_utilization(0) - 10_100.0 / 11_100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! Fabric + node parameter presets for the paper's testbeds.
+//!
+//! Numbers are public-spec-derived, not measured on the authors' clusters;
+//! EXPERIMENTS.md compares *shapes* (who wins, by what factor), which these
+//! presets preserve (10GbE: high latency + low bandwidth → prioritization
+//! matters most; Omnipath: low latency + high bandwidth → near-ideal
+//! scaling with overlap).
+
+use crate::Ns;
+
+/// Network fabric parameters (the alpha–beta–gamma model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub name: String,
+    /// Per-NIC egress line rate, Gbit/s (beta⁻¹).
+    pub link_gbps: f64,
+    /// End-to-end message latency, ns (alpha): propagation + switching.
+    pub latency_ns: Ns,
+    /// Per-message software/NIC injection overhead, ns (gamma). Paid on
+    /// the egress wire before the first byte moves — this is what makes
+    /// small messages latency-bound and motivates prioritization.
+    pub per_msg_overhead_ns: Ns,
+    /// Chunk size collectives use on this fabric, bytes. Preemption is
+    /// chunk-granular, so this is also the preemption latency knob.
+    pub chunk_bytes: u64,
+}
+
+impl Topology {
+    /// 10 Gbit/s Ethernet, TCP-class latency — the fabric of the paper's
+    /// 1.8–2.2× prioritization result (C1).
+    pub fn eth_10g() -> Self {
+        Self {
+            name: "eth10g".into(),
+            link_gbps: 10.0,
+            latency_ns: 30_000,          // ~30 µs TCP/Ethernet stack
+            per_msg_overhead_ns: 4_000,  // kernel/NIC doorbell path
+            chunk_bytes: 256 * 1024,
+        }
+    }
+
+    /// Intel Omnipath-class 100 Gbit/s HPC fabric — Fig. 2's testbed.
+    pub fn omnipath_100g() -> Self {
+        Self {
+            name: "omnipath100g".into(),
+            link_gbps: 100.0,
+            latency_ns: 1_100,          // ~1.1 µs MPI pingpong
+            per_msg_overhead_ns: 250,
+            chunk_bytes: 1024 * 1024,
+        }
+    }
+
+    /// 25 GbE cloud fabric (intermediate point, used in ablations).
+    pub fn eth_25g() -> Self {
+        Self {
+            name: "eth25g".into(),
+            link_gbps: 25.0,
+            latency_ns: 15_000,
+            per_msg_overhead_ns: 2_000,
+            chunk_bytes: 512 * 1024,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "eth10g" => Some(Self::eth_10g()),
+            "eth25g" => Some(Self::eth_25g()),
+            "omnipath100g" | "opa" => Some(Self::omnipath_100g()),
+            _ => None,
+        }
+    }
+
+    /// Pure wire time for `bytes` (no latency/overhead).
+    pub fn wire_ns(&self, bytes: u64) -> Ns {
+        super::wire_ns(bytes, self.link_gbps)
+    }
+
+    /// Full cost of a single point-to-point message of `bytes`.
+    pub fn msg_ns(&self, bytes: u64) -> Ns {
+        self.per_msg_overhead_ns + self.wire_ns(bytes) + self.latency_ns
+    }
+}
+
+/// Node compute model (Skylake-class by default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Peak single-precision FLOP/s of the whole socket pair.
+    pub peak_flops: f64,
+    /// Fraction of peak a tuned DL framework sustains (conv/gemm mix).
+    pub dl_efficiency: f64,
+    /// Physical cores (comm cores are stolen from these).
+    pub cores: usize,
+}
+
+impl NodeSpec {
+    /// 2× Intel Xeon Gold 6148 (Skylake, the paper's node): 2 × 20 cores ×
+    /// 2 AVX-512 FMA units × 16 f32 lanes × 2 flop × 2.4 GHz ≈ 6.1 Tf/s.
+    pub fn skylake_6148() -> Self {
+        Self {
+            name: "2xXeon6148".into(),
+            peak_flops: 6.1e12,
+            dl_efficiency: 0.55,
+            cores: 40,
+        }
+    }
+
+    /// Xeon Phi 7250 (the 9600-node Cori run cited by the paper).
+    pub fn xeon_phi_7250() -> Self {
+        Self {
+            name: "XeonPhi7250".into(),
+            peak_flops: 6.0e12,
+            dl_efficiency: 0.35,
+            cores: 68,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "skylake" | "2xXeon6148" => Some(Self::skylake_6148()),
+            "knl" | "XeonPhi7250" => Some(Self::xeon_phi_7250()),
+            _ => None,
+        }
+    }
+
+    /// Sustained FLOP/s with `comm_cores` dedicated to driving the network
+    /// (the paper: "dedicating one or more cores for driving the network").
+    pub fn effective_flops(&self, comm_cores: usize) -> f64 {
+        let compute_cores = self.cores.saturating_sub(comm_cores).max(1);
+        self.peak_flops * self.dl_efficiency * compute_cores as f64 / self.cores as f64
+    }
+
+    /// Time to execute `flops` floating point ops, ns.
+    pub fn compute_ns(&self, flops: f64, comm_cores: usize) -> Ns {
+        (flops / self.effective_flops(comm_cores) * 1e9).ceil() as Ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_scales_linearly() {
+        let t = Topology::eth_10g();
+        // 10 Gbps = 1.25 B/ns -> 1 MiB takes 1048576/1.25 ≈ 838861 ns.
+        assert_eq!(t.wire_ns(1_048_576), 838_861);
+        assert!(t.wire_ns(2 * 1_048_576) >= 2 * t.wire_ns(1_048_576) - 1);
+    }
+
+    #[test]
+    fn omnipath_beats_ethernet() {
+        let e = Topology::eth_10g();
+        let o = Topology::omnipath_100g();
+        assert!(o.msg_ns(1024) < e.msg_ns(1024));
+        assert!(o.msg_ns(16 << 20) < e.msg_ns(16 << 20));
+    }
+
+    #[test]
+    fn comm_cores_reduce_compute_rate() {
+        let n = NodeSpec::skylake_6148();
+        assert!(n.effective_flops(2) < n.effective_flops(0));
+        // Stealing 2 of 40 cores costs 5%.
+        let ratio = n.effective_flops(2) / n.effective_flops(0);
+        assert!((ratio - 38.0 / 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert!(Topology::by_name("eth10g").is_some());
+        assert!(Topology::by_name("opa").is_some());
+        assert!(Topology::by_name("nope").is_none());
+        assert!(NodeSpec::by_name("skylake").is_some());
+    }
+}

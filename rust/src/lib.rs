@@ -1,0 +1,67 @@
+//! # mlsl-rs — Machine Learning Scaling Library, reproduced in Rust
+//!
+//! A from-scratch reproduction of *On Scale-out Deep Learning Training for
+//! Cloud and HPC* (Sridharan et al., SysML 2018): Intel's MLSL — a
+//! DL-specific communication/scaling library. See `DESIGN.md` for the full
+//! system inventory and the per-experiment index.
+//!
+//! ## Layout
+//!
+//! * [`fabric`] — the cluster substrate: a discrete-event network simulator
+//!   with strict-priority preemptive NICs (the paper's Xeon/Omnipath and
+//!   10GbE testbeds, rebuilt), plus a real in-process shared-memory fabric
+//!   where ranks are threads.
+//! * [`collectives`] — allreduce / reduce-scatter / allgather / broadcast as
+//!   per-rank *chunk programs* (ring, recursive halving-doubling, binomial
+//!   tree), size-adaptive algorithm selection, and low-precision wire
+//!   formats (fp32 / bf16 / int8 with per-block scales).
+//! * [`progress`] — the asynchronous progress engine: dedicated "comm
+//!   cores" (threads) drive chunk programs off the compute path, with
+//!   message prioritization and chunk-granular preemption.
+//! * [`mlsl`] — the paper's two public interfaces: the MPI-like
+//!   collectives API and the DL Layer API (`Session` / `Operation` /
+//!   `Distribution`), including hybrid (node-group) parallelism.
+//! * [`models`] — layer tables for ResNet-50, VGG-16, GoogLeNet, AlexNet
+//!   and a Transformer LM (per-layer FLOPs / weight / activation bytes).
+//! * [`analytic`] — the compute-to-communication ratio model of Das et al.
+//!   (arXiv:1602.06709), used for design-space analysis and to cross-check
+//!   the simulator.
+//! * [`engine`] — the framework role: per-layer fwd/bwd iteration timeline
+//!   driving MLSL ops over the simulated fabric; includes the out-of-box
+//!   MPI/Horovod baseline modes the paper compares against.
+//! * [`runtime`] — PJRT wrapper (via the `xla` crate) that loads the
+//!   AOT-compiled JAX+Pallas artifacts (`artifacts/*.hlo.txt`).
+//! * [`trainer`] — the *real* data-parallel trainer: rank threads execute
+//!   `grad_step` via PJRT, gradients are allreduced by this library (with
+//!   per-layer priorities), then `apply_update` runs — Python never on the
+//!   training path.
+//! * [`config`] / [`metrics`] — TOML run configs, manifest loading,
+//!   counters, timelines and CSV emission.
+
+pub mod analytic;
+pub mod collectives;
+pub mod config;
+pub mod engine;
+pub mod fabric;
+pub mod metrics;
+pub mod mlsl;
+pub mod models;
+pub mod progress;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+/// Rank of a node (or thread standing in for a node) inside a communicator.
+pub type Rank = usize;
+
+/// Nanosecond simulation timestamps (integer: keeps the event queue totally
+/// ordered and property-test friendly).
+pub type Ns = u64;
+
+/// Message/op priority class: **0 is most urgent**. The DL Layer API maps
+/// a parameter's forward order to its gradient-allreduce priority so the
+/// first layer's (needed first in the next forward pass) wins the wire.
+pub type Priority = u8;
+
+pub use collectives::{Algorithm, ReduceOp, WireDtype};
+pub use mlsl::{Distribution, Session};

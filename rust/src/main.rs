@@ -1,0 +1,173 @@
+//! `mlsl` — the launcher.
+//!
+//! Subcommands:
+//! * `info      --model resnet50` — layer table + compute/comm analysis
+//! * `simulate  --model resnet50 --nodes 64 --topo opa --mode mlsl` —
+//!   simulated distributed training, prints the iteration report
+//! * `scaling   --model resnet50 --nodes 1,2,4,...` — efficiency table
+//! * `train     --artifacts artifacts/small --ranks 2 --steps 100` — the
+//!   REAL data-parallel trainer over PJRT + prioritized collectives
+
+use anyhow::{anyhow, Result};
+
+use mlsl::analytic::{best_parallelism, ratio, Parallelism};
+use mlsl::collectives::{PriorityPolicy, WireDtype};
+use mlsl::config::engine_config;
+use mlsl::engine::simulate;
+use mlsl::metrics::print_table;
+use mlsl::models::ModelDesc;
+use mlsl::trainer::{train, TrainerConfig};
+use mlsl::util::cli::Args;
+use mlsl::util::stats::{fmt_bytes, fmt_ns};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("scaling") => cmd_scaling(&args),
+        Some("train") => cmd_train(&args),
+        other => {
+            eprintln!("usage: mlsl <info|simulate|scaling|train> [--flags]");
+            if let Some(o) = other {
+                Err(anyhow!("unknown command {o:?}"))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let name = args.str_or("model", "resnet50");
+    let model =
+        ModelDesc::by_name(&name).ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+    let batch = args.usize_or("batch", model.default_batch);
+    let p = args.usize_or("nodes", 64);
+
+    println!(
+        "model {name}: {} layers, {} parameters ({}), fwd {:.2} GFLOP/sample",
+        model.layers.len(),
+        model.total_weight_elems(),
+        fmt_bytes(model.total_weight_bytes()),
+        model.fwd_flops_per_sample() / 1e9,
+    );
+
+    let mut rows = Vec::new();
+    for (i, l) in model.weighted_layers() {
+        let r = ratio(l, Parallelism::Data, p, batch);
+        let best = best_parallelism(l, p, batch);
+        rows.push(vec![
+            i.to_string(),
+            l.name.clone(),
+            format!("{:?}", l.kind),
+            fmt_bytes(l.weight_bytes()),
+            format!("{:.1}", l.fwd_flops / 1e6),
+            format!("{r:.0}"),
+            format!("{best:?}"),
+        ]);
+    }
+    print_table(
+        &format!("{name}: per-layer analysis (p={p}, batch={batch})"),
+        &["#", "layer", "kind", "grad bytes", "fwd MFLOP", "flops/byte (data)", "best partition"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let desc = format!(
+        "{} on {} nodes ({}, {:?}, group={}, batch={}/node, wire={})",
+        cfg.model.name,
+        cfg.dist.world(),
+        cfg.topo.name,
+        cfg.mode,
+        cfg.dist.group_size(),
+        cfg.batch,
+        cfg.wire,
+    );
+    let timeline = cfg.record_timeline;
+    let r = simulate(cfg);
+    println!("simulated: {desc}");
+    println!("  iteration        {}", fmt_ns(r.iter_ns));
+    println!("  compute          {}", fmt_ns(r.compute_ns));
+    println!("  exposed comm     {}", fmt_ns(r.exposed_comm_ns));
+    println!("  throughput       {:.1} samples/s", r.throughput_samples_per_s);
+    println!("  bytes/node/run   {}", fmt_bytes(r.bytes_per_node));
+    println!("  NIC preemptions  {}", r.preemptions);
+    if timeline {
+        println!("{}", r.timeline.ascii_gantt(100));
+    }
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let nodes = args.usize_list_or("nodes", &[1, 2, 4, 8, 16, 32, 64, 128, 256]);
+    let mut rows = Vec::new();
+    let mut single_iter: Option<u64> = None;
+    for p in nodes {
+        let sub = args.with("nodes", &p.to_string());
+        let mut cfg = engine_config(&sub)?;
+        let group = cfg.dist.group_size().min(p).max(1);
+        cfg.dist = if p % group == 0 {
+            mlsl::mlsl::Distribution::new(p, group)
+        } else {
+            mlsl::mlsl::Distribution::data_parallel(p)
+        };
+        let r = simulate(cfg);
+        let t1 = *single_iter.get_or_insert(r.iter_ns);
+        rows.push(vec![
+            p.to_string(),
+            fmt_ns(r.iter_ns),
+            fmt_ns(r.exposed_comm_ns),
+            format!("{:.1}%", 100.0 * t1 as f64 / r.iter_ns as f64),
+            format!("{:.0}", r.throughput_samples_per_s),
+        ]);
+    }
+    print_table(
+        "weak scaling",
+        &["nodes", "iter", "exposed comm", "efficiency", "samples/s"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainerConfig::new(args.str_or("artifacts", "artifacts/small"));
+    cfg.ranks = args.usize_or("ranks", 2);
+    cfg.steps = args.usize_or("steps", 50);
+    cfg.log_every = args.usize_or("log-every", 10);
+    cfg.seed = args.usize_or("seed", 42) as u64;
+    cfg.wire = WireDtype::by_name(&args.str_or("wire", "f32"))
+        .ok_or_else(|| anyhow!("bad --wire"))?;
+    cfg.policy = PriorityPolicy::by_name(&args.str_or("policy", "bylayer"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    let res = train(&cfg)?;
+    println!(
+        "trained {} ({} param tensors) for {} steps on {} ranks",
+        res.preset,
+        res.n_params,
+        res.losses.len(),
+        cfg.ranks
+    );
+    println!(
+        "loss: first {:.4} -> last {:.4}",
+        res.losses.first().unwrap_or(&f32::NAN),
+        res.losses.last().unwrap_or(&f32::NAN)
+    );
+    let mean_ms = mlsl::util::stats::mean(&res.step_ms);
+    let mean_comm = mlsl::util::stats::mean(&res.comm_wait_ms);
+    println!("step time: {mean_ms:.1} ms (comm wait {mean_comm:.1} ms)");
+    if let Some(out) = args.get("loss-csv") {
+        let rows: Vec<Vec<String>> = res
+            .losses
+            .iter()
+            .enumerate()
+            .map(|(i, l)| vec![i.to_string(), l.to_string(), format!("{:.2}", res.step_ms[i])])
+            .collect();
+        mlsl::metrics::write_csv(std::path::Path::new(out), &["step", "loss", "ms"], &rows)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Counters, timelines and CSV emission for experiments.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::{Ns, Rank};
+
+/// Named floating counters.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    map: BTreeMap<String, f64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &str, v: f64) {
+        *self.map.entry(key.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn inc(&mut self, key: &str) {
+        self.add(key, 1.0);
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        self.map.get(key).copied().unwrap_or(0.0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+/// A recorded interval on some node's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub node: Rank,
+    pub start: Ns,
+    pub end: Ns,
+    pub track: String, // "compute" | "comm" | custom
+    pub label: String,
+}
+
+/// Event-interval recorder with an ASCII Gantt renderer (used by the
+/// priority_timeline example to *show* preemption happening).
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, node: Rank, start: Ns, end: Ns, track: &str, label: &str) {
+        self.spans.push(Span {
+            node,
+            start,
+            end: end.max(start),
+            track: track.to_string(),
+            label: label.to_string(),
+        });
+    }
+
+    pub fn end_time(&self) -> Ns {
+        self.spans.iter().map(|s| s.end).max().unwrap_or(0)
+    }
+
+    /// Render one row per (node, track) with `width` columns.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let t_end = self.end_time().max(1);
+        let mut rows: BTreeMap<(Rank, String), Vec<char>> = BTreeMap::new();
+        for s in &self.spans {
+            let row = rows
+                .entry((s.node, s.track.clone()))
+                .or_insert_with(|| vec!['.'; width]);
+            let a = (s.start as u128 * width as u128 / t_end as u128) as usize;
+            let b = ((s.end as u128 * width as u128).div_ceil(t_end as u128) as usize).min(width);
+            let c = s.label.chars().next().unwrap_or('#');
+            for cell in row.iter_mut().take(b).skip(a) {
+                *cell = c;
+            }
+        }
+        let mut out = String::new();
+        for ((node, track), row) in rows {
+            out.push_str(&format!("node{node:<3} {track:<8} |"));
+            out.extend(row);
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "scale: full width = {}\n",
+            crate::util::stats::fmt_ns(t_end)
+        ));
+        out
+    }
+
+    /// Write spans as CSV (node,start_ns,end_ns,track,label).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "node,start_ns,end_ns,track,label")?;
+        for s in &self.spans {
+            writeln!(f, "{},{},{},{},{}", s.node, s.start, s.end, s.track, s.label)?;
+        }
+        Ok(())
+    }
+}
+
+/// Write a generic CSV table.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+/// Markdown-ish table printer shared by the bench harnesses.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        println!("| {} |", r.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.inc("x");
+        c.add("x", 2.0);
+        c.add("y", 0.5);
+        assert_eq!(c.get("x"), 3.0);
+        assert_eq!(c.get("y"), 0.5);
+        assert_eq!(c.get("absent"), 0.0);
+    }
+
+    #[test]
+    fn gantt_renders_spans() {
+        let mut t = Timeline::new();
+        t.record(0, 0, 50, "compute", "fwd");
+        t.record(0, 50, 100, "comm", "grad");
+        let g = t.ascii_gantt(20);
+        assert!(g.contains("node0"));
+        assert!(g.contains("compute"));
+        assert!(g.contains("ffffffffff"));
+        assert!(g.contains("gggggggggg"));
+    }
+
+    #[test]
+    fn csv_output(){
+        let dir = std::env::temp_dir().join("mlsl_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut t = Timeline::new();
+        t.record(1, 10, 20, "comm", "x");
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("1,10,20,comm,x"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Node-group hybrid parallelism — the paper's `Distribution` object.
+//!
+//! "nodes within a group employ model parallelism and data parallelism is
+//! used across groups. One could consider data and model parallelism as
+//! two extreme design points of hybrid parallelism with node group size
+//! being one and all nodes respectively."
+
+use crate::Rank;
+
+/// Partition of `world` ranks into `num_groups() = world/group_size`
+/// model-parallel groups; data parallelism runs across groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Distribution {
+    world: usize,
+    group_size: usize,
+}
+
+impl Distribution {
+    /// `group_size` must divide `world`.
+    pub fn new(world: usize, group_size: usize) -> Self {
+        assert!(world >= 1);
+        assert!(group_size >= 1 && group_size <= world, "group {group_size} vs world {world}");
+        assert_eq!(world % group_size, 0, "group size must divide world");
+        Self { world, group_size }
+    }
+
+    /// Pure data parallelism (groups of one).
+    pub fn data_parallel(world: usize) -> Self {
+        Self::new(world, 1)
+    }
+
+    /// Pure model parallelism (one group of all).
+    pub fn model_parallel(world: usize) -> Self {
+        Self::new(world, world)
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.world / self.group_size
+    }
+
+    pub fn is_pure_data(&self) -> bool {
+        self.group_size == 1
+    }
+
+    pub fn is_pure_model(&self) -> bool {
+        self.group_size == self.world
+    }
+
+    /// Group index of `rank` (ranks are grouped contiguously).
+    pub fn group_of(&self, rank: Rank) -> usize {
+        assert!(rank < self.world);
+        rank / self.group_size
+    }
+
+    /// Position of `rank` inside its group (the model-parallel rank).
+    pub fn rank_in_group(&self, rank: Rank) -> usize {
+        rank % self.group_size
+    }
+
+    /// Members of `rank`'s model-parallel group, in group order.
+    pub fn group_members(&self, rank: Rank) -> Vec<Rank> {
+        let g = self.group_of(rank);
+        (0..self.group_size).map(|i| g * self.group_size + i).collect()
+    }
+
+    /// The data-parallel communicator of `rank`: same in-group position
+    /// across all groups (this is who the weight-shard allreduce spans).
+    pub fn data_peers(&self, rank: Rank) -> Vec<Rank> {
+        let pos = self.rank_in_group(rank);
+        (0..self.num_groups()).map(|g| g * self.group_size + pos).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extremes() {
+        let d = Distribution::data_parallel(8);
+        assert!(d.is_pure_data());
+        assert_eq!(d.num_groups(), 8);
+        assert_eq!(d.group_members(5), vec![5]);
+        assert_eq!(d.data_peers(5), (0..8).collect::<Vec<_>>());
+
+        let m = Distribution::model_parallel(8);
+        assert!(m.is_pure_model());
+        assert_eq!(m.num_groups(), 1);
+        assert_eq!(m.group_members(3), (0..8).collect::<Vec<_>>());
+        assert_eq!(m.data_peers(3), vec![3]);
+    }
+
+    #[test]
+    fn hybrid_grouping() {
+        let h = Distribution::new(8, 4);
+        assert_eq!(h.num_groups(), 2);
+        assert_eq!(h.group_of(0), 0);
+        assert_eq!(h.group_of(5), 1);
+        assert_eq!(h.group_members(5), vec![4, 5, 6, 7]);
+        assert_eq!(h.rank_in_group(5), 1);
+        assert_eq!(h.data_peers(5), vec![1, 5]);
+    }
+
+    #[test]
+    fn peers_partition_world() {
+        let h = Distribution::new(12, 3);
+        // Every rank appears in exactly one group and one data-peer set
+        // per position.
+        let mut seen = vec![0; 12];
+        for g in 0..h.num_groups() {
+            for r in h.group_members(g * 3) {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|c| *c == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn rejects_nondividing_group() {
+        Distribution::new(10, 4);
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's two public interfaces (Fig. 1 of the paper):
+//!
+//! * the **Collectives API** — MPI-like, exposed here as
+//!   [`Communicator`]: non-blocking allreduce/…/barrier over a rank's
+//!   comm core, with priorities and wire dtypes;
+//! * the **DL Layer API** — [`Session`] / [`Operation`] /
+//!   [`Distribution`]: a framework registers its layers once and the
+//!   library *derives* the communication each layer needs for the chosen
+//!   parallelism (data / model / hybrid via node groups), "reducing the
+//!   hassle of supporting these different scenarios within each framework
+//!   explicitly".
+
+pub mod communicator;
+pub mod distribution;
+pub mod session;
+
+pub use communicator::Communicator;
+pub use distribution::Distribution;
+pub use session::{CommRequirement, CommScope, OpId, Operation, Phase, Session};

@@ -1,0 +1,281 @@
+//! The DL Layer API: `Session` + `Operation`.
+//!
+//! A framework registers each layer ONCE (name, weights, activations,
+//! forward position). The session then answers, per layer: which
+//! collectives must run, over which communicator scope, in which phase,
+//! at what priority, and how large — for whatever [`Distribution`] was
+//! chosen. The engine (simulated compute) and the trainer (real PJRT
+//! compute) both consume exactly this interface, which is the paper's
+//! point: one library, every framework.
+
+use crate::collectives::program::CollectiveKind;
+use crate::collectives::{PriorityPolicy, WireDtype};
+use crate::models::{LayerKind, ModelDesc};
+use crate::Priority;
+
+use super::distribution::Distribution;
+
+pub type OpId = usize;
+
+/// A registered layer (the paper's `Operation` object).
+#[derive(Debug, Clone)]
+pub struct Operation {
+    pub id: OpId,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Learnable elements (f32) — the gradient allreduce size.
+    pub weight_elems: usize,
+    /// Output activation elements per sample.
+    pub act_elems: usize,
+    /// Position in the forward pass (0 = first). Drives priority.
+    pub fwd_order: usize,
+}
+
+/// Which ranks a required collective spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommScope {
+    /// The data-parallel communicator (across groups; whole world when
+    /// group size is 1).
+    AcrossGroups,
+    /// The model-parallel communicator (within this rank's group).
+    WithinGroup,
+}
+
+/// When the collective is issued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// After the layer's forward compute (activation exchange).
+    Forward,
+    /// After the layer's backward compute (gradient exchange).
+    Backward,
+}
+
+/// One derived communication requirement.
+#[derive(Debug, Clone)]
+pub struct CommRequirement {
+    pub op_id: OpId,
+    pub kind: CollectiveKind,
+    pub scope: CommScope,
+    pub phase: Phase,
+    /// Elements THIS rank contributes/receives.
+    pub elems: usize,
+    pub priority: Priority,
+    /// Blocking requirements stall the pipeline (activation exchanges);
+    /// non-blocking ones overlap (gradient allreduces).
+    pub blocking: bool,
+}
+
+/// The session: distribution + registered operations + runtime knobs.
+#[derive(Debug, Clone)]
+pub struct Session {
+    dist: Distribution,
+    ops: Vec<Operation>,
+    pub policy: PriorityPolicy,
+    pub wire: WireDtype,
+}
+
+impl Session {
+    pub fn new(dist: Distribution) -> Self {
+        Self { dist, ops: Vec::new(), policy: PriorityPolicy::ByLayer, wire: WireDtype::F32 }
+    }
+
+    pub fn with_policy(mut self, policy: PriorityPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_wire(mut self, wire: WireDtype) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    pub fn distribution(&self) -> Distribution {
+        self.dist
+    }
+
+    /// Register a layer; returns its id. Layers must be added in forward
+    /// order (enforced).
+    pub fn add_operation(
+        &mut self,
+        name: &str,
+        kind: LayerKind,
+        weight_elems: usize,
+        act_elems: usize,
+    ) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(Operation {
+            id,
+            name: name.to_string(),
+            kind,
+            weight_elems,
+            act_elems,
+            fwd_order: id,
+        });
+        id
+    }
+
+    /// Register every layer of a model descriptor.
+    pub fn add_model(&mut self, model: &ModelDesc) -> Vec<OpId> {
+        model
+            .layers
+            .iter()
+            .map(|l| self.add_operation(&l.name, l.kind, l.weight_elems, l.out_act_elems))
+            .collect()
+    }
+
+    pub fn operations(&self) -> &[Operation] {
+        &self.ops
+    }
+
+    pub fn op(&self, id: OpId) -> &Operation {
+        &self.ops[id]
+    }
+
+    /// Re-derive the distribution from the analytic model: the best
+    /// uniform node-group size for `model` on this world and fabric (the
+    /// paper's "choosing the right work partitioning strategy").
+    pub fn auto_group(
+        &mut self,
+        model: &crate::models::ModelDesc,
+        topo: &crate::fabric::topology::Topology,
+        node: &crate::fabric::topology::NodeSpec,
+        batch: usize,
+    ) -> usize {
+        let (g, _) = crate::analytic::best_group_size(model, topo, node, self.dist.world(), batch);
+        self.dist = Distribution::new(self.dist.world(), g);
+        g
+    }
+
+    /// Gradient priority for an operation under the session policy.
+    pub fn gradient_priority(&self, id: OpId) -> Priority {
+        self.policy.assign(self.ops[id].fwd_order, self.ops.len())
+    }
+
+    /// Derive the communication requirements of operation `id` for one
+    /// iteration at `batch` samples per rank.
+    pub fn required_comms(&self, id: OpId, batch: usize) -> Vec<CommRequirement> {
+        let op = &self.ops[id];
+        let g = self.dist.group_size();
+        let groups = self.dist.num_groups();
+        let mut out = Vec::new();
+
+        // Weight-gradient allreduce across the data-parallel communicator.
+        // Under hybrid, each rank owns a 1/g shard of the layer's weights.
+        if op.weight_elems > 0 && groups > 1 {
+            out.push(CommRequirement {
+                op_id: id,
+                kind: CollectiveKind::Allreduce,
+                scope: CommScope::AcrossGroups,
+                phase: Phase::Backward,
+                elems: op.weight_elems.div_ceil(g),
+                priority: self.gradient_priority(id),
+                blocking: false,
+            });
+        }
+
+        // Model parallelism: activations allgathered within the group in
+        // the forward pass, activation-gradients exchanged backward.
+        // Prioritized over everything ("activation communication must be
+        // prioritized as they may block the next layer's compute").
+        if g > 1 && op.act_elems > 0 {
+            // The group jointly processes g·batch samples; each member
+            // contributes its `batch` worth and gathers the rest.
+            for phase in [Phase::Forward, Phase::Backward] {
+                out.push(CommRequirement {
+                    op_id: id,
+                    kind: CollectiveKind::Allgather,
+                    scope: CommScope::WithinGroup,
+                    phase,
+                    elems: op.act_elems * batch * g,
+                    priority: 0,
+                    blocking: true,
+                });
+            }
+        }
+        out
+    }
+
+    /// All requirements for a full iteration, in issue order: forward
+    /// requirements by layer order, then backward in reverse layer order.
+    pub fn iteration_comms(&self, batch: usize) -> Vec<CommRequirement> {
+        let mut fwd = Vec::new();
+        let mut bwd = Vec::new();
+        for op in &self.ops {
+            for req in self.required_comms(op.id, batch) {
+                match req.phase {
+                    Phase::Forward => fwd.push(req),
+                    Phase::Backward => bwd.push(req),
+                }
+            }
+        }
+        bwd.reverse(); // backprop issues output-side first
+        fwd.into_iter().chain(bwd).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelDesc;
+
+    fn resnet_session(world: usize, group: usize) -> Session {
+        let mut s = Session::new(Distribution::new(world, group));
+        let m = ModelDesc::by_name("resnet50").unwrap();
+        s.add_model(&m);
+        s
+    }
+
+    #[test]
+    fn data_parallel_derives_one_allreduce_per_weighted_layer() {
+        let s = resnet_session(8, 1);
+        let m = ModelDesc::by_name("resnet50").unwrap();
+        let weighted = m.weighted_layers().count();
+        let reqs = s.iteration_comms(32);
+        assert_eq!(reqs.len(), weighted);
+        assert!(reqs.iter().all(|r| r.kind == CollectiveKind::Allreduce
+            && r.scope == CommScope::AcrossGroups
+            && !r.blocking));
+    }
+
+    #[test]
+    fn backward_comms_issue_in_reverse_layer_order() {
+        let s = resnet_session(8, 1);
+        let reqs = s.iteration_comms(32);
+        // Issue order: LAST layer's gradient first (backprop order)...
+        assert!(s.op(reqs[0].op_id).fwd_order > s.op(reqs.last().unwrap().op_id).fwd_order);
+        // ...but the FIRST layer's gradient has the most urgent priority.
+        let first_req = reqs.iter().min_by_key(|r| s.op(r.op_id).fwd_order).unwrap();
+        assert!(reqs.iter().all(|r| first_req.priority <= r.priority));
+    }
+
+    #[test]
+    fn hybrid_adds_activation_exchanges_and_shards_weights() {
+        let s = resnet_session(8, 4);
+        let reqs = s.iteration_comms(32);
+        let ag: Vec<_> = reqs.iter().filter(|r| r.kind == CollectiveKind::Allgather).collect();
+        let ar: Vec<_> = reqs.iter().filter(|r| r.kind == CollectiveKind::Allreduce).collect();
+        assert!(!ag.is_empty());
+        assert!(ag.iter().all(|r| r.blocking && r.priority == 0 && r.scope == CommScope::WithinGroup));
+        // Weight shards are 1/4 of the full gradient.
+        let m = ModelDesc::by_name("resnet50").unwrap();
+        let (idx, l) = m.weighted_layers().next().unwrap();
+        let req = ar.iter().find(|r| r.op_id == idx).unwrap();
+        assert_eq!(req.elems, l.weight_elems.div_ceil(4));
+    }
+
+    #[test]
+    fn pure_model_parallel_has_no_gradient_allreduce() {
+        let s = resnet_session(8, 8);
+        let reqs = s.iteration_comms(32);
+        assert!(reqs.iter().all(|r| r.kind != CollectiveKind::Allreduce));
+    }
+
+    #[test]
+    fn fifo_policy_flattens_priorities() {
+        let mut s = resnet_session(8, 1);
+        s.policy = PriorityPolicy::None;
+        let reqs = s.iteration_comms(32);
+        let p0 = reqs[0].priority;
+        assert!(reqs.iter().all(|r| r.priority == p0));
+    }
+}

@@ -1,0 +1,41 @@
+//! AlexNet (Krizhevsky 2012) layer table, 227×227 input.
+//! The Das-et-al analysis paper's running example; 61M parameters,
+//! fc-dominated like VGG but with far less conv compute.
+
+use super::{conv, fc, pool, LayerDesc, ModelDesc};
+
+/// Grouped convolution (AlexNet's two-GPU legacy): each of `groups`
+/// filter groups sees only cin/groups input channels.
+fn conv_grouped(name: &str, k: usize, cin: usize, cout: usize, h: usize, w: usize, groups: usize) -> LayerDesc {
+    let mut l = conv(name, k, cin / groups, cout, h, w);
+    l.name = name.into();
+    l
+}
+
+pub fn alexnet() -> ModelDesc {
+    let mut l = Vec::new();
+    l.push(conv("conv1", 11, 3, 96, 55, 55));
+    l.push(pool("pool1", 96 * 27 * 27, (96 * 27 * 27) as f64));
+    l.push(conv_grouped("conv2", 5, 96, 256, 27, 27, 2));
+    l.push(pool("pool2", 256 * 13 * 13, (256 * 13 * 13) as f64));
+    l.push(conv("conv3", 3, 256, 384, 13, 13));
+    l.push(conv_grouped("conv4", 3, 384, 384, 13, 13, 2));
+    l.push(conv_grouped("conv5", 3, 384, 256, 13, 13, 2));
+    l.push(pool("pool5", 256 * 6 * 6, (256 * 6 * 6) as f64));
+    l.push(fc("fc6", 256 * 6 * 6, 4096));
+    l.push(fc("fc7", 4096, 4096));
+    l.push(fc("fc8", 4096, 1000));
+    ModelDesc { name: "alexnet".into(), layers: l, default_batch: 64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_matches_paper() {
+        let m = alexnet();
+        let p = m.total_weight_elems() as f64;
+        assert!((p - 61.0e6).abs() / 61.0e6 < 0.03, "{p}");
+    }
+}

@@ -1,0 +1,78 @@
+//! GoogLeNet (Inception v1, Szegedy et al. 2014) layer table, 224×224.
+//! 9 inception modules; ~7M parameters — many SMALL gradients, the
+//! opposite end of the spectrum from VGG (latency- rather than
+//! bandwidth-dominated communication).
+
+use super::{conv, fc, pool, LayerDesc, ModelDesc};
+
+/// Inception module: 1×1 + (1×1→3×3) + (1×1→5×5) + (pool→1×1 proj).
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    l: &mut Vec<LayerDesc>,
+    name: &str,
+    cin: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    cp: usize,
+    hw: usize,
+) -> usize {
+    l.push(conv(&format!("{name}.1x1"), 1, cin, c1, hw, hw));
+    l.push(conv(&format!("{name}.3x3r"), 1, cin, c3r, hw, hw));
+    l.push(conv(&format!("{name}.3x3"), 3, c3r, c3, hw, hw));
+    l.push(conv(&format!("{name}.5x5r"), 1, cin, c5r, hw, hw));
+    l.push(conv(&format!("{name}.5x5"), 5, c5r, c5, hw, hw));
+    l.push(conv(&format!("{name}.pproj"), 1, cin, cp, hw, hw));
+    c1 + c3 + c5 + cp // concatenated output channels
+}
+
+pub fn googlenet() -> ModelDesc {
+    let mut l = Vec::new();
+    l.push(conv("conv1", 7, 3, 64, 112, 112));
+    l.push(pool("pool1", 64 * 56 * 56, (64 * 56 * 56) as f64));
+    l.push(conv("conv2r", 1, 64, 64, 56, 56));
+    l.push(conv("conv2", 3, 64, 192, 56, 56));
+    l.push(pool("pool2", 192 * 28 * 28, (192 * 28 * 28) as f64));
+
+    // (c1, c3r, c3, c5r, c5, cp) per module — the published table.
+    let mut cin = 192;
+    cin = inception(&mut l, "inc3a", cin, 64, 96, 128, 16, 32, 32, 28);
+    cin = inception(&mut l, "inc3b", cin, 128, 128, 192, 32, 96, 64, 28);
+    l.push(pool("pool3", cin * 14 * 14, (cin * 14 * 14) as f64));
+    cin = inception(&mut l, "inc4a", cin, 192, 96, 208, 16, 48, 64, 14);
+    cin = inception(&mut l, "inc4b", cin, 160, 112, 224, 24, 64, 64, 14);
+    cin = inception(&mut l, "inc4c", cin, 128, 128, 256, 24, 64, 64, 14);
+    cin = inception(&mut l, "inc4d", cin, 112, 144, 288, 32, 64, 64, 14);
+    cin = inception(&mut l, "inc4e", cin, 256, 160, 320, 32, 128, 128, 14);
+    l.push(pool("pool4", cin * 7 * 7, (cin * 7 * 7) as f64));
+    cin = inception(&mut l, "inc5a", cin, 256, 160, 320, 32, 128, 128, 7);
+    cin = inception(&mut l, "inc5b", cin, 384, 192, 384, 48, 128, 128, 7);
+    l.push(pool("avgpool", cin, (cin * 49) as f64));
+    l.push(fc("fc1000", cin, 1000));
+    ModelDesc { name: "googlenet".into(), layers: l, default_batch: 32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_matches_paper() {
+        let m = googlenet();
+        let p = m.total_weight_elems() as f64;
+        assert!((p - 7.0e6).abs() / 7.0e6 < 0.03, "{p}");
+    }
+
+    #[test]
+    fn gradients_are_many_and_small() {
+        let m = googlenet();
+        let weighted = m.weighted_layers().count();
+        assert!(weighted > 55, "{weighted}");
+        // Median gradient well under 1 MB.
+        let mut sizes: Vec<u64> = m.weighted_layers().map(|(_, l)| l.weight_bytes()).collect();
+        sizes.sort();
+        assert!(sizes[sizes.len() / 2] < 1_000_000);
+    }
+}

@@ -1,0 +1,239 @@
+//! Model zoo: per-layer compute/weight/activation tables.
+//!
+//! The engine and the analytic model consume these descriptors; they are
+//! what stands in for the paper's Caffe prototxts. Weight counts and FLOP
+//! totals are computed exactly from layer shapes and cross-checked against
+//! the publicly known totals in tests (ResNet-50 ≈ 25.5M params, VGG-16 ≈
+//! 138M, GoogLeNet ≈ 7M, AlexNet ≈ 61M).
+//!
+//! Conventions:
+//! * FLOPs are multiply+add = 2 ops; per *sample* (multiply by batch).
+//! * Backward ≈ 2× forward for weighted layers (dgrad + wgrad GEMMs).
+//! * `fwd_order` of a layer is its index; gradient priority = fwd_order
+//!   under `PriorityPolicy::ByLayer`.
+
+pub mod alexnet;
+pub mod googlenet;
+pub mod resnet50;
+pub mod transformer;
+pub mod vgg16;
+
+/// Layer category (drives parallelism choice in the DL Layer API).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution: weights small vs activations — data parallel friendly.
+    Conv,
+    /// Fully connected: weights huge vs activations — model parallel friendly.
+    Fc,
+    /// Embedding lookup table.
+    Embed,
+    /// Attention projections (transformer QKVO).
+    Attn,
+    /// Normalization/bias-scale (tiny weights).
+    Norm,
+    /// Weightless (pooling, activation, softmax).
+    Weightless,
+}
+
+/// One layer's accounting.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Learnable parameter elements (f32).
+    pub weight_elems: usize,
+    /// Forward FLOPs per sample.
+    pub fwd_flops: f64,
+    /// Output activation elements per sample.
+    pub out_act_elems: usize,
+}
+
+impl LayerDesc {
+    pub fn weight_bytes(&self) -> u64 {
+        4 * self.weight_elems as u64
+    }
+
+    /// Backward FLOPs per sample (dgrad + wgrad ≈ 2× fwd for weighted
+    /// layers; ≈ 1× for weightless).
+    pub fn bwd_flops(&self) -> f64 {
+        if self.weight_elems > 0 {
+            2.0 * self.fwd_flops
+        } else {
+            self.fwd_flops
+        }
+    }
+
+    pub fn has_weights(&self) -> bool {
+        self.weight_elems > 0
+    }
+}
+
+/// A model = ordered layer list (forward order).
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    /// Reference per-node mini-batch used by the paper-scale experiments.
+    pub default_batch: usize,
+}
+
+impl ModelDesc {
+    pub fn by_name(name: &str) -> Option<ModelDesc> {
+        match name {
+            "resnet50" => Some(resnet50::resnet50()),
+            "vgg16" => Some(vgg16::vgg16()),
+            "googlenet" => Some(googlenet::googlenet()),
+            "alexnet" => Some(alexnet::alexnet()),
+            "transformer" => Some(transformer::transformer_small()),
+            _ => None,
+        }
+    }
+
+    pub fn total_weight_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        4 * self.total_weight_elems() as u64
+    }
+
+    pub fn fwd_flops_per_sample(&self) -> f64 {
+        self.layers.iter().map(|l| l.fwd_flops).sum()
+    }
+
+    pub fn bwd_flops_per_sample(&self) -> f64 {
+        self.layers.iter().map(|l| l.bwd_flops()).sum()
+    }
+
+    pub fn step_flops(&self, batch: usize) -> f64 {
+        (self.fwd_flops_per_sample() + self.bwd_flops_per_sample()) * batch as f64
+    }
+
+    /// Layers that produce weight gradients (the allreduce set).
+    pub fn weighted_layers(&self) -> impl Iterator<Item = (usize, &LayerDesc)> {
+        self.layers.iter().enumerate().filter(|(_, l)| l.has_weights())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder helpers shared by the per-model tables
+// ---------------------------------------------------------------------------
+
+/// Conv layer: k×k kernel, `cin`→`cout` channels, output `h`×`w`.
+pub(crate) fn conv(name: &str, k: usize, cin: usize, cout: usize, h: usize, w: usize) -> LayerDesc {
+    let weight_elems = k * k * cin * cout + cout; // + bias
+    let fwd_flops = 2.0 * (k * k * cin * cout * h * w) as f64;
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        weight_elems,
+        fwd_flops,
+        out_act_elems: cout * h * w,
+    }
+}
+
+/// Fully-connected layer `cin`→`cout`.
+pub(crate) fn fc(name: &str, cin: usize, cout: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Fc,
+        weight_elems: cin * cout + cout,
+        fwd_flops: 2.0 * (cin * cout) as f64,
+        out_act_elems: cout,
+    }
+}
+
+/// Weightless layer (pool/relu/softmax) emitting `out_elems` activations.
+pub(crate) fn pool(name: &str, out_elems: usize, flops: f64) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Weightless,
+        weight_elems: 0,
+        fwd_flops: flops,
+        out_act_elems: out_elems,
+    }
+}
+
+/// BatchNorm over `c` channels at `h`×`w`.
+pub(crate) fn bn(name: &str, c: usize, h: usize, w: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Norm,
+        weight_elems: 2 * c,
+        fwd_flops: 2.0 * (c * h * w) as f64,
+        out_act_elems: c * h * w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_resolve() {
+        for m in ["resnet50", "vgg16", "googlenet", "alexnet", "transformer"] {
+            let model = ModelDesc::by_name(m).unwrap();
+            assert!(!model.layers.is_empty(), "{m}");
+            assert!(model.total_weight_elems() > 0, "{m}");
+            assert!(model.fwd_flops_per_sample() > 0.0, "{m}");
+        }
+        assert!(ModelDesc::by_name("resnet152").is_none());
+    }
+
+    #[test]
+    fn known_parameter_totals() {
+        // Published totals (±3%: bias/bn bookkeeping differences).
+        let checks = [
+            ("resnet50", 25.5e6),
+            ("vgg16", 138.3e6),
+            ("googlenet", 7.0e6),
+            ("alexnet", 61.0e6),
+        ];
+        for (name, want) in checks {
+            let m = ModelDesc::by_name(name).unwrap();
+            let got = m.total_weight_elems() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.03, "{name}: {got:.3e} vs published {want:.3e}");
+        }
+    }
+
+    #[test]
+    fn known_flop_totals() {
+        // Forward GFLOPs per sample (2*MACs), generous tolerance.
+        let checks = [
+            ("resnet50", 7.7e9),
+            ("vgg16", 31.0e9),
+            ("googlenet", 3.0e9),
+            ("alexnet", 1.4e9),
+        ];
+        for (name, want) in checks {
+            let m = ModelDesc::by_name(name).unwrap();
+            let got = m.fwd_flops_per_sample();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.15, "{name}: {got:.3e} vs expected {want:.3e}");
+        }
+    }
+
+    #[test]
+    fn vgg_gradient_distribution_is_fc_heavy() {
+        // The paper's prioritization result is largest on VGG: its last
+        // layers (fc) hold most of the weight bytes.
+        let m = ModelDesc::by_name("vgg16").unwrap();
+        let total = m.total_weight_bytes() as f64;
+        let fc_bytes: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Fc)
+            .map(|l| l.weight_bytes())
+            .sum();
+        assert!(fc_bytes as f64 / total > 0.85);
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd_for_weighted() {
+        let l = fc("x", 100, 10);
+        assert_eq!(l.bwd_flops(), 2.0 * l.fwd_flops);
+        let p = pool("p", 10, 100.0);
+        assert_eq!(p.bwd_flops(), p.fwd_flops);
+    }
+}

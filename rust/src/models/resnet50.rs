@@ -1,0 +1,88 @@
+//! ResNet-50 layer table (He et al. 2015), ImageNet 224×224 input.
+//! Built programmatically from the bottleneck architecture: conv1 →
+//! [3,4,6,3] bottleneck stages → global pool → fc1000.
+
+use super::{bn, conv, fc, pool, LayerDesc, ModelDesc};
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand (+ BN each), with
+/// an optional 1×1 projection shortcut when the shape changes.
+fn bottleneck(
+    layers: &mut Vec<LayerDesc>,
+    stage: usize,
+    block: usize,
+    cin: usize,
+    cmid: usize,
+    cout: usize,
+    h: usize,
+    w: usize,
+    project: bool,
+) {
+    let tag = |s: &str| format!("res{stage}{}.{s}", (b'a' + block as u8) as char);
+    layers.push(conv(&tag("conv1"), 1, cin, cmid, h, w));
+    layers.push(bn(&tag("bn1"), cmid, h, w));
+    layers.push(conv(&tag("conv2"), 3, cmid, cmid, h, w));
+    layers.push(bn(&tag("bn2"), cmid, h, w));
+    layers.push(conv(&tag("conv3"), 1, cmid, cout, h, w));
+    layers.push(bn(&tag("bn3"), cout, h, w));
+    if project {
+        layers.push(conv(&tag("proj"), 1, cin, cout, h, w));
+        layers.push(bn(&tag("projbn"), cout, h, w));
+    }
+    layers.push(pool(&tag("relu"), cout * h * w, (cout * h * w) as f64));
+}
+
+pub fn resnet50() -> ModelDesc {
+    let mut layers = Vec::new();
+    // conv1: 7x7/2, 64ch, out 112x112.
+    layers.push(conv("conv1", 7, 3, 64, 112, 112));
+    layers.push(bn("bn1", 64, 112, 112));
+    layers.push(pool("pool1", 64 * 56 * 56, (64 * 56 * 56) as f64));
+
+    // (cmid, cout, blocks, spatial size of the stage's outputs)
+    let stages = [(64, 256, 3, 56), (128, 512, 4, 28), (256, 1024, 6, 14), (512, 2048, 3, 7)];
+    let mut cin = 64;
+    for (si, (cmid, cout, blocks, hw)) in stages.into_iter().enumerate() {
+        for b in 0..blocks {
+            bottleneck(&mut layers, si + 2, b, cin, cmid, cout, hw, hw, b == 0);
+            cin = cout;
+        }
+    }
+
+    layers.push(pool("avgpool", 2048, 2048.0 * 49.0));
+    layers.push(fc("fc1000", 2048, 1000));
+    ModelDesc { name: "resnet50".into(), layers, default_batch: 32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_matches_paper() {
+        let m = resnet50();
+        let p = m.total_weight_elems() as f64;
+        assert!((p - 25.5e6).abs() / 25.5e6 < 0.03, "{p}");
+    }
+
+    #[test]
+    fn layer_count_is_resnet_shaped() {
+        let m = resnet50();
+        let convs = m
+            .layers
+            .iter()
+            .filter(|l| l.kind == crate::models::LayerKind::Conv)
+            .count();
+        // 1 + 3*(3+4+6+3) + 4 projections = 53 convs.
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn first_weighted_layer_is_small() {
+        // The prioritization story: conv1's gradient (~37 KB) is tiny vs
+        // the 25 MB total — latency-bound on the wire.
+        let m = resnet50();
+        let first = m.weighted_layers().next().unwrap().1;
+        assert!(first.weight_bytes() < 40_000);
+        assert!(m.total_weight_bytes() > 100_000_000);
+    }
+}

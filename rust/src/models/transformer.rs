@@ -1,0 +1,118 @@
+//! Transformer LM layer table matching the AOT presets in
+//! `python/compile/presets.py` — so the simulated experiments and the
+//! REAL trainer agree on gradient sizes and priorities.
+
+use super::{LayerDesc, LayerKind, ModelDesc};
+
+/// Build the layer table for a decoder-only transformer.
+pub fn transformer(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    seq_len: usize,
+    batch: usize,
+) -> ModelDesc {
+    let d_ff = 4 * d_model;
+    let mut l = Vec::new();
+    let s = seq_len as f64;
+
+    l.push(LayerDesc {
+        name: "tok_emb".into(),
+        kind: LayerKind::Embed,
+        weight_elems: vocab * d_model,
+        fwd_flops: 0.0, // lookup
+        out_act_elems: seq_len * d_model,
+    });
+    l.push(LayerDesc {
+        name: "pos_emb".into(),
+        kind: LayerKind::Embed,
+        weight_elems: seq_len * d_model,
+        fwd_flops: (seq_len * d_model) as f64,
+        out_act_elems: seq_len * d_model,
+    });
+    for i in 0..n_layers {
+        // QKVO projections: 4 × d², per token.
+        l.push(LayerDesc {
+            name: format!("blk{i}.attn"),
+            kind: LayerKind::Attn,
+            weight_elems: 4 * d_model * d_model,
+            fwd_flops: s * 2.0 * (4 * d_model * d_model) as f64
+                + 2.0 * s * s * d_model as f64 * 2.0, // + QK^T and PV
+            out_act_elems: seq_len * d_model,
+        });
+        // MLP: d→4d→d.
+        l.push(LayerDesc {
+            name: format!("blk{i}.mlp"),
+            kind: LayerKind::Fc,
+            weight_elems: d_model * d_ff + d_ff + d_ff * d_model + d_model,
+            fwd_flops: s * 2.0 * (2 * d_model * d_ff) as f64,
+            out_act_elems: seq_len * d_model,
+        });
+        // The two LayerNorms.
+        l.push(LayerDesc {
+            name: format!("blk{i}.ln"),
+            kind: LayerKind::Norm,
+            weight_elems: 4 * d_model,
+            fwd_flops: s * (8 * d_model) as f64,
+            out_act_elems: seq_len * d_model,
+        });
+    }
+    l.push(LayerDesc {
+        name: "lnf".into(),
+        kind: LayerKind::Norm,
+        weight_elems: 2 * d_model,
+        fwd_flops: s * (4 * d_model) as f64,
+        out_act_elems: seq_len * d_model,
+    });
+    l.push(LayerDesc {
+        name: "w_out".into(),
+        kind: LayerKind::Fc,
+        weight_elems: d_model * vocab,
+        fwd_flops: s * 2.0 * (d_model * vocab) as f64,
+        out_act_elems: seq_len * vocab,
+    });
+    ModelDesc { name: name.into(), layers: l, default_batch: batch }
+}
+
+/// The `small` AOT preset (what `train_e2e` actually trains).
+pub fn transformer_small() -> ModelDesc {
+    transformer("transformer", 4096, 256, 4, 128, 8)
+}
+
+/// The paper-scale `base100m` preset (compile-path validated).
+pub fn transformer_100m() -> ModelDesc {
+    transformer("transformer100m", 32768, 768, 12, 256, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_matches_python_preset_param_count() {
+        // python/compile/presets.py::n_params for `small`:
+        // v*d + s*d + L*(12d² + 4d + d_ff + d) + 2d + d*v
+        let m = transformer_small();
+        let (v, d, lyr, s) = (4096usize, 256usize, 4usize, 128usize);
+        let d_ff = 4 * d;
+        let per_block = 4 * d * d + d * d_ff + d_ff + d_ff * d + d + 4 * d;
+        let want = v * d + s * d + lyr * per_block + 2 * d + d * v;
+        assert_eq!(m.total_weight_elems(), want);
+    }
+
+    #[test]
+    fn hundred_m_is_actually_100m() {
+        let m = transformer_100m();
+        let p = m.total_weight_elems() as f64;
+        assert!((90e6..140e6).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn first_gradient_is_the_embedding() {
+        let m = transformer_small();
+        let (idx, first) = m.weighted_layers().next().unwrap();
+        assert_eq!(idx, 0);
+        assert_eq!(first.name, "tok_emb");
+    }
+}

@@ -1,0 +1,57 @@
+//! VGG-16 layer table (Simonyan & Zisserman 2014), 224×224 input.
+//! 13 convs + 3 fcs; 138M parameters, ~90% of them in the fc layers —
+//! the model where the paper's prioritization wins the most (the huge
+//! fc6/fc7 gradients are issued FIRST in backprop and hog the wire).
+
+use super::{conv, fc, pool, ModelDesc};
+
+pub fn vgg16() -> ModelDesc {
+    let mut l = Vec::new();
+    // Block 1: 2×64 @224.
+    l.push(conv("conv1_1", 3, 3, 64, 224, 224));
+    l.push(conv("conv1_2", 3, 64, 64, 224, 224));
+    l.push(pool("pool1", 64 * 112 * 112, (64 * 112 * 112) as f64));
+    // Block 2: 2×128 @112.
+    l.push(conv("conv2_1", 3, 64, 128, 112, 112));
+    l.push(conv("conv2_2", 3, 128, 128, 112, 112));
+    l.push(pool("pool2", 128 * 56 * 56, (128 * 56 * 56) as f64));
+    // Block 3: 3×256 @56.
+    l.push(conv("conv3_1", 3, 128, 256, 56, 56));
+    l.push(conv("conv3_2", 3, 256, 256, 56, 56));
+    l.push(conv("conv3_3", 3, 256, 256, 56, 56));
+    l.push(pool("pool3", 256 * 28 * 28, (256 * 28 * 28) as f64));
+    // Block 4: 3×512 @28.
+    l.push(conv("conv4_1", 3, 256, 512, 28, 28));
+    l.push(conv("conv4_2", 3, 512, 512, 28, 28));
+    l.push(conv("conv4_3", 3, 512, 512, 28, 28));
+    l.push(pool("pool4", 512 * 14 * 14, (512 * 14 * 14) as f64));
+    // Block 5: 3×512 @14.
+    l.push(conv("conv5_1", 3, 512, 512, 14, 14));
+    l.push(conv("conv5_2", 3, 512, 512, 14, 14));
+    l.push(conv("conv5_3", 3, 512, 512, 14, 14));
+    l.push(pool("pool5", 512 * 7 * 7, (512 * 7 * 7) as f64));
+    // Classifier.
+    l.push(fc("fc6", 512 * 7 * 7, 4096));
+    l.push(fc("fc7", 4096, 4096));
+    l.push(fc("fc8", 4096, 1000));
+    ModelDesc { name: "vgg16".into(), layers: l, default_batch: 32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_count_matches_paper() {
+        let m = vgg16();
+        let p = m.total_weight_elems() as f64;
+        assert!((p - 138.3e6).abs() / 138.3e6 < 0.02, "{p}");
+    }
+
+    #[test]
+    fn fc6_is_the_whale() {
+        let m = vgg16();
+        let fc6 = m.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert!(fc6.weight_elems > 100_000_000);
+    }
+}

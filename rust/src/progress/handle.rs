@@ -1,0 +1,33 @@
+//! Non-blocking completion handles for submitted collectives.
+
+use std::sync::mpsc::{Receiver, TryRecvError};
+
+/// Completion handle: redeem for the reduced buffer.
+pub struct Handle {
+    pub(crate) rx: Receiver<Vec<f32>>,
+    pub(crate) coll_id: u64,
+}
+
+impl Handle {
+    /// Block until the collective completes; returns the result buffer.
+    pub fn wait(self) -> Vec<f32> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| panic!("comm core died before op {} completed", self.coll_id))
+    }
+
+    /// Non-blocking poll; `Some(buf)` exactly once when complete.
+    pub fn try_wait(&mut self) -> Option<Vec<f32>> {
+        match self.rx.try_recv() {
+            Ok(buf) => Some(buf),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                panic!("comm core died before op {} completed", self.coll_id)
+            }
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.coll_id
+    }
+}

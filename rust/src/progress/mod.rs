@@ -1,0 +1,17 @@
+//! The asynchronous progress engine — MLSL's "dedicating one or more
+//! cores for driving the network".
+//!
+//! Each rank spawns a [`CommCore`]: a dedicated thread owning the rank's
+//! fabric endpoint. The main (compute) thread submits non-blocking
+//! collective operations and gets a [`Handle`]; the comm core interleaves
+//! the chunk programs of ALL in-flight operations, always advancing the
+//! highest-priority one that can make progress — step-granular
+//! **preemption**: an urgent first-layer gradient allreduce submitted
+//! while a bulk later-layer exchange is in flight overtakes it on the
+//! wire, exactly the paper's message-prioritization mechanism.
+
+pub mod engine;
+pub mod handle;
+
+pub use engine::{CommCore, OpSubmit};
+pub use handle::Handle;

@@ -1,0 +1,202 @@
+//! AOT manifest loading (`artifacts/<preset>/manifest.json`), emitted by
+//! `python/compile/aot.py`. The manifest fixes the parameter ORDER — the
+//! contract between the JAX lowering and the Rust trainer (and the source
+//! of gradient allreduce priorities).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's spec.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// Model layer index (0 = embeddings).
+    pub layer: usize,
+    /// Position in the forward pass == allreduce priority class.
+    pub fwd_order: usize,
+}
+
+/// Input/output name lists of one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactIo {
+    pub file: PathBuf,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_param_elements: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub params: Vec<ParamSpec>,
+    pub grad_step: ArtifactIo,
+    pub apply_update: ArtifactIo,
+    pub train_step: Option<ArtifactIo>,
+    pub eval_loss: ArtifactIo,
+    pub tokens_shape: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/<preset>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+
+        let params = j
+            .at(&["params"])
+            .as_arr()
+            .context("params array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.at(&["name"]).as_str().context("param name")?.to_string(),
+                    shape: p
+                        .at(&["shape"])
+                        .as_arr()
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    size: p.at(&["size"]).as_usize().context("param size")?,
+                    layer: p.at(&["layer"]).as_usize().context("param layer")?,
+                    fwd_order: p.at(&["fwd_order"]).as_usize().context("fwd_order")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let io = |key: &str| -> Result<ArtifactIo> {
+            let a = j.at(&["artifacts", key]);
+            Ok(ArtifactIo {
+                file: dir.join(a.at(&["file"]).as_str().context("artifact file")?),
+                inputs: a
+                    .at(&["inputs"])
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect(),
+                outputs: a
+                    .at(&["outputs"])
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect(),
+            })
+        };
+
+        Ok(Manifest {
+            preset: j.at(&["preset"]).as_str().context("preset")?.to_string(),
+            vocab: j.at(&["model", "vocab"]).as_usize().context("vocab")?,
+            d_model: j.at(&["model", "d_model"]).as_usize().context("d_model")?,
+            n_layers: j.at(&["model", "n_layers"]).as_usize().context("n_layers")?,
+            seq_len: j.at(&["model", "seq_len"]).as_usize().context("seq_len")?,
+            batch: j.at(&["model", "batch"]).as_usize().context("batch")?,
+            n_param_elements: j
+                .at(&["model", "n_param_elements"])
+                .as_usize()
+                .context("n_param_elements")?,
+            lr: j.at(&["hparams", "lr"]).as_f64().context("lr")?,
+            momentum: j.at(&["hparams", "momentum"]).as_f64().context("momentum")?,
+            weight_decay: j
+                .at(&["hparams", "weight_decay"])
+                .as_f64()
+                .context("weight_decay")?,
+            params,
+            grad_step: io("grad_step")?,
+            apply_update: io("apply_update")?,
+            train_step: if j.at(&["artifacts", "train_step"]).is_null() {
+                None
+            } else {
+                Some(io("train_step")?)
+            },
+            eval_loss: io("eval_loss")?,
+            tokens_shape: j
+                .at(&["tokens_shape"])
+                .as_arr()
+                .context("tokens_shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Consistency checks (sizes, orders, files present).
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.size).sum();
+        if total != self.n_param_elements {
+            return Err(anyhow!("param sizes sum {total} != {}", self.n_param_elements));
+        }
+        for (i, p) in self.params.iter().enumerate() {
+            if p.fwd_order != i {
+                return Err(anyhow!("param {i} fwd_order {} out of order", p.fwd_order));
+            }
+            let prod: usize = p.shape.iter().product();
+            if prod.max(1) != p.size.max(1) {
+                return Err(anyhow!("param {} shape/size mismatch", p.name));
+            }
+        }
+        for io in [&self.grad_step, &self.apply_update, &self.eval_loss] {
+            if !io.file.exists() {
+                return Err(anyhow!("missing artifact {}", io.file.display()));
+            }
+        }
+        // grad_step outputs: loss + grad per param, in order.
+        if self.grad_step.outputs.len() != self.params.len() + 1 {
+            return Err(anyhow!("grad_step output arity"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir(preset: &str) -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(preset);
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_tiny_manifest_if_built() {
+        let Some(dir) = artifacts_dir("tiny") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.params.last().unwrap().name, "w_out");
+        m.validate().unwrap();
+        // Priorities: fwd_order strictly increasing == index.
+        for (i, p) in m.params.iter().enumerate() {
+            assert_eq!(p.fwd_order, i);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        let dir = std::env::temp_dir().join("mlsl_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

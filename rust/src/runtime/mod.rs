@@ -1,0 +1,169 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the ONLY place the stack touches XLA at runtime; Python is
+//! never on this path. Pattern (see /opt/xla-example/load_hlo):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. The jax side lowers with `return_tuple=True`, so every
+//! executable returns one tuple literal that we decompose.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactIo, Manifest, ParamSpec};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Input tensor for an executable (f32 or i32, row-major).
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl Input {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        Input::F32 { data, shape: shape.iter().map(|d| *d as i64).collect() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        Input::I32 { data, shape: shape.iter().map(|d| *d as i64).collect() }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+            Input::I32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+        })
+    }
+}
+
+/// One output tensor, already copied to host f32.
+pub type OutputF32 = Vec<f32>;
+
+/// The PJRT client wrapper.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend on this image).
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path must be utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns every tuple element as f32
+    /// (scalars come back as 1-element vecs; integer outputs are
+    /// converted).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<OutputF32>> {
+        let literals = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("output {i} of {} to f32", self.name))
+            })
+            .collect()
+    }
+
+    /// Execute keeping outputs on device (hot path: avoids host copies of
+    /// parameters between steps). Returns device buffers in tuple order.
+    pub fn run_buffers(&self, inputs: &[Input]) -> Result<Vec<xla::PjRtBuffer>> {
+        let literals = inputs
+            .iter()
+            .map(|i| i.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        Ok(result.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// HLO text for f(x, y) = (x + y,) over f32[4]. Hand-written, minimal.
+    const ADD_HLO: &str = r#"
+HloModule add4, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT out = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    fn write_tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mlsl_runtime_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_and_runs_hand_written_hlo() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+        let path = write_tmp("add4.hlo.txt", ADD_HLO);
+        let exe = rt.load_hlo(&path).unwrap();
+        let out = exe
+            .run(&[
+                Input::f32(vec![1.0, 2.0, 3.0, 4.0], &[4]),
+                Input::f32(vec![10.0, 20.0, 30.0, 40.0], &[4]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo("/nonexistent/nope.hlo.txt").is_err());
+    }
+}

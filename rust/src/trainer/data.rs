@@ -1,0 +1,89 @@
+//! Synthetic token corpus for the end-to-end training run
+//! (DESIGN.md §Substitutions: ImageNet → synthetic tokens).
+//!
+//! A seeded order-1 Markov chain with Zipf-ish marginals: enough structure
+//! that a language model's loss drops well below the uniform log(V)
+//! baseline, while remaining fully deterministic and dependency-free.
+
+use crate::util::prng::Prng;
+
+/// Deterministic corpus sampler.
+pub struct TokenGen {
+    vocab: usize,
+    rng: Prng,
+    /// Per-state offset making transitions non-uniform but cheap: the
+    /// chain is t_{i+1} = perm(t_i) with probability q, else Zipf sample.
+    q: f64,
+}
+
+impl TokenGen {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        Self { vocab, rng: Prng::seed(seed), q: 0.7 }
+    }
+
+    fn next_token(&mut self, prev: usize) -> usize {
+        if self.rng.f64() < self.q {
+            // Deterministic successor: an affine permutation of the vocab.
+            (prev.wrapping_mul(31).wrapping_add(17)) % self.vocab
+        } else {
+            self.rng.zipf(self.vocab, 1.1)
+        }
+    }
+
+    /// One (batch, seq+1) token matrix, flattened row-major.
+    pub fn batch(&mut self, batch: usize, seq_plus_1: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq_plus_1);
+        for _ in 0..batch {
+            let mut t = self.rng.usize_below(self.vocab);
+            out.push(t as i32);
+            for _ in 1..seq_plus_1 {
+                t = self.next_token(t);
+                out.push(t as i32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_and_deterministic() {
+        let mut g1 = TokenGen::new(512, 42);
+        let mut g2 = TokenGen::new(512, 42);
+        let b1 = g1.batch(4, 33);
+        let b2 = g2.batch(4, 33);
+        assert_eq!(b1, b2);
+        assert_eq!(b1.len(), 4 * 33);
+        assert!(b1.iter().all(|t| (0..512).contains(&(*t as usize))));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let b1 = TokenGen::new(512, 1).batch(2, 16);
+        let b2 = TokenGen::new(512, 2).batch(2, 16);
+        assert_ne!(b1, b2);
+    }
+
+    #[test]
+    fn chain_is_predictable_enough_to_learn() {
+        // ~q of transitions follow the deterministic permutation: a model
+        // CAN beat the uniform baseline. Check empirically.
+        let mut g = TokenGen::new(128, 7);
+        let b = g.batch(16, 65);
+        let mut hits = 0;
+        let mut total = 0;
+        for row in b.chunks(65) {
+            for w in row.windows(2) {
+                total += 1;
+                if w[1] as usize == (w[0] as usize * 31 + 17) % 128 {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.6, "{frac}");
+    }
+}

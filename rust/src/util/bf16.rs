@@ -1,0 +1,75 @@
+//! bfloat16 <-> f32 conversion (round-to-nearest-even), bit-compatible
+//! with JAX/XLA's bf16.
+
+/// Convert f32 → bf16 bits with round-to-nearest-even (ties to even).
+#[inline]
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Quiet NaN, preserving sign.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = 0x0000_8000u32;
+    let lower = bits & 0x0000_FFFF;
+    let upper = bits >> 16;
+    // Round to nearest, ties to even on the kept LSB.
+    let rounded = if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+        upper + 1
+    } else {
+        upper
+    };
+    rounded as u16
+}
+
+/// Convert bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Round-trip an f32 through bf16 (the wire precision loss).
+#[inline]
+pub fn bf16_roundtrip(v: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -65536.0] {
+            assert_eq!(bf16_roundtrip(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 keeps 8 significand bits: rel err <= 2^-8.
+        let mut x = 0.001f32;
+        while x < 1e6 {
+            let r = bf16_roundtrip(x);
+            assert!((r - x).abs() <= x / 256.0, "{x} -> {r}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between 1.0 and 1.00390625 (the
+        // next bf16); ties-to-even keeps 1.0 (even LSB).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(bf16_roundtrip(halfway), 1.0);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(bf16_roundtrip(above), bf16_bits_to_f32(0x3F81));
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_roundtrip(f32::NAN).is_nan());
+        assert_eq!(bf16_roundtrip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_roundtrip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny flag parser (offline replacement for `clap`): `--key value` /
+//! `--key=value` / boolean `--flag`, with positional args and typed
+//! accessors carrying defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (no argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Copy without one flag (used when a list-valued flag shadows a
+    /// scalar one, e.g. `--nodes 1,2,4` for a sweep).
+    pub fn without(&self, key: &str) -> Args {
+        let mut a = self.clone();
+        a.flags.remove(key);
+        a
+    }
+
+    /// Copy with a flag overridden.
+    pub fn with(&self, key: &str, value: &str) -> Args {
+        let mut a = self.clone();
+        a.flags.insert(key.to_string(), value.to_string());
+        a
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usizes (e.g. `--nodes 1,2,4,8`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad int {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("train --preset small --nodes=8 --verbose --lr 0.05");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.usize_or("nodes", 1), 8);
+        assert!(a.bool("verbose"));
+        assert!((a.f64_or("lr", 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.str_or("topo", "eth10g"), "eth10g");
+        assert_eq!(a.usize_or("nodes", 16), 16);
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--nodes 1,2,4,256");
+        assert_eq!(a.usize_list_or("nodes", &[]), vec![1, 2, 4, 256]);
+        let b = parse("");
+        assert_eq!(b.usize_list_or("nodes", &[64]), vec![64]);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // `--flag positional` consumes the positional as a value: callers
+        // must use `--flag=true`; documented quirk, asserted here.
+        let a = parse("--dry run");
+        assert_eq!(a.get("dry"), Some("run"));
+    }
+}

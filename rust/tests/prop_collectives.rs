@@ -1,0 +1,188 @@
+//! Randomized property tests over the collectives layer (the in-tree
+//! `util::proptest` harness replaces the proptest crate: offline image).
+//!
+//! Invariants:
+//! * every algorithm × (p, n) is algebraically correct (symbolic executor);
+//! * ring/halving programs are bandwidth-optimal;
+//! * real threaded execution matches the f64 reference reduction;
+//! * wire round-trips respect the dtype error bounds.
+
+use mlsl::collectives::program::{self, CollectiveKind};
+use mlsl::collectives::{quant, verify, Algorithm, ReduceOp, WireDtype};
+use mlsl::util::prng::Prng;
+use mlsl::util::proptest::{run, Config};
+
+#[test]
+fn prop_ring_allreduce_correct_any_p_n() {
+    run(
+        Config { cases: 120, seed: 11 },
+        |r| (1 + r.usize_below(12), 1 + r.usize_below(200)),
+        |&(p, n)| verify::verify(CollectiveKind::Allreduce, Algorithm::Ring, p, n),
+    );
+}
+
+#[test]
+fn prop_pow2_algorithms_correct() {
+    run(
+        Config { cases: 80, seed: 12 },
+        |r| (1usize << r.usize_below(6), 1 + r.usize_below(300), r.below(2)),
+        |&(p, n, which)| {
+            let alg = if which == 0 { Algorithm::RecursiveDoubling } else { Algorithm::HalvingDoubling };
+            verify::verify(CollectiveKind::Allreduce, alg, p, n)
+        },
+    );
+}
+
+#[test]
+fn prop_all_collective_kinds_correct() {
+    run(
+        Config { cases: 100, seed: 13 },
+        |r| {
+            let p = 1 + r.usize_below(9);
+            let n = 1 + r.usize_below(64);
+            let root = r.usize_below(p);
+            let kind = match r.below(4) {
+                0 => CollectiveKind::ReduceScatter,
+                1 => CollectiveKind::Allgather,
+                2 => CollectiveKind::Broadcast { root },
+                _ => CollectiveKind::Reduce { root },
+            };
+            (kind, p, n)
+        },
+        |&(kind, p, n)| verify::verify(kind, Algorithm::Ring, p, n),
+    );
+}
+
+#[test]
+fn prop_ring_is_bandwidth_optimal() {
+    run(
+        Config { cases: 60, seed: 14 },
+        |r| (2 + r.usize_below(14), 16 + r.usize_below(4000)),
+        |&(p, n)| {
+            for prog in program::allreduce_ring(p, n) {
+                let sent: usize = prog
+                    .steps
+                    .iter()
+                    .filter_map(|s| s.send.map(|x| x.range.len))
+                    .sum();
+                // Ring sends sum_over_steps seg sizes; with exact integer
+                // segments this is within one segment of 2(p-1)n/p.
+                let ideal = 2 * (p - 1) * n / p;
+                let seg_max = n.div_ceil(p);
+                if sent > ideal + 2 * seg_max {
+                    return Err(format!("p={p} n={n}: sent {sent} vs ideal {ideal}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threaded_execution_matches_reference() {
+    run(
+        Config { cases: 25, seed: 15 },
+        |r| {
+            let p = 2 + r.usize_below(5);
+            let n = 1 + r.usize_below(500);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                Algorithm::HalvingDoubling
+            } else {
+                Algorithm::Ring
+            };
+            let seed = r.next_u64();
+            (p, n, alg, seed)
+        },
+        |&(p, n, alg, seed)| {
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|rank| {
+                    let mut rng = Prng::seed(seed ^ rank as u64);
+                    (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect()
+                })
+                .collect();
+            let want: Vec<f32> = (0..n)
+                .map(|i| inputs.iter().map(|b| b[i] as f64).sum::<f64>() as f32)
+                .collect();
+
+            let eps = mlsl::fabric::shm::fabric(p);
+            let programs = program::build(CollectiveKind::Allreduce, alg, p, n);
+            let handles: Vec<_> = eps
+                .into_iter()
+                .zip(programs)
+                .zip(inputs)
+                .map(|((mut ep, prog), mut buf)| {
+                    std::thread::spawn(move || {
+                        mlsl::collectives::exec::execute(
+                            &mut ep, 7, &prog, &mut buf, ReduceOp::Sum, WireDtype::F32,
+                        );
+                        buf
+                    })
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                        return Err(format!("elem {i}: {g} vs {w}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_roundtrip_error_bounds() {
+    run(
+        Config { cases: 120, seed: 16 },
+        |r| {
+            let n = 1 + r.usize_below(2000);
+            let scale = (10.0f64).powf(r.f64() * 6.0 - 3.0) as f32;
+            let seed = r.next_u64();
+            (n, scale, seed)
+        },
+        |&(n, scale, seed)| {
+            let mut rng = Prng::seed(seed);
+            let src: Vec<f32> = (0..n).map(|_| rng.range_f32(-scale, scale)).collect();
+            for wire in [WireDtype::F32, WireDtype::Bf16, WireDtype::Int8Block] {
+                let bytes = quant::encode(&src, wire);
+                if bytes.len() != wire.wire_bytes(n) {
+                    return Err(format!("{wire}: wire size"));
+                }
+                let back = quant::decode(&bytes, n, wire);
+                let bound = quant::max_roundtrip_error(&src, wire);
+                for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+                    if (a - b).abs() > bound + scale * 1e-6 {
+                        return Err(format!("{wire} elem {i}: {a} vs {b} (bound {bound})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_segments_partition_exactly() {
+    run(
+        Config { cases: 200, seed: 17 },
+        |r| (1 + r.usize_below(64), r.usize_below(100_000)),
+        |&(p, n)| {
+            let seg = program::segments(n, p);
+            if seg.len() != p + 1 || seg[0] != 0 || seg[p] != n {
+                return Err(format!("bad bounds {seg:?}"));
+            }
+            for w in seg.windows(2) {
+                if w[1] < w[0] {
+                    return Err("non-monotone".into());
+                }
+                // Balance: every segment within 1 of n/p.
+                if (w[1] - w[0]) as i64 - (n / p) as i64 > 1 {
+                    return Err(format!("unbalanced: {}", w[1] - w[0]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
