@@ -27,7 +27,7 @@ fn main() {
                     let mut sim = NetSim::new(topo.clone(), p);
                     let t = time_collective(
                         &mut sim,
-                        build(CollectiveKind::Allreduce, alg, p, n),
+                        build(CollectiveKind::Allreduce, alg, p, n).unwrap(),
                         WireDtype::F32,
                         1,
                     );

@@ -1,0 +1,77 @@
+//! **Ablation A6**: hierarchical (two-tier) vs flat allreduce on
+//! multi-rank-per-node fabrics.
+//!
+//! The paper's testbeds run several ranks per Xeon node; a flat ring pays
+//! an inter-node alpha for every one of its 2(P−1) steps, while the
+//! hierarchical scheme (intra-node binomial reduce → leader allreduce →
+//! intra-node broadcast) only puts P/r ranks on the wire. This bench
+//! sweeps total rank count × message size × ranks-per-node on the
+//! Xeon/10GbE smp preset, prints simulated times for flat ring vs
+//! hierarchical and what `Auto` picks, and ASSERTS the acceptance
+//! criterion: hierarchical beats flat ring for >= 64 ranks at
+//! ranks_per_node >= 2.
+//!
+//! Run: `cargo bench --bench a6_hierarchical`
+
+use mlsl::collectives::program::{allreduce_ring, build, CollectiveKind};
+use mlsl::collectives::selector::choose_algorithm;
+use mlsl::collectives::simexec::time_collective;
+use mlsl::collectives::{Algorithm, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::NetSim;
+use mlsl::metrics::print_table;
+use mlsl::util::stats::fmt_bytes;
+
+fn main() {
+    let sizes: [u64; 3] = [64 << 10, 1 << 20, 16 << 20];
+    let mut wins = 0usize;
+    for rpn in [2usize, 4] {
+        let topo = Topology::eth_10g_smp(rpn);
+        let mut rows = Vec::new();
+        for p in [16usize, 32, 64, 128] {
+            for bytes in sizes {
+                let n = (bytes / 4) as usize;
+                let t_ring = time_collective(
+                    &mut NetSim::new(topo.clone(), p),
+                    allreduce_ring(p, n),
+                    WireDtype::F32,
+                    1,
+                );
+                let hier = Algorithm::Hierarchical { ranks_per_node: rpn };
+                let t_hier = time_collective(
+                    &mut NetSim::new(topo.clone(), p),
+                    build(CollectiveKind::Allreduce, hier, p, n).unwrap(),
+                    WireDtype::F32,
+                    1,
+                );
+                let auto = choose_algorithm(&topo, p, bytes);
+                if p >= 64 {
+                    // Acceptance: the hierarchy must win once enough nodes
+                    // are on the slow tier.
+                    assert!(
+                        t_hier < t_ring,
+                        "p={p} rpn={rpn} bytes={bytes}: hier={t_hier} ring={t_ring}"
+                    );
+                    wins += 1;
+                }
+                rows.push(vec![
+                    p.to_string(),
+                    fmt_bytes(bytes),
+                    format!("{:.3}", t_ring as f64 / 1e6),
+                    format!("{:.3}", t_hier as f64 / 1e6),
+                    format!("{:.2}x", t_ring as f64 / t_hier.max(1) as f64),
+                    auto.to_string(),
+                ]);
+            }
+        }
+        print_table(
+            &format!("A6: flat ring vs hierarchical allreduce, 10GbE, {rpn} ranks/node"),
+            &["ranks", "size", "ring ms", "hier ms", "speedup", "auto picks"],
+            &rows,
+        );
+    }
+    println!("\nexpected shape: hierarchical wins grow with rank count and ranks/node;");
+    println!("small sizes win most (inter-node alpha count drops r-fold), large sizes");
+    println!("approach the 2n/B wire bound both schemes share.");
+    println!("acceptance: hierarchical < flat ring for all {wins} configs with p >= 64. OK");
+}

@@ -78,7 +78,7 @@ mod tests {
         init: impl Fn(usize) -> Vec<f32> + Send + Sync + Copy + 'static,
     ) -> Vec<Vec<f32>> {
         let eps = shm::fabric(p);
-        let programs = program::build(kind, alg, p, n);
+        let programs = program::build(kind, alg, p, n).unwrap();
         let handles: Vec<_> = eps
             .into_iter()
             .zip(programs)

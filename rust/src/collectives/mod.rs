@@ -17,6 +17,23 @@
 //! performance critical data path operations in an optimal manner":
 //! latency-optimal recursive doubling for small payloads,
 //! bandwidth-optimal ring for large ones, halving-doubling in between.
+//!
+//! ## Two-tier (hierarchical) collectives
+//!
+//! On multi-rank-per-node fabrics ([`crate::fabric::topology::Topology`]
+//! with `ranks_per_node > 1`) a flat algorithm pays inter-node alpha for
+//! almost every step. [`Algorithm::Hierarchical`] instead composes three
+//! phases in one chunk program per rank:
+//!
+//! 1. **intra-node reduce** — binomial tree onto each node's leader rank
+//!    over the fast shared-memory tier;
+//! 2. **inter-node allreduce** — the existing ring / halving-doubling
+//!    among the leaders only (one rank per node on the wire);
+//! 3. **intra-node broadcast** — binomial tree from the leader.
+//!
+//! The step count on the slow tier drops from `O(p)` to `O(p /
+//! ranks_per_node)`; the selector prices both tiers with the two-tier
+//! alpha–beta model and picks hierarchical vs. flat per message size.
 
 pub mod exec;
 pub mod priority;
@@ -61,6 +78,11 @@ pub enum Algorithm {
     /// Rabenseifner reduce-scatter-halving + allgather-doubling:
     /// bandwidth-optimal with log₂P steps. P must be a power of two.
     HalvingDoubling,
+    /// Two-level hierarchical allreduce for multi-rank-per-node fabrics:
+    /// intra-node binomial reduce to a leader, flat allreduce among the
+    /// leaders over the inter-node tier, intra-node broadcast back.
+    /// `ranks_per_node` must divide P (contiguous node grouping).
+    Hierarchical { ranks_per_node: usize },
     /// Let the library pick per message size / rank count (the default).
     Auto,
 }
@@ -71,6 +93,7 @@ impl std::fmt::Display for Algorithm {
             Algorithm::Ring => "ring",
             Algorithm::RecursiveDoubling => "rdoubling",
             Algorithm::HalvingDoubling => "halving",
+            Algorithm::Hierarchical { .. } => "hier",
             Algorithm::Auto => "auto",
         };
         f.write_str(s)

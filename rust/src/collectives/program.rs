@@ -47,7 +47,7 @@ pub struct Step {
 }
 
 /// Per-rank program for one collective instance.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Program {
     pub rank: Rank,
     pub steps: Vec<Step>,
@@ -327,27 +327,185 @@ pub fn barrier(p: usize) -> Vec<Program> {
     }
 }
 
-/// Build programs for (kind, algorithm). Panics on unsupported combos
-/// (the selector never produces them).
+// ---------------------------------------------------------------------------
+// Hierarchical (two-tier) composition
+// ---------------------------------------------------------------------------
+
+/// Re-label program ranks through `map` (program rank i runs as rank
+/// `map[i]`); send/recv peers are rewritten accordingly. Used to lift
+/// node-local and leader-only phase programs into the global rank space.
+fn remap_ranks(progs: Vec<Program>, map: &[Rank]) -> Vec<Program> {
+    progs
+        .into_iter()
+        .map(|mut prog| {
+            prog.rank = map[prog.rank];
+            for step in &mut prog.steps {
+                if let Some(s) = &mut step.send {
+                    s.to = map[s.to];
+                }
+                if let Some(r) = &mut step.recv {
+                    r.from = map[r.from];
+                }
+            }
+            prog
+        })
+        .collect()
+}
+
+/// Two-level hierarchical allreduce for fabrics with `ranks_per_node`
+/// co-located ranks per node (contiguous grouping, leader = first rank of
+/// each node):
+///
+/// 1. intra-node binomial reduce of the full buffer onto the leader,
+/// 2. `inner` allreduce (ring / halving-doubling / recursive doubling)
+///    among the `p / ranks_per_node` leaders,
+/// 3. intra-node binomial broadcast from the leader.
+///
+/// The phases need no barrier between them: every phase-k step of a rank
+/// is ordered after its phase-(k−1) steps, and cross-phase messages
+/// between the same (src, dst) pair stay FIFO, which is all the matching
+/// layer requires. `ranks_per_node` must divide `p`; an `inner` of
+/// recursive doubling / halving-doubling additionally needs a
+/// power-of-two leader count ([`build`] picks a valid inner).
+pub fn allreduce_hierarchical(
+    p: usize,
+    n: usize,
+    ranks_per_node: usize,
+    inner: super::Algorithm,
+) -> Vec<Program> {
+    assert!(p >= 1 && ranks_per_node >= 1);
+    assert_eq!(p % ranks_per_node, 0, "ranks_per_node must divide p");
+    let rpn = ranks_per_node;
+    let nodes = p / rpn;
+    // Phase programs in node-local rank space (leader = local rank 0).
+    let reduce = reduce_binomial(rpn, n, 0);
+    let bcast = broadcast_binomial(rpn, n, 0);
+    // Inter-node phase among the leaders, lifted to global rank ids.
+    let leaders: Vec<Rank> = (0..nodes).map(|k| k * rpn).collect();
+    let inter_progs = match inner {
+        super::Algorithm::RecursiveDoubling => allreduce_rdoubling(nodes, n),
+        super::Algorithm::HalvingDoubling => allreduce_halving_doubling(nodes, n),
+        _ => allreduce_ring(nodes, n),
+    };
+    let inter = remap_ranks(inter_progs, &leaders);
+    (0..p)
+        .map(|r| {
+            let node = r / rpn;
+            let local = r % rpn;
+            let node_map: Vec<Rank> = (0..rpn).map(|l| node * rpn + l).collect();
+            let mut steps = remap_ranks(vec![reduce[local].clone()], &node_map)
+                .pop()
+                .expect("one program in, one out")
+                .steps;
+            if local == 0 {
+                steps.extend(inter[node].steps.iter().copied());
+            }
+            steps.extend(
+                remap_ranks(vec![bcast[local].clone()], &node_map)
+                    .pop()
+                    .expect("one program in, one out")
+                    .steps,
+            );
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Inner (leader-phase) algorithm [`build`] emits for hierarchical
+/// allreduce at a given leader count: the bandwidth-optimal flat choice
+/// legal there. The selector's cost model prices hierarchical with this
+/// SAME rule — change them together, via this one function.
+pub fn hierarchical_inner(nodes: usize) -> super::Algorithm {
+    if nodes.is_power_of_two() {
+        super::Algorithm::HalvingDoubling
+    } else {
+        super::Algorithm::Ring
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Validated entry point
+// ---------------------------------------------------------------------------
+
+/// Why a (kind, algorithm, p) request cannot be compiled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildError {
+    /// Zero ranks: there is no communicator to build for.
+    NoRanks,
+    /// Recursive doubling / halving-doubling require a power-of-two rank
+    /// count.
+    NonPowerOfTwoRanks { alg: super::Algorithm, p: usize },
+    /// Hierarchical requires `1 <= ranks_per_node` dividing `p`.
+    InvalidNodeGrouping { p: usize, ranks_per_node: usize },
+    /// `Algorithm::Auto` must be resolved by the selector before building.
+    UnresolvedAuto,
+}
+
+impl std::fmt::Display for BuildError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildError::NoRanks => write!(f, "cannot build a collective over 0 ranks"),
+            BuildError::NonPowerOfTwoRanks { alg, p } => {
+                write!(f, "{alg} requires a power-of-two rank count, got {p}")
+            }
+            BuildError::InvalidNodeGrouping { p, ranks_per_node } => write!(
+                f,
+                "hierarchical needs ranks_per_node >= 1 dividing p: got p={p}, \
+                 ranks_per_node={ranks_per_node}"
+            ),
+            BuildError::UnresolvedAuto => {
+                write!(f, "Algorithm::Auto must be resolved via the selector before build")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+/// Build programs for (kind, algorithm). Returns a structured
+/// [`BuildError`] when the algorithm's rank-count precondition is violated
+/// (the selector never produces such combinations, but callers composing
+/// algorithms by hand get a diagnosable error instead of a panic).
 pub fn build(
     kind: CollectiveKind,
     alg: super::Algorithm,
     p: usize,
     n: usize,
-) -> Vec<Program> {
+) -> Result<Vec<Program>, BuildError> {
     use super::Algorithm as A;
     use CollectiveKind as K;
-    match (kind, alg) {
+    if p == 0 {
+        return Err(BuildError::NoRanks);
+    }
+    if kind == K::Allreduce {
+        match alg {
+            A::RecursiveDoubling | A::HalvingDoubling if !p.is_power_of_two() => {
+                return Err(BuildError::NonPowerOfTwoRanks { alg, p });
+            }
+            A::Hierarchical { ranks_per_node }
+                if ranks_per_node == 0 || p % ranks_per_node != 0 =>
+            {
+                return Err(BuildError::InvalidNodeGrouping { p, ranks_per_node });
+            }
+            A::Auto => return Err(BuildError::UnresolvedAuto),
+            _ => {}
+        }
+    }
+    Ok(match (kind, alg) {
         (K::Allreduce, A::Ring) => allreduce_ring(p, n),
         (K::Allreduce, A::RecursiveDoubling) => allreduce_rdoubling(p, n),
         (K::Allreduce, A::HalvingDoubling) => allreduce_halving_doubling(p, n),
+        (K::Allreduce, A::Hierarchical { ranks_per_node }) => {
+            let inner = hierarchical_inner(p / ranks_per_node);
+            allreduce_hierarchical(p, n, ranks_per_node, inner)
+        }
         (K::ReduceScatter, _) => reduce_scatter_ring(p, n),
         (K::Allgather, _) => allgather_ring(p, n),
         (K::Broadcast { root }, _) => broadcast_binomial(p, n, root),
         (K::Reduce { root }, _) => reduce_binomial(p, n, root),
         (K::Barrier, _) => barrier(p),
-        (K::Allreduce, A::Auto) => unreachable!("resolve Auto via selector first"),
-    }
+        (K::Allreduce, A::Auto) => unreachable!("rejected above"),
+    })
 }
 
 /// Total bytes a single rank puts on the wire for this program.
@@ -443,5 +601,86 @@ mod tests {
     fn single_rank_programs_are_empty() {
         assert!(allreduce_ring(1, 10)[0].steps.is_empty());
         assert!(broadcast_binomial(1, 10, 0)[0].steps.is_empty());
+    }
+
+    #[test]
+    fn hierarchical_non_leaders_stay_off_the_inter_tier() {
+        use crate::collectives::Algorithm as A;
+        let (p, rpn, n) = (8, 2, 64);
+        let progs = allreduce_hierarchical(p, n, rpn, A::Ring);
+        for (r, prog) in progs.iter().enumerate() {
+            assert_eq!(prog.rank, r);
+            let node = r / rpn;
+            let local = r % rpn;
+            for step in &prog.steps {
+                for peer in step
+                    .send
+                    .iter()
+                    .map(|s| s.to)
+                    .chain(step.recv.iter().map(|v| v.from))
+                {
+                    if local != 0 {
+                        // Non-leaders only ever talk within their node.
+                        assert_eq!(peer / rpn, node, "rank {r} peer {peer}");
+                    }
+                }
+            }
+            if local != 0 {
+                // One send (reduce up) + one recv (broadcast down).
+                assert_eq!(prog.steps.len(), 2, "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_degenerates_to_inner_or_intra_only() {
+        use crate::collectives::Algorithm as A;
+        // ranks_per_node = 1: exactly the inner algorithm.
+        let flat = allreduce_hierarchical(6, 30, 1, A::Ring);
+        let ring = allreduce_ring(6, 30);
+        for (a, b) in flat.iter().zip(&ring) {
+            assert_eq!(a.steps, b.steps);
+        }
+        // ranks_per_node = p: one node, reduce + broadcast only.
+        let single = allreduce_hierarchical(4, 30, 4, A::Ring);
+        let reduce_steps: usize =
+            reduce_binomial(4, 30, 0).iter().map(|pr| pr.steps.len()).sum();
+        let bcast_steps: usize =
+            broadcast_binomial(4, 30, 0).iter().map(|pr| pr.steps.len()).sum();
+        let total: usize = single.iter().map(|pr| pr.steps.len()).sum();
+        assert_eq!(total, reduce_steps + bcast_steps);
+    }
+
+    #[test]
+    fn build_rejects_violated_preconditions_structurally() {
+        use crate::collectives::Algorithm as A;
+        use CollectiveKind as K;
+        assert_eq!(
+            build(K::Allreduce, A::RecursiveDoubling, 6, 10),
+            Err(BuildError::NonPowerOfTwoRanks { alg: A::RecursiveDoubling, p: 6 })
+        );
+        assert_eq!(
+            build(K::Allreduce, A::HalvingDoubling, 12, 10),
+            Err(BuildError::NonPowerOfTwoRanks { alg: A::HalvingDoubling, p: 12 })
+        );
+        assert_eq!(
+            build(K::Allreduce, A::Hierarchical { ranks_per_node: 3 }, 8, 10),
+            Err(BuildError::InvalidNodeGrouping { p: 8, ranks_per_node: 3 })
+        );
+        assert_eq!(
+            build(K::Allreduce, A::Hierarchical { ranks_per_node: 0 }, 8, 10),
+            Err(BuildError::InvalidNodeGrouping { p: 8, ranks_per_node: 0 })
+        );
+        assert_eq!(build(K::Allreduce, A::Auto, 8, 10), Err(BuildError::UnresolvedAuto));
+        assert_eq!(build(K::Barrier, A::Ring, 0, 1), Err(BuildError::NoRanks));
+        // Errors render a usable message.
+        let msg = build(K::Allreduce, A::RecursiveDoubling, 6, 10).unwrap_err().to_string();
+        assert!(msg.contains("power-of-two"), "{msg}");
+        // Valid requests still build.
+        assert_eq!(build(K::Allreduce, A::Ring, 6, 10).unwrap().len(), 6);
+        assert_eq!(
+            build(K::Allreduce, A::Hierarchical { ranks_per_node: 2 }, 8, 10).unwrap().len(),
+            8
+        );
     }
 }

@@ -1,33 +1,123 @@
 //! Size-adaptive algorithm selection — the paper's "implements performance
 //! critical data path operations in an optimal manner".
 //!
-//! The choice is driven by the alpha-beta cost model on the actual fabric:
+//! The choice is driven by a TWO-TIER alpha-beta cost model on the actual
+//! fabric. With contiguous node grouping (node = rank / ranks_per_node), a
+//! hop at partner distance d is intra-node when d < ranks_per_node and
+//! inter-node otherwise; each tier has its own alpha (latency + overhead)
+//! and beta⁻¹ (bandwidth):
 //!
-//! * ring allreduce:            2(P−1)·(α + γ + (n/P)/B)
-//! * recursive doubling:        log₂P·(α + γ + n/B)
-//! * halving-doubling:          2·log₂P·(α + γ) + 2(P−1)/P·n/B
+//! * ring allreduce:            2(P−1)·(α + (n/P)/B), gated by its slowest
+//!   (inter-node) hops unless the whole ring fits in one node;
+//! * recursive doubling:        Σ over rounds d of (α_d + n/B_d);
+//! * halving-doubling:          Σ over rounds d of 2·(α_d + (n·d/P)/B_d);
+//! * hierarchical:              2·⌈log₂ r⌉·(α_intra + n/B_intra) intra
+//!   reduce+broadcast, plus a flat allreduce among the P/r node leaders
+//!   whose hops are all inter-tier.
 //!
-//! Small n → latency term dominates → recursive doubling (fewest rounds).
-//! Large n → bandwidth term dominates → ring / halving-doubling.
+//! Small n → latency term dominates → fewest rounds (recursive doubling).
+//! Large n → bandwidth term dominates → ring / halving-doubling. Many
+//! ranks per node → hierarchical (O(P/r) inter-node steps instead of
+//! O(P)). On flat fabrics (ranks_per_node = 1) every formula collapses to
+//! the classic single-tier model.
 
 use super::Algorithm;
-use crate::fabric::topology::Topology;
+use crate::fabric::gbps_to_bytes_per_ns;
+use crate::fabric::topology::{Tier, Topology};
 use crate::Ns;
+
+/// Per-message fixed cost of a tier (latency + injection overhead), ns.
+fn alpha(topo: &Topology, tier: Tier) -> f64 {
+    (topo.latency_of(tier) + topo.overhead_of(tier)) as f64
+}
+
+/// Bandwidth of a tier, bytes/ns.
+fn bw(topo: &Topology, tier: Tier) -> f64 {
+    gbps_to_bytes_per_ns(topo.gbps_of(tier))
+}
+
+/// Tier of an XOR-distance-`d` exchange under contiguous grouping. The
+/// partner `r ^ d` provably stays in-node for d < ranks_per_node ONLY
+/// when ranks_per_node is a power of two (node = rank >> log2(rpn));
+/// otherwise be conservative and price the hop inter-node.
+fn tier_at(d: usize, ranks_per_node: usize) -> Tier {
+    if ranks_per_node.is_power_of_two() && d < ranks_per_node {
+        Tier::Intra
+    } else {
+        Tier::Inter
+    }
+}
+
+/// Predicted wall time (ns, unrounded) of a FLAT algorithm over `p` ranks
+/// with hops priced via `tier_at(d, rpn)`. `rpn = 1` prices every hop at
+/// the inter tier (used for the leader phase of hierarchical allreduce).
+fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f64 {
+    let pf = p as f64;
+    match alg {
+        Algorithm::Ring => {
+            // Lockstep pipeline: each step is gated by its slowest hop —
+            // inter-node unless the whole ring fits in one node.
+            let t = if p <= rpn { Tier::Intra } else { Tier::Inter };
+            2.0 * (pf - 1.0) * (alpha(topo, t) + n / pf / bw(topo, t))
+        }
+        Algorithm::RecursiveDoubling => {
+            let mut total = 0.0;
+            let mut d = 1;
+            while d < p {
+                let t = tier_at(d, rpn);
+                total += alpha(topo, t) + n / bw(topo, t);
+                d <<= 1;
+            }
+            total
+        }
+        Algorithm::HalvingDoubling => {
+            // Reduce-scatter halving + mirrored allgather doubling: the
+            // round at partner distance d moves n·d/p bytes, twice.
+            let mut total = 0.0;
+            let mut d = p / 2;
+            while d >= 1 {
+                let t = tier_at(d, rpn);
+                total += 2.0 * (alpha(topo, t) + n * d as f64 / pf / bw(topo, t));
+                d /= 2;
+            }
+            total
+        }
+        _ => f64::INFINITY,
+    }
+}
 
 /// Predicted wall time of an allreduce of `bytes` over `p` ranks.
 pub fn predict_allreduce_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u64) -> Ns {
     if p <= 1 {
         return 0;
     }
-    let alpha = (topo.latency_ns + topo.per_msg_overhead_ns) as f64;
     let n = bytes as f64;
-    let bw = super::super::fabric::gbps_to_bytes_per_ns(topo.link_gbps);
-    let pf = p as f64;
-    let lg = (p as f64).log2().ceil();
+    let rpn = topo.ranks_per_node.max(1);
     let t = match alg {
-        Algorithm::Ring => 2.0 * (pf - 1.0) * (alpha + n / pf / bw),
-        Algorithm::RecursiveDoubling => lg * (alpha + n / bw),
-        Algorithm::HalvingDoubling => 2.0 * lg * alpha + 2.0 * (pf - 1.0) / pf * n / bw,
+        Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
+            flat_cost(topo, alg, p, n, rpn)
+        }
+        Algorithm::Hierarchical { ranks_per_node } => {
+            let r = ranks_per_node;
+            if r == 0 || p % r != 0 {
+                // Invalid grouping: never the cheapest choice.
+                return Ns::MAX / 4;
+            }
+            let nodes = p / r;
+            // Intra binomial reduce + broadcast: ⌈log₂ r⌉ full-buffer
+            // rounds each, on the shared-memory tier.
+            let intra = if r > 1 {
+                let rounds = (r as f64).log2().ceil();
+                2.0 * rounds * (alpha(topo, Tier::Intra) + n / bw(topo, Tier::Intra))
+            } else {
+                0.0
+            };
+            // Leaders sit on distinct nodes → every hop inter-tier. The
+            // inner algorithm is exactly what program::build will emit.
+            let inner = super::program::hierarchical_inner(nodes);
+            let inter = if nodes > 1 { flat_cost(topo, inner, nodes, n, 1) } else { 0.0 };
+            intra + inter
+        }
         Algorithm::Auto => {
             let best = choose_algorithm(topo, p, bytes);
             return predict_allreduce_ns(topo, best, p, bytes);
@@ -36,19 +126,68 @@ pub fn predict_allreduce_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u6
     t.ceil() as Ns
 }
 
+/// Flat algorithms legal at this rank count.
+fn flat_candidates(p: usize) -> Vec<Algorithm> {
+    let mut c = vec![Algorithm::Ring];
+    if p.is_power_of_two() {
+        c.push(Algorithm::RecursiveDoubling);
+        c.push(Algorithm::HalvingDoubling);
+    }
+    c
+}
+
 /// Pick the cheapest supported algorithm for this (fabric, p, bytes).
+/// Hierarchical is a candidate only when the topology is multi-rank-per-
+/// node and its node size divides `p` (contiguous full-node communicator).
 pub fn choose_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
     if p <= 1 {
         return Algorithm::Ring;
     }
-    let mut candidates = vec![Algorithm::Ring];
-    if p.is_power_of_two() {
-        candidates.push(Algorithm::RecursiveDoubling);
-        candidates.push(Algorithm::HalvingDoubling);
+    let rpn = topo.ranks_per_node;
+    let mut candidates = flat_candidates(p);
+    if rpn > 1 && p > rpn && p % rpn == 0 {
+        candidates.push(Algorithm::Hierarchical { ranks_per_node: rpn });
     }
     *candidates
         .iter()
         .min_by_key(|a| predict_allreduce_ns(topo, **a, p, bytes))
+        .unwrap()
+}
+
+/// Like [`predict_allreduce_ns`] but pricing EVERY hop at the inter
+/// tier. This is the correct model for communicators that do NOT occupy
+/// contiguous ranks of the topology (e.g. the strided data-parallel
+/// groups of a hybrid distribution): there, rank distance inside the
+/// communicator says nothing about physical co-location, so the intra
+/// discount must not apply.
+pub fn predict_flat_inter_allreduce_ns(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+) -> Ns {
+    if p <= 1 {
+        return 0;
+    }
+    match alg {
+        Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
+            flat_cost(topo, alg, p, bytes as f64, 1).ceil() as Ns
+        }
+        other => predict_allreduce_ns(topo, other, p, bytes),
+    }
+}
+
+/// Like [`choose_algorithm`] but never hierarchical, and priced all
+/// inter-tier — for communicators whose members do not decompose into
+/// whole nodes (e.g. the strided data-parallel groups of a hybrid
+/// distribution).
+pub fn choose_flat_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+    if p <= 1 {
+        return Algorithm::Ring;
+    }
+    *flat_candidates(p)
+        .iter()
+        .min_by_key(|a| predict_flat_inter_allreduce_ns(topo, **a, p, bytes))
         .unwrap()
 }
 
@@ -81,6 +220,155 @@ mod tests {
     }
 
     #[test]
+    fn non_pow2_never_selects_doubling_even_on_smp_fabrics() {
+        // The power-of-two precondition must hold regardless of tiers.
+        for topo in [
+            Topology::eth_10g(),
+            Topology::eth_10g_smp(2),
+            Topology::eth_10g_smp(4),
+            Topology::omnipath_100g_smp(2),
+        ] {
+            for p in [3usize, 6, 12, 24, 48, 96, 100] {
+                for bytes in [256u64, 64 << 10, 1 << 20, 64 << 20] {
+                    let alg = choose_algorithm(&topo, p, bytes);
+                    assert!(
+                        !matches!(
+                            alg,
+                            Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling
+                        ),
+                        "{} p={p} bytes={bytes}: {alg:?}",
+                        topo.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_requires_multirank_nodes() {
+        // Flat fabrics must NEVER select hierarchical, at any size.
+        for topo in [Topology::eth_10g(), Topology::eth_25g(), Topology::omnipath_100g()] {
+            for p in [2usize, 6, 16, 64, 96, 256] {
+                for bytes in [256u64, 64 << 10, 16 << 20, 256 << 20] {
+                    let alg = choose_algorithm(&topo, p, bytes);
+                    assert!(
+                        !matches!(alg, Algorithm::Hierarchical { .. }),
+                        "{} p={p} bytes={bytes}: {alg:?}",
+                        topo.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_requires_dividing_node_size() {
+        let topo = Topology::eth_10g_smp(4);
+        // p not a multiple of ranks_per_node: hierarchical is not legal.
+        for p in [6usize, 13, 30] {
+            for bytes in [1u64 << 10, 16 << 20] {
+                let alg = choose_algorithm(&topo, p, bytes);
+                assert!(!matches!(alg, Algorithm::Hierarchical { .. }), "p={p}: {alg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_wins_on_smp_fabric_for_nonpow2_worlds() {
+        // 96 ranks at 2/node on 10GbE: the only flat option is ring
+        // (non-pow2); hierarchical halves the inter-node step count and
+        // must win across sizes.
+        let topo = Topology::eth_10g_smp(2);
+        for bytes in [64u64 << 10, 1 << 20, 16 << 20] {
+            let alg = choose_algorithm(&topo, 96, bytes);
+            assert_eq!(alg, Algorithm::Hierarchical { ranks_per_node: 2 }, "bytes={bytes}");
+            let flat = predict_allreduce_ns(&topo, Algorithm::Ring, 96, bytes);
+            let hier = predict_allreduce_ns(&topo, alg, 96, bytes);
+            assert!(hier < flat, "bytes={bytes}: hier={hier} flat={flat}");
+        }
+    }
+
+    #[test]
+    fn strided_pricing_never_gets_the_intra_discount() {
+        // A strided communicator's hops all cross nodes: the all-inter
+        // model must agree with the flat fabric (identical NIC params)…
+        let smp = Topology::eth_10g_smp(4);
+        let flat = Topology::eth_10g();
+        for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
+            for p in [4usize, 8, 16] {
+                for bytes in [1u64 << 10, 1 << 20] {
+                    assert_eq!(
+                        predict_flat_inter_allreduce_ns(&smp, alg, p, bytes),
+                        predict_allreduce_ns(&flat, alg, p, bytes),
+                        "{alg:?} p={p} bytes={bytes}"
+                    );
+                }
+            }
+        }
+        // …while the contiguous model rightly discounts a ring that fits
+        // inside one node. The strided model must not inherit that.
+        let b = 1u64 << 20;
+        assert!(
+            predict_flat_inter_allreduce_ns(&smp, Algorithm::Ring, 4, b)
+                > predict_allreduce_ns(&smp, Algorithm::Ring, 4, b)
+        );
+    }
+
+    #[test]
+    fn non_pow2_node_sizes_price_doubling_rounds_inter() {
+        // With 3 ranks/node the XOR partner at distance 1 or 2 can cross
+        // a node boundary, so the contiguous model must fall back to
+        // inter pricing — identical to the flat fabric.
+        let smp = Topology::eth_10g_smp(3);
+        let flat = Topology::eth_10g();
+        for alg in [Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
+            assert_eq!(
+                predict_allreduce_ns(&smp, alg, 16, 1 << 20),
+                predict_allreduce_ns(&flat, alg, 16, 1 << 20),
+                "{alg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn choose_flat_never_returns_hierarchical() {
+        let topo = Topology::eth_10g_smp(4);
+        for p in [8usize, 64, 96] {
+            for bytes in [1u64 << 10, 16 << 20] {
+                let alg = choose_flat_algorithm(&topo, p, bytes);
+                assert!(!matches!(alg, Algorithm::Hierarchical { .. }), "p={p}: {alg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_prediction_counts_both_tiers() {
+        let topo = Topology::eth_10g_smp(2);
+        let bytes = 1u64 << 20;
+        let hier = predict_allreduce_ns(
+            &topo,
+            Algorithm::Hierarchical { ranks_per_node: 2 },
+            64,
+            bytes,
+        );
+        // Must exceed the leaders-only flat phase (32 inter ranks)...
+        let leaders_only = predict_allreduce_ns(&topo, Algorithm::HalvingDoubling, 32, bytes);
+        assert!(hier > leaders_only, "hier={hier} leaders={leaders_only}");
+        // ...but stay below the same algorithm run flat over all 64 ranks
+        // on the inter tier (the whole point of the hierarchy).
+        let flat_ring = predict_allreduce_ns(&topo, Algorithm::Ring, 64, bytes);
+        assert!(hier < flat_ring, "hier={hier} flat_ring={flat_ring}");
+    }
+
+    #[test]
+    fn invalid_hierarchical_grouping_is_never_cheapest() {
+        let topo = Topology::eth_10g_smp(2);
+        let cost =
+            predict_allreduce_ns(&topo, Algorithm::Hierarchical { ranks_per_node: 5 }, 8, 1024);
+        assert!(cost > predict_allreduce_ns(&topo, Algorithm::Ring, 8, 1024));
+    }
+
+    #[test]
     fn prediction_monotone_in_size() {
         let topo = Topology::omnipath_100g();
         for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
@@ -104,5 +392,24 @@ mod tests {
         let small = choose_algorithm(&topo, 32, 1024);
         let large = choose_algorithm(&topo, 32, 64 << 20);
         assert_ne!(small, large);
+    }
+
+    #[test]
+    fn crossover_point_is_ordered() {
+        // Walking up the sizes on one fabric, once the choice leaves
+        // RecursiveDoubling it never comes back (the cost curves cross
+        // exactly once: rounds·n/B grows strictly faster than the
+        // bandwidth-optimal 2(P−1)/P·n/B term).
+        let topo = Topology::eth_10g();
+        let mut left_rd = false;
+        for shift in 6..28 {
+            let alg = choose_algorithm(&topo, 32, 1u64 << shift);
+            if alg != Algorithm::RecursiveDoubling {
+                left_rd = true;
+            } else {
+                assert!(!left_rd, "RD re-selected at 2^{shift} after crossover");
+            }
+        }
+        assert!(left_rd, "no crossover up to 2^27");
     }
 }

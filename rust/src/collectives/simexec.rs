@@ -204,7 +204,7 @@ pub fn time_collective(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::program::{allreduce_ring, allreduce_rdoubling};
+    use crate::collectives::program::{allreduce_hierarchical, allreduce_ring, allreduce_rdoubling};
     use crate::collectives::selector::predict_allreduce_ns;
     use crate::collectives::Algorithm;
     use crate::fabric::topology::Topology;
@@ -256,6 +256,54 @@ mod tests {
         let t_rd =
             time_collective(&mut sim(p), allreduce_rdoubling(p, large), WireDtype::F32, 1);
         assert!(t_ring < t_rd, "ring={t_ring} rd={t_rd}");
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_on_two_tier_fabric() {
+        // 64 ranks at 2/node on 10GbE: the hierarchy halves the number of
+        // slow inter-node steps (intra reduce/broadcast ride shared
+        // memory), so the simulated allreduce must finish sooner — across
+        // latency-bound AND bandwidth-bound sizes.
+        let (p, rpn) = (64usize, 2usize);
+        for n in [16usize << 10, 1 << 20] {
+            let topo = Topology::eth_10g_smp(rpn);
+            let t_ring = time_collective(
+                &mut NetSim::new(topo.clone(), p),
+                allreduce_ring(p, n),
+                WireDtype::F32,
+                1,
+            );
+            let t_hier = time_collective(
+                &mut NetSim::new(topo, p),
+                allreduce_hierarchical(p, n, rpn, Algorithm::Ring),
+                WireDtype::F32,
+                1,
+            );
+            assert!(t_hier < t_ring, "n={n}: hier={t_hier} ring={t_ring}");
+        }
+    }
+
+    #[test]
+    fn hierarchical_sim_time_tracks_two_tier_prediction() {
+        let (p, rpn) = (16usize, 4usize);
+        let n = 1usize << 20; // elements
+        let topo = Topology::eth_10g_smp(rpn);
+        let alg = Algorithm::Hierarchical { ranks_per_node: rpn };
+        let programs = crate::collectives::program::build(
+            crate::collectives::CollectiveKind::Allreduce,
+            alg,
+            p,
+            n,
+        )
+        .unwrap();
+        let mut s = NetSim::new(topo.clone(), p);
+        let measured = time_collective(&mut s, programs, WireDtype::F32, 1);
+        let predicted = predict_allreduce_ns(&topo, alg, p, (4 * n) as u64);
+        let ratio = measured as f64 / predicted as f64;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "measured={measured} predicted={predicted}"
+        );
     }
 
     #[test]

@@ -197,7 +197,7 @@ pub fn check(kind: CollectiveKind, p: usize, n: usize, bufs: &[SymBuf]) -> Resul
 
 /// One-call helper: build → run → check.
 pub fn verify(kind: CollectiveKind, alg: super::Algorithm, p: usize, n: usize) -> Result<(), String> {
-    let programs = super::program::build(kind, alg, p, n);
+    let programs = super::program::build(kind, alg, p, n).map_err(|e| e.to_string())?;
     let bufs = init_bufs(kind, p, n);
     let finals = run(&programs, bufs)?;
     check(kind, p, n, &finals)
@@ -235,6 +235,35 @@ mod tests {
             for n in [32usize, 33, 64, 100, 1024] {
                 verify(K::Allreduce, A::HalvingDoubling, p, n)
                     .unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_allreduce_correct() {
+        // Mixed node counts and shapes, including non-power-of-two leader
+        // counts (inner falls back to ring) and p == ranks_per_node.
+        for (p, rpn) in
+            [(4, 2), (8, 2), (8, 4), (8, 8), (12, 3), (12, 4), (16, 4), (6, 3), (9, 3), (15, 5)]
+        {
+            for n in [1usize, 7, 33, 100] {
+                verify(K::Allreduce, A::Hierarchical { ranks_per_node: rpn }, p, n)
+                    .unwrap_or_else(|e| panic!("p={p} rpn={rpn} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_all_inner_algorithms_correct() {
+        use crate::collectives::program::allreduce_hierarchical;
+        // Power-of-two leader counts admit every inner algorithm.
+        for inner in [A::Ring, A::RecursiveDoubling, A::HalvingDoubling] {
+            for (p, rpn) in [(8, 2), (16, 4), (16, 2)] {
+                let progs = allreduce_hierarchical(p, 40, rpn, inner);
+                let finals = run(&progs, init_bufs(K::Allreduce, p, 40))
+                    .unwrap_or_else(|e| panic!("{inner:?} p={p} rpn={rpn}: {e}"));
+                check(K::Allreduce, p, 40, &finals)
+                    .unwrap_or_else(|e| panic!("{inner:?} p={p} rpn={rpn}: {e}"));
             }
         }
     }

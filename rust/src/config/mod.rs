@@ -64,8 +64,17 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     let model = ModelDesc::by_name(&model_name)
         .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
     let topo_name = get("topo", "omnipath100g");
-    let topo =
+    let mut topo =
         Topology::by_name(&topo_name).ok_or_else(|| anyhow!("unknown topology {topo_name:?}"))?;
+    // Two-tier fabric override: `--ranks-per-node 2` (or an `-x2` preset
+    // suffix) marks ranks as co-located in groups on shared-memory nodes.
+    let rpn: usize = get("ranks-per-node", &topo.ranks_per_node.to_string())
+        .parse()
+        .context("--ranks-per-node")?;
+    if rpn == 0 {
+        return Err(anyhow!("--ranks-per-node must be >= 1"));
+    }
+    topo = topo.with_ranks_per_node(rpn);
     let node_name = get("node", "skylake");
     let node =
         NodeSpec::by_name(&node_name).ok_or_else(|| anyhow!("unknown node {node_name:?}"))?;
@@ -144,5 +153,22 @@ mod tests {
         assert!(engine_config(&args("--model nope")).is_err());
         assert!(engine_config(&args("--topo nope")).is_err());
         assert!(engine_config(&args("--mode nope")).is_err());
+        assert!(engine_config(&args("--ranks-per-node 0")).is_err());
+        assert!(engine_config(&args("--ranks-per-node two")).is_err());
+    }
+
+    #[test]
+    fn two_tier_topology_flags() {
+        // Preset suffix form.
+        let cfg = engine_config(&args("--topo eth10g-x2")).unwrap();
+        assert_eq!(cfg.topo.ranks_per_node, 2);
+        assert_eq!(cfg.topo.name, "eth10g-x2");
+        // Explicit flag form overrides the preset's grouping.
+        let cfg = engine_config(&args("--topo opa --ranks-per-node 4")).unwrap();
+        assert_eq!(cfg.topo.ranks_per_node, 4);
+        assert_eq!(cfg.topo.name, "omnipath100g-x4");
+        // Default stays flat.
+        let cfg = engine_config(&args("")).unwrap();
+        assert_eq!(cfg.topo.ranks_per_node, 1);
     }
 }

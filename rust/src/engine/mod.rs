@@ -26,7 +26,7 @@ pub use report::Report;
 use std::collections::HashMap;
 
 use crate::collectives::program::{allgather_ring, build, CollectiveKind};
-use crate::collectives::selector::choose_algorithm;
+use crate::collectives::selector::{choose_algorithm, choose_flat_algorithm};
 use crate::collectives::simexec::SimCollectives;
 use crate::collectives::{Algorithm, PriorityPolicy, WireDtype};
 use crate::fabric::topology::{NodeSpec, Topology};
@@ -497,13 +497,23 @@ impl Engine {
             };
             let alg = match ckind {
                 CollectiveKind::Allreduce => {
-                    choose_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
+                    // Hierarchical programs assume program-rank node blocks
+                    // map onto physical nodes; only offer them when the
+                    // member set decomposes into whole nodes (e.g. the
+                    // world under pure data parallelism). Strided hybrid
+                    // communicators fall back to the flat algorithms.
+                    if self.cfg.topo.ranks_node_aligned(&members) {
+                        choose_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
+                    } else {
+                        choose_flat_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
+                    }
                 }
                 _ => Algorithm::Ring,
             };
             let programs = match ckind {
                 CollectiveKind::Allgather => allgather_ring(pm, elems),
-                _ => build(ckind, alg, pm, elems),
+                _ => build(ckind, alg, pm, elems)
+                    .expect("selector only produces buildable algorithms"),
             };
             if self.cfg.record_timeline && members.contains(&0) {
                 let now = self.sim.now();
@@ -671,6 +681,38 @@ mod tests {
         let r64 = simulate(cfg("resnet50", 64, CommMode::MlslAsync { comm_cores: 2 }));
         let eff = r1.iter_ns as f64 / r64.iter_ns as f64;
         assert!(eff > 0.5 && eff <= 1.001, "{eff}");
+    }
+
+    #[test]
+    fn two_tier_topology_reduces_comm_exposure() {
+        // Same 16 ranks, bulk-sync (fully exposed comm). Re-describing the
+        // fabric as 2 ranks/node keeps every inter-node parameter identical
+        // but lets intra-node hops ride shared memory and the selector use
+        // hierarchical allreduce — the iteration must get faster.
+        let mut flat = cfg("resnet50", 16, CommMode::BulkSync);
+        flat.topo = Topology::eth_10g();
+        let mut smp = cfg("resnet50", 16, CommMode::BulkSync);
+        smp.topo = Topology::eth_10g_smp(2);
+        let rf = simulate(flat);
+        let rs = simulate(smp);
+        assert!(
+            rs.iter_ns < rf.iter_ns,
+            "smp={} flat={}",
+            rs.iter_ns,
+            rf.iter_ns
+        );
+    }
+
+    #[test]
+    fn hybrid_on_smp_topology_completes() {
+        // Strided data-parallel communicators are not node-aligned: the
+        // engine must fall back to flat algorithms and still run.
+        let mut c = cfg("vgg16", 8, CommMode::MlslAsync { comm_cores: 2 });
+        c.topo = Topology::eth_10g_smp(2);
+        c.dist = Distribution::new(8, 4);
+        c.iterations = 2;
+        let r = simulate(c);
+        assert!(r.iter_ns > 0);
     }
 
     #[test]

@@ -13,6 +13,21 @@
 //!   collectives/progress code runs with actual gradient bytes.
 //! * [`topology`] — parameter presets for the two fabrics the paper uses
 //!   plus the node compute model (Skylake-class FLOPs).
+//!
+//! # Two-tier fabric model
+//!
+//! Real clusters run several ranks per node: a [`Topology`] therefore
+//! carries TWO parameter sets — the inter-node tier (NIC line rate,
+//! switch latency, injection overhead) and an intra-node shared-memory
+//! tier — plus `ranks_per_node` with contiguous grouping (`node = rank /
+//! ranks_per_node`). The simulator prices every hop at its tier:
+//! `src`/`dst` on the same node serialize at `intra_gbps` and pay
+//! `intra_latency_ns`, everything else uses the NIC parameters. The
+//! `-x<r>` preset suffixes (`eth10g-x2`, `opa-x4`) select the paper's
+//! testbeds at r ranks/node; `ranks_per_node == 1` collapses to the old
+//! flat model, bit-for-bit. Hierarchical collectives
+//! ([`crate::collectives::Algorithm::Hierarchical`]) exploit the fast
+//! tier by reducing onto one leader per node before touching the wire.
 
 pub mod event;
 pub mod shm;

@@ -139,7 +139,10 @@ impl NetSim {
         assert_ne!(msg.src, msg.dst, "self-send");
         let node = msg.src;
         let msg_idx = self.msgs.len();
-        let cost = self.topo.per_msg_overhead_ns + self.topo.wire_ns(msg.bytes);
+        // Two-tier pricing: intra-node hops (same node under the topology's
+        // contiguous grouping) serialize at the shared-memory tier rate.
+        let cost = self.topo.overhead_between(msg.src, msg.dst)
+            + self.topo.wire_ns_between(msg.src, msg.dst, msg.bytes);
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
         *self.stats.bytes_by_priority.entry(msg.priority).or_insert(0) += msg.bytes;
@@ -262,9 +265,12 @@ impl NetSim {
                     if let Some(since) = self.nics[node].busy_since.take() {
                         self.nics[node].busy_ns += at - since;
                     }
-                    // In-flight latency, then delivery.
-                    self.queue
-                        .push_in(self.topo.latency_ns, Internal::Deliver { msg_idx: t.msg_idx });
+                    // In-flight latency (tier-priced), then delivery.
+                    let lat = {
+                        let m = &self.msgs[t.msg_idx];
+                        self.topo.latency_between(m.src, m.dst)
+                    };
+                    self.queue.push_in(lat, Internal::Deliver { msg_idx: t.msg_idx });
                     self.reschedule(node);
                 }
             }
@@ -292,12 +298,17 @@ mod tests {
 
     fn sim() -> NetSim {
         // Round numbers: 8 Gbps = 1 byte/ns, alpha = 1000 ns, gamma = 100 ns.
+        // Flat (ranks_per_node = 1): the intra tier is never used.
         let topo = Topology {
             name: "test".into(),
             link_gbps: 8.0,
             latency_ns: 1_000,
             per_msg_overhead_ns: 100,
             chunk_bytes: 1 << 20,
+            ranks_per_node: 1,
+            intra_gbps: 8.0,
+            intra_latency_ns: 1_000,
+            intra_per_msg_overhead_ns: 100,
         };
         NetSim::new(topo, 4)
     }
@@ -425,6 +436,40 @@ mod tests {
                 SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 2_100),
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn two_tier_topology_prices_hops_by_tier() {
+        // 2 ranks/node: ranks {0,1} share a node, rank 2 is remote.
+        // Intra: 80 Gbps = 10 B/ns, alpha 200, gamma 10.
+        let topo = Topology {
+            name: "test-x2".into(),
+            link_gbps: 8.0,
+            latency_ns: 1_000,
+            per_msg_overhead_ns: 100,
+            chunk_bytes: 1 << 20,
+            ranks_per_node: 2,
+            intra_gbps: 80.0,
+            intra_latency_ns: 200,
+            intra_per_msg_overhead_ns: 10,
+        };
+        let mut s = NetSim::new(topo, 4);
+        s.send(msg(0, 1, 1_000, 1, 1)); // intra: 10 + 100 + 200 = 310
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                assert_eq!(at, 310);
+            }
+            other => panic!("{other:?}"),
+        }
+        s.send(msg(0, 2, 1_000, 1, 2)); // inter: 100 + 1000 + 1000 from t=310
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2);
+                assert_eq!(at, 310 + 2_100);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

@@ -1,20 +1,48 @@
-//! Fabric + node parameter presets for the paper's testbeds.
+//! Fabric + node parameter presets for the paper's testbeds — now a
+//! **two-tier** model.
+//!
+//! Real clusters run more than one rank per node: a fast intra-node tier
+//! (shared memory / QPI) connects co-located ranks, a much slower
+//! inter-node tier (Omni-Path / Ethernet NICs) connects nodes. A
+//! [`Topology`] therefore carries parameters for BOTH tiers plus
+//! `ranks_per_node`; ranks are grouped contiguously (`node = rank /
+//! ranks_per_node`), and every point-to-point cost helper comes in a
+//! `*_between(src, dst, ..)` form that prices the hop at its tier.
+//! `ranks_per_node == 1` collapses to the old flat single-tier model and
+//! every legacy helper (`wire_ns`, `msg_ns`) keeps pricing the inter tier.
 //!
 //! Numbers are public-spec-derived, not measured on the authors' clusters;
 //! EXPERIMENTS.md compares *shapes* (who wins, by what factor), which these
 //! presets preserve (10GbE: high latency + low bandwidth → prioritization
 //! matters most; Omnipath: low latency + high bandwidth → near-ideal
-//! scaling with overlap).
+//! scaling with overlap; `-x<r>` smp variants: hierarchical collectives
+//! win once the intra tier can absorb the first reduction level).
 
-use crate::Ns;
+use crate::{Ns, Rank};
 
-/// Network fabric parameters (the alpha–beta–gamma model).
+/// Which tier a (src, dst) rank pair communicates over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Co-located ranks (same node): shared-memory-class links.
+    Intra,
+    /// Ranks on different nodes: the cluster fabric.
+    Inter,
+}
+
+/// Shared-memory tier defaults (Skylake-class socket pair): ~75 GB/s
+/// effective copy bandwidth, sub-µs latency, cheap doorbells.
+const INTRA_GBPS: f64 = 600.0;
+const INTRA_LATENCY_NS: Ns = 700;
+const INTRA_OVERHEAD_NS: Ns = 150;
+
+/// Network fabric parameters (a two-tier alpha–beta–gamma model).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub name: String,
-    /// Per-NIC egress line rate, Gbit/s (beta⁻¹).
+    /// Per-NIC egress line rate, Gbit/s (inter-node beta⁻¹).
     pub link_gbps: f64,
-    /// End-to-end message latency, ns (alpha): propagation + switching.
+    /// End-to-end message latency, ns (inter-node alpha): propagation +
+    /// switching.
     pub latency_ns: Ns,
     /// Per-message software/NIC injection overhead, ns (gamma). Paid on
     /// the egress wire before the first byte moves — this is what makes
@@ -23,6 +51,15 @@ pub struct Topology {
     /// Chunk size collectives use on this fabric, bytes. Preemption is
     /// chunk-granular, so this is also the preemption latency knob.
     pub chunk_bytes: u64,
+    /// Ranks co-located on one node (contiguous grouping). 1 = flat
+    /// single-tier fabric (the legacy model).
+    pub ranks_per_node: usize,
+    /// Intra-node tier line rate, Gbit/s (shared-memory class).
+    pub intra_gbps: f64,
+    /// Intra-node tier message latency, ns.
+    pub intra_latency_ns: Ns,
+    /// Intra-node per-message overhead, ns.
+    pub intra_per_msg_overhead_ns: Ns,
 }
 
 impl Topology {
@@ -35,6 +72,10 @@ impl Topology {
             latency_ns: 30_000,          // ~30 µs TCP/Ethernet stack
             per_msg_overhead_ns: 4_000,  // kernel/NIC doorbell path
             chunk_bytes: 256 * 1024,
+            ranks_per_node: 1,
+            intra_gbps: INTRA_GBPS,
+            intra_latency_ns: INTRA_LATENCY_NS,
+            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
         }
     }
 
@@ -46,6 +87,10 @@ impl Topology {
             latency_ns: 1_100,          // ~1.1 µs MPI pingpong
             per_msg_overhead_ns: 250,
             chunk_bytes: 1024 * 1024,
+            ranks_per_node: 1,
+            intra_gbps: INTRA_GBPS,
+            intra_latency_ns: INTRA_LATENCY_NS,
+            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
         }
     }
 
@@ -57,10 +102,48 @@ impl Topology {
             latency_ns: 15_000,
             per_msg_overhead_ns: 2_000,
             chunk_bytes: 512 * 1024,
+            ranks_per_node: 1,
+            intra_gbps: INTRA_GBPS,
+            intra_latency_ns: INTRA_LATENCY_NS,
+            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
         }
     }
 
+    /// Multi-rank-per-node variant of any preset: `r` ranks share each
+    /// node's NIC-facing tier and talk shared-memory within the node. The
+    /// name gains an `-x<r>` suffix (so presets resolve round-trip through
+    /// [`Topology::by_name`]).
+    pub fn with_ranks_per_node(mut self, r: usize) -> Self {
+        assert!(r >= 1, "ranks_per_node must be >= 1");
+        let base = match self.name.rsplit_once("-x") {
+            Some((b, suffix)) if suffix.parse::<usize>().is_ok() => b.to_string(),
+            _ => self.name.clone(),
+        };
+        self.name = if r == 1 { base } else { format!("{base}-x{r}") };
+        self.ranks_per_node = r;
+        self
+    }
+
+    /// The paper's Xeon/10GbE testbed at >1 rank per node.
+    pub fn eth_10g_smp(ranks_per_node: usize) -> Self {
+        Self::eth_10g().with_ranks_per_node(ranks_per_node)
+    }
+
+    /// The paper's Xeon/Omni-Path testbed at >1 rank per node.
+    pub fn omnipath_100g_smp(ranks_per_node: usize) -> Self {
+        Self::omnipath_100g().with_ranks_per_node(ranks_per_node)
+    }
+
+    /// Resolve a preset name; `-x<r>` suffixes select the smp variant
+    /// (e.g. `eth10g-x2`, `opa-x4`).
     pub fn by_name(name: &str) -> Option<Self> {
+        if let Some((base, suffix)) = name.rsplit_once("-x") {
+            if let Ok(r) = suffix.parse::<usize>() {
+                if r >= 1 {
+                    return Self::by_name(base).map(|t| t.with_ranks_per_node(r));
+                }
+            }
+        }
         match name {
             "eth10g" => Some(Self::eth_10g()),
             "eth25g" => Some(Self::eth_25g()),
@@ -69,14 +152,105 @@ impl Topology {
         }
     }
 
-    /// Pure wire time for `bytes` (no latency/overhead).
+    // -- tier resolution ----------------------------------------------------
+
+    /// Node index of `rank` under contiguous grouping.
+    pub fn node_of(&self, rank: Rank) -> usize {
+        rank / self.ranks_per_node.max(1)
+    }
+
+    /// Do `a` and `b` share a node? (Never true on flat topologies.)
+    pub fn same_node(&self, a: Rank, b: Rank) -> bool {
+        self.ranks_per_node > 1 && self.node_of(a) == self.node_of(b)
+    }
+
+    /// Tier of the (src, dst) hop.
+    pub fn tier(&self, src: Rank, dst: Rank) -> Tier {
+        if self.same_node(src, dst) { Tier::Intra } else { Tier::Inter }
+    }
+
+    /// Does this fabric have a meaningful intra-node tier?
+    pub fn is_hierarchical(&self) -> bool {
+        self.ranks_per_node > 1
+    }
+
+    /// True when `members` decompose into whole nodes: consecutive runs of
+    /// `ranks_per_node` ranks, each starting at a node boundary.
+    /// Hierarchical collectives are only valid over such sets.
+    pub fn ranks_node_aligned(&self, members: &[Rank]) -> bool {
+        let rpn = self.ranks_per_node;
+        rpn > 1
+            && !members.is_empty()
+            && members.len() % rpn == 0
+            && members.chunks(rpn).all(|c| {
+                c[0] % rpn == 0 && c.windows(2).all(|w| w[1] == w[0] + 1)
+            })
+    }
+
+    /// Line rate of a tier, Gbit/s.
+    pub fn gbps_of(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Intra => self.intra_gbps,
+            Tier::Inter => self.link_gbps,
+        }
+    }
+
+    /// Message latency of a tier, ns.
+    pub fn latency_of(&self, tier: Tier) -> Ns {
+        match tier {
+            Tier::Intra => self.intra_latency_ns,
+            Tier::Inter => self.latency_ns,
+        }
+    }
+
+    /// Per-message overhead of a tier, ns.
+    pub fn overhead_of(&self, tier: Tier) -> Ns {
+        match tier {
+            Tier::Intra => self.intra_per_msg_overhead_ns,
+            Tier::Inter => self.per_msg_overhead_ns,
+        }
+    }
+
+    // -- hop costs ------------------------------------------------------------
+
+    /// Pure wire time for `bytes` on the INTER tier (no latency/overhead).
+    /// Legacy helper: flat topologies have only this tier.
     pub fn wire_ns(&self, bytes: u64) -> Ns {
         super::wire_ns(bytes, self.link_gbps)
     }
 
-    /// Full cost of a single point-to-point message of `bytes`.
+    /// Full cost of a single INTER-tier point-to-point message.
     pub fn msg_ns(&self, bytes: u64) -> Ns {
         self.per_msg_overhead_ns + self.wire_ns(bytes) + self.latency_ns
+    }
+
+    /// Full cost of a single INTRA-tier point-to-point message.
+    pub fn intra_msg_ns(&self, bytes: u64) -> Ns {
+        self.intra_per_msg_overhead_ns
+            + super::wire_ns(bytes, self.intra_gbps)
+            + self.intra_latency_ns
+    }
+
+    /// Wire time of `bytes` between two concrete ranks (tier-priced).
+    pub fn wire_ns_between(&self, src: Rank, dst: Rank, bytes: u64) -> Ns {
+        super::wire_ns(bytes, self.gbps_of(self.tier(src, dst)))
+    }
+
+    /// Per-message overhead between two concrete ranks.
+    pub fn overhead_between(&self, src: Rank, dst: Rank) -> Ns {
+        self.overhead_of(self.tier(src, dst))
+    }
+
+    /// In-flight latency between two concrete ranks.
+    pub fn latency_between(&self, src: Rank, dst: Rank) -> Ns {
+        self.latency_of(self.tier(src, dst))
+    }
+
+    /// Full cost of a message between two concrete ranks.
+    pub fn msg_ns_between(&self, src: Rank, dst: Rank, bytes: u64) -> Ns {
+        self.overhead_between(src, dst)
+            + self.wire_ns_between(src, dst, bytes)
+            + self.latency_between(src, dst)
     }
 }
 
@@ -170,5 +344,60 @@ mod tests {
         assert!(Topology::by_name("opa").is_some());
         assert!(Topology::by_name("nope").is_none());
         assert!(NodeSpec::by_name("skylake").is_some());
+    }
+
+    #[test]
+    fn smp_presets_resolve_and_roundtrip() {
+        let t = Topology::by_name("eth10g-x4").unwrap();
+        assert_eq!(t.ranks_per_node, 4);
+        assert_eq!(t.name, "eth10g-x4");
+        assert_eq!(Topology::by_name(&t.name).unwrap(), t);
+        let o = Topology::omnipath_100g_smp(2);
+        assert_eq!(o.name, "omnipath100g-x2");
+        assert_eq!(Topology::by_name("opa-x2").unwrap().ranks_per_node, 2);
+        assert!(Topology::by_name("nope-x2").is_none());
+        // Re-suffixing replaces, never stacks.
+        let again = t.with_ranks_per_node(2);
+        assert_eq!(again.name, "eth10g-x2");
+        assert_eq!(again.with_ranks_per_node(1).name, "eth10g");
+    }
+
+    #[test]
+    fn tiers_resolve_by_node_grouping() {
+        let t = Topology::eth_10g_smp(4);
+        assert!(t.is_hierarchical());
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert!(t.same_node(1, 2));
+        assert!(!t.same_node(3, 4));
+        assert_eq!(t.tier(0, 1), Tier::Intra);
+        assert_eq!(t.tier(0, 4), Tier::Inter);
+        // Flat fabrics never resolve to the intra tier.
+        let flat = Topology::eth_10g();
+        assert!(!flat.same_node(0, 0));
+        assert_eq!(flat.tier(0, 1), Tier::Inter);
+    }
+
+    #[test]
+    fn intra_hops_are_much_cheaper() {
+        let t = Topology::eth_10g_smp(2);
+        let b = 1 << 20;
+        assert!(t.msg_ns_between(0, 1, b) < t.msg_ns_between(1, 2, b) / 10);
+        // Inter-tier helpers agree with the legacy flat helpers.
+        assert_eq!(t.msg_ns_between(1, 2, b), t.msg_ns(b));
+        assert_eq!(t.msg_ns_between(0, 1, b), t.intra_msg_ns(b));
+    }
+
+    #[test]
+    fn node_alignment_detection() {
+        let t = Topology::eth_10g_smp(2);
+        assert!(t.ranks_node_aligned(&[0, 1, 2, 3]));
+        assert!(t.ranks_node_aligned(&[4, 5]));
+        assert!(!t.ranks_node_aligned(&[1, 2])); // straddles nodes
+        assert!(!t.ranks_node_aligned(&[0, 2, 4, 6])); // strided
+        assert!(!t.ranks_node_aligned(&[0, 1, 2])); // partial node
+        assert!(!t.ranks_node_aligned(&[]));
+        assert!(!Topology::eth_10g().ranks_node_aligned(&[0, 1])); // flat
     }
 }

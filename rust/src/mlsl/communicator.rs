@@ -38,11 +38,17 @@ impl Communicator {
             world,
             topo_hint: Topology {
                 // In-process fabric: high bandwidth, microsecond-ish costs.
+                // All ranks share one address space, so the fabric is a
+                // single tier (ranks_per_node = 1: no hierarchy to exploit).
                 name: "shm".into(),
                 link_gbps: 400.0,
                 latency_ns: 2_000,
                 per_msg_overhead_ns: 500,
                 chunk_bytes: 1 << 20,
+                ranks_per_node: 1,
+                intra_gbps: 400.0,
+                intra_latency_ns: 2_000,
+                intra_per_msg_overhead_ns: 500,
             },
         }
     }
@@ -73,6 +79,7 @@ impl Communicator {
         let n = buf.len();
         let alg = self.resolve(alg, n);
         let prog = build(CollectiveKind::Allreduce, alg, self.world, n)
+            .expect("resolved algorithm is buildable")
             .swap_remove(self.rank);
         let id = self.core.alloc_id();
         self.core.submit_with_handle(id, prog, buf, ReduceOp::Sum, wire, priority)
@@ -87,6 +94,7 @@ impl Communicator {
     pub fn broadcast_async(&self, buf: Vec<f32>, root: Rank, priority: Priority) -> Handle {
         let n = buf.len();
         let prog = build(CollectiveKind::Broadcast { root }, Algorithm::Ring, self.world, n)
+            .expect("broadcast builds for any rank count")
             .swap_remove(self.rank);
         let id = self.core.alloc_id();
         self.core
@@ -103,6 +111,7 @@ impl Communicator {
     pub fn allgather(&self, buf: Vec<f32>) -> Vec<f32> {
         let n = buf.len();
         let prog = build(CollectiveKind::Allgather, Algorithm::Ring, self.world, n)
+            .expect("allgather builds for any rank count")
             .swap_remove(self.rank);
         let id = self.core.alloc_id();
         self.core
@@ -114,6 +123,7 @@ impl Communicator {
     pub fn reduce(&self, buf: Vec<f32>, root: Rank) -> Vec<f32> {
         let n = buf.len();
         let prog = build(CollectiveKind::Reduce { root }, Algorithm::Ring, self.world, n)
+            .expect("reduce builds for any rank count")
             .swap_remove(self.rank);
         let id = self.core.alloc_id();
         self.core

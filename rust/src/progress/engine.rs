@@ -311,7 +311,8 @@ mod tests {
         for (id, alg, wire) in cases {
             for (r, core) in cores.iter().enumerate() {
                 let progs =
-                    crate::collectives::program::build(CollectiveKind::Allreduce, alg, p, n);
+                    crate::collectives::program::build(CollectiveKind::Allreduce, alg, p, n)
+                        .unwrap();
                 handles.push(core.submit_with_handle(
                     id,
                     progs[r].clone(),

@@ -1,0 +1,271 @@
+//! Property-test harness over EVERY program builder in
+//! `collectives::program`, driven through the symbolic executor
+//! (`collectives::verify`): randomized rank counts (p ∈ {2..17},
+//! including non-powers-of-two wherever the builder supports them),
+//! element counts, roots, owner shifts and node groupings.
+//!
+//! Two invariant families per builder:
+//!
+//! * **bitwise correctness** — the symbolic contribution matrices end
+//!   exactly right (every rank's initial value counted exactly once where
+//!   the collective's semantics demand it);
+//! * **cost accounting** — per-rank step counts and TOTAL on-wire element
+//!   counts match the analytic formulas exactly:
+//!     ring / halving-doubling / hierarchical allreduce → 2n(p−1),
+//!     recursive doubling → p·log₂p·n,
+//!     reduce-scatter / allgather (ring) → n(p−1),
+//!     binomial broadcast / reduce → n(p−1).
+//!   (Hierarchical moving exactly the flat-ring volume — just relocated
+//!   onto the intra-node tier — is itself the load-bearing claim.)
+
+use mlsl::collectives::program::{self, CollectiveKind, Program};
+use mlsl::collectives::verify::{check, init_bufs, run as sym_run, SymBuf};
+use mlsl::collectives::Algorithm as A;
+use mlsl::util::proptest::{run as prop_run, Config};
+
+/// Total elements every rank together puts on the wire.
+fn total_sent_elems(progs: &[Program]) -> usize {
+    progs
+        .iter()
+        .flat_map(|p| &p.steps)
+        .filter_map(|s| s.send.map(|x| x.range.len))
+        .sum()
+}
+
+fn expect_eq(what: &str, got: usize, want: usize) -> Result<(), String> {
+    if got != want {
+        return Err(format!("{what}: got {got}, want {want}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_ring_allreduce_correct_and_counted() {
+    prop_run(
+        Config { cases: 150, seed: 31 },
+        |r| (2 + r.usize_below(16), 1 + r.usize_below(300)),
+        |&(p, n)| {
+            mlsl::collectives::verify::verify(CollectiveKind::Allreduce, A::Ring, p, n)?;
+            let progs = program::allreduce_ring(p, n);
+            for prog in &progs {
+                expect_eq("ring steps", prog.steps.len(), 2 * (p - 1))?;
+            }
+            expect_eq("ring total elems", total_sent_elems(&progs), 2 * n * (p - 1))
+        },
+    );
+}
+
+#[test]
+fn prop_reduce_scatter_and_allgather_correct_and_counted() {
+    prop_run(
+        Config { cases: 150, seed: 32 },
+        |r| (2 + r.usize_below(16), 1 + r.usize_below(300), r.below(2) == 0),
+        |&(p, n, scatter)| {
+            let (kind, progs) = if scatter {
+                (CollectiveKind::ReduceScatter, program::reduce_scatter_ring(p, n))
+            } else {
+                (CollectiveKind::Allgather, program::allgather_ring(p, n))
+            };
+            mlsl::collectives::verify::verify(kind, A::Ring, p, n)?;
+            for prog in &progs {
+                expect_eq("steps", prog.steps.len(), p - 1)?;
+            }
+            expect_eq("total elems", total_sent_elems(&progs), n * (p - 1))
+        },
+    );
+}
+
+#[test]
+fn prop_allgather_owner_shifts_correct() {
+    // allgather_ring_shifted(shift) starts rank r owning segment
+    // (r+shift) % p; the custom init/check below encodes exactly that.
+    prop_run(
+        Config { cases: 150, seed: 33 },
+        |r| {
+            let p = 2 + r.usize_below(16);
+            (p, 1 + r.usize_below(200), r.usize_below(p))
+        },
+        |&(p, n, shift)| {
+            let progs = program::allgather_ring_shifted(p, n, shift);
+            let seg = program::segments(n, p);
+            let mut bufs: Vec<SymBuf> = vec![vec![vec![0u32; p]; n]; p];
+            for (r, buf) in bufs.iter_mut().enumerate() {
+                let own = (r + shift) % p;
+                for e in &mut buf[seg[own]..seg[own + 1]] {
+                    e[r] = 1;
+                }
+            }
+            let finals = sym_run(&progs, bufs)?;
+            for (r, buf) in finals.iter().enumerate() {
+                for s in 0..p {
+                    let owner = (s + p - shift % p) % p;
+                    let mut want = vec![0u32; p];
+                    want[owner] = 1;
+                    for e in seg[s]..seg[s + 1] {
+                        if buf[e] != want {
+                            return Err(format!(
+                                "rank {r} seg {s} elem {e}: {:?} want {want:?}",
+                                buf[e]
+                            ));
+                        }
+                    }
+                }
+            }
+            expect_eq("total elems", total_sent_elems(&progs), n * (p - 1))
+        },
+    );
+}
+
+#[test]
+fn prop_pow2_doubling_builders_correct_and_counted() {
+    prop_run(
+        Config { cases: 120, seed: 34 },
+        |r| (1usize << (1 + r.usize_below(4)), 1 + r.usize_below(300), r.below(2) == 0),
+        |&(p, n, rd)| {
+            let lg = p.trailing_zeros() as usize;
+            if rd {
+                mlsl::collectives::verify::verify(
+                    CollectiveKind::Allreduce,
+                    A::RecursiveDoubling,
+                    p,
+                    n,
+                )?;
+                let progs = program::allreduce_rdoubling(p, n);
+                for prog in &progs {
+                    expect_eq("rdoubling steps", prog.steps.len(), lg)?;
+                }
+                expect_eq("rdoubling total elems", total_sent_elems(&progs), p * lg * n)
+            } else {
+                mlsl::collectives::verify::verify(
+                    CollectiveKind::Allreduce,
+                    A::HalvingDoubling,
+                    p,
+                    n,
+                )?;
+                let progs = program::allreduce_halving_doubling(p, n);
+                for prog in &progs {
+                    expect_eq("halving steps", prog.steps.len(), 2 * lg)?;
+                }
+                // Σ over ranks of 2(n − own_block) with own blocks exactly
+                // partitioning n → 2n(p−1), for ANY n.
+                expect_eq("halving total elems", total_sent_elems(&progs), 2 * n * (p - 1))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_binomial_trees_correct_and_counted() {
+    prop_run(
+        Config { cases: 150, seed: 35 },
+        |r| {
+            let p = 2 + r.usize_below(16);
+            (p, 1 + r.usize_below(200), r.usize_below(p), r.below(2) == 0)
+        },
+        |&(p, n, root, bcast)| {
+            let (kind, progs) = if bcast {
+                (CollectiveKind::Broadcast { root }, program::broadcast_binomial(p, n, root))
+            } else {
+                (CollectiveKind::Reduce { root }, program::reduce_binomial(p, n, root))
+            };
+            mlsl::collectives::verify::verify(kind, A::Ring, p, n)?;
+            // A binomial tree moves the full buffer down/up p−1 edges.
+            expect_eq("binomial total elems", total_sent_elems(&progs), n * (p - 1))
+        },
+    );
+}
+
+#[test]
+fn prop_barrier_completes_any_p() {
+    prop_run(
+        Config { cases: 60, seed: 36 },
+        |r| 2 + r.usize_below(16),
+        |&p| {
+            let n = if p.is_power_of_two() { 1 } else { p };
+            let progs = program::barrier(p);
+            sym_run(&progs, init_bufs(CollectiveKind::Barrier, p, n)).map(|_| ())
+        },
+    );
+}
+
+#[test]
+fn prop_hierarchical_correct_and_volume_matches_flat_ring() {
+    prop_run(
+        Config { cases: 150, seed: 37 },
+        |r| {
+            let p = 2 + r.usize_below(16);
+            // Random divisor of p as the node size (1 and p included).
+            let divisors: Vec<usize> = (1..=p).filter(|d| p % d == 0).collect();
+            let rpn = divisors[r.usize_below(divisors.len())];
+            let nodes = p / rpn;
+            let inner = if nodes.is_power_of_two() {
+                match r.below(3) {
+                    0 => A::Ring,
+                    1 => A::RecursiveDoubling,
+                    _ => A::HalvingDoubling,
+                }
+            } else {
+                A::Ring
+            };
+            (p, rpn, 1 + r.usize_below(200), inner)
+        },
+        |&(p, rpn, n, inner)| {
+            let progs = program::allreduce_hierarchical(p, n, rpn, inner);
+            let finals = sym_run(&progs, init_bufs(CollectiveKind::Allreduce, p, n))?;
+            check(CollectiveKind::Allreduce, p, n, &finals)?;
+            let nodes = p / rpn;
+            // intra reduce + broadcast: 2n(p − nodes); inter allreduce:
+            // ring/halving 2n(nodes−1), rdoubling nodes·log₂(nodes)·n.
+            let inter = match inner {
+                A::RecursiveDoubling => nodes * (nodes.trailing_zeros() as usize) * n,
+                _ => 2 * n * (nodes - 1),
+            };
+            expect_eq(
+                "hierarchical total elems",
+                total_sent_elems(&progs),
+                2 * n * (p - nodes) + inter,
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_build_validates_instead_of_panicking() {
+    use mlsl::collectives::program::BuildError;
+    prop_run(
+        Config { cases: 200, seed: 38 },
+        |r| {
+            let p = 1 + r.usize_below(17);
+            let alg = match r.below(4) {
+                0 => A::Ring,
+                1 => A::RecursiveDoubling,
+                2 => A::HalvingDoubling,
+                _ => A::Hierarchical { ranks_per_node: 1 + r.usize_below(6) },
+            };
+            (p, 1 + r.usize_below(50), alg)
+        },
+        |&(p, n, alg)| {
+            let legal = match alg {
+                A::RecursiveDoubling | A::HalvingDoubling => p.is_power_of_two(),
+                A::Hierarchical { ranks_per_node } => p % ranks_per_node == 0,
+                _ => true,
+            };
+            match program::build(CollectiveKind::Allreduce, alg, p, n) {
+                Ok(progs) => {
+                    if !legal {
+                        return Err(format!("{alg:?} p={p}: expected a BuildError"));
+                    }
+                    expect_eq("program count", progs.len(), p)
+                }
+                Err(BuildError::NonPowerOfTwoRanks { .. })
+                | Err(BuildError::InvalidNodeGrouping { .. }) => {
+                    if legal {
+                        return Err(format!("{alg:?} p={p}: spurious BuildError"));
+                    }
+                    Ok(())
+                }
+                Err(e) => Err(format!("{alg:?} p={p}: unexpected error {e}")),
+            }
+        },
+    );
+}

@@ -105,7 +105,7 @@ fn prop_threaded_execution_matches_reference() {
                 .collect();
 
             let eps = mlsl::fabric::shm::fabric(p);
-            let programs = program::build(CollectiveKind::Allreduce, alg, p, n);
+            let programs = program::build(CollectiveKind::Allreduce, alg, p, n).unwrap();
             let handles: Vec<_> = eps
                 .into_iter()
                 .zip(programs)

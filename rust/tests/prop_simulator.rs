@@ -12,6 +12,10 @@ fn test_topo() -> Topology {
         latency_ns: 500,
         per_msg_overhead_ns: 50,
         chunk_bytes: 1 << 20,
+        ranks_per_node: 1,
+        intra_gbps: 8.0,
+        intra_latency_ns: 500,
+        intra_per_msg_overhead_ns: 50,
     }
 }
 

@@ -1,0 +1,149 @@
+//! Minimal in-tree replacement for the `anyhow` crate.
+//!
+//! This image builds offline (no crates.io access), so the subset of the
+//! anyhow API the workspace actually uses is implemented here: [`Error`],
+//! [`Result`], the [`Context`] extension trait (on both `Result` and
+//! `Option`), and the [`anyhow!`] / [`ensure!`] / [`bail!`] macros.
+//!
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the identity
+//! `From<Error>` impl that `?` needs.
+
+use std::fmt;
+
+/// An error message with a stack of human-readable context frames.
+pub struct Error {
+    msg: String,
+    /// Context frames, innermost first (as attached).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, c: C) -> Self {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, root cause last.
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to errors (and missing `Option` values).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($t)*)));
+        }
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::Error::msg(format!($($t)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("not an integer")?;
+        ensure!(v < 100, "{v} out of range");
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_display_outermost_first() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not an integer: invalid digit found in string");
+    }
+
+    #[test]
+    fn ensure_and_ok_paths() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("200").is_err());
+    }
+
+    #[test]
+    fn option_context_and_macro() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        let e: Error = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e:?}"), "bad 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+}
