@@ -1,0 +1,149 @@
+//! **Ablation A7**: tuned (measured) collective selection.
+//!
+//! Builds a tuning table per fabric preset with the probe, then asserts
+//! two bounds:
+//!
+//! 1. **grid replay** (the acceptance criterion): the tuned policy's
+//!    pick matches the measured-best algorithm in ≥ 90% of grid cells
+//!    and is never > 5% slower than the measured best in any cell;
+//! 2. **holdout replay** (the bound that can actually fail): at the
+//!    geometric MIDPOINT of every adjacent size pair — sizes the table
+//!    never measured — the pick's freshly simulated time stays within
+//!    30% of the freshly simulated best, exercising rank-row snapping,
+//!    log interpolation and the legality fallback off-grid.
+//!
+//! Prints, per preset, how often the analytic model would have agreed
+//! with the measurements — the gap is exactly what the tuner buys.
+//!
+//! Run: `cargo bench --bench a7_tuned_selection`
+
+use mlsl::collectives::program::CollectiveKind;
+use mlsl::fabric::topology::Topology;
+use mlsl::metrics::print_table;
+use mlsl::tuner::{probe, ProbeSpec, SelectionPolicy};
+use mlsl::util::stats::fmt_bytes;
+
+fn main() {
+    let mut spec = ProbeSpec::quick();
+    spec.max_ranks = 32;
+    spec.max_bytes = 16 << 20;
+    spec.size_points = 6;
+    let mut rows = Vec::new();
+    for topo in [
+        Topology::eth_10g(),
+        Topology::eth_10g_smp(2),
+        Topology::omnipath_100g(),
+        Topology::omnipath_100g_smp(4),
+    ] {
+        let table = probe::tune(&topo, &spec);
+        let policy = SelectionPolicy::TunedWithFallback(table.clone());
+        let (mut total, mut matched, mut analytic_matched) = (0usize, 0usize, 0usize);
+        let mut worst = 1.0f64;
+        for kind in probe::TUNED_KINDS {
+            for cell in table.cells(kind) {
+                let (best, best_ns) = cell.best().expect("probed cells are non-empty");
+                let pick = match kind {
+                    CollectiveKind::Allreduce => {
+                        policy.choose_allreduce(&topo, cell.ranks, cell.bytes)
+                    }
+                    _ => policy.choose_allgather(&topo, cell.ranks, cell.bytes),
+                };
+                let pick_ns = cell.time_of(pick).expect("picks come from measured candidates");
+                let slow = pick_ns as f64 / best_ns.max(1) as f64;
+                assert!(
+                    slow <= 1.05,
+                    "{} {kind:?} p={} {}: tuned pick {pick} is {slow:.3}x the measured best {best}",
+                    topo.name,
+                    cell.ranks,
+                    fmt_bytes(cell.bytes),
+                );
+                total += 1;
+                if pick == best {
+                    matched += 1;
+                }
+                worst = worst.max(slow);
+                let analytic = match kind {
+                    CollectiveKind::Allreduce => {
+                        SelectionPolicy::Analytic.choose_allreduce(&topo, cell.ranks, cell.bytes)
+                    }
+                    _ => SelectionPolicy::Analytic.choose_allgather(&topo, cell.ranks, cell.bytes),
+                };
+                if analytic == best {
+                    analytic_matched += 1;
+                }
+            }
+        }
+        let pct = 100.0 * matched as f64 / total.max(1) as f64;
+        assert!(
+            pct >= 90.0,
+            "{}: tuned pick matched the measured best in only {pct:.1}% of {total} cells",
+            topo.name
+        );
+
+        // Holdout replay: interpolated picks at never-measured sizes.
+        let mut holdout_worst = 1.0f64;
+        let mut holdouts = 0usize;
+        for kind in probe::TUNED_KINDS {
+            for p in table.rank_rows(kind) {
+                let sizes: Vec<u64> = table
+                    .cells(kind)
+                    .iter()
+                    .filter(|c| c.ranks == p)
+                    .map(|c| c.bytes)
+                    .collect();
+                for w in sizes.windows(2) {
+                    let mid = ((w[0] as f64 * w[1] as f64).sqrt()).round() as u64;
+                    let pick = match kind {
+                        CollectiveKind::Allreduce => policy.choose_allreduce(&topo, p, mid),
+                        _ => policy.choose_allgather(&topo, p, mid),
+                    };
+                    let fresh: Vec<(mlsl::collectives::Algorithm, u64)> =
+                        probe::probe_candidates(&topo, kind, p)
+                            .into_iter()
+                            .map(|a| (a, probe::measure_ns(&topo, kind, a, p, mid)))
+                            .collect();
+                    let best = fresh.iter().map(|(_, t)| *t).min().expect("non-empty");
+                    let pick_ns = fresh
+                        .iter()
+                        .find(|(a, _)| *a == pick)
+                        .map(|(_, t)| *t)
+                        .expect("pick comes from the candidate set");
+                    let slow = pick_ns as f64 / best.max(1) as f64;
+                    assert!(
+                        slow <= 1.30,
+                        "{} {kind:?} p={p} holdout {}: pick {pick} is {slow:.3}x fresh best",
+                        topo.name,
+                        fmt_bytes(mid),
+                    );
+                    holdout_worst = holdout_worst.max(slow);
+                    holdouts += 1;
+                }
+            }
+        }
+
+        rows.push(vec![
+            topo.name.clone(),
+            total.to_string(),
+            format!("{pct:.1}%"),
+            format!("{:.1}%", 100.0 * analytic_matched as f64 / total.max(1) as f64),
+            format!("{worst:.3}x"),
+            format!("{holdout_worst:.3}x ({holdouts})"),
+        ]);
+    }
+    print_table(
+        "A7: tuned selection vs measured best (grid + holdout replay)",
+        &[
+            "fabric",
+            "cells",
+            "tuned match",
+            "analytic match",
+            "grid worst-case",
+            "holdout worst-case",
+        ],
+        &rows,
+    );
+    println!("\nacceptance: tuned match >= 90% per fabric, grid worst-case <= 1.05x, and");
+    println!("interpolated holdout (midpoint) picks <= 1.30x the fresh best (all asserted).");
+    println!("the analytic column is the closed-form model scored against the same");
+    println!("measurements — the shortfall is what measurement-driven selection buys.");
+}

@@ -17,11 +17,15 @@
 //! * **Hybrid**: groups of g nodes do model parallelism inside a group,
 //!   data parallelism across P/g groups; both terms shrink.
 //!
-//! All network-time predictions go through
-//! [`crate::collectives::selector::predict_allreduce_ns`], which prices
-//! each hop with the TWO-TIER alpha–beta model of
+//! All network-time predictions go through a
+//! [`crate::tuner::SelectionPolicy`] (the `*_with_policy` variants; the
+//! plain functions use the analytic default), whose analytic path is
+//! [`crate::collectives::selector::predict_allreduce_ns`] — pricing each
+//! hop with the TWO-TIER alpha–beta model of
 //! [`crate::fabric::topology::Topology`]: intra-node hops (co-located
 //! ranks) at the shared-memory tier, inter-node hops at the fabric tier.
+//! With a measured tuning table loaded, allreduce terms come from
+//! (log-interpolated) measurements instead of the closed forms.
 //! On multi-rank-per-node topologies this also makes model-parallel
 //! groups that fit inside one node dramatically cheaper — their
 //! activation exchanges never touch the NIC.
@@ -121,6 +125,29 @@ pub fn best_group_size(
     p: usize,
     batch: usize,
 ) -> (usize, u64) {
+    best_group_size_with_policy(
+        model,
+        topo,
+        node,
+        p,
+        batch,
+        &crate::tuner::SelectionPolicy::Analytic,
+    )
+}
+
+/// [`best_group_size`] under an explicit [`crate::tuner::SelectionPolicy`]:
+/// with a tuned policy the gradient-allreduce terms come from measured
+/// (interpolated) table cells instead of the closed-form model, so the
+/// design-space search calibrates to the same measurements the engine
+/// selects with.
+pub fn best_group_size_with_policy(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+    policy: &crate::tuner::SelectionPolicy,
+) -> (usize, u64) {
     let mut best = (1usize, u64::MAX);
     let mut g = 1usize;
     while g <= p {
@@ -157,16 +184,9 @@ pub fn best_group_size(
                     // since member distance says nothing about
                     // co-location.
                     grad_ns += if g == 1 {
-                        crate::collectives::selector::predict_allreduce_ns(
-                            topo,
-                            crate::collectives::Algorithm::Auto,
-                            groups,
-                            bytes,
-                        )
+                        policy.predict_allreduce_ns(topo, groups, bytes)
                     } else {
-                        let alg = crate::collectives::selector::choose_flat_algorithm(
-                            topo, groups, bytes,
-                        );
+                        let alg = policy.choose_flat_allreduce(topo, groups, bytes);
                         crate::collectives::selector::predict_flat_inter_allreduce_ns(
                             topo, alg, groups, bytes,
                         )
@@ -196,6 +216,28 @@ pub fn predict_iteration_ns(
     batch: usize,
     comm_cores: usize,
 ) -> u64 {
+    predict_iteration_ns_with_policy(
+        model,
+        topo,
+        node,
+        p,
+        batch,
+        comm_cores,
+        &crate::tuner::SelectionPolicy::Analytic,
+    )
+}
+
+/// [`predict_iteration_ns`] under an explicit selection policy (measured
+/// allreduce times when a tuning table is available).
+pub fn predict_iteration_ns_with_policy(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+    comm_cores: usize,
+    policy: &crate::tuner::SelectionPolicy,
+) -> u64 {
     let compute_ns = node.compute_ns(model.step_flops(batch), comm_cores);
     if p <= 1 {
         return compute_ns;
@@ -203,9 +245,8 @@ pub fn predict_iteration_ns(
     let mut comm_ns = 0u64;
     for (_, layer) in model.weighted_layers() {
         let bytes = comm_bytes(layer, Parallelism::Data, p, batch);
-        comm_ns += crate::collectives::selector::predict_allreduce_ns(
+        comm_ns += policy.predict_allreduce_ns(
             topo,
-            crate::collectives::Algorithm::Auto,
             p,
             // predict takes total buffer bytes; comm_bytes already has the
             // ring factor, so undo it here.
@@ -356,5 +397,40 @@ mod tests {
         let l = conv_layer();
         assert_eq!(comm_bytes(&l, Parallelism::Data, 1, 32), 0);
         assert!(ratio(&l, Parallelism::Data, 1, 32).is_infinite());
+    }
+
+    #[test]
+    fn policy_threading_defaults_to_analytic_and_accepts_tables() {
+        use crate::tuner::{tune, ProbeSpec, SelectionPolicy};
+        let model = ModelDesc::by_name("resnet50").unwrap();
+        let topo = crate::fabric::topology::Topology::eth_10g();
+        let node = crate::fabric::topology::NodeSpec::skylake_6148();
+        // The plain entry points are exactly the analytic policy.
+        assert_eq!(
+            best_group_size(&model, &topo, &node, 16, 16),
+            best_group_size_with_policy(&model, &topo, &node, 16, 16, &SelectionPolicy::Analytic)
+        );
+        assert_eq!(
+            predict_iteration_ns(&model, &topo, &node, 16, 16, 2),
+            predict_iteration_ns_with_policy(
+                &model,
+                &topo,
+                &node,
+                16,
+                16,
+                2,
+                &SelectionPolicy::Analytic
+            )
+        );
+        // A measured table yields a sane prediction of the same magnitude
+        // (measured and modeled times agree within the sim-vs-model slack).
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 16;
+        let policy = SelectionPolicy::TunedWithFallback(tune(&topo, &spec));
+        let analytic = predict_iteration_ns(&model, &topo, &node, 16, 16, 2);
+        let tuned =
+            predict_iteration_ns_with_policy(&model, &topo, &node, 16, 16, 2, &policy);
+        let ratio = tuned as f64 / analytic as f64;
+        assert!((0.5..2.0).contains(&ratio), "tuned={tuned} analytic={analytic}");
     }
 }

@@ -16,7 +16,11 @@
 //! Algorithm choice ([`selector`]) follows the paper's "implements
 //! performance critical data path operations in an optimal manner":
 //! latency-optimal recursive doubling for small payloads,
-//! bandwidth-optimal ring for large ones, halving-doubling in between.
+//! bandwidth-optimal ring for large ones, halving-doubling in between —
+//! for allgather too (ring vs block-doubling). The closed forms here are
+//! the *analytic* arm of [`crate::tuner::SelectionPolicy`]; the tuned arm
+//! replaces them with crossovers measured by running these same programs
+//! through [`simexec`] on the live topology.
 //!
 //! ## Two-tier (hierarchical) collectives
 //!

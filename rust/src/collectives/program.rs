@@ -139,6 +139,39 @@ pub fn allgather_ring(p: usize, n: usize) -> Vec<Program> {
     allgather_ring_shifted(p, n, 0)
 }
 
+/// Recursive-doubling allgather: rank r starts owning segment r; the
+/// round at partner distance d exchanges the currently-held d-segment
+/// block, doubling it. Same total volume as the ring (n·(p−1)/p elements
+/// per rank) in only log₂ p rounds. P must be a power of two.
+pub fn allgather_rdoubling(p: usize, n: usize) -> Vec<Program> {
+    assert_pow2(p);
+    let seg = segments(n, p);
+    (0..p)
+        .map(|r| {
+            let mut steps = Vec::new();
+            let mut d = 1;
+            while d < p {
+                let partner = r ^ d;
+                // Entering this round, a rank holds the aligned d-segment
+                // block containing its own segment; the partner holds the
+                // sibling block.
+                let lo = (r / d) * d;
+                let plo = (partner / d) * d;
+                steps.push(Step {
+                    send: Some(SendStep { to: partner, range: seg_span(&seg, lo, lo + d) }),
+                    recv: Some(RecvStep {
+                        from: partner,
+                        range: seg_span(&seg, plo, plo + d),
+                        reduce: false,
+                    }),
+                });
+                d <<= 1;
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
 /// Ring allreduce = ring reduce-scatter ∘ ring allgather. Bandwidth cost
 /// 2·(p−1)/p · n elements per rank: optimal.
 pub fn allreduce_ring(p: usize, n: usize) -> Vec<Program> {
@@ -491,6 +524,9 @@ pub fn build(
             _ => {}
         }
     }
+    if kind == K::Allgather && alg == A::RecursiveDoubling && !p.is_power_of_two() {
+        return Err(BuildError::NonPowerOfTwoRanks { alg, p });
+    }
     Ok(match (kind, alg) {
         (K::Allreduce, A::Ring) => allreduce_ring(p, n),
         (K::Allreduce, A::RecursiveDoubling) => allreduce_rdoubling(p, n),
@@ -500,6 +536,7 @@ pub fn build(
             allreduce_hierarchical(p, n, ranks_per_node, inner)
         }
         (K::ReduceScatter, _) => reduce_scatter_ring(p, n),
+        (K::Allgather, A::RecursiveDoubling) => allgather_rdoubling(p, n),
         (K::Allgather, _) => allgather_ring(p, n),
         (K::Broadcast { root }, _) => broadcast_binomial(p, n, root),
         (K::Reduce { root }, _) => reduce_binomial(p, n, root),

@@ -136,19 +136,29 @@ fn flat_candidates(p: usize) -> Vec<Algorithm> {
     c
 }
 
-/// Pick the cheapest supported algorithm for this (fabric, p, bytes).
+/// Every allreduce algorithm the selector considers at this (fabric, p).
 /// Hierarchical is a candidate only when the topology is multi-rank-per-
 /// node and its node size divides `p` (contiguous full-node communicator).
-pub fn choose_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+/// The tuning probe ([`crate::tuner::probe`]) measures EXACTLY this set,
+/// so tuned tables and the analytic chooser pick from the same menu.
+pub fn candidate_algorithms(topo: &Topology, p: usize) -> Vec<Algorithm> {
     if p <= 1 {
-        return Algorithm::Ring;
+        return vec![Algorithm::Ring];
     }
     let rpn = topo.ranks_per_node;
     let mut candidates = flat_candidates(p);
     if rpn > 1 && p > rpn && p % rpn == 0 {
         candidates.push(Algorithm::Hierarchical { ranks_per_node: rpn });
     }
-    *candidates
+    candidates
+}
+
+/// Pick the cheapest supported algorithm for this (fabric, p, bytes).
+pub fn choose_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+    if p <= 1 {
+        return Algorithm::Ring;
+    }
+    *candidate_algorithms(topo, p)
         .iter()
         .min_by_key(|a| predict_allreduce_ns(topo, **a, p, bytes))
         .unwrap()
@@ -188,6 +198,90 @@ pub fn choose_flat_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm
     *flat_candidates(p)
         .iter()
         .min_by_key(|a| predict_flat_inter_allreduce_ns(topo, **a, p, bytes))
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Allgather pricing (activation exchanges)
+// ---------------------------------------------------------------------------
+
+/// Allgather algorithms legal at this rank count: ring always; recursive
+/// doubling (block-doubling allgather, same volume in log₂ p rounds) only
+/// at power-of-two rank counts.
+pub fn allgather_candidates(p: usize) -> Vec<Algorithm> {
+    let mut c = vec![Algorithm::Ring];
+    if p > 1 && p.is_power_of_two() {
+        c.push(Algorithm::RecursiveDoubling);
+    }
+    c
+}
+
+/// Two-tier cost of a flat allgather of `n` total bytes over `p` ranks
+/// (each rank contributes n/p); `rpn = 1` prices every hop inter-tier.
+fn allgather_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f64 {
+    let pf = p as f64;
+    match alg {
+        Algorithm::Ring => {
+            // p−1 lockstep steps of n/p bytes, gated by the slowest hop.
+            let t = if p <= rpn { Tier::Intra } else { Tier::Inter };
+            (pf - 1.0) * (alpha(topo, t) + n / pf / bw(topo, t))
+        }
+        Algorithm::RecursiveDoubling if p.is_power_of_two() => {
+            // The round at partner distance d exchanges the held block of
+            // n·d/p bytes; total volume matches the ring in log₂ p rounds.
+            let mut total = 0.0;
+            let mut d = 1;
+            while d < p {
+                let t = tier_at(d, rpn);
+                total += alpha(topo, t) + n * d as f64 / pf / bw(topo, t);
+                d <<= 1;
+            }
+            total
+        }
+        _ => f64::INFINITY,
+    }
+}
+
+/// Predicted wall time of an allgather of `bytes` (total buffer) over `p`
+/// ranks, priced with the same two-tier model as allreduce.
+pub fn predict_allgather_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u64) -> Ns {
+    if p <= 1 {
+        return 0;
+    }
+    if alg == Algorithm::Auto {
+        let best = choose_allgather_algorithm(topo, p, bytes);
+        return predict_allgather_ns(topo, best, p, bytes);
+    }
+    let rpn = topo.ranks_per_node.max(1);
+    let t = allgather_cost(topo, alg, p, bytes as f64, rpn);
+    if t.is_finite() {
+        t.ceil() as Ns
+    } else {
+        Ns::MAX / 4
+    }
+}
+
+/// Pick the cheapest allgather algorithm for this (fabric, p, bytes) over
+/// a node-aligned (contiguous) communicator.
+pub fn choose_allgather_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+    if p <= 1 {
+        return Algorithm::Ring;
+    }
+    *allgather_candidates(p)
+        .iter()
+        .min_by_key(|a| predict_allgather_ns(topo, **a, p, bytes))
+        .unwrap()
+}
+
+/// Like [`choose_allgather_algorithm`] but priced all inter-tier — for
+/// communicators that do not decompose into whole nodes.
+pub fn choose_flat_allgather_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+    if p <= 1 {
+        return Algorithm::Ring;
+    }
+    *allgather_candidates(p)
+        .iter()
+        .min_by_key(|a| allgather_cost(topo, **a, p, bytes as f64, 1).ceil() as Ns)
         .unwrap()
 }
 
@@ -392,6 +486,56 @@ mod tests {
         let small = choose_algorithm(&topo, 32, 1024);
         let large = choose_algorithm(&topo, 32, 64 << 20);
         assert_ne!(small, large);
+    }
+
+    #[test]
+    fn allgather_rdoubling_wins_at_pow2_ring_otherwise() {
+        let topo = Topology::eth_10g();
+        // Same volume, fewer latency rounds: rd must win for p > 2…
+        for bytes in [1u64 << 10, 1 << 20, 64 << 20] {
+            assert_eq!(
+                choose_allgather_algorithm(&topo, 32, bytes),
+                Algorithm::RecursiveDoubling,
+                "bytes={bytes}"
+            );
+        }
+        // …and non-power-of-two rank counts only have the ring.
+        for p in [3usize, 6, 12, 100] {
+            assert_eq!(choose_allgather_algorithm(&topo, p, 1 << 20), Algorithm::Ring, "p={p}");
+        }
+    }
+
+    #[test]
+    fn allgather_prediction_monotone_and_tier_aware() {
+        let topo = Topology::omnipath_100g();
+        for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling] {
+            let a = predict_allgather_ns(&topo, alg, 16, 1 << 10);
+            let b = predict_allgather_ns(&topo, alg, 16, 1 << 24);
+            assert!(b > a, "{alg:?}");
+        }
+        // A 4-rank ring inside one node rides the intra tier; the flat
+        // (all-inter) pricing must not inherit that discount.
+        let smp = Topology::eth_10g_smp(4);
+        let intra = predict_allgather_ns(&smp, Algorithm::Ring, 4, 1 << 20);
+        let flat = predict_allgather_ns(&Topology::eth_10g(), Algorithm::Ring, 4, 1 << 20);
+        assert!(intra < flat / 10, "intra={intra} flat={flat}");
+        assert_eq!(choose_flat_allgather_algorithm(&smp, 6, 1 << 20), Algorithm::Ring);
+    }
+
+    #[test]
+    fn candidate_sets_match_chooser_support() {
+        let smp = Topology::eth_10g_smp(2);
+        assert!(candidate_algorithms(&smp, 8)
+            .contains(&Algorithm::Hierarchical { ranks_per_node: 2 }));
+        assert!(!candidate_algorithms(&Topology::eth_10g(), 8)
+            .iter()
+            .any(|a| matches!(a, Algorithm::Hierarchical { .. })));
+        assert_eq!(candidate_algorithms(&smp, 1), vec![Algorithm::Ring]);
+        assert_eq!(allgather_candidates(6), vec![Algorithm::Ring]);
+        assert_eq!(
+            allgather_candidates(8),
+            vec![Algorithm::Ring, Algorithm::RecursiveDoubling]
+        );
     }
 
     #[test]

@@ -283,6 +283,16 @@ mod tests {
     }
 
     #[test]
+    fn allgather_rdoubling_correct() {
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in [1usize, 5, 24, 33, 100] {
+                verify(K::Allgather, A::RecursiveDoubling, p, n)
+                    .unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
     fn broadcast_correct_all_roots() {
         for p in 1..=9 {
             for root in 0..p {

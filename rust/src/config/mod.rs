@@ -106,6 +106,17 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.iterations = iterations;
     cfg.record_timeline = args.bool("timeline");
     cfg.jitter = get("jitter", "0.0").parse().context("--jitter")?;
+    // Measured collective selection: `--tuning-table <path>` loads a table
+    // produced by `mlsl tune` and installs it with analytic fallback (a
+    // table whose fingerprint does not match this topology is ignored at
+    // query time). Without the flag, the analytic model stays the default.
+    if let Some(path) = args.get("tuning-table").or_else(|| file.get("tuning-table")) {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read tuning table {path}"))?;
+        let table = crate::tuner::TuningTable::parse(&text)
+            .map_err(|e| anyhow!("parse tuning table {path}: {e}"))?;
+        cfg.selection = crate::tuner::SelectionPolicy::TunedWithFallback(table);
+    }
     Ok(cfg)
 }
 
@@ -155,6 +166,41 @@ mod tests {
         assert!(engine_config(&args("--mode nope")).is_err());
         assert!(engine_config(&args("--ranks-per-node 0")).is_err());
         assert!(engine_config(&args("--ranks-per-node two")).is_err());
+    }
+
+    #[test]
+    fn tuning_table_flag_installs_tuned_policy() {
+        use crate::tuner::{SelectionPolicy, TuningTable};
+        // No flag → analytic stays the default.
+        let cfg = engine_config(&args("")).unwrap();
+        assert_eq!(cfg.selection, SelectionPolicy::Analytic);
+        // A (tiny) table on disk → tuned with fallback.
+        let topo = Topology::by_name("eth10g").unwrap();
+        let mut table = TuningTable::for_topology(&topo);
+        table.insert(
+            crate::collectives::CollectiveKind::Allreduce,
+            crate::tuner::table::MeasuredCell::new(
+                4,
+                1024,
+                vec![(crate::collectives::Algorithm::Ring, 5_000)],
+            ),
+        );
+        let dir = std::env::temp_dir().join("mlsl_tuning_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("table.json");
+        std::fs::write(&p, table.to_json_string()).unwrap();
+        let cfg = engine_config(&args(&format!(
+            "--topo eth10g --tuning-table {}",
+            p.display()
+        )))
+        .unwrap();
+        assert_eq!(cfg.selection.name(), "tuned+fallback");
+        assert_eq!(cfg.selection, SelectionPolicy::TunedWithFallback(table));
+        // Unreadable / malformed tables are hard errors, not silence.
+        assert!(engine_config(&args("--tuning-table /nonexistent/t.json")).is_err());
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(engine_config(&args(&format!("--tuning-table {}", bad.display()))).is_err());
     }
 
     #[test]

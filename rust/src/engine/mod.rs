@@ -25,15 +25,15 @@ pub use report::Report;
 
 use std::collections::HashMap;
 
-use crate::collectives::program::{allgather_ring, build, CollectiveKind};
-use crate::collectives::selector::{choose_algorithm, choose_flat_algorithm};
+use crate::collectives::program::{build, CollectiveKind};
 use crate::collectives::simexec::SimCollectives;
-use crate::collectives::{Algorithm, PriorityPolicy, WireDtype};
+use crate::collectives::{PriorityPolicy, WireDtype};
 use crate::fabric::topology::{NodeSpec, Topology};
 use crate::fabric::{NetSim, SimEvent};
 use crate::metrics::Timeline;
 use crate::mlsl::Distribution;
 use crate::models::ModelDesc;
+use crate::tuner::SelectionPolicy;
 use crate::{Ns, Priority, Rank};
 
 /// Communication runtime mode (see module docs).
@@ -66,6 +66,9 @@ pub struct EngineConfig {
     pub batch: usize,
     pub mode: CommMode,
     pub policy: PriorityPolicy,
+    /// Who picks collective algorithms: the analytic model (default) or a
+    /// measured tuning table (`--tuning-table`).
+    pub selection: SelectionPolicy,
     pub wire: WireDtype,
     /// Measured iterations (one extra warmup iteration is always run).
     pub iterations: usize,
@@ -89,6 +92,7 @@ impl EngineConfig {
             batch: 32,
             mode: CommMode::MlslAsync { comm_cores: 2 },
             policy: PriorityPolicy::ByLayer,
+            selection: SelectionPolicy::Analytic,
             wire: WireDtype::F32,
             iterations: 3,
             record_timeline: false,
@@ -159,6 +163,9 @@ struct CommMeta {
     members: Vec<Rank>,
     elems: usize,
     priority: Priority,
+    /// Members whose completion has not been observed yet; the meta is
+    /// garbage-collected when this reaches zero.
+    remaining: usize,
 }
 
 struct NodeState {
@@ -224,6 +231,12 @@ impl Engine {
 
     /// Run the configured number of iterations; produce the report.
     pub fn run(mut self) -> Report {
+        self.run_to_completion()
+    }
+
+    /// [`Engine::run`] on a borrowed engine (tests inspect post-run
+    /// bookkeeping, e.g. that `metas` was garbage-collected).
+    fn run_to_completion(&mut self) -> Report {
         let p = self.cfg.dist.world();
         let total_iters = self.cfg.iterations + 1; // + warmup
         for n in 0..p {
@@ -258,7 +271,10 @@ impl Engine {
                 self.on_comm_done(c.coll_id, c.rank);
             }
         }
-        report::build_report(&self.cfg, &self.sim, &self.nodes.iter().map(|n| n.iter_starts.clone()).collect::<Vec<_>>(), self.timeline)
+        let timeline = std::mem::replace(&mut self.timeline, Timeline::new());
+        let iter_starts: Vec<Vec<Ns>> =
+            self.nodes.iter().map(|n| n.iter_starts.clone()).collect();
+        report::build_report(&self.cfg, &self.sim, &iter_starts, timeline)
     }
 
     // -- state machine ------------------------------------------------------
@@ -480,6 +496,7 @@ impl Engine {
                     members: members.clone(),
                     elems,
                     priority,
+                    remaining: members.len(),
                 },
             );
             id
@@ -495,26 +512,29 @@ impl Engine {
                 CommKind::Grad { .. } => CollectiveKind::Allreduce,
                 _ => CollectiveKind::Allgather,
             };
-            let alg = match ckind {
-                CollectiveKind::Allreduce => {
-                    // Hierarchical programs assume program-rank node blocks
-                    // map onto physical nodes; only offer them when the
-                    // member set decomposes into whole nodes (e.g. the
-                    // world under pure data parallelism). Strided hybrid
-                    // communicators fall back to the flat algorithms.
-                    if self.cfg.topo.ranks_node_aligned(&members) {
-                        choose_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
-                    } else {
-                        choose_flat_algorithm(&self.cfg.topo, pm, (4 * elems) as u64)
-                    }
+            // Hierarchical programs (and intra-tier pricing) assume
+            // program-rank node blocks map onto physical nodes; only use
+            // the node-aligned choosers when the member set decomposes
+            // into whole nodes (e.g. the world under pure data
+            // parallelism). Strided hybrid communicators get the flat
+            // all-inter choice. Either way, the configured selection
+            // policy (analytic model or measured tuning table) decides.
+            let bytes = (4 * elems) as u64;
+            let aligned = self.cfg.topo.ranks_node_aligned(&members);
+            let alg = match (ckind, aligned) {
+                (CollectiveKind::Allreduce, true) => {
+                    self.cfg.selection.choose_allreduce(&self.cfg.topo, pm, bytes)
                 }
-                _ => Algorithm::Ring,
+                (CollectiveKind::Allreduce, false) => {
+                    self.cfg.selection.choose_flat_allreduce(&self.cfg.topo, pm, bytes)
+                }
+                (_, true) => self.cfg.selection.choose_allgather(&self.cfg.topo, pm, bytes),
+                (_, false) => {
+                    self.cfg.selection.choose_flat_allgather(&self.cfg.topo, pm, bytes)
+                }
             };
-            let programs = match ckind {
-                CollectiveKind::Allgather => allgather_ring(pm, elems),
-                _ => build(ckind, alg, pm, elems)
-                    .expect("selector only produces buildable algorithms"),
-            };
+            let programs = build(ckind, alg, pm, elems)
+                .expect("selection policies only return buildable algorithms");
             if self.cfg.record_timeline && members.contains(&0) {
                 let now = self.sim.now();
                 let label = match kind {
@@ -539,12 +559,15 @@ impl Engine {
     }
 
     fn on_comm_done(&mut self, coll_id: u64, node: Rank) {
-        let kind = self.metas.get(&coll_id).expect("known collective").kind;
-        self.complete_comm_for(kind, node);
-        // GC the meta once everyone finished (the collective left simexec).
-        if self.colls.in_flight() < self.metas.len().saturating_sub(8) {
-            // cheap periodic cleanup; correctness doesn't depend on it
+        let meta = self.metas.get_mut(&coll_id).expect("known collective");
+        let kind = meta.kind;
+        meta.remaining = meta.remaining.saturating_sub(1);
+        if meta.remaining == 0 {
+            // Every member completed (the collective left simexec): GC the
+            // meta so `metas` stays bounded across iterations.
+            self.metas.remove(&coll_id);
         }
+        self.complete_comm_for(kind, node);
     }
 
     fn complete_comm_for(&mut self, kind: CommKind, node: Rank) {
@@ -713,6 +736,48 @@ mod tests {
         c.iterations = 2;
         let r = simulate(c);
         assert!(r.iter_ns > 0);
+    }
+
+    #[test]
+    fn comm_metas_are_garbage_collected() {
+        // Before the GC fix, `metas` grew by one entry per collective for
+        // the whole run; now every completed collective drops its meta.
+        let mut c = cfg("resnet50", 4, CommMode::MlslAsync { comm_cores: 2 });
+        c.iterations = 3;
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        assert!(e.metas.is_empty(), "{} metas leaked", e.metas.len());
+        assert!(e.open.is_empty(), "{} open entries leaked", e.open.len());
+    }
+
+    #[test]
+    fn tuned_selection_policy_runs_and_moves_same_traffic() {
+        // Same run under the analytic and a measured-table policy: the
+        // algorithms may differ, but the simulation completes and the
+        // tuned run is a valid training iteration.
+        let topo = Topology::eth_10g_smp(2);
+        let mut analytic = cfg("resnet50", 8, CommMode::BulkSync);
+        analytic.topo = topo.clone();
+        analytic.iterations = 1;
+        let mut tuned = analytic.clone();
+        let mut spec = crate::tuner::ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let table = crate::tuner::tune(&topo, &spec);
+        tuned.selection = SelectionPolicy::TunedWithFallback(table);
+        let ra = simulate(analytic);
+        let rt = simulate(tuned);
+        assert!(rt.iter_ns > 0);
+        // Ring / halving-doubling / hierarchical allreduce all move the
+        // same per-node volume; only rdoubling differs, and it only wins
+        // tiny layers — total traffic stays within a few percent.
+        let ratio = rt.bytes_per_node as f64 / ra.bytes_per_node.max(1) as f64;
+        assert!(
+            (0.8..1.25).contains(&ratio),
+            "tuned={} analytic={}",
+            rt.bytes_per_node,
+            ra.bytes_per_node
+        );
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //!   progresses — this models plain MPI non-blocking collectives without
 //!   an async progress thread (communication only advances inside
 //!   blocking MPI calls), the out-of-box Horovod behaviour of claim C2.
+//! * **Topology-aware priorities**: urgency classes exist only on the
+//!   contended inter-node tier. Intra-node (shared-memory) hops bypass
+//!   the NIC priority queue entirely — each rank additionally owns a shm
+//!   egress channel (mirroring the per-rank NIC egress model) where its
+//!   intra copies serialize in plain FIFO order, one free class. An
+//!   "urgent" intra copy can neither preempt nor be delayed by NIC
+//!   traffic: shared-memory copies never cross the NIC.
 //!
 //! The simulator is deterministic: equal-time events fire in issue order.
 
@@ -38,10 +45,20 @@ pub enum SimEvent {
     ComputeDone { node: Rank, tag: u64, at: Ns },
 }
 
+/// Which egress channel of a node a transfer serializes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Chan {
+    /// The NIC: strict-priority, preemptive — the contended tier.
+    Inter,
+    /// The intra-node shared-memory channel: priority-free FIFO.
+    Shm,
+}
+
 #[derive(Debug)]
 enum Internal {
-    /// Candidate egress completion for (node, xfer); validated by generation.
-    EgressDone { node: Rank, xfer: u64, gen: u64 },
+    /// Candidate egress completion for (node, chan, xfer); validated by
+    /// the channel's generation counter.
+    EgressDone { node: Rank, chan: Chan, xfer: u64, gen: u64 },
     Deliver { msg_idx: usize },
     ComputeDone { node: Rank, tag: u64 },
 }
@@ -101,6 +118,11 @@ pub struct NetSim {
     p: usize,
     queue: EventQueue<Internal>,
     nics: Vec<Nic>,
+    /// Per-RANK shared-memory egress channels (intra-node hops only):
+    /// same serialization model as the per-rank NIC but a single free
+    /// class — FIFO, no urgency, no preemption. Co-located ranks copy
+    /// concurrently (each models its own copy engine / memory port).
+    shms: Vec<Nic>,
     msgs: Vec<MsgDesc>,
     next_xfer_id: u64,
     pub stats: SimStats,
@@ -109,14 +131,32 @@ pub struct NetSim {
 impl NetSim {
     pub fn new(topo: Topology, p: usize) -> Self {
         let nics = (0..p).map(|_| Nic::default()).collect();
+        let shms = (0..p).map(|_| Nic::default()).collect();
         Self {
             topo,
             p,
             queue: EventQueue::new(),
             nics,
+            shms,
             msgs: Vec::new(),
             next_xfer_id: 0,
             stats: SimStats::default(),
+        }
+    }
+
+    /// The channel a message serializes on, per the topology's tiers.
+    fn chan_of(&self, msg: &MsgDesc) -> Chan {
+        if self.topo.same_node(msg.src, msg.dst) {
+            Chan::Shm
+        } else {
+            Chan::Inter
+        }
+    }
+
+    fn chan_mut(&mut self, node: Rank, chan: Chan) -> &mut Nic {
+        match chan {
+            Chan::Inter => &mut self.nics[node],
+            Chan::Shm => &mut self.shms[node],
         }
     }
 
@@ -140,9 +180,17 @@ impl NetSim {
         let node = msg.src;
         let msg_idx = self.msgs.len();
         // Two-tier pricing: intra-node hops (same node under the topology's
-        // contiguous grouping) serialize at the shared-memory tier rate.
+        // contiguous grouping) serialize at the shared-memory tier rate —
+        // on their own channel, bypassing the NIC priority queue.
+        let chan = self.chan_of(&msg);
         let cost = self.topo.overhead_between(msg.src, msg.dst)
             + self.topo.wire_ns_between(msg.src, msg.dst, msg.bytes);
+        // Urgency classes apply only on the contended inter tier; the shm
+        // channel is one free class (FIFO by transfer id).
+        let class = match chan {
+            Chan::Inter => msg.priority,
+            Chan::Shm => 0,
+        };
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
         *self.stats.bytes_by_priority.entry(msg.priority).or_insert(0) += msg.bytes;
@@ -150,20 +198,20 @@ impl NetSim {
         let id = self.next_xfer_id;
         self.next_xfer_id += 1;
         let now = self.queue.now();
-        let nic = &mut self.nics[node];
+        let nic = self.chan_mut(node, chan);
         nic.slab.insert(
             id,
             Transfer { msg_idx, remaining_ns: cost.max(1), checkpoint: now, running: false },
         );
-        nic.order.push(Reverse((msg.priority, id)));
-        // Fast path: the NIC is already busy with an equal-or-higher
+        nic.order.push(Reverse((class, id)));
+        // Fast path: the channel is already busy with an equal-or-higher
         // priority transfer — no preemption, nothing to reschedule.
         if let Some(run) = nic.running {
             if nic.head() == Some(run) {
                 return;
             }
         }
-        self.reschedule(node);
+        self.reschedule(node, chan);
     }
 
     /// Post a compute timer on `node` for `dur_ns`; fires `ComputeDone{tag}`.
@@ -179,10 +227,15 @@ impl NetSim {
 
     /// Gate/ungate a node's egress (models absence of async progress:
     /// transfers only advance while the host is inside the library).
+    /// Applies to BOTH channels — shared-memory copies also need host
+    /// cycles, which a library without a progress thread only spends
+    /// inside blocking calls.
     pub fn set_comm_gated(&mut self, node: Rank, gated: bool) {
-        if self.nics[node].gated != gated {
-            self.nics[node].gated = gated;
-            self.reschedule(node);
+        for chan in [Chan::Inter, Chan::Shm] {
+            if self.chan_mut(node, chan).gated != gated {
+                self.chan_mut(node, chan).gated = gated;
+                self.reschedule(node, chan);
+            }
         }
     }
 
@@ -191,7 +244,8 @@ impl NetSim {
         self.queue.is_empty()
     }
 
-    /// NIC busy fraction so far for `node` (wire utilization).
+    /// NIC busy fraction so far for `node` (inter-tier wire utilization;
+    /// the shm channel is tracked separately by [`Self::shm_utilization`]).
     pub fn nic_utilization(&self, node: Rank) -> f64 {
         if self.now() == 0 {
             return 0.0;
@@ -199,11 +253,22 @@ impl NetSim {
         self.nics[node].busy_ns as f64 / self.now() as f64
     }
 
+    /// Shared-memory channel busy fraction so far for `node`.
+    pub fn shm_utilization(&self, node: Rank) -> f64 {
+        if self.now() == 0 {
+            return 0.0;
+        }
+        self.shms[node].busy_ns as f64 / self.now() as f64
+    }
+
     /// Checkpoint progress of the currently-running transfer (if any) and
     /// re-elect the highest-priority transfer; (re)schedule its completion.
-    fn reschedule(&mut self, node: Rank) {
+    fn reschedule(&mut self, node: Rank, chan: Chan) {
         let now = self.queue.now();
-        let nic = &mut self.nics[node];
+        let nic = match chan {
+            Chan::Inter => &mut self.nics[node],
+            Chan::Shm => &mut self.shms[node],
+        };
 
         // 1. Stop the running transfer, banking its progress.
         let was_running = nic.running.take();
@@ -223,9 +288,12 @@ impl NetSim {
             return;
         }
         // 2. Elect the head: lowest (priority, id) — FIFO within a class.
+        // The shm channel enqueues everything in one class, so its head
+        // can only change when the running transfer finishes: preemption
+        // is a NIC-only phenomenon (and only the NIC counts them).
         let Some(id) = nic.head() else { return };
         if let Some(prev) = was_running {
-            if prev != id && nic.slab.contains_key(&prev) {
+            if chan == Chan::Inter && prev != id && nic.slab.contains_key(&prev) {
                 self.stats.preemptions += 1;
             }
         }
@@ -236,7 +304,7 @@ impl NetSim {
         nic.busy_since = Some(now);
         let (remaining, gen) = (head.remaining_ns, nic.gen);
         self.queue
-            .push_in(remaining, Internal::EgressDone { node, xfer: id, gen });
+            .push_in(remaining, Internal::EgressDone { node, chan, xfer: id, gen });
     }
 
     /// Advance to and return the next externally-visible event.
@@ -252,18 +320,16 @@ impl NetSim {
                         at,
                     });
                 }
-                Internal::EgressDone { node, xfer, gen } => {
-                    if self.nics[node].gen != gen {
-                        continue; // stale: the NIC was rescheduled since
+                Internal::EgressDone { node, chan, xfer, gen } => {
+                    let nic = self.chan_mut(node, chan);
+                    if nic.gen != gen {
+                        continue; // stale: the channel was rescheduled since
                     }
-                    let t = self.nics[node]
-                        .slab
-                        .remove(&xfer)
-                        .expect("generation-valid transfer exists");
+                    let t = nic.slab.remove(&xfer).expect("generation-valid transfer exists");
                     debug_assert!(t.running);
-                    self.nics[node].running = None;
-                    if let Some(since) = self.nics[node].busy_since.take() {
-                        self.nics[node].busy_ns += at - since;
+                    nic.running = None;
+                    if let Some(since) = nic.busy_since.take() {
+                        nic.busy_ns += at - since;
                     }
                     // In-flight latency (tier-priced), then delivery.
                     let lat = {
@@ -271,7 +337,7 @@ impl NetSim {
                         self.topo.latency_between(m.src, m.dst)
                     };
                     self.queue.push_in(lat, Internal::Deliver { msg_idx: t.msg_idx });
-                    self.reschedule(node);
+                    self.reschedule(node, chan);
                 }
             }
         }
@@ -439,10 +505,9 @@ mod tests {
         }
     }
 
-    #[test]
-    fn two_tier_topology_prices_hops_by_tier() {
-        // 2 ranks/node: ranks {0,1} share a node, rank 2 is remote.
-        // Intra: 80 Gbps = 10 B/ns, alpha 200, gamma 10.
+    /// 2 ranks/node: ranks {0,1} share a node, rank 2 is remote.
+    /// Intra: 80 Gbps = 10 B/ns, alpha 200, gamma 10.
+    fn smp() -> NetSim {
         let topo = Topology {
             name: "test-x2".into(),
             link_gbps: 8.0,
@@ -454,7 +519,12 @@ mod tests {
             intra_latency_ns: 200,
             intra_per_msg_overhead_ns: 10,
         };
-        let mut s = NetSim::new(topo, 4);
+        NetSim::new(topo, 4)
+    }
+
+    #[test]
+    fn two_tier_topology_prices_hops_by_tier() {
+        let mut s = smp();
         s.send(msg(0, 1, 1_000, 1, 1)); // intra: 10 + 100 + 200 = 310
         match s.next().unwrap() {
             SimEvent::MsgDelivered { msg: m, at } => {
@@ -468,6 +538,90 @@ mod tests {
             SimEvent::MsgDelivered { msg: m, at } => {
                 assert_eq!(m.tag, 2);
                 assert_eq!(at, 310 + 2_100);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn intra_hops_bypass_the_nic_priority_queue() {
+        // A bulk intra-node copy 0→1 and an urgent inter-node message 0→2
+        // posted back to back: they ride separate channels, so neither
+        // waits for — or preempts — the other.
+        let mut s = smp();
+        s.send(msg(0, 1, 1_000_000, 9, 1)); // shm: 10 + 100_000 wire + 200
+        s.send(msg(0, 2, 1_000, 0, 2)); // nic: 100 + 1_000 + 1_000
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2, "inter urgent must not queue behind the intra copy");
+                assert_eq!(at, 2_100);
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                assert_eq!(at, 100_210, "intra copy unaffected by NIC traffic");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.stats.preemptions, 0);
+        // Channel utilization is tracked per tier.
+        assert!(s.shm_utilization(0) > 0.0);
+        assert!(s.nic_utilization(0) > 0.0);
+    }
+
+    #[test]
+    fn shm_channel_ignores_urgency_classes() {
+        // Two intra-node copies; the second carries an "urgent" class but
+        // must NOT preempt: intra hops are demoted to a single free class
+        // and serialize FIFO by issue order.
+        let mut s = smp();
+        s.send(msg(0, 1, 1_000_000, 9, 1)); // egress done 100_010
+        s.send(msg(0, 1, 1_000, 0, 2));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1, "FIFO on shm despite the lower priority value");
+                assert_eq!(at, 100_210);
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2);
+                // Queued behind: egress 100_010 + (10 + 100), then 200 in
+                // flight.
+                assert_eq!(at, 100_320);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.stats.preemptions, 0, "no preemption exists on the shm channel");
+    }
+
+    #[test]
+    fn gating_freezes_both_channels() {
+        let mut s = smp();
+        s.set_comm_gated(0, true);
+        s.send(msg(0, 1, 1_000, 1, 1)); // intra
+        s.send(msg(0, 2, 1_000, 1, 2)); // inter
+        s.compute(0, 10_000, 9);
+        assert_eq!(
+            s.next().unwrap(),
+            SimEvent::ComputeDone { node: 0, tag: 9, at: 10_000 }
+        );
+        s.set_comm_gated(0, false);
+        // Intra: 10 + 100 + 200 from t=10_000; inter: 100 + 1_000 + 1_000.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                assert_eq!(at, 10_310);
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2);
+                assert_eq!(at, 12_100);
             }
             other => panic!("{other:?}"),
         }

@@ -29,6 +29,11 @@
 //! * [`engine`] — the framework role: per-layer fwd/bwd iteration timeline
 //!   driving MLSL ops over the simulated fabric; includes the out-of-box
 //!   MPI/Horovod baseline modes the paper compares against.
+//! * [`tuner`] — measurement-driven collective selection: a probe that
+//!   times every candidate algorithm on the live topology, persisted
+//!   tuning tables (fingerprint-keyed, JSON), and the `SelectionPolicy`
+//!   (analytic / tuned / tuned-with-fallback) every algorithm choice goes
+//!   through.
 //! * [`runtime`] — PJRT wrapper (via the `xla` crate) that loads the
 //!   AOT-compiled JAX+Pallas artifacts (`artifacts/*.hlo.txt`).
 //! * [`trainer`] — the *real* data-parallel trainer: rank threads execute
@@ -49,6 +54,7 @@ pub mod models;
 pub mod progress;
 pub mod runtime;
 pub mod trainer;
+pub mod tuner;
 pub mod util;
 
 /// Rank of a node (or thread standing in for a node) inside a communicator.

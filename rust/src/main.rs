@@ -4,19 +4,26 @@
 //! * `info      --model resnet50` — layer table + compute/comm analysis
 //! * `simulate  --model resnet50 --nodes 64 --topo opa --mode mlsl` —
 //!   simulated distributed training, prints the iteration report
+//!   (`--tuning-table t.json` selects algorithms from measurements)
 //! * `scaling   --model resnet50 --nodes 1,2,4,...` — efficiency table
+//! * `tune      --topo eth10g-x2 --out t.json` — measure a collective
+//!   tuning table on a topology (every candidate algorithm across a
+//!   log-spaced rank-count × message-size grid; `--quick` for a tiny CI
+//!   grid) and print the measured crossovers
 //! * `train     --artifacts artifacts/small --ranks 2 --steps 100` — the
 //!   REAL data-parallel trainer over PJRT + prioritized collectives
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use mlsl::analytic::{best_parallelism, ratio, Parallelism};
 use mlsl::collectives::{PriorityPolicy, WireDtype};
 use mlsl::config::engine_config;
 use mlsl::engine::simulate;
+use mlsl::fabric::topology::Topology;
 use mlsl::metrics::print_table;
 use mlsl::models::ModelDesc;
 use mlsl::trainer::{train, TrainerConfig};
+use mlsl::tuner::{probe, ProbeSpec};
 use mlsl::util::cli::Args;
 use mlsl::util::stats::{fmt_bytes, fmt_ns};
 
@@ -26,9 +33,15 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("scaling") => cmd_scaling(&args),
+        Some("tune") => cmd_tune(&args),
         Some("train") => cmd_train(&args),
         other => {
-            eprintln!("usage: mlsl <info|simulate|scaling|train> [--flags]");
+            eprintln!("usage: mlsl <info|simulate|scaling|tune|train> [--flags]");
+            eprintln!(
+                "  tune: --topo <preset> [--ranks-per-node r] [--max-ranks n] \
+                 [--quick] [--out table.json]"
+            );
+            eprintln!("  simulate/scaling take --tuning-table <t.json> (measured selection)");
             if let Some(o) = other {
                 Err(anyhow!("unknown command {o:?}"))
             } else {
@@ -130,6 +143,87 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         &["nodes", "iter", "exposed comm", "efficiency", "samples/s"],
         &rows,
     );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let topo_name = args.str_or("topo", "omnipath100g");
+    let mut topo = Topology::by_name(&topo_name)
+        .ok_or_else(|| anyhow!("unknown topology {topo_name:?}"))?;
+    if let Some(r) = args.get("ranks-per-node") {
+        let r: usize = r.parse().context("--ranks-per-node")?;
+        if r == 0 {
+            return Err(anyhow!("--ranks-per-node must be >= 1"));
+        }
+        topo = topo.with_ranks_per_node(r);
+    }
+    let mut spec = if args.bool("quick") { ProbeSpec::quick() } else { ProbeSpec::full() };
+    spec.max_ranks = args.usize_or("max-ranks", spec.max_ranks);
+    if spec.max_ranks < 2 {
+        return Err(anyhow!("--max-ranks must be >= 2"));
+    }
+    eprintln!(
+        "tuning {}: ranks {:?}, {} sizes in [{}, {}]",
+        topo.name,
+        spec.rank_grid(),
+        spec.size_grid().len(),
+        fmt_bytes(spec.min_bytes),
+        fmt_bytes(spec.max_bytes),
+    );
+    let table = probe::tune_with_progress(&topo, &spec, |done, total| {
+        if done % 25 == 0 || done == total {
+            eprintln!("  probed {done}/{total} cells");
+        }
+    });
+
+    // Measured crossover summary: per (kind, rank row), where the winner
+    // changes along the size axis. Only with --out: without the flag,
+    // stdout IS the JSON table (pipeable straight into --tuning-table)
+    // and must stay pure.
+    if args.get("out").is_some() {
+        for kind in probe::TUNED_KINDS {
+            let key = mlsl::tuner::table::kind_key(kind).expect("tuned kinds have keys");
+            let mut rows = Vec::new();
+            for p in table.rank_rows(kind) {
+                let small = table
+                    .cells(kind)
+                    .iter()
+                    .find(|c| c.ranks == p)
+                    .and_then(|c| c.best())
+                    .map(|(a, _)| a.to_string())
+                    .unwrap_or_default();
+                let xs = table.crossovers(kind, p);
+                let desc = if xs.is_empty() {
+                    "none (single winner)".to_string()
+                } else {
+                    xs.iter()
+                        .map(|(b, from, to)| format!("{from}→{to} @ {}", fmt_bytes(*b)))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                };
+                rows.push(vec![p.to_string(), small, desc]);
+            }
+            print_table(
+                &format!("measured crossovers: {key} on {}", topo.name),
+                &["ranks", "small-msg winner", "crossovers"],
+                &rows,
+            );
+        }
+    }
+
+    let json = table.to_json_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("write {path}"))?;
+            println!(
+                "wrote {path}: {} cells for {} (fingerprint {})",
+                table.cell_count(),
+                table.topo_name,
+                table.fingerprint,
+            );
+        }
+        None => println!("{json}"),
+    }
     Ok(())
 }
 

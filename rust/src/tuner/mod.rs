@@ -1,0 +1,36 @@
+//! Measurement-driven collective selection — the autotuner.
+//!
+//! The analytic selector ([`crate::collectives::selector`]) predicts
+//! algorithm crossovers from a closed-form two-tier alpha-beta model.
+//! Das et al. (arXiv:1602.06709) and You et al. (arXiv:1708.02983) both
+//! show those crossover points shift substantially with real fabric
+//! latency/bandwidth ratios — measured tables beat closed forms once
+//! topologies get real. We already own a cycle-accurate measuring
+//! instrument (`simexec` over `NetSim`); this subsystem turns it into an
+//! autotuner:
+//!
+//! * [`probe`] times every candidate algorithm for each tunable
+//!   [`crate::collectives::CollectiveKind`] across a log-spaced
+//!   (rank count × message size) grid by executing real chunk programs
+//!   through the discrete-event fabric on the live topology;
+//! * [`table`] persists the measurements as a [`TuningTable`] keyed by a
+//!   topology *fingerprint*, with per-cell winners, crossover extraction
+//!   and nearest-cell + log-interpolated lookup, serialized via
+//!   [`crate::util::json`] (the `tune` CLI subcommand emits one, and
+//!   `--tuning-table <path>` loads it back);
+//! * [`policy`] exposes [`SelectionPolicy`] — `Analytic` (the default),
+//!   `Tuned` and `TunedWithFallback` — threaded through the engine, the
+//!   analytic design-space model and the CLI, so every algorithm choice
+//!   goes through one switchable decision point.
+//!
+//! Every later topology feature (multi-rail NICs, 3-level hierarchies)
+//! calibrates against this bridge from "model says" to "measurement
+//! says".
+
+pub mod policy;
+pub mod probe;
+pub mod table;
+
+pub use policy::SelectionPolicy;
+pub use probe::{tune, ProbeSpec};
+pub use table::TuningTable;

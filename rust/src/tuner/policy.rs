@@ -1,0 +1,312 @@
+//! Selection policy: who decides which algorithm a collective runs —
+//! the closed-form model ("model says") or a measured tuning table
+//! ("measurement says").
+//!
+//! Every call site that previously hardcoded
+//! [`selector::choose_algorithm`] / [`selector::choose_flat_algorithm`]
+//! (the engine, the analytic design-space model, the CLI) now consults a
+//! [`SelectionPolicy`]. The analytic policy reproduces the old behaviour
+//! exactly; the tuned policies answer from a [`TuningTable`] and are
+//! guaranteed to only ever return algorithms that
+//! [`crate::collectives::program::build`] accepts at the queried rank
+//! count (a legality filter runs before every table pick, because the
+//! nearest measured row may prefer an algorithm that does not exist at
+//! the actual p).
+
+use crate::collectives::program::CollectiveKind;
+use crate::collectives::selector;
+use crate::collectives::Algorithm;
+use crate::fabric::topology::Topology;
+use crate::Ns;
+
+use super::table::TuningTable;
+
+/// Is `alg` buildable as an allreduce over `p` ranks? Deliberately the
+/// BUILDER'S precondition, not the analytic candidate menu: a tuned
+/// table may apply a measurement to any rank count the program compiles
+/// at (e.g. hierarchical at p == ranks_per_node). Constant-time — this
+/// runs per candidate on every tuned choose/predict — and kept in
+/// lockstep with [`crate::collectives::program::build`] by the
+/// `legality_matches_builder` test.
+pub fn allreduce_legal(alg: Algorithm, p: usize) -> bool {
+    match alg {
+        Algorithm::Ring => true,
+        Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => p.is_power_of_two(),
+        Algorithm::Hierarchical { ranks_per_node } => {
+            ranks_per_node >= 1 && p % ranks_per_node == 0
+        }
+        Algorithm::Auto => false,
+    }
+}
+
+/// Is `alg` a real allgather program over `p` ranks? Only ring and
+/// recursive doubling have allgather builders; every other algorithm
+/// would silently compile to a ring, which a tuned table must not be
+/// credited for. Lockstep with `build`: `legality_matches_builder`.
+pub fn allgather_legal(alg: Algorithm, p: usize) -> bool {
+    match alg {
+        Algorithm::Ring => true,
+        Algorithm::RecursiveDoubling => p.is_power_of_two(),
+        _ => false,
+    }
+}
+
+/// How call sites choose collective algorithms.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum SelectionPolicy {
+    /// Closed-form two-tier alpha-beta model (the default: no table
+    /// supplied).
+    #[default]
+    Analytic,
+    /// Measured table, trusted unconditionally (nearest-cell semantics
+    /// even when its fingerprint does not match the live topology);
+    /// analytic only when the table has no legal candidate for a query.
+    Tuned(TuningTable),
+    /// Measured table, consulted ONLY while its fingerprint matches the
+    /// live topology; any mismatch falls back to the analytic model
+    /// wholesale. This is what `--tuning-table` installs.
+    TunedWithFallback(TuningTable),
+}
+
+impl SelectionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Analytic => "analytic",
+            SelectionPolicy::Tuned(_) => "tuned",
+            SelectionPolicy::TunedWithFallback(_) => "tuned+fallback",
+        }
+    }
+
+    /// The table to consult for `topo`, if this policy trusts one.
+    fn table_for(&self, topo: &Topology) -> Option<&TuningTable> {
+        match self {
+            SelectionPolicy::Analytic => None,
+            SelectionPolicy::Tuned(t) => Some(t),
+            SelectionPolicy::TunedWithFallback(t) => {
+                if t.matches(topo) {
+                    Some(t)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Allreduce over a node-aligned (contiguous whole-node) communicator.
+    pub fn choose_allreduce(&self, topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+        if p <= 1 {
+            return Algorithm::Ring;
+        }
+        if let Some(t) = self.table_for(topo) {
+            if let Some(alg) =
+                t.lookup(CollectiveKind::Allreduce, p, bytes, &|a| allreduce_legal(a, p))
+            {
+                return alg;
+            }
+        }
+        selector::choose_algorithm(topo, p, bytes)
+    }
+
+    /// Allreduce over a strided / non-node-aligned communicator. Tables
+    /// are measured on contiguous communicators, where intra-node hops
+    /// ride shared memory; a strided group gets no such discount, so the
+    /// table only applies on flat fabrics (ranks_per_node == 1, where
+    /// contiguity is irrelevant). Otherwise the all-inter analytic model
+    /// decides — exactly what a mis-applied table would mispredict.
+    pub fn choose_flat_allreduce(&self, topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+        if p <= 1 {
+            return Algorithm::Ring;
+        }
+        if topo.ranks_per_node <= 1 {
+            if let Some(t) = self.table_for(topo) {
+                let legal = |a: Algorithm| {
+                    !matches!(a, Algorithm::Hierarchical { .. }) && allreduce_legal(a, p)
+                };
+                if let Some(alg) = t.lookup(CollectiveKind::Allreduce, p, bytes, &legal) {
+                    return alg;
+                }
+            }
+        }
+        selector::choose_flat_algorithm(topo, p, bytes)
+    }
+
+    /// Allgather over a node-aligned communicator (the engine's
+    /// activation exchanges).
+    pub fn choose_allgather(&self, topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+        if p <= 1 {
+            return Algorithm::Ring;
+        }
+        if let Some(t) = self.table_for(topo) {
+            if let Some(alg) =
+                t.lookup(CollectiveKind::Allgather, p, bytes, &|a| allgather_legal(a, p))
+            {
+                return alg;
+            }
+        }
+        selector::choose_allgather_algorithm(topo, p, bytes)
+    }
+
+    /// Allgather over a non-aligned communicator (see
+    /// [`Self::choose_flat_allreduce`] for the gating rationale).
+    pub fn choose_flat_allgather(&self, topo: &Topology, p: usize, bytes: u64) -> Algorithm {
+        if p <= 1 {
+            return Algorithm::Ring;
+        }
+        if topo.ranks_per_node <= 1 {
+            if let Some(t) = self.table_for(topo) {
+                if let Some(alg) =
+                    t.lookup(CollectiveKind::Allgather, p, bytes, &|a| allgather_legal(a, p))
+                {
+                    return alg;
+                }
+            }
+        }
+        selector::choose_flat_allgather_algorithm(topo, p, bytes)
+    }
+
+    /// Predicted allreduce time under this policy: tuned policies answer
+    /// from measured (log-interpolated) cells when they can, the analytic
+    /// policy from the closed-form model — so design-space analyses built
+    /// on this prediction calibrate to measurements once a table exists.
+    pub fn predict_allreduce_ns(&self, topo: &Topology, p: usize, bytes: u64) -> Ns {
+        if p <= 1 {
+            return 0;
+        }
+        // One interpolation pass serves both the pick and its time (this
+        // sits in the analytic design-space loops, per layer × group).
+        if let Some(t) = self.table_for(topo) {
+            let cheapest_legal = t
+                .interpolated(CollectiveKind::Allreduce, p, bytes)
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|(a, _)| allreduce_legal(*a, p))
+                .min_by(|x, y| x.1.partial_cmp(&y.1).expect("measured times are finite"));
+            if let Some((_, ns)) = cheapest_legal {
+                return ns.ceil() as Ns;
+            }
+        }
+        let alg = selector::choose_algorithm(topo, p, bytes);
+        selector::predict_allreduce_ns(topo, alg, p, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::probe::{tune, ProbeSpec};
+
+    #[test]
+    fn legality_matches_builder() {
+        // The constant-time legality checks must agree with the builder's
+        // own validation everywhere the policy can query them (p >= 1;
+        // the policy short-circuits p <= 1 before filtering). For
+        // allgather only ring/rdoubling count: `build` compiles anything
+        // else to a ring fallback, which legality deliberately rejects.
+        use crate::collectives::program::build;
+        for p in 1..=64usize {
+            let mut algs = vec![
+                Algorithm::Ring,
+                Algorithm::RecursiveDoubling,
+                Algorithm::HalvingDoubling,
+                Algorithm::Auto,
+            ];
+            for rpn in [0usize, 1, 2, 3, 4, 5, 8] {
+                algs.push(Algorithm::Hierarchical { ranks_per_node: rpn });
+            }
+            for alg in algs {
+                assert_eq!(
+                    allreduce_legal(alg, p),
+                    build(CollectiveKind::Allreduce, alg, p, 1).is_ok(),
+                    "allreduce {alg:?} p={p}"
+                );
+            }
+            for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling] {
+                assert_eq!(
+                    allgather_legal(alg, p),
+                    build(CollectiveKind::Allgather, alg, p, 1).is_ok(),
+                    "allgather {alg:?} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_policy_reproduces_selector_choices() {
+        let policy = SelectionPolicy::default();
+        assert_eq!(policy.name(), "analytic");
+        for topo in [Topology::eth_10g(), Topology::eth_10g_smp(2)] {
+            for p in [2usize, 6, 16, 64] {
+                for bytes in [1u64 << 10, 1 << 20, 64 << 20] {
+                    assert_eq!(
+                        policy.choose_allreduce(&topo, p, bytes),
+                        selector::choose_algorithm(&topo, p, bytes)
+                    );
+                    assert_eq!(
+                        policy.choose_flat_allreduce(&topo, p, bytes),
+                        selector::choose_flat_algorithm(&topo, p, bytes)
+                    );
+                    assert_eq!(
+                        policy.choose_allgather(&topo, p, bytes),
+                        selector::choose_allgather_algorithm(&topo, p, bytes)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_policy_answers_from_the_table_on_grid_cells() {
+        let topo = Topology::eth_10g();
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let table = tune(&topo, &spec);
+        let policy = SelectionPolicy::TunedWithFallback(table.clone());
+        for kind in crate::tuner::probe::TUNED_KINDS {
+            for cell in table.cells(kind) {
+                let pick = match kind {
+                    CollectiveKind::Allreduce => {
+                        policy.choose_allreduce(&topo, cell.ranks, cell.bytes)
+                    }
+                    _ => policy.choose_allgather(&topo, cell.ranks, cell.bytes),
+                };
+                assert_eq!(pick, cell.best().unwrap().0, "{kind:?} p={}", cell.ranks);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_groups_on_smp_fabrics_stay_analytic() {
+        let topo = Topology::eth_10g_smp(2);
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let policy = SelectionPolicy::Tuned(tune(&topo, &spec));
+        for p in [4usize, 6, 8] {
+            for bytes in [1u64 << 10, 1 << 20] {
+                assert_eq!(
+                    policy.choose_flat_allreduce(&topo, p, bytes),
+                    selector::choose_flat_algorithm(&topo, p, bytes),
+                    "p={p} bytes={bytes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_prediction_matches_measurement_on_grid_cells() {
+        let topo = Topology::eth_10g();
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let table = tune(&topo, &spec);
+        let policy = SelectionPolicy::Tuned(table.clone());
+        for cell in table.cells(CollectiveKind::Allreduce) {
+            let (_, best_ns) = cell.best().unwrap();
+            assert_eq!(
+                policy.predict_allreduce_ns(&topo, cell.ranks, cell.bytes),
+                best_ns,
+                "p={} bytes={}",
+                cell.ranks,
+                cell.bytes
+            );
+        }
+    }
+}

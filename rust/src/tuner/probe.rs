@@ -1,0 +1,191 @@
+//! The measurement probe: times every candidate algorithm for each
+//! tunable collective across a log-spaced (rank count × message size)
+//! grid by executing real chunk programs through
+//! [`crate::collectives::simexec`] on the live [`Topology`] — the same
+//! cycle-accurate instrument the engine times training with, so measured
+//! winners transfer directly to engine runs.
+
+use crate::collectives::program::{build, CollectiveKind};
+use crate::collectives::selector::{allgather_candidates, candidate_algorithms};
+use crate::collectives::simexec::time_collective;
+use crate::collectives::{Algorithm, WireDtype};
+use crate::fabric::topology::Topology;
+use crate::fabric::NetSim;
+use crate::Ns;
+
+use super::table::{MeasuredCell, TuningTable};
+
+/// The collectives the probe measures.
+pub const TUNED_KINDS: [CollectiveKind; 2] =
+    [CollectiveKind::Allreduce, CollectiveKind::Allgather];
+
+/// Grid description for a tuning run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProbeSpec {
+    /// Largest rank count probed (rows: powers of two plus 3·2^k).
+    pub max_ranks: usize,
+    pub min_bytes: u64,
+    pub max_bytes: u64,
+    /// Log-spaced size points between min and max, inclusive.
+    pub size_points: usize,
+}
+
+impl ProbeSpec {
+    /// The full grid the `tune` subcommand measures by default.
+    pub fn full() -> Self {
+        Self { max_ranks: 64, min_bytes: 1 << 10, max_bytes: 64 << 20, size_points: 9 }
+    }
+
+    /// Tiny grid for CI smoke runs and tests.
+    pub fn quick() -> Self {
+        Self { max_ranks: 16, min_bytes: 1 << 10, max_bytes: 4 << 20, size_points: 4 }
+    }
+
+    /// Rank rows: powers of two plus 3·2^k (so ring-only non-power-of-two
+    /// cells — and hierarchical cells with non-power-of-two leader counts
+    /// — are measured too), clamped to `max_ranks`.
+    pub fn rank_grid(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for start in [2usize, 6] {
+            let mut p = start;
+            while p <= self.max_ranks {
+                out.push(p);
+                p *= 2;
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Log-spaced byte sizes from min to max inclusive (ascending).
+    pub fn size_grid(&self) -> Vec<u64> {
+        let k = self.size_points.max(2);
+        let lo = self.min_bytes.max(4) as f64;
+        let hi = (self.max_bytes.max(self.min_bytes.max(4))) as f64;
+        let mut out: Vec<u64> = (0..k)
+            .map(|i| {
+                let f = i as f64 / (k - 1) as f64;
+                (lo.ln() * (1.0 - f) + hi.ln() * f).exp().round() as u64
+            })
+            .collect();
+        out.dedup();
+        out
+    }
+}
+
+/// Candidates the probe measures for (topo, kind, p) — exactly the sets
+/// the analytic selector considers, so the tuned and analytic policies
+/// choose from the same menu.
+pub fn probe_candidates(topo: &Topology, kind: CollectiveKind, p: usize) -> Vec<Algorithm> {
+    match kind {
+        CollectiveKind::Allreduce => candidate_algorithms(topo, p),
+        CollectiveKind::Allgather => allgather_candidates(p),
+        _ => vec![Algorithm::Ring],
+    }
+}
+
+/// Time one collective on an otherwise idle simulated fabric.
+pub fn measure_ns(
+    topo: &Topology,
+    kind: CollectiveKind,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+) -> Ns {
+    let n = (bytes / 4).max(1) as usize; // f32 elements
+    let programs = build(kind, alg, p, n).expect("probe candidates are buildable");
+    let mut sim = NetSim::new(topo.clone(), p);
+    time_collective(&mut sim, programs, WireDtype::F32, 1)
+}
+
+/// Measure the whole grid, reporting `(done_cells, total_cells)` after
+/// every cell.
+pub fn tune_with_progress(
+    topo: &Topology,
+    spec: &ProbeSpec,
+    mut progress: impl FnMut(usize, usize),
+) -> TuningTable {
+    let ranks = spec.rank_grid();
+    let sizes = spec.size_grid();
+    let total = TUNED_KINDS.len() * ranks.len() * sizes.len();
+    let mut done = 0;
+    let mut table = TuningTable::for_topology(topo);
+    for kind in TUNED_KINDS {
+        for &p in &ranks {
+            let cands = probe_candidates(topo, kind, p);
+            for &bytes in &sizes {
+                let timings: Vec<(Algorithm, Ns)> = cands
+                    .iter()
+                    .map(|&a| (a, measure_ns(topo, kind, a, p, bytes)))
+                    .collect();
+                table.insert(kind, MeasuredCell::new(p, bytes, timings));
+                done += 1;
+                progress(done, total);
+            }
+        }
+    }
+    table
+}
+
+/// Measure the whole grid silently.
+pub fn tune(topo: &Topology, spec: &ProbeSpec) -> TuningTable {
+    tune_with_progress(topo, spec, |_, _| {})
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_log_spaced_and_deduped() {
+        let spec =
+            ProbeSpec { max_ranks: 24, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 3 };
+        assert_eq!(spec.rank_grid(), vec![2, 4, 6, 8, 12, 16, 24]);
+        assert_eq!(spec.size_grid(), vec![1 << 10, 1 << 15, 1 << 20]);
+        // Degenerate range collapses to one point.
+        let tiny = ProbeSpec { max_ranks: 2, min_bytes: 1024, max_bytes: 1024, size_points: 5 };
+        assert_eq!(tiny.size_grid(), vec![1024]);
+        assert_eq!(tiny.rank_grid(), vec![2]);
+    }
+
+    #[test]
+    fn quick_probe_measures_every_candidate_per_cell() {
+        let topo = Topology::eth_10g_smp(2);
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let table = tune(&topo, &spec);
+        assert!(!table.is_empty());
+        for kind in TUNED_KINDS {
+            for cell in table.cells(kind) {
+                let want = probe_candidates(&topo, kind, cell.ranks);
+                assert_eq!(cell.timings.len(), want.len(), "{kind:?} p={}", cell.ranks);
+                for alg in want {
+                    let t = cell.time_of(alg).unwrap_or_else(|| {
+                        panic!("{kind:?} p={} missing {alg:?}", cell.ranks)
+                    });
+                    assert!(t > 0, "{kind:?} p={} {alg:?}", cell.ranks);
+                }
+            }
+        }
+        assert!(table.matches(&topo));
+    }
+
+    #[test]
+    fn measured_winners_track_latency_bandwidth_shape() {
+        // On flat 10GbE the small-message winner must be a logarithmic-
+        // round algorithm and the large-message winner bandwidth-optimal:
+        // the measured table reproduces the paper's A4 shape.
+        let topo = Topology::eth_10g();
+        let spec = ProbeSpec { max_ranks: 16, min_bytes: 256, max_bytes: 64 << 20, size_points: 5 };
+        let table = tune(&topo, &spec);
+        let cells = table.cells(CollectiveKind::Allreduce);
+        let small = cells.iter().find(|c| c.ranks == 16 && c.bytes == 256).unwrap();
+        assert_eq!(small.best().unwrap().0, Algorithm::RecursiveDoubling);
+        let large = cells.iter().find(|c| c.ranks == 16 && c.bytes == 64 << 20).unwrap();
+        assert!(matches!(
+            large.best().unwrap().0,
+            Algorithm::Ring | Algorithm::HalvingDoubling
+        ));
+    }
+}

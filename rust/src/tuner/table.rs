@@ -1,0 +1,484 @@
+//! Persisted tuning tables: measured (collective, rank count, message
+//! size) → per-algorithm timings, keyed by a topology fingerprint.
+//!
+//! A [`TuningTable`] is produced by [`crate::tuner::probe`] and consumed
+//! by [`crate::tuner::SelectionPolicy`]. A lookup snaps the rank count to
+//! the nearest measured row (log distance, ties to the smaller row), then
+//! log-interpolates each algorithm's time between the two bracketing size
+//! cells (clamped at the grid edges) and picks the cheapest algorithm
+//! that is LEGAL at the actual rank count — a row measured at p = 8 may
+//! prefer recursive doubling, which does not exist at p = 6. Tables
+//! serialize via [`crate::util::json`] so a grid probed once on a
+//! topology is reused by the engine, benches and examples.
+
+use std::collections::BTreeMap;
+
+use crate::collectives::program::CollectiveKind;
+use crate::collectives::Algorithm;
+use crate::fabric::topology::Topology;
+use crate::util::json::Json;
+use crate::Ns;
+
+/// Stable identity of the fabric a table was measured on: every parameter
+/// that influences simulated timings (NOT the display name — renaming a
+/// preset must not invalidate its measurements).
+pub fn fingerprint(t: &Topology) -> String {
+    format!(
+        "v1|g{}|l{}|o{}|c{}|r{}|ig{}|il{}|io{}",
+        t.link_gbps,
+        t.latency_ns,
+        t.per_msg_overhead_ns,
+        t.chunk_bytes,
+        t.ranks_per_node,
+        t.intra_gbps,
+        t.intra_latency_ns,
+        t.intra_per_msg_overhead_ns,
+    )
+}
+
+/// Table key of a tunable collective kind. Rooted collectives and barrier
+/// are not tuned (root-dependent / trivial payload).
+pub fn kind_key(kind: CollectiveKind) -> Option<&'static str> {
+    match kind {
+        CollectiveKind::Allreduce => Some("allreduce"),
+        CollectiveKind::Allgather => Some("allgather"),
+        _ => None,
+    }
+}
+
+/// Stable serialization key of an algorithm (`Display` collapses the
+/// hierarchical node size, which the table must preserve).
+pub fn alg_key(alg: Algorithm) -> String {
+    match alg {
+        Algorithm::Hierarchical { ranks_per_node } => format!("hier:{ranks_per_node}"),
+        other => other.to_string(),
+    }
+}
+
+/// Inverse of [`alg_key`].
+pub fn parse_alg_key(s: &str) -> Option<Algorithm> {
+    match s {
+        "ring" => Some(Algorithm::Ring),
+        "rdoubling" => Some(Algorithm::RecursiveDoubling),
+        "halving" => Some(Algorithm::HalvingDoubling),
+        _ => s
+            .strip_prefix("hier:")
+            .and_then(|r| r.parse().ok())
+            .map(|ranks_per_node| Algorithm::Hierarchical { ranks_per_node }),
+    }
+}
+
+/// One measured grid cell: every candidate's simulated time at (ranks,
+/// bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredCell {
+    pub ranks: usize,
+    pub bytes: u64,
+    /// (algorithm, measured ns), canonically sorted by [`alg_key`] so
+    /// tie-breaks and JSON round-trips are deterministic.
+    pub timings: Vec<(Algorithm, Ns)>,
+}
+
+impl MeasuredCell {
+    pub fn new(ranks: usize, bytes: u64, mut timings: Vec<(Algorithm, Ns)>) -> Self {
+        timings.sort_by(|a, b| alg_key(a.0).cmp(&alg_key(b.0)));
+        Self { ranks, bytes, timings }
+    }
+
+    pub fn time_of(&self, alg: Algorithm) -> Option<Ns> {
+        self.timings.iter().find(|(a, _)| *a == alg).map(|(_, t)| *t)
+    }
+
+    /// Measured-best algorithm (ties break on canonical key order).
+    pub fn best(&self) -> Option<(Algorithm, Ns)> {
+        self.timings.iter().copied().min_by_key(|(_, t)| *t)
+    }
+}
+
+/// Measured tuning table for one topology.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TuningTable {
+    pub topo_name: String,
+    pub fingerprint: String,
+    /// kind key → cells, kept sorted by (ranks, bytes).
+    pub kinds: BTreeMap<String, Vec<MeasuredCell>>,
+}
+
+impl TuningTable {
+    pub fn for_topology(topo: &Topology) -> Self {
+        Self {
+            topo_name: topo.name.clone(),
+            fingerprint: fingerprint(topo),
+            kinds: BTreeMap::new(),
+        }
+    }
+
+    /// Was this table measured on (a fabric physically identical to)
+    /// `topo`?
+    pub fn matches(&self, topo: &Topology) -> bool {
+        self.fingerprint == fingerprint(topo)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.values().all(|v| v.is_empty())
+    }
+
+    /// Total measured cells across all kinds.
+    pub fn cell_count(&self) -> usize {
+        self.kinds.values().map(|v| v.len()).sum()
+    }
+
+    /// Insert (or replace) a measured cell, keeping the row sorted.
+    pub fn insert(&mut self, kind: CollectiveKind, cell: MeasuredCell) {
+        let Some(key) = kind_key(kind) else { return };
+        let cells = self.kinds.entry(key.to_string()).or_default();
+        match cells.binary_search_by(|c| (c.ranks, c.bytes).cmp(&(cell.ranks, cell.bytes))) {
+            Ok(i) => cells[i] = cell,
+            Err(i) => cells.insert(i, cell),
+        }
+    }
+
+    pub fn cells(&self, kind: CollectiveKind) -> &[MeasuredCell] {
+        kind_key(kind)
+            .and_then(|k| self.kinds.get(k))
+            .map_or(&[], |v| v.as_slice())
+    }
+
+    /// Distinct measured rank counts for `kind`, ascending.
+    pub fn rank_rows(&self, kind: CollectiveKind) -> Vec<usize> {
+        let mut out: Vec<usize> = self.cells(kind).iter().map(|c| c.ranks).collect();
+        out.dedup();
+        out
+    }
+
+    /// The measured rank-count row nearest to `p` in log space (ties to
+    /// the smaller row), as size-sorted cells.
+    fn nearest_row(&self, kind: CollectiveKind, p: usize) -> Option<Vec<&MeasuredCell>> {
+        let cells = self.cells(kind);
+        if cells.is_empty() || p == 0 {
+            return None;
+        }
+        let dist = |r: usize| ((r as f64).ln() - (p as f64).ln()).abs();
+        let mut best: Option<usize> = None;
+        for c in cells {
+            match best {
+                None => best = Some(c.ranks),
+                Some(b) if dist(c.ranks) < dist(b) => best = Some(c.ranks),
+                _ => {}
+            }
+        }
+        let row_p = best?;
+        Some(cells.iter().filter(|c| c.ranks == row_p).collect())
+    }
+
+    /// Per-algorithm times at (p, bytes): nearest rank row, then
+    /// log-interpolated between the bracketing size cells (clamped at the
+    /// grid edges). At an exactly-measured grid point this returns the
+    /// cell's timings verbatim.
+    pub fn interpolated(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+    ) -> Option<Vec<(Algorithm, f64)>> {
+        let row = self.nearest_row(kind, p)?;
+        let verbatim = |c: &MeasuredCell| -> Vec<(Algorithm, f64)> {
+            c.timings.iter().map(|(a, t)| (*a, *t as f64)).collect()
+        };
+        let first = *row.first()?;
+        if bytes <= first.bytes {
+            return Some(verbatim(first));
+        }
+        let last = *row.last().expect("non-empty row");
+        if bytes >= last.bytes {
+            return Some(verbatim(last));
+        }
+        // First cell with bytes >= query; `bytes > first.bytes` above
+        // guarantees hi >= 1.
+        let hi = row.partition_point(|c| c.bytes < bytes);
+        let (lo_cell, hi_cell) = (row[hi - 1], row[hi]);
+        let f = ((bytes as f64).ln() - (lo_cell.bytes as f64).ln())
+            / ((hi_cell.bytes as f64).ln() - (lo_cell.bytes as f64).ln());
+        let out: Vec<(Algorithm, f64)> = lo_cell
+            .timings
+            .iter()
+            .filter_map(|(alg, t0)| {
+                hi_cell
+                    .time_of(*alg)
+                    .map(|t1| (*alg, *t0 as f64 * (1.0 - f) + t1 as f64 * f))
+            })
+            .collect();
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Tuned pick: the cheapest interpolated algorithm passing `legal`
+    /// (None when nothing measured here is legal at the actual `p` — the
+    /// policy then falls back to the analytic chooser).
+    pub fn lookup(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+        legal: &dyn Fn(Algorithm) -> bool,
+    ) -> Option<Algorithm> {
+        self.interpolated(kind, p, bytes)?
+            .into_iter()
+            .filter(|(a, _)| legal(*a))
+            .min_by(|x, y| x.1.partial_cmp(&y.1).expect("measured times are finite"))
+            .map(|(a, _)| a)
+    }
+
+    /// Interpolated time of `alg` at (p, bytes), if it was measured there.
+    pub fn time_ns(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+        alg: Algorithm,
+    ) -> Option<Ns> {
+        self.interpolated(kind, p, bytes)?
+            .into_iter()
+            .find(|(a, _)| *a == alg)
+            .map(|(_, t)| t.ceil() as Ns)
+    }
+
+    /// Winner-change points along the size axis of one measured rank row:
+    /// (bytes where the new winner takes over, previous winner, new
+    /// winner). This is the measured analogue of the analytic model's
+    /// latency/bandwidth crossover.
+    pub fn crossovers(
+        &self,
+        kind: CollectiveKind,
+        ranks: usize,
+    ) -> Vec<(u64, Algorithm, Algorithm)> {
+        let mut out = Vec::new();
+        let mut prev: Option<Algorithm> = None;
+        for c in self.cells(kind).iter().filter(|c| c.ranks == ranks) {
+            let Some((w, _)) = c.best() else { continue };
+            if let Some(p0) = prev {
+                if p0 != w {
+                    out.push((c.bytes, p0, w));
+                }
+            }
+            prev = Some(w);
+        }
+        out
+    }
+
+    // -- serialization -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut kinds = BTreeMap::new();
+        for (key, cells) in &self.kinds {
+            let arr = cells
+                .iter()
+                .map(|c| {
+                    let mut m = BTreeMap::new();
+                    m.insert("ranks".to_string(), Json::Num(c.ranks as f64));
+                    m.insert("bytes".to_string(), Json::Num(c.bytes as f64));
+                    let timings: BTreeMap<String, Json> = c
+                        .timings
+                        .iter()
+                        .map(|(a, t)| (alg_key(*a), Json::Num(*t as f64)))
+                        .collect();
+                    m.insert("timings".to_string(), Json::Obj(timings));
+                    Json::Obj(m)
+                })
+                .collect();
+            kinds.insert(key.clone(), Json::Arr(arr));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("topo".to_string(), Json::Str(self.topo_name.clone()));
+        root.insert("fingerprint".to_string(), Json::Str(self.fingerprint.clone()));
+        root.insert("kinds".to_string(), Json::Obj(kinds));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuningTable, String> {
+        let version = j.at(&["version"]).as_usize().ok_or("missing version")?;
+        if version != 1 {
+            return Err(format!("unsupported tuning-table version {version}"));
+        }
+        let topo_name = j.at(&["topo"]).as_str().ok_or("missing topo")?.to_string();
+        let fp = j.at(&["fingerprint"]).as_str().ok_or("missing fingerprint")?.to_string();
+        let mut table =
+            TuningTable { topo_name, fingerprint: fp, kinds: BTreeMap::new() };
+        let Json::Obj(kinds) = j.at(&["kinds"]) else {
+            return Err("missing kinds".into());
+        };
+        for (key, arr) in kinds {
+            let kind = match key.as_str() {
+                "allreduce" => CollectiveKind::Allreduce,
+                "allgather" => CollectiveKind::Allgather,
+                other => return Err(format!("unknown collective kind {other:?}")),
+            };
+            let cells = arr.as_arr().ok_or("kind cells must be an array")?;
+            for c in cells {
+                let ranks = c.at(&["ranks"]).as_usize().ok_or("cell missing ranks")?;
+                if ranks == 0 {
+                    return Err("cell with 0 ranks".into());
+                }
+                let bytes_f = c.at(&["bytes"]).as_f64().ok_or("cell missing bytes")?;
+                // bytes >= 1 keeps ln(bytes) finite for interpolation;
+                // NaN is rejected too (`as u64` would fold it to 0 and
+                // crash lookups much later, mid-simulation).
+                if bytes_f.is_nan() || bytes_f < 1.0 {
+                    return Err(format!("cell with invalid bytes {bytes_f}"));
+                }
+                let bytes = bytes_f as u64;
+                let Json::Obj(timings) = c.at(&["timings"]) else {
+                    return Err("cell missing timings".into());
+                };
+                let mut ts = Vec::new();
+                for (ak, tv) in timings {
+                    let alg =
+                        parse_alg_key(ak).ok_or_else(|| format!("bad algorithm key {ak:?}"))?;
+                    let t = tv.as_f64().ok_or("timing must be a number")? as Ns;
+                    ts.push((alg, t));
+                }
+                table.insert(kind, MeasuredCell::new(ranks, bytes, ts));
+            }
+        }
+        Ok(table)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse(text: &str) -> Result<TuningTable, String> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Algorithm as A;
+    use CollectiveKind as K;
+
+    fn cell(p: usize, bytes: u64, ts: &[(A, Ns)]) -> MeasuredCell {
+        MeasuredCell::new(p, bytes, ts.to_vec())
+    }
+
+    fn sample() -> TuningTable {
+        let mut t = TuningTable::for_topology(&Topology::eth_10g());
+        let rd = A::RecursiveDoubling;
+        t.insert(K::Allreduce, cell(8, 1 << 10, &[(A::Ring, 700), (rd, 100)]));
+        t.insert(K::Allreduce, cell(8, 1 << 20, &[(A::Ring, 1_000), (rd, 3_000)]));
+        t.insert(K::Allreduce, cell(8, 1 << 24, &[(A::Ring, 9_000), (rd, 40_000)]));
+        t.insert(K::Allreduce, cell(6, 1 << 20, &[(A::Ring, 2_000)]));
+        t
+    }
+
+    #[test]
+    fn lookup_snaps_interpolates_and_clamps() {
+        let t = sample();
+        let any = |_: Algorithm| true;
+        // Exact cells.
+        assert_eq!(t.lookup(K::Allreduce, 8, 1 << 10, &any), Some(A::RecursiveDoubling));
+        assert_eq!(t.lookup(K::Allreduce, 8, 1 << 20, &any), Some(A::Ring));
+        // Below/above the grid clamps to the edge cells.
+        assert_eq!(t.lookup(K::Allreduce, 8, 16, &any), Some(A::RecursiveDoubling));
+        assert_eq!(t.lookup(K::Allreduce, 8, 1 << 30, &any), Some(A::Ring));
+        // Between cells: log-interpolated times still order correctly.
+        assert_eq!(t.lookup(K::Allreduce, 8, 1 << 22, &any), Some(A::Ring));
+        // Nearest rank row: p=7 (ln-closer to 8 than to 6) uses the p=8 row.
+        assert_eq!(t.lookup(K::Allreduce, 7, 1 << 10, &any), Some(A::RecursiveDoubling));
+        // …but the legality filter rejects rdoubling at p=7.
+        let legal7 = |a: Algorithm| a != A::RecursiveDoubling;
+        assert_eq!(t.lookup(K::Allreduce, 7, 1 << 10, &legal7), Some(A::Ring));
+        // Unmeasured kind → None.
+        assert_eq!(t.lookup(K::Allgather, 8, 1 << 10, &any), None);
+    }
+
+    #[test]
+    fn interpolation_is_log_weighted() {
+        let t = sample();
+        // Halfway in log space between 2^10 and 2^20 is 2^15.
+        let times = t.interpolated(K::Allreduce, 8, 1 << 15).unwrap();
+        let ring = times.iter().find(|(a, _)| *a == A::Ring).unwrap().1;
+        assert!((ring - 850.0).abs() < 1.0, "{ring}");
+        let ns = t.time_ns(K::Allreduce, 8, 1 << 15, A::Ring).unwrap();
+        assert_eq!(ns, 850);
+    }
+
+    #[test]
+    fn crossover_extraction_reports_switch_points() {
+        let t = sample();
+        let xs = t.crossovers(K::Allreduce, 8);
+        assert_eq!(xs, vec![(1 << 20, A::RecursiveDoubling, A::Ring)]);
+        assert!(t.crossovers(K::Allreduce, 6).is_empty());
+        assert_eq!(t.rank_rows(K::Allreduce), vec![6, 8]);
+    }
+
+    #[test]
+    fn fingerprints_track_physics_not_names() {
+        let a = Topology::eth_10g();
+        let mut renamed = a.clone();
+        renamed.name = "something-else".into();
+        assert_eq!(fingerprint(&a), fingerprint(&renamed));
+        assert_ne!(fingerprint(&a), fingerprint(&Topology::omnipath_100g()));
+        assert_ne!(fingerprint(&a), fingerprint(&Topology::eth_10g_smp(2)));
+        let t = sample();
+        assert!(t.matches(&renamed));
+        assert!(!t.matches(&Topology::eth_25g()));
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejects_garbage() {
+        let t = sample();
+        let s = t.to_json_string();
+        let back = TuningTable::parse(&s).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.to_json_string(), s);
+        assert!(TuningTable::parse("not json").is_err());
+        assert!(TuningTable::parse("{}").is_err());
+        assert!(TuningTable::parse(r#"{"version":2,"topo":"x","fingerprint":"y","kinds":{}}"#)
+            .is_err());
+        // Degenerate cells are rejected at load, not at lookup time.
+        for bad_bytes in ["0", "-4", "null"] {
+            let doc = format!(
+                r#"{{"version":1,"topo":"x","fingerprint":"y","kinds":{{"allreduce":
+                   [{{"ranks":4,"bytes":{bad_bytes},"timings":{{"ring":10}}}}]}}}}"#
+            );
+            assert!(TuningTable::parse(&doc).is_err(), "bytes={bad_bytes}");
+        }
+    }
+
+    #[test]
+    fn alg_keys_roundtrip_including_hierarchical() {
+        for alg in [
+            A::Ring,
+            A::RecursiveDoubling,
+            A::HalvingDoubling,
+            A::Hierarchical { ranks_per_node: 4 },
+        ] {
+            assert_eq!(parse_alg_key(&alg_key(alg)), Some(alg), "{alg:?}");
+        }
+        assert_eq!(parse_alg_key("nope"), None);
+        assert_eq!(parse_alg_key("hier:x"), None);
+    }
+
+    #[test]
+    fn insert_replaces_existing_cells() {
+        let mut t = sample();
+        let before = t.cell_count();
+        t.insert(K::Allreduce, cell(8, 1 << 10, &[(A::Ring, 1)]));
+        assert_eq!(t.cell_count(), before);
+        let replaced = t
+            .cells(K::Allreduce)
+            .iter()
+            .find(|c| c.ranks == 8 && c.bytes == 1 << 10)
+            .unwrap();
+        assert_eq!(replaced.timings, vec![(A::Ring, 1)]);
+        // Untunable kinds are ignored.
+        t.insert(K::Barrier, cell(8, 1, &[(A::Ring, 1)]));
+        assert_eq!(t.cell_count(), before);
+    }
+}

@@ -88,6 +88,7 @@ impl Json {
 
     // -- writer ---------------------------------------------------------
 
+    #[allow(clippy::inherent_to_string)] // deliberate: no Display audience
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
