@@ -37,7 +37,7 @@ fn main() {
                     WireDtype::F32,
                     1,
                 );
-                let hier = Algorithm::Hierarchical { ranks_per_node: rpn };
+                let hier = Algorithm::hier(&[rpn]);
                 let t_hier = time_collective(
                     &mut NetSim::new(topo.clone(), p),
                     build(CollectiveKind::Allreduce, hier, p, n).unwrap(),

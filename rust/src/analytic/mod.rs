@@ -21,14 +21,14 @@
 //! [`crate::tuner::SelectionPolicy`] (the `*_with_policy` variants; the
 //! plain functions use the analytic default), whose analytic path is
 //! [`crate::collectives::selector::predict_allreduce_ns`] — pricing each
-//! hop with the TWO-TIER alpha–beta model of
-//! [`crate::fabric::topology::Topology`]: intra-node hops (co-located
-//! ranks) at the shared-memory tier, inter-node hops at the fabric tier.
-//! With a measured tuning table loaded, allreduce terms come from
-//! (log-interpolated) measurements instead of the closed forms.
-//! On multi-rank-per-node topologies this also makes model-parallel
-//! groups that fit inside one node dramatically cheaper — their
-//! activation exchanges never touch the NIC.
+//! hop with the N-LEVEL alpha–beta model of
+//! [`crate::fabric::topology::Topology`]: every hop at its deepest
+//! common tier (socket / node / rack / top fabric). With a measured
+//! tuning table loaded, allreduce terms come from (log-interpolated)
+//! measurements instead of the closed forms. On tiered topologies this
+//! also makes model-parallel groups that fit inside one tier dramatically
+//! cheaper — a node-sized group's activation exchanges never touch the
+//! NIC, a rack-sized group's never cross the spine.
 
 use crate::fabric::topology::{NodeSpec, Topology};
 use crate::models::{LayerDesc, ModelDesc};
@@ -161,18 +161,13 @@ pub fn best_group_size_with_policy(
             for layer in &model.layers {
                 if g > 1 && layer.out_act_elems > 0 {
                     let bytes = (4 * layer.out_act_elems * batch * g) as u64;
-                    // Ring allgather within the group, twice (fwd + bwd).
-                    // A contiguous group fits inside one node — and so
-                    // rides the shared-memory tier — only when the group
-                    // size divides ranks_per_node (otherwise some group
-                    // straddles a node boundary).
-                    let in_node =
-                        g <= topo.ranks_per_node && topo.ranks_per_node % g == 0;
-                    let hop = if in_node {
-                        topo.intra_msg_ns(bytes / g as u64)
-                    } else {
-                        topo.msg_ns(bytes / g as u64)
-                    };
+                    // Ring allgather within the group, twice (fwd + bwd),
+                    // priced at the innermost tier whose groups contain a
+                    // contiguous aligned g-rank run (the group straddles
+                    // that tier's boundary otherwise — ultimately the
+                    // top): socket-sized groups ride the socket tier,
+                    // node-sized the node tier, rack-sized the rack.
+                    let hop = topo.msg_ns_at(topo.level_for_group(g), bytes / g as u64);
                     act_ns += 2 * (g as u64 - 1) * hop;
                 }
                 if groups > 1 && layer.weight_elems > 0 {

@@ -22,22 +22,26 @@
 //! replaces them with crossovers measured by running these same programs
 //! through [`simexec`] on the live topology.
 //!
-//! ## Two-tier (hierarchical) collectives
+//! ## Hierarchical (N-level) collectives
 //!
-//! On multi-rank-per-node fabrics ([`crate::fabric::topology::Topology`]
-//! with `ranks_per_node > 1`) a flat algorithm pays inter-node alpha for
-//! almost every step. [`Algorithm::Hierarchical`] instead composes three
-//! phases in one chunk program per rank:
+//! On tiered fabrics ([`crate::fabric::topology::Topology`] with a
+//! non-empty tier stack) a flat algorithm pays the slowest tier's alpha
+//! for almost every step. [`Algorithm::Hierarchical`] instead recurses
+//! over the tier stack — a [`GroupStack`] of nested group sizes
+//! (socket → node → rack …), innermost first:
 //!
-//! 1. **intra-node reduce** — binomial tree onto each node's leader rank
-//!    over the fast shared-memory tier;
-//! 2. **inter-node allreduce** — the existing ring / halving-doubling
-//!    among the leaders only (one rank per node on the wire);
-//! 3. **intra-node broadcast** — binomial tree from the leader.
+//! 1. **reduce up** — at each level, a binomial tree onto the group's
+//!    leader rank over that level's (faster) links;
+//! 2. **top phase** — the existing ring / halving-doubling among the
+//!    outermost leaders only (one rank per outermost group on the
+//!    slowest wire);
+//! 3. **broadcast down** — the mirror binomial trees, outermost first.
 //!
-//! The step count on the slow tier drops from `O(p)` to `O(p /
-//! ranks_per_node)`; the selector prices both tiers with the two-tier
-//! alpha–beta model and picks hierarchical vs. flat per message size.
+//! The step count on the slowest tier drops from `O(p)` to `O(p / g_k)`
+//! where `g_k` is the outermost group size; the selector prices every
+//! level with the N-level alpha–beta model and picks the best stack depth
+//! per message size. Reduce-scatter, allgather and broadcast-from-any-
+//! root (leader relay) have hierarchical builders too ([`program`]).
 
 pub mod exec;
 pub mod priority;
@@ -71,6 +75,82 @@ impl ReduceOp {
     }
 }
 
+/// Nested hierarchical group sizes, innermost first — the algorithm-side
+/// mirror of a [`crate::fabric::topology::Topology`] tier-stack prefix.
+/// Sizes are nondecreasing and each divides the next (so groups nest);
+/// at most [`crate::fabric::topology::MAX_TIERS`] levels, which keeps the
+/// type `Copy` (and [`Algorithm`] with it) on a fixed-size array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupStack {
+    len: u8,
+    sizes: [u32; crate::fabric::topology::MAX_TIERS],
+}
+
+impl GroupStack {
+    /// Validating constructor: 1..=MAX_TIERS sizes, each >= 1,
+    /// nondecreasing, each dividing the next.
+    pub fn new(groups: &[usize]) -> Option<Self> {
+        if groups.is_empty() || groups.len() > crate::fabric::topology::MAX_TIERS {
+            return None;
+        }
+        let mut sizes = [0u32; crate::fabric::topology::MAX_TIERS];
+        let mut prev = 1usize;
+        for (i, &g) in groups.iter().enumerate() {
+            if g < 1 || g < prev || g % prev != 0 || g > u32::MAX as usize {
+                return None;
+            }
+            sizes[i] = g as u32;
+            prev = g;
+        }
+        Some(Self { len: groups.len() as u8, sizes })
+    }
+
+    /// Single-level stack (the two-tier `ranks_per_node` case).
+    pub fn single(ranks_per_node: usize) -> Option<Self> {
+        Self::new(&[ranks_per_node])
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Innermost (smallest) group size.
+    pub fn innermost(&self) -> usize {
+        self.sizes[0] as usize
+    }
+
+    /// Outermost (largest) group size — the leaders of these groups run
+    /// the top phase.
+    pub fn outermost(&self) -> usize {
+        self.sizes[self.len() - 1] as usize
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.sizes[..self.len()].iter().map(|&s| s as usize).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.sizes[..self.len()].iter().map(|&s| s as usize)
+    }
+}
+
+impl std::fmt::Display for GroupStack {
+    /// `"8"` / `"8x128"` — sizes joined by `x`, innermost first.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, g) in self.iter().enumerate() {
+            if i > 0 {
+                f.write_str("x")?;
+            }
+            write!(f, "{g}")?;
+        }
+        Ok(())
+    }
+}
+
 /// Collective algorithm family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algorithm {
@@ -82,24 +162,71 @@ pub enum Algorithm {
     /// Rabenseifner reduce-scatter-halving + allgather-doubling:
     /// bandwidth-optimal with log₂P steps. P must be a power of two.
     HalvingDoubling,
-    /// Two-level hierarchical allreduce for multi-rank-per-node fabrics:
-    /// intra-node binomial reduce to a leader, flat allreduce among the
-    /// leaders over the inter-node tier, intra-node broadcast back.
-    /// `ranks_per_node` must divide P (contiguous node grouping).
-    Hierarchical { ranks_per_node: usize },
+    /// N-level hierarchical composition over nested group sizes
+    /// (innermost first): binomial reduce onto each group's leader going
+    /// up, a flat phase among the outermost leaders, binomial broadcast
+    /// coming down. The outermost group size must divide P (contiguous
+    /// grouping); nesting divisibility is enforced by [`GroupStack`].
+    Hierarchical { groups: GroupStack },
     /// Let the library pick per message size / rank count (the default).
     Auto,
 }
 
+impl Algorithm {
+    /// Hierarchical over `groups` (innermost first); `None` when the
+    /// stack is structurally invalid (see [`GroupStack::new`]).
+    pub fn try_hier(groups: &[usize]) -> Option<Algorithm> {
+        GroupStack::new(groups).map(|g| Algorithm::Hierarchical { groups: g })
+    }
+
+    /// [`Algorithm::try_hier`] that panics on an invalid stack — test and
+    /// bench convenience.
+    pub fn hier(groups: &[usize]) -> Algorithm {
+        Self::try_hier(groups).expect("invalid hierarchical group stack")
+    }
+}
+
 impl std::fmt::Display for Algorithm {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            Algorithm::Ring => "ring",
-            Algorithm::RecursiveDoubling => "rdoubling",
-            Algorithm::HalvingDoubling => "halving",
-            Algorithm::Hierarchical { .. } => "hier",
-            Algorithm::Auto => "auto",
-        };
-        f.write_str(s)
+        match self {
+            Algorithm::Ring => f.write_str("ring"),
+            Algorithm::RecursiveDoubling => f.write_str("rdoubling"),
+            Algorithm::HalvingDoubling => f.write_str("halving"),
+            // "hier" for the classic two-tier case; deeper stacks show
+            // their level count ("hier2" = two nested groups + top).
+            Algorithm::Hierarchical { groups } if groups.len() == 1 => f.write_str("hier"),
+            Algorithm::Hierarchical { groups } => write!(f, "hier{}", groups.len()),
+            Algorithm::Auto => f.write_str("auto"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_stack_validates_nesting() {
+        assert!(GroupStack::new(&[]).is_none());
+        assert!(GroupStack::new(&[0]).is_none());
+        assert!(GroupStack::new(&[2, 3]).is_none(), "3 not a multiple of 2");
+        assert!(GroupStack::new(&[8, 4]).is_none(), "decreasing");
+        assert!(GroupStack::new(&[2, 4, 8, 16, 32]).is_none(), "too deep");
+        let g = GroupStack::new(&[2, 8, 8, 64]).unwrap();
+        assert_eq!(g.to_vec(), vec![2, 8, 8, 64]);
+        assert_eq!(g.innermost(), 2);
+        assert_eq!(g.outermost(), 64);
+        assert_eq!(g.len(), 4);
+        assert_eq!(GroupStack::single(4).unwrap().to_vec(), vec![4]);
+        assert!(GroupStack::single(0).is_none());
+    }
+
+    #[test]
+    fn group_stack_and_algorithm_display() {
+        assert_eq!(GroupStack::new(&[8, 128]).unwrap().to_string(), "8x128");
+        assert_eq!(Algorithm::hier(&[4]).to_string(), "hier");
+        assert_eq!(Algorithm::hier(&[8, 128]).to_string(), "hier2");
+        assert_eq!(Algorithm::try_hier(&[3, 7]), None);
+        assert_eq!(Algorithm::Ring.to_string(), "ring");
     }
 }

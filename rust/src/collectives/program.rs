@@ -361,12 +361,12 @@ pub fn barrier(p: usize) -> Vec<Program> {
 }
 
 // ---------------------------------------------------------------------------
-// Hierarchical (two-tier) composition
+// Hierarchical (N-level) composition
 // ---------------------------------------------------------------------------
 
 /// Re-label program ranks through `map` (program rank i runs as rank
 /// `map[i]`); send/recv peers are rewritten accordingly. Used to lift
-/// node-local and leader-only phase programs into the global rank space.
+/// group-local and leader-only phase programs into the global rank space.
 fn remap_ranks(progs: Vec<Program>, map: &[Rank]) -> Vec<Program> {
     progs
         .into_iter()
@@ -385,75 +385,315 @@ fn remap_ranks(progs: Vec<Program>, map: &[Rank]) -> Vec<Program> {
         .collect()
 }
 
-/// Two-level hierarchical allreduce for fabrics with `ranks_per_node`
-/// co-located ranks per node (contiguous grouping, leader = first rank of
-/// each node):
+/// Lift one group-local program into global rank space: local rank `l`
+/// of group `block` runs as global rank `block * g + l`.
+fn lift_block(prog: Program, block: usize, g: usize) -> Program {
+    let map: Vec<Rank> = (0..g).map(|l| block * g + l).collect();
+    remap_ranks(vec![prog], &map).pop().expect("one program in, one out")
+}
+
+/// Assert the preconditions shared by every recursive hierarchical
+/// builder: nested group sizes (innermost first), each >= 1, dividing the
+/// next, the outermost dividing `p`.
+fn assert_groups(p: usize, groups: &[usize]) {
+    assert!(p >= 1);
+    let mut prev = 1usize;
+    for &g in groups {
+        assert!(g >= 1 && g % prev == 0, "group sizes must nest: {groups:?}");
+        prev = g;
+    }
+    assert_eq!(p % prev, 0, "outermost group must divide p: {groups:?} vs {p}");
+}
+
+/// `rest` rescaled into the leader index space after peeling a group of
+/// `g` (leader i of the peeled level ↔ global rank i·g).
+fn scale_groups(rest: &[usize], g: usize) -> Vec<usize> {
+    rest.iter().map(|s| s / g).collect()
+}
+
+/// N-level hierarchical allreduce over nested `groups` (innermost first;
+/// see [`assert_groups`] for the preconditions), recursing over the tier
+/// stack:
 ///
-/// 1. intra-node binomial reduce of the full buffer onto the leader,
-/// 2. `inner` allreduce (ring / halving-doubling / recursive doubling)
-///    among the `p / ranks_per_node` leaders,
-/// 3. intra-node binomial broadcast from the leader.
+/// 1. binomial reduce of the full buffer onto each innermost group's
+///    leader (the group's first rank),
+/// 2. recurse over the leaders with the remaining (rescaled) groups —
+///    bottoming out in a flat `inner` allreduce (ring / halving-doubling
+///    / recursive doubling) among the outermost leaders,
+/// 3. binomial broadcast from the leader back through the group.
 ///
 /// The phases need no barrier between them: every phase-k step of a rank
 /// is ordered after its phase-(k−1) steps, and cross-phase messages
 /// between the same (src, dst) pair stay FIFO, which is all the matching
-/// layer requires. `ranks_per_node` must divide `p`; an `inner` of
-/// recursive doubling / halving-doubling additionally needs a
-/// power-of-two leader count ([`build`] picks a valid inner).
+/// layer requires. With `groups == &[]` (or all-1s) this is byte-
+/// identical to the flat `inner` algorithm; with one group it is the
+/// classic two-tier [`allreduce_hierarchical`]. An `inner` of recursive
+/// doubling / halving-doubling needs a power-of-two outermost leader
+/// count ([`build`] picks a valid inner via [`hierarchical_inner`]).
+pub fn allreduce_hierarchical_levels(
+    p: usize,
+    n: usize,
+    groups: &[usize],
+    inner: super::Algorithm,
+) -> Vec<Program> {
+    assert_groups(p, groups);
+    let Some((&g, rest)) = groups.split_first() else {
+        return match inner {
+            super::Algorithm::RecursiveDoubling => allreduce_rdoubling(p, n),
+            super::Algorithm::HalvingDoubling => allreduce_halving_doubling(p, n),
+            _ => allreduce_ring(p, n),
+        };
+    };
+    let blocks = p / g;
+    // Phase programs in group-local rank space (leader = local rank 0).
+    let reduce = reduce_binomial(g, n, 0);
+    let bcast = broadcast_binomial(g, n, 0);
+    // The levels above, among this level's leaders (leader b ↔ rank b·g).
+    let sub = allreduce_hierarchical_levels(blocks, n, &scale_groups(rest, g), inner);
+    let leader_map: Vec<Rank> = (0..blocks).map(|b| b * g).collect();
+    (0..p)
+        .map(|r| {
+            let block = r / g;
+            let local = r % g;
+            let mut steps = lift_block(reduce[local].clone(), block, g).steps;
+            if local == 0 {
+                steps.extend(
+                    remap_ranks(vec![sub[block].clone()], &leader_map)
+                        .pop()
+                        .expect("one program in, one out")
+                        .steps,
+                );
+            }
+            steps.extend(lift_block(bcast[local].clone(), block, g).steps);
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// Two-level hierarchical allreduce for fabrics with `ranks_per_node`
+/// co-located ranks per node (contiguous grouping, leader = first rank of
+/// each node) — the single-group case of
+/// [`allreduce_hierarchical_levels`], kept as the named two-tier entry
+/// point.
 pub fn allreduce_hierarchical(
     p: usize,
     n: usize,
     ranks_per_node: usize,
     inner: super::Algorithm,
 ) -> Vec<Program> {
-    assert!(p >= 1 && ranks_per_node >= 1);
-    assert_eq!(p % ranks_per_node, 0, "ranks_per_node must divide p");
-    let rpn = ranks_per_node;
-    let nodes = p / rpn;
-    // Phase programs in node-local rank space (leader = local rank 0).
-    let reduce = reduce_binomial(rpn, n, 0);
-    let bcast = broadcast_binomial(rpn, n, 0);
-    // Inter-node phase among the leaders, lifted to global rank ids.
-    let leaders: Vec<Rank> = (0..nodes).map(|k| k * rpn).collect();
-    let inter_progs = match inner {
-        super::Algorithm::RecursiveDoubling => allreduce_rdoubling(nodes, n),
-        super::Algorithm::HalvingDoubling => allreduce_halving_doubling(nodes, n),
-        _ => allreduce_ring(nodes, n),
-    };
-    let inter = remap_ranks(inter_progs, &leaders);
-    (0..p)
-        .map(|r| {
-            let node = r / rpn;
-            let local = r % rpn;
-            let node_map: Vec<Rank> = (0..rpn).map(|l| node * rpn + l).collect();
-            let mut steps = remap_ranks(vec![reduce[local].clone()], &node_map)
-                .pop()
-                .expect("one program in, one out")
-                .steps;
-            if local == 0 {
-                steps.extend(inter[node].steps.iter().copied());
-            }
-            steps.extend(
-                remap_ranks(vec![bcast[local].clone()], &node_map)
-                    .pop()
-                    .expect("one program in, one out")
-                    .steps,
-            );
-            Program { rank: r, steps }
-        })
-        .collect()
+    allreduce_hierarchical_levels(p, n, &[ranks_per_node], inner)
 }
 
-/// Inner (leader-phase) algorithm [`build`] emits for hierarchical
-/// allreduce at a given leader count: the bandwidth-optimal flat choice
-/// legal there. The selector's cost model prices hierarchical with this
-/// SAME rule — change them together, via this one function.
+/// Inner (top-phase) allreduce [`build`] emits for hierarchical
+/// composition at a given outermost-leader count: the bandwidth-optimal
+/// flat choice legal there. The selector's cost model prices hierarchical
+/// with this SAME rule — change them together, via this one function.
 pub fn hierarchical_inner(nodes: usize) -> super::Algorithm {
     if nodes.is_power_of_two() {
         super::Algorithm::HalvingDoubling
     } else {
         super::Algorithm::Ring
     }
+}
+
+/// Top-phase allgather [`build`] emits for hierarchical allgather:
+/// block-doubling when the leader count admits it, ring otherwise. Same
+/// change-together contract as [`hierarchical_inner`].
+pub fn hierarchical_ag_inner(nodes: usize) -> super::Algorithm {
+    if nodes.is_power_of_two() {
+        super::Algorithm::RecursiveDoubling
+    } else {
+        super::Algorithm::Ring
+    }
+}
+
+/// Ring reduce-scatter with NATURAL ownership: rank r ends owning the
+/// fully-reduced segment r. The ring algorithm inherently finishes with
+/// program i owning segment (i+1) mod p; because the ring is
+/// rotation-symmetric and every rank starts with the same "own data
+/// everywhere" shape, relabeling program i onto rank (i+1) mod p yields
+/// natural ownership with identical steps and volume.
+pub fn reduce_scatter_natural(p: usize, n: usize) -> Vec<Program> {
+    let map: Vec<Rank> = (0..p).map(|i| (i + 1) % p).collect();
+    let mut progs = remap_ranks(reduce_scatter_ring(p, n), &map);
+    progs.sort_by_key(|pr| pr.rank);
+    progs
+}
+
+/// N-level hierarchical reduce-scatter over nested `groups` (innermost
+/// first). Semantics: NATURAL ownership — rank r ends owning the
+/// fully-reduced segment r of [`segments`]`(n, p)` (unlike the flat
+/// [`reduce_scatter_ring`], whose ring pipeline leaves rank r with
+/// segment (r+1) mod p; a ring-shifted layout cannot nest across tiers,
+/// so the hierarchical family standardizes on natural ownership).
+///
+/// Recursion: binomial reduce of the full buffer onto each innermost
+/// group's leader; reduce-scatter among the leaders (each leader ends
+/// with its group's whole segment span — segment boundaries at every
+/// level nest exactly because [`segments`] cuts at i·n/p); then each
+/// leader scatters the per-rank segments to its group members.
+pub fn reduce_scatter_hierarchical(p: usize, n: usize, groups: &[usize]) -> Vec<Program> {
+    assert_groups(p, groups);
+    let Some((&g, rest)) = groups.split_first() else {
+        return reduce_scatter_natural(p, n);
+    };
+    let blocks = p / g;
+    let seg = segments(n, p);
+    let reduce = reduce_binomial(g, n, 0);
+    let sub = reduce_scatter_hierarchical(blocks, n, &scale_groups(rest, g));
+    let leader_map: Vec<Rank> = (0..blocks).map(|b| b * g).collect();
+    (0..p)
+        .map(|r| {
+            let block = r / g;
+            let local = r % g;
+            let mut steps = lift_block(reduce[local].clone(), block, g).steps;
+            if local == 0 {
+                steps.extend(
+                    remap_ranks(vec![sub[block].clone()], &leader_map)
+                        .pop()
+                        .expect("one program in, one out")
+                        .steps,
+                );
+                // Scatter: member l's final segment is block·g + l.
+                for l in 1..g {
+                    steps.push(Step {
+                        send: Some(SendStep {
+                            to: block * g + l,
+                            range: seg_range(&seg, block * g + l),
+                        }),
+                        recv: None,
+                    });
+                }
+            } else {
+                // The received segment is fully reduced (it already
+                // carries this rank's own contribution): overwrite.
+                steps.push(Step {
+                    send: None,
+                    recv: Some(RecvStep {
+                        from: block * g,
+                        range: seg_range(&seg, r),
+                        reduce: false,
+                    }),
+                });
+            }
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// N-level hierarchical allgather over nested `groups` (innermost
+/// first). Input/output match the flat builders: rank r starts owning
+/// segment r (natural ownership) and ends with the whole buffer.
+///
+/// Recursion: each member sends its segment to the group leader (the
+/// leader then owns the group's whole segment span — boundaries nest);
+/// the leaders allgather among themselves; each leader broadcasts the
+/// full buffer back through its group (a member's own segment is
+/// overwritten with the identical data — the full-buffer tree is cheaper
+/// in steps than per-segment scatters on the fast tiers).
+pub fn allgather_hierarchical(p: usize, n: usize, groups: &[usize]) -> Vec<Program> {
+    assert_groups(p, groups);
+    let Some((&g, rest)) = groups.split_first() else {
+        return match hierarchical_ag_inner(p) {
+            super::Algorithm::RecursiveDoubling => allgather_rdoubling(p, n),
+            _ => allgather_ring(p, n),
+        };
+    };
+    let blocks = p / g;
+    let seg = segments(n, p);
+    let bcast = broadcast_binomial(g, n, 0);
+    let sub = allgather_hierarchical(blocks, n, &scale_groups(rest, g));
+    let leader_map: Vec<Rank> = (0..blocks).map(|b| b * g).collect();
+    (0..p)
+        .map(|r| {
+            let block = r / g;
+            let local = r % g;
+            let mut steps = Vec::new();
+            if local == 0 {
+                // Gather the members' segments (FIFO per pair; one
+                // message per member).
+                for l in 1..g {
+                    steps.push(Step {
+                        send: None,
+                        recv: Some(RecvStep {
+                            from: block * g + l,
+                            range: seg_range(&seg, block * g + l),
+                            reduce: false,
+                        }),
+                    });
+                }
+                steps.extend(
+                    remap_ranks(vec![sub[block].clone()], &leader_map)
+                        .pop()
+                        .expect("one program in, one out")
+                        .steps,
+                );
+            } else {
+                steps.push(Step {
+                    send: Some(SendStep { to: block * g, range: seg_range(&seg, r) }),
+                    recv: None,
+                });
+            }
+            steps.extend(lift_block(bcast[local].clone(), block, g).steps);
+            Program { rank: r, steps }
+        })
+        .collect()
+}
+
+/// N-level hierarchical broadcast from ANY root via leader relay. At
+/// each level, if the (sub-)root is not its group's leader it first
+/// relays the full buffer to that leader (one extra hop on that level's
+/// links); the leaders then broadcast among themselves rooted at the
+/// root's leader, and finally every leader runs a binomial broadcast
+/// through its own group. A non-leader root receives one redundant copy
+/// of data it already holds (harmless overwrite) — the price of keeping
+/// every phase a plain binomial tree. Total volume: n·(p−1) plus n per
+/// level at which the (sub-)root is not a leader.
+pub fn broadcast_hierarchical(p: usize, n: usize, root: Rank, groups: &[usize]) -> Vec<Program> {
+    assert_groups(p, groups);
+    assert!(root < p, "root {root} out of range for p={p}");
+    let Some((&g, rest)) = groups.split_first() else {
+        return broadcast_binomial(p, n, root);
+    };
+    let blocks = p / g;
+    let full = Range::new(0, n);
+    let root_block = root / g;
+    let root_local = root % g;
+    let bcast = broadcast_binomial(g, n, 0);
+    let sub = broadcast_hierarchical(blocks, n, root_block, &scale_groups(rest, g));
+    let leader_map: Vec<Rank> = (0..blocks).map(|b| b * g).collect();
+    (0..p)
+        .map(|r| {
+            let block = r / g;
+            let local = r % g;
+            let mut steps = Vec::new();
+            // Leader relay: the root hands the buffer to its group's
+            // leader so the leader phase can start from a leader.
+            if root_local != 0 && block == root_block {
+                if r == root {
+                    steps.push(Step {
+                        send: Some(SendStep { to: root_block * g, range: full }),
+                        recv: None,
+                    });
+                } else if local == 0 {
+                    steps.push(Step {
+                        send: None,
+                        recv: Some(RecvStep { from: root, range: full, reduce: false }),
+                    });
+                }
+            }
+            if local == 0 {
+                steps.extend(
+                    remap_ranks(vec![sub[block].clone()], &leader_map)
+                        .pop()
+                        .expect("one program in, one out")
+                        .steps,
+                );
+            }
+            steps.extend(lift_block(bcast[local].clone(), block, g).steps);
+            Program { rank: r, steps }
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -468,8 +708,10 @@ pub enum BuildError {
     /// Recursive doubling / halving-doubling require a power-of-two rank
     /// count.
     NonPowerOfTwoRanks { alg: super::Algorithm, p: usize },
-    /// Hierarchical requires `1 <= ranks_per_node` dividing `p`.
-    InvalidNodeGrouping { p: usize, ranks_per_node: usize },
+    /// Hierarchical requires the outermost group size to divide `p`
+    /// (nesting divisibility inside the stack is enforced by
+    /// [`super::GroupStack`] at construction).
+    InvalidTierGrouping { p: usize, groups: super::GroupStack },
     /// `Algorithm::Auto` must be resolved by the selector before building.
     UnresolvedAuto,
 }
@@ -481,10 +723,10 @@ impl std::fmt::Display for BuildError {
             BuildError::NonPowerOfTwoRanks { alg, p } => {
                 write!(f, "{alg} requires a power-of-two rank count, got {p}")
             }
-            BuildError::InvalidNodeGrouping { p, ranks_per_node } => write!(
+            BuildError::InvalidTierGrouping { p, groups } => write!(
                 f,
-                "hierarchical needs ranks_per_node >= 1 dividing p: got p={p}, \
-                 ranks_per_node={ranks_per_node}"
+                "hierarchical needs its outermost group dividing p: got p={p}, \
+                 groups={groups}"
             ),
             BuildError::UnresolvedAuto => {
                 write!(f, "Algorithm::Auto must be resolved via the selector before build")
@@ -499,6 +741,12 @@ impl std::error::Error for BuildError {}
 /// [`BuildError`] when the algorithm's rank-count precondition is violated
 /// (the selector never produces such combinations, but callers composing
 /// algorithms by hand get a diagnosable error instead of a panic).
+///
+/// Note one semantic wrinkle: flat reduce-scatter (`Ring` et al.) leaves
+/// rank r owning segment (r+1) mod p (the ring pipeline's layout), while
+/// `Hierarchical` reduce-scatter produces NATURAL ownership (rank r owns
+/// segment r) — a ring-shifted layout cannot nest across tiers. See
+/// [`reduce_scatter_hierarchical`].
 pub fn build(
     kind: CollectiveKind,
     alg: super::Algorithm,
@@ -510,15 +758,21 @@ pub fn build(
     if p == 0 {
         return Err(BuildError::NoRanks);
     }
+    // Hierarchical preconditions are kind-independent wherever a
+    // hierarchical builder exists.
+    if let A::Hierarchical { groups } = alg {
+        if matches!(
+            kind,
+            K::Allreduce | K::ReduceScatter | K::Allgather | K::Broadcast { .. }
+        ) && p % groups.outermost() != 0
+        {
+            return Err(BuildError::InvalidTierGrouping { p, groups });
+        }
+    }
     if kind == K::Allreduce {
         match alg {
             A::RecursiveDoubling | A::HalvingDoubling if !p.is_power_of_two() => {
                 return Err(BuildError::NonPowerOfTwoRanks { alg, p });
-            }
-            A::Hierarchical { ranks_per_node }
-                if ranks_per_node == 0 || p % ranks_per_node != 0 =>
-            {
-                return Err(BuildError::InvalidNodeGrouping { p, ranks_per_node });
             }
             A::Auto => return Err(BuildError::UnresolvedAuto),
             _ => {}
@@ -531,13 +785,22 @@ pub fn build(
         (K::Allreduce, A::Ring) => allreduce_ring(p, n),
         (K::Allreduce, A::RecursiveDoubling) => allreduce_rdoubling(p, n),
         (K::Allreduce, A::HalvingDoubling) => allreduce_halving_doubling(p, n),
-        (K::Allreduce, A::Hierarchical { ranks_per_node }) => {
-            let inner = hierarchical_inner(p / ranks_per_node);
-            allreduce_hierarchical(p, n, ranks_per_node, inner)
+        (K::Allreduce, A::Hierarchical { groups }) => {
+            let inner = hierarchical_inner(p / groups.outermost());
+            allreduce_hierarchical_levels(p, n, &groups.to_vec(), inner)
+        }
+        (K::ReduceScatter, A::Hierarchical { groups }) => {
+            reduce_scatter_hierarchical(p, n, &groups.to_vec())
         }
         (K::ReduceScatter, _) => reduce_scatter_ring(p, n),
+        (K::Allgather, A::Hierarchical { groups }) => {
+            allgather_hierarchical(p, n, &groups.to_vec())
+        }
         (K::Allgather, A::RecursiveDoubling) => allgather_rdoubling(p, n),
         (K::Allgather, _) => allgather_ring(p, n),
+        (K::Broadcast { root }, A::Hierarchical { groups }) => {
+            broadcast_hierarchical(p, n, root, &groups.to_vec())
+        }
         (K::Broadcast { root }, _) => broadcast_binomial(p, n, root),
         (K::Reduce { root }, _) => reduce_binomial(p, n, root),
         (K::Barrier, _) => barrier(p),
@@ -700,24 +963,148 @@ mod tests {
             build(K::Allreduce, A::HalvingDoubling, 12, 10),
             Err(BuildError::NonPowerOfTwoRanks { alg: A::HalvingDoubling, p: 12 })
         );
+        let g3 = crate::collectives::GroupStack::single(3).unwrap();
         assert_eq!(
-            build(K::Allreduce, A::Hierarchical { ranks_per_node: 3 }, 8, 10),
-            Err(BuildError::InvalidNodeGrouping { p: 8, ranks_per_node: 3 })
+            build(K::Allreduce, A::hier(&[3]), 8, 10),
+            Err(BuildError::InvalidTierGrouping { p: 8, groups: g3 })
         );
-        assert_eq!(
-            build(K::Allreduce, A::Hierarchical { ranks_per_node: 0 }, 8, 10),
-            Err(BuildError::InvalidNodeGrouping { p: 8, ranks_per_node: 0 })
-        );
+        // A non-dividing OUTERMOST group is rejected for every kind with a
+        // hierarchical builder.
+        for kind in [
+            K::ReduceScatter,
+            K::Allgather,
+            K::Broadcast { root: 0 },
+        ] {
+            assert_eq!(
+                build(kind, A::hier(&[2, 6]), 8, 10),
+                Err(BuildError::InvalidTierGrouping {
+                    p: 8,
+                    groups: crate::collectives::GroupStack::new(&[2, 6]).unwrap()
+                }),
+                "{kind:?}"
+            );
+        }
         assert_eq!(build(K::Allreduce, A::Auto, 8, 10), Err(BuildError::UnresolvedAuto));
         assert_eq!(build(K::Barrier, A::Ring, 0, 1), Err(BuildError::NoRanks));
         // Errors render a usable message.
         let msg = build(K::Allreduce, A::RecursiveDoubling, 6, 10).unwrap_err().to_string();
         assert!(msg.contains("power-of-two"), "{msg}");
+        let msg = build(K::Allreduce, A::hier(&[3]), 8, 10).unwrap_err().to_string();
+        assert!(msg.contains("groups=3"), "{msg}");
         // Valid requests still build.
         assert_eq!(build(K::Allreduce, A::Ring, 6, 10).unwrap().len(), 6);
+        assert_eq!(build(K::Allreduce, A::hier(&[2]), 8, 10).unwrap().len(), 8);
+        assert_eq!(build(K::Allreduce, A::hier(&[2, 4]), 8, 10).unwrap().len(), 8);
+        assert_eq!(build(K::Allgather, A::hier(&[2, 4]), 16, 32).unwrap().len(), 16);
+        assert_eq!(build(K::ReduceScatter, A::hier(&[3]), 9, 27).unwrap().len(), 9);
         assert_eq!(
-            build(K::Allreduce, A::Hierarchical { ranks_per_node: 2 }, 8, 10).unwrap().len(),
-            8
+            build(K::Broadcast { root: 5 }, A::hier(&[2, 6]), 12, 10).unwrap().len(),
+            12
         );
+    }
+
+    /// Acceptance criterion: with a trivial tier stack the recursive
+    /// builders emit BYTE-IDENTICAL programs to the flat algorithms.
+    #[test]
+    fn recursive_builders_degenerate_to_flat_byte_identical() {
+        use crate::collectives::Algorithm as A;
+        for (p, n) in [(6usize, 30usize), (8, 64), (1, 5)] {
+            assert_eq!(
+                allreduce_hierarchical_levels(p, n, &[], A::Ring),
+                allreduce_ring(p, n)
+            );
+            assert_eq!(
+                allgather_hierarchical(p, n, &[]),
+                if p.is_power_of_two() { allgather_rdoubling(p, n) } else { allgather_ring(p, n) }
+            );
+            assert_eq!(reduce_scatter_hierarchical(p, n, &[]), reduce_scatter_natural(p, n));
+            for root in 0..p {
+                assert_eq!(
+                    broadcast_hierarchical(p, n, root, &[]),
+                    broadcast_binomial(p, n, root)
+                );
+            }
+        }
+        // All-1 group stacks degenerate the same way (every rank is a
+        // leader at every level; the per-level trees are empty).
+        assert_eq!(allreduce_hierarchical_levels(6, 30, &[1], A::Ring), allreduce_ring(6, 30));
+        assert_eq!(allreduce_hierarchical_levels(6, 30, &[1, 1], A::Ring), allreduce_ring(6, 30));
+    }
+
+    /// Acceptance criterion: with TWO tiers the recursion is byte-
+    /// identical to PR 1's three-phase composition (intra binomial reduce
+    /// → lifted leader phase → intra binomial broadcast), restated here
+    /// independently.
+    #[test]
+    fn two_tier_recursion_matches_legacy_composition() {
+        use crate::collectives::Algorithm as A;
+        for (p, rpn, n, inner) in
+            [(8usize, 2usize, 64usize, A::HalvingDoubling), (12, 3, 40, A::Ring), (16, 4, 7, A::RecursiveDoubling)]
+        {
+            let nodes = p / rpn;
+            let reduce = reduce_binomial(rpn, n, 0);
+            let bcast = broadcast_binomial(rpn, n, 0);
+            let leaders: Vec<Rank> = (0..nodes).map(|k| k * rpn).collect();
+            let inter_progs = match inner {
+                A::RecursiveDoubling => allreduce_rdoubling(nodes, n),
+                A::HalvingDoubling => allreduce_halving_doubling(nodes, n),
+                _ => allreduce_ring(nodes, n),
+            };
+            let inter = remap_ranks(inter_progs, &leaders);
+            let legacy: Vec<Program> = (0..p)
+                .map(|r| {
+                    let node = r / rpn;
+                    let local = r % rpn;
+                    let node_map: Vec<Rank> = (0..rpn).map(|l| node * rpn + l).collect();
+                    let mut steps =
+                        remap_ranks(vec![reduce[local].clone()], &node_map).pop().unwrap().steps;
+                    if local == 0 {
+                        steps.extend(inter[node].steps.iter().copied());
+                    }
+                    steps.extend(
+                        remap_ranks(vec![bcast[local].clone()], &node_map).pop().unwrap().steps,
+                    );
+                    Program { rank: r, steps }
+                })
+                .collect();
+            assert_eq!(allreduce_hierarchical(p, n, rpn, inner), legacy, "p={p} rpn={rpn}");
+            assert_eq!(
+                allreduce_hierarchical_levels(p, n, &[rpn], inner),
+                legacy,
+                "levels p={p} rpn={rpn}"
+            );
+        }
+    }
+
+    #[test]
+    fn three_level_non_leaders_never_touch_outer_tiers() {
+        use crate::collectives::Algorithm as A;
+        // 2 ranks/socket-ish group, 8/node-group, 32 ranks total.
+        let (p, n) = (32usize, 48usize);
+        let groups = [2usize, 8];
+        let progs = allreduce_hierarchical_levels(p, n, &groups, A::Ring);
+        for (r, prog) in progs.iter().enumerate() {
+            assert_eq!(prog.rank, r);
+            for step in &prog.steps {
+                for peer in step
+                    .send
+                    .iter()
+                    .map(|s| s.to)
+                    .chain(step.recv.iter().map(|v| v.from))
+                {
+                    // A rank that is not a leader at level i must stay
+                    // inside its level-i group.
+                    for &g in &groups {
+                        if r % g != 0 {
+                            assert_eq!(peer / g, r / g, "rank {r} peer {peer} group {g}");
+                        }
+                    }
+                }
+            }
+            if r % groups[0] != 0 {
+                // Innermost non-leaders: one send up + one recv down.
+                assert_eq!(prog.steps.len(), 2, "rank {r}");
+            }
+        }
     }
 }

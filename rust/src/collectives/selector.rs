@@ -1,71 +1,103 @@
 //! Size-adaptive algorithm selection — the paper's "implements performance
 //! critical data path operations in an optimal manner".
 //!
-//! The choice is driven by a TWO-TIER alpha-beta cost model on the actual
-//! fabric. With contiguous node grouping (node = rank / ranks_per_node), a
-//! hop at partner distance d is intra-node when d < ranks_per_node and
-//! inter-node otherwise; each tier has its own alpha (latency + overhead)
-//! and beta⁻¹ (bandwidth):
+//! The choice is driven by an N-LEVEL alpha-beta cost model on the actual
+//! fabric. With contiguous grouping at every tier (group = rank /
+//! tier.ranks), a hop at XOR-partner distance d provably stays inside a
+//! tier of size s only when s is a power of two and d < s; each level has
+//! its own alpha (latency + overhead) and beta⁻¹ (bandwidth):
 //!
 //! * ring allreduce:            2(P−1)·(α + (n/P)/B), gated by its slowest
-//!   (inter-node) hops unless the whole ring fits in one node;
+//!   hops — the innermost tier containing the whole ring, or the top;
 //! * recursive doubling:        Σ over rounds d of (α_d + n/B_d);
 //! * halving-doubling:          Σ over rounds d of 2·(α_d + (n·d/P)/B_d);
-//! * hierarchical:              2·⌈log₂ r⌉·(α_intra + n/B_intra) intra
-//!   reduce+broadcast, plus a flat allreduce among the P/r node leaders
-//!   whose hops are all inter-tier.
+//! * hierarchical (groups g₁ ⊆ g₂ ⊆ …): per level, 2·⌈log₂(gᵢ/gᵢ₋₁)⌉
+//!   full-buffer rounds priced at the tier containing a gᵢ-group, plus a
+//!   flat allreduce among the P/g_k outermost leaders whose hops all pay
+//!   the top tier.
 //!
 //! Small n → latency term dominates → fewest rounds (recursive doubling).
-//! Large n → bandwidth term dominates → ring / halving-doubling. Many
-//! ranks per node → hierarchical (O(P/r) inter-node steps instead of
-//! O(P)). On flat fabrics (ranks_per_node = 1) every formula collapses to
-//! the classic single-tier model.
+//! Large n → bandwidth term dominates → ring / halving-doubling. Deep
+//! tier stacks → hierarchical (O(P/g_k) slow-tier steps instead of O(P));
+//! the selector considers every prefix of the tier stack that divides P,
+//! so a rack-oversubscribed fabric can pick a 3-level reduction. On flat
+//! fabrics (empty tier stack) every formula collapses to the classic
+//! single-tier model.
 
 use super::Algorithm;
 use crate::fabric::gbps_to_bytes_per_ns;
-use crate::fabric::topology::{Tier, Topology};
+use crate::fabric::topology::Topology;
 use crate::Ns;
 
-/// Per-message fixed cost of a tier (latency + injection overhead), ns.
-fn alpha(topo: &Topology, tier: Tier) -> f64 {
-    (topo.latency_of(tier) + topo.overhead_of(tier)) as f64
+/// Per-message fixed cost of a level (latency + injection overhead), ns.
+fn alpha(topo: &Topology, level: usize) -> f64 {
+    (topo.latency_at(level) + topo.overhead_at(level)) as f64
 }
 
-/// Bandwidth of a tier, bytes/ns.
-fn bw(topo: &Topology, tier: Tier) -> f64 {
-    gbps_to_bytes_per_ns(topo.gbps_of(tier))
+/// Bandwidth of a level, bytes/ns.
+fn bw(topo: &Topology, level: usize) -> f64 {
+    gbps_to_bytes_per_ns(topo.gbps_at(level))
 }
 
-/// Tier of an XOR-distance-`d` exchange under contiguous grouping. The
-/// partner `r ^ d` provably stays in-node for d < ranks_per_node ONLY
-/// when ranks_per_node is a power of two (node = rank >> log2(rpn));
-/// otherwise be conservative and price the hop inter-node.
-fn tier_at(d: usize, ranks_per_node: usize) -> Tier {
-    if ranks_per_node.is_power_of_two() && d < ranks_per_node {
-        Tier::Intra
-    } else {
-        Tier::Inter
-    }
+/// How a flat algorithm's participants sit on the fabric, for pricing.
+#[derive(Clone, Copy)]
+enum Layout {
+    /// Participant i is rank base + i·spacing for an aligned contiguous
+    /// base: a full communicator (spacing 1) or the leaders of a
+    /// hierarchical phase (spacing = their group size, itself a tier
+    /// size — so it divides every outer tier).
+    Spaced(usize),
+    /// Strided / unknown placement: every hop pays the top tier.
+    AllTop,
 }
 
-/// Predicted wall time (ns, unrounded) of a FLAT algorithm over `p` ranks
-/// with hops priced via `tier_at(d, rpn)`. `rpn = 1` prices every hop at
-/// the inter tier (used for the leader phase of hierarchical allreduce).
-fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f64 {
+/// Level of an XOR-distance-`d` exchange between participants spaced
+/// `s` ranks apart under contiguous grouping. The partner `i ^ d` (rank
+/// distance ≤ (2d−1)·s) provably stays inside a tier of size R ONLY
+/// when s divides R, R/s is a power of two (participant group = index
+/// >> log2(R/s)) and d < R/s; otherwise be conservative and price the
+/// hop at the next level out (ultimately the top).
+fn level_at(topo: &Topology, d: usize, layout: Layout) -> usize {
+    let Layout::Spaced(s) = layout else { return topo.top_level() };
+    topo.tiers
+        .iter()
+        .position(|t| {
+            t.ranks % s == 0 && (t.ranks / s).is_power_of_two() && d < t.ranks / s
+        })
+        .unwrap_or_else(|| topo.top_level())
+}
+
+/// Innermost level whose tier contains the whole `p`-participant span
+/// (p·spacing ranks) — what gates a lockstep ring.
+fn ring_level(topo: &Topology, p: usize, layout: Layout) -> usize {
+    let Layout::Spaced(s) = layout else { return topo.top_level() };
+    topo.tiers
+        .iter()
+        .position(|t| p.saturating_mul(s) <= t.ranks)
+        .unwrap_or_else(|| topo.top_level())
+}
+
+/// Predicted wall time (ns, unrounded) of a FLAT algorithm over `p`
+/// participants placed per `layout`. [`Layout::AllTop`] is the strided-
+/// communicator model (member distance says nothing about co-location);
+/// [`Layout::Spaced`] gives XOR rounds and contained rings their true
+/// tier — on a rack fabric, a leader phase's small-distance rounds stay
+/// in-rack exactly like the built program's hops do in the simulator.
+fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout: Layout) -> f64 {
     let pf = p as f64;
     match alg {
         Algorithm::Ring => {
             // Lockstep pipeline: each step is gated by its slowest hop —
-            // inter-node unless the whole ring fits in one node.
-            let t = if p <= rpn { Tier::Intra } else { Tier::Inter };
-            2.0 * (pf - 1.0) * (alpha(topo, t) + n / pf / bw(topo, t))
+            // the deepest tier containing the whole ring.
+            let l = ring_level(topo, p, layout);
+            2.0 * (pf - 1.0) * (alpha(topo, l) + n / pf / bw(topo, l))
         }
         Algorithm::RecursiveDoubling => {
             let mut total = 0.0;
             let mut d = 1;
             while d < p {
-                let t = tier_at(d, rpn);
-                total += alpha(topo, t) + n / bw(topo, t);
+                let l = level_at(topo, d, layout);
+                total += alpha(topo, l) + n / bw(topo, l);
                 d <<= 1;
             }
             total
@@ -76,8 +108,8 @@ fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f
             let mut total = 0.0;
             let mut d = p / 2;
             while d >= 1 {
-                let t = tier_at(d, rpn);
-                total += 2.0 * (alpha(topo, t) + n * d as f64 / pf / bw(topo, t));
+                let l = level_at(topo, d, layout);
+                total += 2.0 * (alpha(topo, l) + n * d as f64 / pf / bw(topo, l));
                 d /= 2;
             }
             total
@@ -86,37 +118,60 @@ fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f
     }
 }
 
+/// Is a hierarchical group stack usable at `p` ranks? (Outermost group
+/// divides p; nesting divisibility is a [`super::GroupStack`] invariant.)
+fn hier_valid(groups: &super::GroupStack, p: usize) -> bool {
+    let g = groups.outermost();
+    g >= 1 && p % g == 0
+}
+
+/// Cost of the up-reduce + down-broadcast tree pair at every level of a
+/// hierarchical stack (everything except the top leader phase): per level
+/// i, 2·⌈log₂(gᵢ/gᵢ₋₁)⌉ full-buffer rounds priced at the innermost tier
+/// containing a gᵢ-group.
+fn hier_tree_cost(topo: &Topology, groups: &super::GroupStack, n: f64) -> f64 {
+    let mut total = 0.0;
+    let mut prev = 1usize;
+    for g in groups.iter() {
+        let branch = g / prev.max(1);
+        if branch > 1 {
+            let rounds = (branch as f64).log2().ceil();
+            let l = topo.level_for_group(g);
+            total += 2.0 * rounds * (alpha(topo, l) + n / bw(topo, l));
+        }
+        prev = g;
+    }
+    total
+}
+
 /// Predicted wall time of an allreduce of `bytes` over `p` ranks.
 pub fn predict_allreduce_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u64) -> Ns {
     if p <= 1 {
         return 0;
     }
     let n = bytes as f64;
-    let rpn = topo.ranks_per_node.max(1);
     let t = match alg {
         Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
-            flat_cost(topo, alg, p, n, rpn)
+            flat_cost(topo, alg, p, n, Layout::Spaced(1))
         }
-        Algorithm::Hierarchical { ranks_per_node } => {
-            let r = ranks_per_node;
-            if r == 0 || p % r != 0 {
+        Algorithm::Hierarchical { groups } => {
+            if !hier_valid(&groups, p) {
                 // Invalid grouping: never the cheapest choice.
                 return Ns::MAX / 4;
             }
-            let nodes = p / r;
-            // Intra binomial reduce + broadcast: ⌈log₂ r⌉ full-buffer
-            // rounds each, on the shared-memory tier.
-            let intra = if r > 1 {
-                let rounds = (r as f64).log2().ceil();
-                2.0 * rounds * (alpha(topo, Tier::Intra) + n / bw(topo, Tier::Intra))
+            let leaders = p / groups.outermost();
+            // The top algorithm is exactly what program::build will emit;
+            // its participants are the outermost leaders, spaced one
+            // outermost group apart — XOR rounds between leaders of the
+            // same rack (say) still ride the rack tier, exactly as the
+            // built program's hops do in the simulator.
+            let inner = super::program::hierarchical_inner(leaders);
+            let top = if leaders > 1 {
+                flat_cost(topo, inner, leaders, n, Layout::Spaced(groups.outermost()))
             } else {
                 0.0
             };
-            // Leaders sit on distinct nodes → every hop inter-tier. The
-            // inner algorithm is exactly what program::build will emit.
-            let inner = super::program::hierarchical_inner(nodes);
-            let inter = if nodes > 1 { flat_cost(topo, inner, nodes, n, 1) } else { 0.0 };
-            intra + inter
+            hier_tree_cost(topo, &groups, n) + top
         }
         Algorithm::Auto => {
             let best = choose_algorithm(topo, p, bytes);
@@ -136,20 +191,28 @@ fn flat_candidates(p: usize) -> Vec<Algorithm> {
     c
 }
 
-/// Every allreduce algorithm the selector considers at this (fabric, p).
-/// Hierarchical is a candidate only when the topology is multi-rank-per-
-/// node and its node size divides `p` (contiguous full-node communicator).
-/// The tuning probe ([`crate::tuner::probe`]) measures EXACTLY this set,
-/// so tuned tables and the analytic chooser pick from the same menu.
+/// Hierarchical candidates at this (fabric, p): one stack per PREFIX of
+/// the topology's tier sizes that divide `p` (a 3-level fabric offers
+/// both the node-only and the node+rack stack). Shared by the allreduce
+/// and allgather candidate menus so the two can never desynchronize.
+fn hier_prefix_candidates(topo: &Topology, p: usize) -> Vec<Algorithm> {
+    let stack = topo.hier_group_sizes_for(p);
+    (1..=stack.len())
+        .filter_map(|depth| Algorithm::try_hier(&stack[..depth]))
+        .collect()
+}
+
+/// Every allreduce algorithm the selector considers at this (fabric, p):
+/// the flat set plus [`hier_prefix_candidates`], over contiguous
+/// full-group communicators only. The tuning probe
+/// ([`crate::tuner::probe`]) measures EXACTLY this set, so tuned tables
+/// and the analytic chooser pick from the same menu.
 pub fn candidate_algorithms(topo: &Topology, p: usize) -> Vec<Algorithm> {
     if p <= 1 {
         return vec![Algorithm::Ring];
     }
-    let rpn = topo.ranks_per_node;
     let mut candidates = flat_candidates(p);
-    if rpn > 1 && p > rpn && p % rpn == 0 {
-        candidates.push(Algorithm::Hierarchical { ranks_per_node: rpn });
-    }
+    candidates.extend(hier_prefix_candidates(topo, p));
     candidates
 }
 
@@ -164,12 +227,12 @@ pub fn choose_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
         .unwrap()
 }
 
-/// Like [`predict_allreduce_ns`] but pricing EVERY hop at the inter
+/// Like [`predict_allreduce_ns`] but pricing EVERY hop at the top
 /// tier. This is the correct model for communicators that do NOT occupy
 /// contiguous ranks of the topology (e.g. the strided data-parallel
 /// groups of a hybrid distribution): there, rank distance inside the
-/// communicator says nothing about physical co-location, so the intra
-/// discount must not apply.
+/// communicator says nothing about physical co-location, so no tier
+/// discount may apply.
 pub fn predict_flat_inter_allreduce_ns(
     topo: &Topology,
     alg: Algorithm,
@@ -181,16 +244,16 @@ pub fn predict_flat_inter_allreduce_ns(
     }
     match alg {
         Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
-            flat_cost(topo, alg, p, bytes as f64, 1).ceil() as Ns
+            flat_cost(topo, alg, p, bytes as f64, Layout::AllTop).ceil() as Ns
         }
         other => predict_allreduce_ns(topo, other, p, bytes),
     }
 }
 
 /// Like [`choose_algorithm`] but never hierarchical, and priced all
-/// inter-tier — for communicators whose members do not decompose into
-/// whole nodes (e.g. the strided data-parallel groups of a hybrid
-/// distribution).
+/// top-tier — for communicators whose members do not decompose into
+/// whole groups at any level (e.g. the strided data-parallel groups of a
+/// hybrid distribution).
 pub fn choose_flat_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
     if p <= 1 {
         return Algorithm::Ring;
@@ -205,10 +268,10 @@ pub fn choose_flat_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm
 // Allgather pricing (activation exchanges)
 // ---------------------------------------------------------------------------
 
-/// Allgather algorithms legal at this rank count: ring always; recursive
-/// doubling (block-doubling allgather, same volume in log₂ p rounds) only
-/// at power-of-two rank counts.
-pub fn allgather_candidates(p: usize) -> Vec<Algorithm> {
+/// Flat allgather algorithms legal at this rank count: ring always;
+/// recursive doubling (block-doubling allgather, same volume in log₂ p
+/// rounds) only at power-of-two rank counts.
+pub fn flat_allgather_candidates(p: usize) -> Vec<Algorithm> {
     let mut c = vec![Algorithm::Ring];
     if p > 1 && p.is_power_of_two() {
         c.push(Algorithm::RecursiveDoubling);
@@ -216,15 +279,27 @@ pub fn allgather_candidates(p: usize) -> Vec<Algorithm> {
     c
 }
 
-/// Two-tier cost of a flat allgather of `n` total bytes over `p` ranks
-/// (each rank contributes n/p); `rpn = 1` prices every hop inter-tier.
-fn allgather_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize) -> f64 {
+/// Every allgather algorithm the selector considers at this (fabric, p)
+/// over a fully-aligned contiguous communicator: the flat set plus the
+/// same [`hier_prefix_candidates`] stacks as allreduce (gather up →
+/// leaders allgather → broadcast down).
+pub fn allgather_candidates(topo: &Topology, p: usize) -> Vec<Algorithm> {
+    let mut c = flat_allgather_candidates(p);
+    if p > 1 {
+        c.extend(hier_prefix_candidates(topo, p));
+    }
+    c
+}
+
+/// N-level cost of a flat allgather of `n` total bytes over `p`
+/// participants placed per `layout` (each contributes n/p).
+fn allgather_flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout: Layout) -> f64 {
     let pf = p as f64;
     match alg {
         Algorithm::Ring => {
             // p−1 lockstep steps of n/p bytes, gated by the slowest hop.
-            let t = if p <= rpn { Tier::Intra } else { Tier::Inter };
-            (pf - 1.0) * (alpha(topo, t) + n / pf / bw(topo, t))
+            let l = ring_level(topo, p, layout);
+            (pf - 1.0) * (alpha(topo, l) + n / pf / bw(topo, l))
         }
         Algorithm::RecursiveDoubling if p.is_power_of_two() => {
             // The round at partner distance d exchanges the held block of
@@ -232,8 +307,8 @@ fn allgather_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize)
             let mut total = 0.0;
             let mut d = 1;
             while d < p {
-                let t = tier_at(d, rpn);
-                total += alpha(topo, t) + n * d as f64 / pf / bw(topo, t);
+                let l = level_at(topo, d, layout);
+                total += alpha(topo, l) + n * d as f64 / pf / bw(topo, l);
                 d <<= 1;
             }
             total
@@ -243,7 +318,10 @@ fn allgather_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, rpn: usize)
 }
 
 /// Predicted wall time of an allgather of `bytes` (total buffer) over `p`
-/// ranks, priced with the same two-tier model as allreduce.
+/// ranks, priced with the same N-level model as allreduce. Hierarchical
+/// allgather: per level, the leader serially ingests its members'
+/// segments, the leaders run the flat top allgather, and a full-buffer
+/// binomial broadcast comes back down.
 pub fn predict_allgather_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u64) -> Ns {
     if p <= 1 {
         return 0;
@@ -252,8 +330,38 @@ pub fn predict_allgather_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u6
         let best = choose_allgather_algorithm(topo, p, bytes);
         return predict_allgather_ns(topo, best, p, bytes);
     }
-    let rpn = topo.ranks_per_node.max(1);
-    let t = allgather_cost(topo, alg, p, bytes as f64, rpn);
+    let n = bytes as f64;
+    let t = match alg {
+        Algorithm::Hierarchical { groups } => {
+            if !hier_valid(&groups, p) {
+                return Ns::MAX / 4;
+            }
+            let mut total = 0.0;
+            let mut prev = 1usize;
+            for g in groups.iter() {
+                let branch = g / prev.max(1);
+                if branch > 1 {
+                    let l = topo.level_for_group(g);
+                    // Gather: branch−1 serialized messages of the
+                    // member share each; broadcast down: ⌈log₂ branch⌉
+                    // full-buffer rounds.
+                    let share = n * prev as f64 / p as f64;
+                    total += (branch as f64 - 1.0) * (alpha(topo, l) + share / bw(topo, l));
+                    let rounds = (branch as f64).log2().ceil();
+                    total += rounds * (alpha(topo, l) + n / bw(topo, l));
+                }
+                prev = g;
+            }
+            let leaders = p / groups.outermost();
+            if leaders > 1 {
+                let inner = super::program::hierarchical_ag_inner(leaders);
+                total +=
+                    allgather_flat_cost(topo, inner, leaders, n, Layout::Spaced(groups.outermost()));
+            }
+            total
+        }
+        other => allgather_flat_cost(topo, other, p, n, Layout::Spaced(1)),
+    };
     if t.is_finite() {
         t.ceil() as Ns
     } else {
@@ -262,26 +370,27 @@ pub fn predict_allgather_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u6
 }
 
 /// Pick the cheapest allgather algorithm for this (fabric, p, bytes) over
-/// a node-aligned (contiguous) communicator.
+/// a fully-aligned (contiguous whole-group) communicator.
 pub fn choose_allgather_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
     if p <= 1 {
         return Algorithm::Ring;
     }
-    *allgather_candidates(p)
+    *allgather_candidates(topo, p)
         .iter()
         .min_by_key(|a| predict_allgather_ns(topo, **a, p, bytes))
         .unwrap()
 }
 
-/// Like [`choose_allgather_algorithm`] but priced all inter-tier — for
-/// communicators that do not decompose into whole nodes.
+/// Like [`choose_allgather_algorithm`] but never hierarchical and priced
+/// all top-tier — for communicators that do not decompose into whole
+/// groups.
 pub fn choose_flat_allgather_algorithm(topo: &Topology, p: usize, bytes: u64) -> Algorithm {
     if p <= 1 {
         return Algorithm::Ring;
     }
-    *allgather_candidates(p)
+    *flat_allgather_candidates(p)
         .iter()
-        .min_by_key(|a| allgather_cost(topo, **a, p, bytes as f64, 1).ceil() as Ns)
+        .min_by_key(|a| allgather_flat_cost(topo, **a, p, bytes as f64, Layout::AllTop).ceil() as Ns)
         .unwrap()
 }
 
@@ -375,7 +484,7 @@ mod tests {
         let topo = Topology::eth_10g_smp(2);
         for bytes in [64u64 << 10, 1 << 20, 16 << 20] {
             let alg = choose_algorithm(&topo, 96, bytes);
-            assert_eq!(alg, Algorithm::Hierarchical { ranks_per_node: 2 }, "bytes={bytes}");
+            assert_eq!(alg, Algorithm::hier(&[2]), "bytes={bytes}");
             let flat = predict_allreduce_ns(&topo, Algorithm::Ring, 96, bytes);
             let hier = predict_allreduce_ns(&topo, alg, 96, bytes);
             assert!(hier < flat, "bytes={bytes}: hier={hier} flat={flat}");
@@ -384,7 +493,7 @@ mod tests {
 
     #[test]
     fn strided_pricing_never_gets_the_intra_discount() {
-        // A strided communicator's hops all cross nodes: the all-inter
+        // A strided communicator's hops all cross nodes: the all-top
         // model must agree with the flat fabric (identical NIC params)…
         let smp = Topology::eth_10g_smp(4);
         let flat = Topology::eth_10g();
@@ -412,7 +521,7 @@ mod tests {
     fn non_pow2_node_sizes_price_doubling_rounds_inter() {
         // With 3 ranks/node the XOR partner at distance 1 or 2 can cross
         // a node boundary, so the contiguous model must fall back to
-        // inter pricing — identical to the flat fabric.
+        // top-tier pricing — identical to the flat fabric.
         let smp = Topology::eth_10g_smp(3);
         let flat = Topology::eth_10g();
         for alg in [Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
@@ -439,12 +548,7 @@ mod tests {
     fn hierarchical_prediction_counts_both_tiers() {
         let topo = Topology::eth_10g_smp(2);
         let bytes = 1u64 << 20;
-        let hier = predict_allreduce_ns(
-            &topo,
-            Algorithm::Hierarchical { ranks_per_node: 2 },
-            64,
-            bytes,
-        );
+        let hier = predict_allreduce_ns(&topo, Algorithm::hier(&[2]), 64, bytes);
         // Must exceed the leaders-only flat phase (32 inter ranks)...
         let leaders_only = predict_allreduce_ns(&topo, Algorithm::HalvingDoubling, 32, bytes);
         assert!(hier > leaders_only, "hier={hier} leaders={leaders_only}");
@@ -457,8 +561,7 @@ mod tests {
     #[test]
     fn invalid_hierarchical_grouping_is_never_cheapest() {
         let topo = Topology::eth_10g_smp(2);
-        let cost =
-            predict_allreduce_ns(&topo, Algorithm::Hierarchical { ranks_per_node: 5 }, 8, 1024);
+        let cost = predict_allreduce_ns(&topo, Algorithm::hier(&[5]), 8, 1024);
         assert!(cost > predict_allreduce_ns(&topo, Algorithm::Ring, 8, 1024));
     }
 
@@ -514,7 +617,7 @@ mod tests {
             assert!(b > a, "{alg:?}");
         }
         // A 4-rank ring inside one node rides the intra tier; the flat
-        // (all-inter) pricing must not inherit that discount.
+        // (all-top) pricing must not inherit that discount.
         let smp = Topology::eth_10g_smp(4);
         let intra = predict_allgather_ns(&smp, Algorithm::Ring, 4, 1 << 20);
         let flat = predict_allgather_ns(&Topology::eth_10g(), Algorithm::Ring, 4, 1 << 20);
@@ -523,18 +626,105 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_allgather_prices_and_wins_on_slow_fabrics() {
+        // 64 ranks at 2/node on 10GbE, non-pow2 leader count excluded:
+        // the hierarchical allgather halves the slow-tier step count and
+        // must beat the flat ring at sizeable payloads.
+        let topo = Topology::eth_10g_smp(2);
+        let alg = Algorithm::hier(&[2]);
+        for p in [64usize, 96] {
+            let bytes = 8u64 << 20;
+            let hier = predict_allgather_ns(&topo, alg, p, bytes);
+            let ring = predict_allgather_ns(&topo, Algorithm::Ring, p, bytes);
+            assert!(hier < ring, "p={p}: hier={hier} ring={ring}");
+        }
+        // Invalid grouping is never the cheapest.
+        assert!(predict_allgather_ns(&topo, Algorithm::hier(&[5]), 8, 1024) >= Ns::MAX / 4);
+    }
+
+    #[test]
     fn candidate_sets_match_chooser_support() {
         let smp = Topology::eth_10g_smp(2);
-        assert!(candidate_algorithms(&smp, 8)
-            .contains(&Algorithm::Hierarchical { ranks_per_node: 2 }));
+        assert!(candidate_algorithms(&smp, 8).contains(&Algorithm::hier(&[2])));
         assert!(!candidate_algorithms(&Topology::eth_10g(), 8)
             .iter()
             .any(|a| matches!(a, Algorithm::Hierarchical { .. })));
         assert_eq!(candidate_algorithms(&smp, 1), vec![Algorithm::Ring]);
-        assert_eq!(allgather_candidates(6), vec![Algorithm::Ring]);
+        assert_eq!(allgather_candidates(&Topology::eth_10g(), 6), vec![Algorithm::Ring]);
         assert_eq!(
-            allgather_candidates(8),
+            allgather_candidates(&Topology::eth_10g(), 8),
             vec![Algorithm::Ring, Algorithm::RecursiveDoubling]
+        );
+        assert!(allgather_candidates(&smp, 8).contains(&Algorithm::hier(&[2])));
+    }
+
+    #[test]
+    fn three_level_candidates_follow_tier_prefixes() {
+        let topo = Topology::by_name("eth10g-x2r4").unwrap(); // node=2, rack=8
+        // p=16: both the node-only and node+rack stacks are candidates.
+        let c = candidate_algorithms(&topo, 16);
+        assert!(c.contains(&Algorithm::hier(&[2])), "{c:?}");
+        assert!(c.contains(&Algorithm::hier(&[2, 8])), "{c:?}");
+        // p=8 (== one rack): the rack stack degenerates (g == p) and is
+        // not offered; the node stack is.
+        let c8 = candidate_algorithms(&topo, 8);
+        assert!(c8.contains(&Algorithm::hier(&[2])));
+        assert!(!c8.contains(&Algorithm::hier(&[2, 8])), "{c8:?}");
+        // p=12: rack (8) does not divide 12 → node-only.
+        let c12 = candidate_algorithms(&topo, 12);
+        assert!(c12.contains(&Algorithm::hier(&[2])));
+        assert!(!c12.iter().any(
+            |a| matches!(a, Algorithm::Hierarchical { groups } if groups.len() > 1)
+        ));
+    }
+
+    #[test]
+    fn rack_oversubscription_makes_three_level_win() {
+        // On the rack-oversubscribed preset the cross-rack tier is the
+        // bottleneck. Where the 2-level leader count is not a power of
+        // two (its top phase degrades to a ring whose every lockstep is
+        // gated by a cross-rack hop), the 3-level stack must price below
+        // the 2-level one outside the pure-bandwidth regime, and the
+        // chooser must pick it. (At power-of-two leader counts
+        // halving-doubling's XOR rounds already localize in-rack, so the
+        // extra tree level is not free lunch — the selector decides per
+        // cell.)
+        let topo = Topology::by_name("eth10g-x8r16").unwrap(); // node=8, rack=128
+        for p in [384usize, 768] {
+            for bytes in [64u64 << 10, 1 << 20] {
+                let two = predict_allreduce_ns(&topo, Algorithm::hier(&[8]), p, bytes);
+                let three = predict_allreduce_ns(&topo, Algorithm::hier(&[8, 128]), p, bytes);
+                assert!(three < two, "p={p} bytes={bytes}: three={three} two={two}");
+                let pick = choose_algorithm(&topo, p, bytes);
+                assert_eq!(pick, Algorithm::hier(&[8, 128]), "p={p} bytes={bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn leader_phase_pricing_respects_rack_locality() {
+        // On eth10g-x8r16, hier:[8]'s 32 node leaders sit 16 per rack:
+        // halving-doubling rounds at leader distance < 16 stay in-rack in
+        // the built program, and the cost model must price them there —
+        // NOT at the oversubscribed spine. Observable consequences:
+        let topo = Topology::by_name("eth10g-x8r16").unwrap();
+        let bytes = 16u64 << 20;
+        let two = predict_allreduce_ns(&topo, Algorithm::hier(&[8]), 256, bytes);
+        // (a) 2-level must price well below the same phase all-top: the
+        // all-top figure is what hier:[8] would cost if every one of its
+        // 10 leader rounds crossed the spine.
+        let all_top = predict_flat_inter_allreduce_ns(&topo, Algorithm::HalvingDoubling, 32, bytes);
+        assert!(two < all_top, "two={two} all_top={all_top}");
+        // (b) in the bandwidth-bound pow2-leader regime the extra rack
+        // tree level is NOT free lunch: 3-level must price above 2-level
+        // (matching the a8 bench's measurements), so the chooser must not
+        // pick the deep stack here.
+        let three = predict_allreduce_ns(&topo, Algorithm::hier(&[8, 128]), 256, bytes);
+        assert!(two < three, "two={two} three={three}");
+        let pick = choose_algorithm(&topo, 256, bytes);
+        assert!(
+            !matches!(pick, Algorithm::Hierarchical { groups } if groups.len() > 1),
+            "{pick:?}"
         );
     }
 

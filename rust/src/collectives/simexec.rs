@@ -288,7 +288,7 @@ mod tests {
         let (p, rpn) = (16usize, 4usize);
         let n = 1usize << 20; // elements
         let topo = Topology::eth_10g_smp(rpn);
-        let alg = Algorithm::Hierarchical { ranks_per_node: rpn };
+        let alg = Algorithm::hier(&[rpn]);
         let programs = crate::collectives::program::build(
             crate::collectives::CollectiveKind::Allreduce,
             alg,

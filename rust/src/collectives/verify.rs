@@ -149,15 +149,10 @@ pub fn check(kind: CollectiveKind, p: usize, n: usize, bufs: &[SymBuf]) -> Resul
             }
         }
         CollectiveKind::ReduceScatter => {
-            // Rank r must own segment (r+1)%p fully reduced (ring layout).
-            for (r, buf) in bufs.iter().enumerate() {
-                let own = (r + 1) % p;
-                for e in seg[own]..seg[own + 1] {
-                    if buf[e] != ones {
-                        return Err(format!("rank {r} elem {e}: {:?}", buf[e]));
-                    }
-                }
-            }
+            // Rank r must own segment (r+1)%p fully reduced (ring layout;
+            // hierarchical reduce-scatter uses NATURAL layout — see
+            // [`check_reduce_scatter_layout`]).
+            check_reduce_scatter_layout(p, n, bufs, 1)?;
         }
         CollectiveKind::Allgather => {
             for (r, buf) in bufs.iter().enumerate() {
@@ -195,11 +190,40 @@ pub fn check(kind: CollectiveKind, p: usize, n: usize, bufs: &[SymBuf]) -> Resul
     Ok(())
 }
 
-/// One-call helper: build → run → check.
+/// Reduce-scatter postcondition under an explicit ownership layout: rank
+/// r must own segment (r + owner_shift) mod p fully reduced. The flat
+/// ring pipeline produces shift 1; the hierarchical builders produce
+/// NATURAL ownership (shift 0).
+pub fn check_reduce_scatter_layout(
+    p: usize,
+    n: usize,
+    bufs: &[SymBuf],
+    owner_shift: usize,
+) -> Result<(), String> {
+    let ones = vec![1u32; p];
+    let seg = super::program::segments(n, p);
+    for (r, buf) in bufs.iter().enumerate() {
+        let own = (r + owner_shift) % p;
+        for e in seg[own]..seg[own + 1] {
+            if buf[e] != ones {
+                return Err(format!("rank {r} elem {e}: {:?}", buf[e]));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One-call helper: build → run → check. Layout-aware: hierarchical
+/// reduce-scatter is checked against its natural ownership.
 pub fn verify(kind: CollectiveKind, alg: super::Algorithm, p: usize, n: usize) -> Result<(), String> {
     let programs = super::program::build(kind, alg, p, n).map_err(|e| e.to_string())?;
     let bufs = init_bufs(kind, p, n);
     let finals = run(&programs, bufs)?;
+    if kind == CollectiveKind::ReduceScatter
+        && matches!(alg, super::Algorithm::Hierarchical { .. })
+    {
+        return check_reduce_scatter_layout(p, n, &finals, 0);
+    }
     check(kind, p, n, &finals)
 }
 
@@ -247,9 +271,50 @@ mod tests {
             [(4, 2), (8, 2), (8, 4), (8, 8), (12, 3), (12, 4), (16, 4), (6, 3), (9, 3), (15, 5)]
         {
             for n in [1usize, 7, 33, 100] {
-                verify(K::Allreduce, A::Hierarchical { ranks_per_node: rpn }, p, n)
+                verify(K::Allreduce, A::hier(&[rpn]), p, n)
                     .unwrap_or_else(|e| panic!("p={p} rpn={rpn} n={n}: {e}"));
             }
+        }
+    }
+
+    #[test]
+    fn multi_level_hierarchical_collectives_correct() {
+        // 3- and 4-level stacks (socket → node → rack shapes), driven
+        // through every hierarchical builder.
+        for (p, groups) in [
+            (8usize, vec![2usize, 4]),
+            (16, vec![2, 8]),
+            (24, vec![2, 4]),
+            (24, vec![2, 12]),
+            (36, vec![3, 18]),
+            (16, vec![2, 4, 8]),
+            (48, vec![2, 8, 24]),
+        ] {
+            let alg = A::hier(&groups);
+            for n in [1usize, 37, 100] {
+                verify(K::Allreduce, alg, p, n)
+                    .unwrap_or_else(|e| panic!("allreduce p={p} {groups:?} n={n}: {e}"));
+                verify(K::ReduceScatter, alg, p, n)
+                    .unwrap_or_else(|e| panic!("rs p={p} {groups:?} n={n}: {e}"));
+                verify(K::Allgather, alg, p, n)
+                    .unwrap_or_else(|e| panic!("ag p={p} {groups:?} n={n}: {e}"));
+            }
+            for root in [0usize, 1, p / 2, p - 1] {
+                verify(K::Broadcast { root }, alg, p, 13)
+                    .unwrap_or_else(|e| panic!("bcast p={p} {groups:?} root={root}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn natural_reduce_scatter_correct() {
+        use crate::collectives::program::reduce_scatter_natural;
+        for p in 1..=8 {
+            let n = 24;
+            let progs = reduce_scatter_natural(p, n);
+            let finals = run(&progs, init_bufs(K::ReduceScatter, p, n)).unwrap();
+            check_reduce_scatter_layout(p, n, &finals, 0)
+                .unwrap_or_else(|e| panic!("p={p}: {e}"));
         }
     }
 

@@ -2,6 +2,23 @@
 //!
 //! Config files use a flat `key = value` format (`#` comments); CLI flags
 //! override file values. See `configs/` in the repo root for examples.
+//!
+//! ## Topology preset suffix grammar
+//!
+//! `--topo` resolves `<base>[-x<r>[r<k>]]` through
+//! [`Topology::by_name`]:
+//!
+//! * `<base>` — a flat preset: `eth10g`, `eth25g`, `omnipath100g`/`opa`;
+//! * `-x<r>` — `r` ranks share each node over a shared-memory tier
+//!   (`eth10g-x2`, `opa-x4`); `--ranks-per-node r` is the flag
+//!   equivalent and overrides a preset's suffix;
+//! * `r<k>` — `k` nodes per rack behind an oversubscribed spine
+//!   (`eth10g-x8r16` = 8 ranks/node × 16 nodes/rack = rack tier of 128
+//!   ranks): in-rack hops keep the base NIC rate at half the latency,
+//!   cross-rack hops pay 4× less bandwidth and 2× latency.
+//!
+//! Malformed suffixes (`-x0`, `-x2r1`) are configuration errors, not
+//! panics.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -66,15 +83,15 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     let topo_name = get("topo", "omnipath100g");
     let mut topo =
         Topology::by_name(&topo_name).ok_or_else(|| anyhow!("unknown topology {topo_name:?}"))?;
-    // Two-tier fabric override: `--ranks-per-node 2` (or an `-x2` preset
-    // suffix) marks ranks as co-located in groups on shared-memory nodes.
-    let rpn: usize = get("ranks-per-node", &topo.ranks_per_node.to_string())
+    // Tiered-fabric override: `--ranks-per-node 2` (or an `-x2` preset
+    // suffix) marks ranks as co-located in groups on shared-memory nodes;
+    // an existing rack tier (`r<k>` suffix) is preserved, rescaled to the
+    // same nodes-per-rack count. Invalid values surface as config errors
+    // (with_ranks_per_node validates, it no longer asserts).
+    let rpn: usize = get("ranks-per-node", &topo.ranks_per_node().to_string())
         .parse()
         .context("--ranks-per-node")?;
-    if rpn == 0 {
-        return Err(anyhow!("--ranks-per-node must be >= 1"));
-    }
-    topo = topo.with_ranks_per_node(rpn);
+    topo = topo.with_ranks_per_node(rpn).map_err(|e| anyhow!("--ranks-per-node: {e}"))?;
     let node_name = get("node", "skylake");
     let node =
         NodeSpec::by_name(&node_name).ok_or_else(|| anyhow!("unknown node {node_name:?}"))?;
@@ -204,17 +221,35 @@ mod tests {
     }
 
     #[test]
-    fn two_tier_topology_flags() {
+    fn tiered_topology_flags() {
         // Preset suffix form.
         let cfg = engine_config(&args("--topo eth10g-x2")).unwrap();
-        assert_eq!(cfg.topo.ranks_per_node, 2);
+        assert_eq!(cfg.topo.ranks_per_node(), 2);
         assert_eq!(cfg.topo.name, "eth10g-x2");
         // Explicit flag form overrides the preset's grouping.
         let cfg = engine_config(&args("--topo opa --ranks-per-node 4")).unwrap();
-        assert_eq!(cfg.topo.ranks_per_node, 4);
+        assert_eq!(cfg.topo.ranks_per_node(), 4);
         assert_eq!(cfg.topo.name, "omnipath100g-x4");
         // Default stays flat.
         let cfg = engine_config(&args("")).unwrap();
-        assert_eq!(cfg.topo.ranks_per_node, 1);
+        assert_eq!(cfg.topo.ranks_per_node(), 1);
+        assert!(!cfg.topo.is_hierarchical());
+    }
+
+    #[test]
+    fn rack_suffix_resolves_and_survives_rpn_override() {
+        // 3-level preset suffix: 8 ranks/node, 16 nodes/rack.
+        let cfg = engine_config(&args("--topo eth10g-x8r16")).unwrap();
+        assert_eq!(cfg.topo.name, "eth10g-x8r16");
+        assert_eq!(cfg.topo.level_sizes(), vec![8, 128]);
+        // Overriding the node size keeps the rack (same nodes-per-rack).
+        let cfg =
+            engine_config(&args("--topo eth10g-x8r16 --ranks-per-node 2")).unwrap();
+        assert_eq!(cfg.topo.name, "eth10g-x2r16");
+        assert_eq!(cfg.topo.level_sizes(), vec![2, 32]);
+        // Malformed suffixes are clean config errors, not panics.
+        assert!(engine_config(&args("--topo eth10g-x0r16")).is_err());
+        assert!(engine_config(&args("--topo eth10g-x2r1")).is_err());
+        assert!(engine_config(&args("--topo eth10g-x2r16 --ranks-per-node 0")).is_err());
     }
 }

@@ -512,23 +512,37 @@ impl Engine {
                 CommKind::Grad { .. } => CollectiveKind::Allreduce,
                 _ => CollectiveKind::Allgather,
             };
-            // Hierarchical programs (and intra-tier pricing) assume
-            // program-rank node blocks map onto physical nodes; only use
-            // the node-aligned choosers when the member set decomposes
-            // into whole nodes (e.g. the world under pure data
-            // parallelism). Strided hybrid communicators get the flat
-            // all-inter choice. Either way, the configured selection
-            // policy (analytic model or measured tuning table) decides.
+            // Hierarchical programs (and tier-discounted pricing) assume
+            // program-rank groups map onto physical tier groups, AT EVERY
+            // LEVEL the algorithm exploits. Gate per level: the chooser
+            // sees the topology truncated to the leading tiers the member
+            // set either tiles exactly or fits wholly inside
+            // (`chooser_tier_depth`) — a tier the members straddle
+            // without tiling would let the cost model bill straddling
+            // hops at an inner tier they never ride. Fully aligned sets
+            // (e.g. the world under pure data parallelism) keep the whole
+            // stack; strided hybrid communicators (aligned depth 0) get
+            // the flat all-top choice. Either way, the configured
+            // selection policy (analytic model or measured tuning table)
+            // decides.
             let bytes = (4 * elems) as u64;
-            let aligned = self.cfg.topo.ranks_node_aligned(&members);
-            let alg = match (ckind, aligned) {
+            let depth = self.cfg.topo.aligned_tier_depth(&members);
+            let usable = self.cfg.topo.chooser_tier_depth(&members);
+            let restricted;
+            let choose_topo = if usable >= self.cfg.topo.tiers.len() {
+                &self.cfg.topo
+            } else {
+                restricted = self.cfg.topo.restrict_tiers(usable);
+                &restricted
+            };
+            let alg = match (ckind, depth > 0) {
                 (CollectiveKind::Allreduce, true) => {
-                    self.cfg.selection.choose_allreduce(&self.cfg.topo, pm, bytes)
+                    self.cfg.selection.choose_allreduce(choose_topo, pm, bytes)
                 }
                 (CollectiveKind::Allreduce, false) => {
                     self.cfg.selection.choose_flat_allreduce(&self.cfg.topo, pm, bytes)
                 }
-                (_, true) => self.cfg.selection.choose_allgather(&self.cfg.topo, pm, bytes),
+                (_, true) => self.cfg.selection.choose_allgather(choose_topo, pm, bytes),
                 (_, false) => {
                     self.cfg.selection.choose_flat_allgather(&self.cfg.topo, pm, bytes)
                 }
@@ -724,6 +738,40 @@ mod tests {
             rs.iter_ns,
             rf.iter_ns
         );
+    }
+
+    #[test]
+    fn three_level_topology_runs_and_beats_flat() {
+        // 16 ranks described as 2/node × 4 nodes/rack (rack = 8): the
+        // engine must gate hierarchical on alignment at every level and
+        // still beat the flat description of the same NIC.
+        let mut flat = cfg("resnet50", 16, CommMode::BulkSync);
+        flat.topo = Topology::eth_10g();
+        flat.iterations = 1;
+        let mut tiered = cfg("resnet50", 16, CommMode::BulkSync);
+        tiered.topo = Topology::by_name("eth10g-x2r4").unwrap();
+        // Undo the rack preset's spine oversubscription so the comparison
+        // isolates the hierarchy (same top physics as the flat preset).
+        tiered.topo.link_gbps = flat.topo.link_gbps;
+        tiered.topo.latency_ns = flat.topo.latency_ns;
+        tiered.iterations = 1;
+        let rf = simulate(flat);
+        let rt = simulate(tiered);
+        assert!(rt.iter_ns < rf.iter_ns, "tiered={} flat={}", rt.iter_ns, rf.iter_ns);
+    }
+
+    #[test]
+    fn hybrid_on_three_level_topology_gates_per_level() {
+        // Hybrid groups of 4 on a rack-of-8 fabric: in-group members are
+        // node-aligned but too short for the rack tier, while the strided
+        // cross-group communicators must take the flat path — the
+        // per-level gate has to sort all of this out and complete.
+        let mut c = cfg("vgg16", 16, CommMode::MlslAsync { comm_cores: 2 });
+        c.topo = Topology::by_name("eth10g-x2r4").unwrap();
+        c.dist = Distribution::new(16, 4);
+        c.iterations = 1;
+        let r = simulate(c);
+        assert!(r.iter_ns > 0);
     }
 
     #[test]

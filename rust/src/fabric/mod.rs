@@ -14,20 +14,23 @@
 //! * [`topology`] — parameter presets for the two fabrics the paper uses
 //!   plus the node compute model (Skylake-class FLOPs).
 //!
-//! # Two-tier fabric model
+//! # N-level tier hierarchy
 //!
-//! Real clusters run several ranks per node: a [`Topology`] therefore
-//! carries TWO parameter sets — the inter-node tier (NIC line rate,
-//! switch latency, injection overhead) and an intra-node shared-memory
-//! tier — plus `ranks_per_node` with contiguous grouping (`node = rank /
-//! ranks_per_node`). The simulator prices every hop at its tier:
-//! `src`/`dst` on the same node serialize at `intra_gbps` and pay
-//! `intra_latency_ns`, everything else uses the NIC parameters. The
-//! `-x<r>` preset suffixes (`eth10g-x2`, `opa-x4`) select the paper's
-//! testbeds at r ranks/node; `ranks_per_node == 1` collapses to the old
-//! flat model, bit-for-bit. Hierarchical collectives
+//! Real clusters are hierarchical: sockets inside nodes, nodes inside
+//! racks, racks behind an oversubscribed spine. A [`Topology`] carries an
+//! ordered stack of [`topology::TierSpec`]s (innermost first, each with
+//! its own group size, line rate, latency, per-message overhead) plus the
+//! top-level fabric parameters. The simulator prices every hop at its
+//! **deepest common tier** — the innermost level whose contiguous group
+//! contains both endpoints; hops confined to a shared-memory tier ride a
+//! separate per-rank shm channel and never contend with NIC traffic. The
+//! `-x<r>[r<k>]` preset suffixes (`eth10g-x2`, `opa-x4`, `eth10g-x8r16`)
+//! select the paper's testbeds at r ranks/node and optionally k
+//! nodes/rack; an empty tier stack collapses to the old flat model,
+//! bit-for-bit. Hierarchical collectives
 //! ([`crate::collectives::Algorithm::Hierarchical`]) exploit the fast
-//! tier by reducing onto one leader per node before touching the wire.
+//! tiers by reducing onto one leader per group at every level before
+//! touching the slowest wire.
 
 pub mod event;
 pub mod shm;

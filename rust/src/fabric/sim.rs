@@ -19,12 +19,14 @@
 //!   an async progress thread (communication only advances inside
 //!   blocking MPI calls), the out-of-box Horovod behaviour of claim C2.
 //! * **Topology-aware priorities**: urgency classes exist only on the
-//!   contended inter-node tier. Intra-node (shared-memory) hops bypass
-//!   the NIC priority queue entirely — each rank additionally owns a shm
-//!   egress channel (mirroring the per-rank NIC egress model) where its
-//!   intra copies serialize in plain FIFO order, one free class. An
-//!   "urgent" intra copy can neither preempt nor be delayed by NIC
-//!   traffic: shared-memory copies never cross the NIC.
+//!   contended NIC tiers. Hops whose deepest common tier is a
+//!   shared-memory tier bypass the NIC priority queue entirely — each
+//!   rank additionally owns a shm egress channel (mirroring the per-rank
+//!   NIC egress model) where its intra copies serialize in plain FIFO
+//!   order, one free class. An "urgent" intra copy can neither preempt
+//!   nor be delayed by NIC traffic: shared-memory copies never cross the
+//!   NIC. In-rack and cross-rack hops both ride the NIC (priced at their
+//!   own tier's rate/latency) and contend under strict priority there.
 //!
 //! The simulator is deterministic: equal-time events fire in issue order.
 
@@ -179,9 +181,9 @@ impl NetSim {
         assert_ne!(msg.src, msg.dst, "self-send");
         let node = msg.src;
         let msg_idx = self.msgs.len();
-        // Two-tier pricing: intra-node hops (same node under the topology's
-        // contiguous grouping) serialize at the shared-memory tier rate —
-        // on their own channel, bypassing the NIC priority queue.
+        // Tier pricing: every hop costs its deepest-common-tier rate.
+        // Hops confined to a shared-memory tier serialize on their own
+        // channel, bypassing the NIC priority queue.
         let chan = self.chan_of(&msg);
         let cost = self.topo.overhead_between(msg.src, msg.dst)
             + self.topo.wire_ns_between(msg.src, msg.dst, msg.bytes);
@@ -364,18 +366,8 @@ mod tests {
 
     fn sim() -> NetSim {
         // Round numbers: 8 Gbps = 1 byte/ns, alpha = 1000 ns, gamma = 100 ns.
-        // Flat (ranks_per_node = 1): the intra tier is never used.
-        let topo = Topology {
-            name: "test".into(),
-            link_gbps: 8.0,
-            latency_ns: 1_000,
-            per_msg_overhead_ns: 100,
-            chunk_bytes: 1 << 20,
-            ranks_per_node: 1,
-            intra_gbps: 8.0,
-            intra_latency_ns: 1_000,
-            intra_per_msg_overhead_ns: 100,
-        };
+        // Flat (empty tier stack): only the top tier exists.
+        let topo = Topology::flat("test", 8.0, 1_000, 100, 1 << 20);
         NetSim::new(topo, 4)
     }
 
@@ -508,17 +500,15 @@ mod tests {
     /// 2 ranks/node: ranks {0,1} share a node, rank 2 is remote.
     /// Intra: 80 Gbps = 10 B/ns, alpha 200, gamma 10.
     fn smp() -> NetSim {
-        let topo = Topology {
-            name: "test-x2".into(),
-            link_gbps: 8.0,
-            latency_ns: 1_000,
-            per_msg_overhead_ns: 100,
-            chunk_bytes: 1 << 20,
-            ranks_per_node: 2,
-            intra_gbps: 80.0,
-            intra_latency_ns: 200,
-            intra_per_msg_overhead_ns: 10,
-        };
+        let mut topo = Topology::flat("test-x2", 8.0, 1_000, 100, 1 << 20);
+        topo.tiers = vec![crate::fabric::topology::TierSpec {
+            ranks: 2,
+            gbps: 80.0,
+            latency_ns: 200,
+            per_msg_overhead_ns: 10,
+            shm: true,
+        }];
+        topo.validate().unwrap();
         NetSim::new(topo, 4)
     }
 
@@ -625,6 +615,83 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// 3 levels: 2 ranks/node (shm), 4 ranks/rack (NIC at 16 Gbps = 2
+    /// B/ns, alpha 500, gamma 50), cross-rack at 8 Gbps (alpha 1000).
+    fn rack() -> NetSim {
+        let mut topo = Topology::flat("test-x2r2", 8.0, 1_000, 100, 1 << 20);
+        topo.tiers = vec![
+            crate::fabric::topology::TierSpec {
+                ranks: 2,
+                gbps: 80.0,
+                latency_ns: 200,
+                per_msg_overhead_ns: 10,
+                shm: true,
+            },
+            crate::fabric::topology::TierSpec {
+                ranks: 4,
+                gbps: 16.0,
+                latency_ns: 500,
+                per_msg_overhead_ns: 50,
+                shm: false,
+            },
+        ];
+        topo.validate().unwrap();
+        NetSim::new(topo, 8)
+    }
+
+    #[test]
+    fn three_level_hops_price_at_deepest_common_tier() {
+        let mut s = rack();
+        s.send(msg(0, 1, 1_000, 1, 1)); // node: 10 + 100 + 200 = 310
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (1, 310));
+            }
+            other => panic!("{other:?}"),
+        }
+        s.send(msg(0, 2, 1_000, 1, 2)); // rack: 50 + 500 + 500 from t=310
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (2, 310 + 1_050));
+            }
+            other => panic!("{other:?}"),
+        }
+        s.send(msg(0, 4, 1_000, 1, 3)); // cross-rack: 100 + 1_000 + 1_000
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (3, 1_360 + 2_100));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rack_tier_hops_ride_the_nic_priority_queue() {
+        // An in-rack (non-shm tier) bulk transfer and an urgent cross-rack
+        // message share rank 0's NIC: the urgent one must preempt — rack
+        // hops are NIC traffic, only shm-tier hops bypass the queue.
+        let mut s = rack();
+        s.send(msg(0, 2, 100_000, 9, 1)); // rack: egress 50 + 50_000
+        s.send(msg(0, 4, 1_000, 0, 2)); // cross-rack urgent
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2, "urgent cross-rack must preempt the rack bulk");
+                assert_eq!(at, 100 + 1_000 + 1_000);
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                // Rack egress 50_050 pushed back by the urgent 1_100,
+                // then 500 in flight.
+                assert_eq!(at, 50_050 + 1_100 + 500);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(s.stats.preemptions >= 1);
     }
 
     #[test]

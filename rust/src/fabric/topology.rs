@@ -1,33 +1,38 @@
-//! Fabric + node parameter presets for the paper's testbeds — now a
-//! **two-tier** model.
+//! Fabric + node parameter presets for the paper's testbeds — an
+//! **N-level tier hierarchy**.
 //!
-//! Real clusters run more than one rank per node: a fast intra-node tier
-//! (shared memory / QPI) connects co-located ranks, a much slower
-//! inter-node tier (Omni-Path / Ethernet NICs) connects nodes. A
-//! [`Topology`] therefore carries parameters for BOTH tiers plus
-//! `ranks_per_node`; ranks are grouped contiguously (`node = rank /
-//! ranks_per_node`), and every point-to-point cost helper comes in a
-//! `*_between(src, dst, ..)` form that prices the hop at its tier.
-//! `ranks_per_node == 1` collapses to the old flat single-tier model and
-//! every legacy helper (`wire_ns`, `msg_ns`) keeps pricing the inter tier.
+//! Real clusters are hierarchical well beyond two tiers: co-located ranks
+//! share a socket or node (shared memory / QPI), nodes share a rack (ToR
+//! switch, full NIC line rate), racks share an oversubscribed spine. A
+//! [`Topology`] therefore carries an ordered stack of [`TierSpec`]s —
+//! innermost first, each with its own group size, line rate, latency and
+//! per-message overhead — plus the top-level fabric parameters
+//! (`link_gbps` / `latency_ns` / `per_msg_overhead_ns`) that price every
+//! hop not contained in any tier. Ranks are grouped contiguously at every
+//! level (`group = rank / tier.ranks`), and every point-to-point cost
+//! helper prices a hop at its **deepest common tier** — the innermost
+//! level whose group contains both endpoints. An empty tier stack
+//! collapses to the old flat single-tier model and every legacy helper
+//! (`wire_ns`, `msg_ns`) keeps pricing the top tier.
+//!
+//! Preset names follow the suffix grammar `<base>[-x<r>[r<k>]]`:
+//! `-x<r>` puts `r` ranks on each shared-memory node (`eth10g-x2`,
+//! `opa-x4`), and the optional `r<k>` groups `k` nodes per rack behind an
+//! oversubscribed spine (`eth10g-x8r16` = 8 ranks/node × 16 nodes/rack;
+//! in-rack hops keep the NIC line rate while cross-rack hops pay
+//! [`RACK_OVERSUBSCRIPTION`]× less bandwidth and 2× latency). Suffixes
+//! round-trip through [`Topology::by_name`].
 //!
 //! Numbers are public-spec-derived, not measured on the authors' clusters;
 //! EXPERIMENTS.md compares *shapes* (who wins, by what factor), which these
 //! presets preserve (10GbE: high latency + low bandwidth → prioritization
 //! matters most; Omnipath: low latency + high bandwidth → near-ideal
 //! scaling with overlap; `-x<r>` smp variants: hierarchical collectives
-//! win once the intra tier can absorb the first reduction level).
+//! win once the intra tier can absorb the first reduction level; `r<k>`
+//! rack variants: a second reduction level pays off once the spine is the
+//! bottleneck).
 
 use crate::{Ns, Rank};
-
-/// Which tier a (src, dst) rank pair communicates over.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Tier {
-    /// Co-located ranks (same node): shared-memory-class links.
-    Intra,
-    /// Ranks on different nodes: the cluster fabric.
-    Inter,
-}
 
 /// Shared-memory tier defaults (Skylake-class socket pair): ~75 GB/s
 /// effective copy bandwidth, sub-µs latency, cheap doorbells.
@@ -35,113 +40,272 @@ const INTRA_GBPS: f64 = 600.0;
 const INTRA_LATENCY_NS: Ns = 700;
 const INTRA_OVERHEAD_NS: Ns = 150;
 
-/// Network fabric parameters (a two-tier alpha–beta–gamma model).
+/// Spine oversubscription factor of the `r<k>` rack presets: cross-rack
+/// traffic sees `link_gbps / RACK_OVERSUBSCRIPTION` effective bandwidth
+/// (a classic 4:1 leaf-spine fabric).
+pub const RACK_OVERSUBSCRIPTION: f64 = 4.0;
+
+/// Most nested grouping levels a [`Topology`] may carry below the top
+/// fabric (socket → node → rack → pod is 4). Keeps
+/// [`crate::collectives::GroupStack`] — which mirrors tier prefixes —
+/// `Copy`-able with a fixed-size backing array.
+pub const MAX_TIERS: usize = 4;
+
+/// One level of the fabric hierarchy: `ranks` contiguous ranks form a
+/// group wired with these link parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Ranks per group at this level (absolute, contiguous grouping:
+    /// `group = rank / ranks`). Must be >= 2, strictly increasing along
+    /// the stack, and divide the next tier's size.
+    pub ranks: usize,
+    /// Line rate of a hop confined to this tier, Gbit/s.
+    pub gbps: f64,
+    /// In-flight message latency of this tier, ns.
+    pub latency_ns: Ns,
+    /// Per-message injection overhead of this tier, ns.
+    pub per_msg_overhead_ns: Ns,
+    /// Shared-memory tier: hops confined here bypass the NIC priority
+    /// queue in [`crate::fabric::sim`] (they ride the per-rank shm
+    /// channel — one free class, FIFO, no preemption). Shm tiers must
+    /// form a prefix of the stack: nothing outside a NIC-crossing tier
+    /// can be shared memory again.
+    pub shm: bool,
+}
+
+impl TierSpec {
+    /// A shared-memory tier of `ranks` co-located ranks with the default
+    /// Skylake-class socket-pair parameters.
+    pub fn shm_node(ranks: usize) -> Self {
+        Self {
+            ranks,
+            gbps: INTRA_GBPS,
+            latency_ns: INTRA_LATENCY_NS,
+            per_msg_overhead_ns: INTRA_OVERHEAD_NS,
+            shm: true,
+        }
+    }
+}
+
+/// Network fabric parameters: an N-level alpha–beta–gamma model. The
+/// `link_*` fields describe the TOP tier (hops not contained in any
+/// entry of `tiers`); `tiers` holds the nested inner levels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub name: String,
-    /// Per-NIC egress line rate, Gbit/s (inter-node beta⁻¹).
+    /// Top-tier egress line rate, Gbit/s (beta⁻¹ of the outermost level).
     pub link_gbps: f64,
-    /// End-to-end message latency, ns (inter-node alpha): propagation +
+    /// Top-tier end-to-end message latency, ns (alpha): propagation +
     /// switching.
     pub latency_ns: Ns,
-    /// Per-message software/NIC injection overhead, ns (gamma). Paid on
-    /// the egress wire before the first byte moves — this is what makes
-    /// small messages latency-bound and motivates prioritization.
+    /// Top-tier per-message software/NIC injection overhead, ns (gamma).
+    /// Paid on the egress wire before the first byte moves — this is what
+    /// makes small messages latency-bound and motivates prioritization.
     pub per_msg_overhead_ns: Ns,
     /// Chunk size collectives use on this fabric, bytes. Preemption is
     /// chunk-granular, so this is also the preemption latency knob.
     pub chunk_bytes: u64,
-    /// Ranks co-located on one node (contiguous grouping). 1 = flat
-    /// single-tier fabric (the legacy model).
-    pub ranks_per_node: usize,
-    /// Intra-node tier line rate, Gbit/s (shared-memory class).
-    pub intra_gbps: f64,
-    /// Intra-node tier message latency, ns.
-    pub intra_latency_ns: Ns,
-    /// Intra-node per-message overhead, ns.
-    pub intra_per_msg_overhead_ns: Ns,
+    /// Nested inner tiers, innermost first (empty = flat single-tier
+    /// fabric). Invariants (see [`Topology::validate`]): at most
+    /// [`MAX_TIERS`] entries; sizes >= 2, strictly increasing, each
+    /// dividing the next; shm tiers form a prefix.
+    pub tiers: Vec<TierSpec>,
 }
 
 impl Topology {
+    /// A flat (single-tier) fabric from top-level link parameters.
+    pub fn flat(name: &str, link_gbps: f64, latency_ns: Ns, per_msg_overhead_ns: Ns, chunk_bytes: u64) -> Self {
+        Self {
+            name: name.into(),
+            link_gbps,
+            latency_ns,
+            per_msg_overhead_ns,
+            chunk_bytes,
+            tiers: Vec::new(),
+        }
+    }
+
     /// 10 Gbit/s Ethernet, TCP-class latency — the fabric of the paper's
     /// 1.8–2.2× prioritization result (C1).
     pub fn eth_10g() -> Self {
-        Self {
-            name: "eth10g".into(),
-            link_gbps: 10.0,
-            latency_ns: 30_000,          // ~30 µs TCP/Ethernet stack
-            per_msg_overhead_ns: 4_000,  // kernel/NIC doorbell path
-            chunk_bytes: 256 * 1024,
-            ranks_per_node: 1,
-            intra_gbps: INTRA_GBPS,
-            intra_latency_ns: INTRA_LATENCY_NS,
-            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
-        }
+        Self::flat("eth10g", 10.0, 30_000 /* ~30 µs TCP stack */, 4_000, 256 * 1024)
     }
 
     /// Intel Omnipath-class 100 Gbit/s HPC fabric — Fig. 2's testbed.
     pub fn omnipath_100g() -> Self {
-        Self {
-            name: "omnipath100g".into(),
-            link_gbps: 100.0,
-            latency_ns: 1_100,          // ~1.1 µs MPI pingpong
-            per_msg_overhead_ns: 250,
-            chunk_bytes: 1024 * 1024,
-            ranks_per_node: 1,
-            intra_gbps: INTRA_GBPS,
-            intra_latency_ns: INTRA_LATENCY_NS,
-            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
-        }
+        Self::flat("omnipath100g", 100.0, 1_100 /* ~1.1 µs MPI pingpong */, 250, 1024 * 1024)
     }
 
     /// 25 GbE cloud fabric (intermediate point, used in ablations).
     pub fn eth_25g() -> Self {
-        Self {
-            name: "eth25g".into(),
-            link_gbps: 25.0,
-            latency_ns: 15_000,
-            per_msg_overhead_ns: 2_000,
-            chunk_bytes: 512 * 1024,
-            ranks_per_node: 1,
-            intra_gbps: INTRA_GBPS,
-            intra_latency_ns: INTRA_LATENCY_NS,
-            intra_per_msg_overhead_ns: INTRA_OVERHEAD_NS,
+        Self::flat("eth25g", 25.0, 15_000, 2_000, 512 * 1024)
+    }
+
+    /// Structural invariants of the tier stack. Construction through
+    /// [`Topology::by_name`] / [`Topology::with_ranks_per_node`] /
+    /// [`Topology::with_rack`] always yields a valid stack; hand-built
+    /// topologies should call this before use.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiers.len() > MAX_TIERS {
+            return Err(format!(
+                "at most {MAX_TIERS} inner tiers supported, got {}",
+                self.tiers.len()
+            ));
+        }
+        let mut prev_ranks = 1usize;
+        let mut seen_nic = false;
+        for (i, t) in self.tiers.iter().enumerate() {
+            if t.ranks < 2 {
+                return Err(format!("tier {i}: group size must be >= 2, got {}", t.ranks));
+            }
+            if t.ranks <= prev_ranks || t.ranks % prev_ranks != 0 {
+                return Err(format!(
+                    "tier {i}: group size {} must be a strictly larger multiple of the \
+                     inner tier's {prev_ranks}",
+                    t.ranks
+                ));
+            }
+            if t.shm && seen_nic {
+                return Err(format!(
+                    "tier {i}: shared-memory tiers must form a prefix of the stack"
+                ));
+            }
+            seen_nic |= !t.shm;
+            prev_ranks = t.ranks;
+        }
+        Ok(())
+    }
+
+    /// Parse an smp/rack preset suffix body (the part after `-x`):
+    /// `<r>` or `<r>r<k>`. Returns (ranks_per_node, nodes_per_rack).
+    fn parse_suffix(suffix: &str) -> Option<(usize, Option<usize>)> {
+        match suffix.split_once('r') {
+            Some((r, k)) => {
+                let (r, k) = (r.parse().ok()?, k.parse().ok()?);
+                Some((r, Some(k)))
+            }
+            None => Some((suffix.parse().ok()?, None)),
         }
     }
 
-    /// Multi-rank-per-node variant of any preset: `r` ranks share each
-    /// node's NIC-facing tier and talk shared-memory within the node. The
-    /// name gains an `-x<r>` suffix (so presets resolve round-trip through
-    /// [`Topology::by_name`]).
-    pub fn with_ranks_per_node(mut self, r: usize) -> Self {
-        assert!(r >= 1, "ranks_per_node must be >= 1");
-        let base = match self.name.rsplit_once("-x") {
-            Some((b, suffix)) if suffix.parse::<usize>().is_ok() => b.to_string(),
+    /// Base preset name with any `-x<r>[r<k>]` suffix stripped.
+    fn base_name(&self) -> String {
+        match self.name.rsplit_once("-x") {
+            Some((b, suffix)) if Self::parse_suffix(suffix).is_some() => b.to_string(),
             _ => self.name.clone(),
-        };
-        self.name = if r == 1 { base } else { format!("{base}-x{r}") };
-        self.ranks_per_node = r;
-        self
+        }
+    }
+
+    /// Nodes per rack encoded in the current tier stack (rack size /
+    /// node size), if a rack tier exists.
+    fn nodes_per_rack(&self) -> Option<usize> {
+        let rpn = self.ranks_per_node();
+        self.tiers
+            .iter()
+            .find(|t| !t.shm)
+            .map(|rack| rack.ranks / rpn.max(1))
+    }
+
+    /// Multi-rank-per-node variant of any preset: `r` ranks share each
+    /// node's NIC-facing tiers and talk shared-memory within the node.
+    /// An existing rack tier is preserved (its absolute size rescales to
+    /// keep the same nodes-per-rack count). The name gains an `-x<r>`
+    /// suffix so presets resolve round-trip through [`Topology::by_name`].
+    /// `r == 0` is a configuration error (not a panic).
+    pub fn with_ranks_per_node(mut self, r: usize) -> Result<Self, String> {
+        if r == 0 {
+            return Err("ranks_per_node must be >= 1".into());
+        }
+        let base = self.base_name();
+        let rack = self.nodes_per_rack();
+        // Rebuild the node tier, preserving any custom node physics (the
+        // outermost shm tier IS the node — matching `ranks_per_node`).
+        let node_params = self
+            .tiers
+            .iter()
+            .rev()
+            .find(|t| t.shm)
+            .cloned()
+            .unwrap_or_else(|| TierSpec::shm_node(r));
+        let rack_params = self.tiers.iter().find(|t| !t.shm).cloned();
+        self.tiers.clear();
+        if r > 1 {
+            self.tiers.push(TierSpec { ranks: r, ..node_params });
+        }
+        let mut suffix = if r == 1 { String::new() } else { format!("-x{r}") };
+        if let (Some(k), Some(params)) = (rack, rack_params) {
+            if k >= 2 {
+                self.tiers.push(TierSpec { ranks: r * k, ..params });
+                if suffix.is_empty() {
+                    suffix = format!("-x{r}");
+                }
+                suffix.push_str(&format!("r{k}"));
+            }
+        }
+        self.name = format!("{base}{suffix}");
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Add a rack tier grouping `nodes_per_rack` whole nodes behind an
+    /// oversubscribed spine: in-rack hops keep the CURRENT top-tier
+    /// parameters (full NIC line rate through the ToR switch, half the
+    /// latency), while the new top tier — cross-rack traffic — pays
+    /// [`RACK_OVERSUBSCRIPTION`]× less bandwidth and 2× latency. Errors
+    /// if a rack tier is already present or `nodes_per_rack < 2`.
+    pub fn with_rack(mut self, nodes_per_rack: usize) -> Result<Self, String> {
+        if nodes_per_rack < 2 {
+            return Err("nodes_per_rack must be >= 2".into());
+        }
+        if self.tiers.iter().any(|t| !t.shm) {
+            return Err(format!("{} already has a rack tier", self.name));
+        }
+        let rpn = self.ranks_per_node();
+        self.tiers.push(TierSpec {
+            ranks: rpn * nodes_per_rack,
+            gbps: self.link_gbps,
+            latency_ns: self.latency_ns / 2,
+            per_msg_overhead_ns: self.per_msg_overhead_ns,
+            shm: false,
+        });
+        self.link_gbps /= RACK_OVERSUBSCRIPTION;
+        self.latency_ns *= 2;
+        let base = self.base_name();
+        self.name = format!("{base}-x{rpn}r{nodes_per_rack}");
+        self.validate()?;
+        Ok(self)
     }
 
     /// The paper's Xeon/10GbE testbed at >1 rank per node.
+    ///
+    /// Panics on `ranks_per_node == 0` — a test/bench convenience; use
+    /// [`Topology::with_ranks_per_node`] for fallible construction.
     pub fn eth_10g_smp(ranks_per_node: usize) -> Self {
-        Self::eth_10g().with_ranks_per_node(ranks_per_node)
+        Self::eth_10g()
+            .with_ranks_per_node(ranks_per_node)
+            .expect("preset ranks_per_node must be >= 1")
     }
 
-    /// The paper's Xeon/Omni-Path testbed at >1 rank per node.
+    /// The paper's Xeon/Omni-Path testbed at >1 rank per node. Panics on
+    /// `ranks_per_node == 0` (see [`Topology::eth_10g_smp`]).
     pub fn omnipath_100g_smp(ranks_per_node: usize) -> Self {
-        Self::omnipath_100g().with_ranks_per_node(ranks_per_node)
+        Self::omnipath_100g()
+            .with_ranks_per_node(ranks_per_node)
+            .expect("preset ranks_per_node must be >= 1")
     }
 
     /// Resolve a preset name; `-x<r>` suffixes select the smp variant
-    /// (e.g. `eth10g-x2`, `opa-x4`).
+    /// (e.g. `eth10g-x2`, `opa-x4`) and `-x<r>r<k>` adds a rack tier of
+    /// `k` nodes (e.g. `eth10g-x8r16`). Malformed suffixes (e.g. `-x0`)
+    /// resolve to `None`, which the CLI reports as a configuration error.
     pub fn by_name(name: &str) -> Option<Self> {
         if let Some((base, suffix)) = name.rsplit_once("-x") {
-            if let Ok(r) = suffix.parse::<usize>() {
-                if r >= 1 {
-                    return Self::by_name(base).map(|t| t.with_ranks_per_node(r));
+            if let Some((r, rack)) = Self::parse_suffix(suffix) {
+                let mut topo = Self::by_name(base)?.with_ranks_per_node(r).ok()?;
+                if let Some(k) = rack {
+                    topo = topo.with_rack(k).ok()?;
                 }
+                return Some(topo);
             }
         }
         match name {
@@ -154,31 +318,134 @@ impl Topology {
 
     // -- tier resolution ----------------------------------------------------
 
+    /// Number of levels including the top fabric (= `tiers.len() + 1`).
+    pub fn num_levels(&self) -> usize {
+        self.tiers.len() + 1
+    }
+
+    /// Index of the top (outermost) level.
+    pub fn top_level(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Group sizes of the inner tiers, innermost first.
+    pub fn level_sizes(&self) -> Vec<usize> {
+        self.tiers.iter().map(|t| t.ranks).collect()
+    }
+
+    /// Ranks co-located on one shared-memory node: the outermost shm
+    /// tier's group size (1 on flat fabrics and pure-NIC hierarchies).
+    pub fn ranks_per_node(&self) -> usize {
+        self.tiers.iter().rev().find(|t| t.shm).map_or(1, |t| t.ranks)
+    }
+
     /// Node index of `rank` under contiguous grouping.
     pub fn node_of(&self, rank: Rank) -> usize {
-        rank / self.ranks_per_node.max(1)
+        rank / self.ranks_per_node().max(1)
     }
 
-    /// Do `a` and `b` share a node? (Never true on flat topologies.)
+    /// Deepest common tier of an `(a, b)` hop: the innermost level whose
+    /// group contains both ranks; `top_level()` when none does.
+    pub fn level_of(&self, a: Rank, b: Rank) -> usize {
+        self.tiers
+            .iter()
+            .position(|t| a / t.ranks == b / t.ranks)
+            .unwrap_or_else(|| self.top_level())
+    }
+
+    /// Do `a` and `b` share a shared-memory node? True exactly when the
+    /// hop's deepest common tier is an shm tier. (Never true on flat
+    /// topologies.)
     pub fn same_node(&self, a: Rank, b: Rank) -> bool {
-        self.ranks_per_node > 1 && self.node_of(a) == self.node_of(b)
+        self.tiers.get(self.level_of(a, b)).is_some_and(|t| t.shm)
     }
 
-    /// Tier of the (src, dst) hop.
-    pub fn tier(&self, src: Rank, dst: Rank) -> Tier {
-        if self.same_node(src, dst) { Tier::Intra } else { Tier::Inter }
-    }
-
-    /// Does this fabric have a meaningful intra-node tier?
+    /// Does this fabric have any inner tier to exploit?
     pub fn is_hierarchical(&self) -> bool {
-        self.ranks_per_node > 1
+        !self.tiers.is_empty()
     }
 
-    /// True when `members` decompose into whole nodes: consecutive runs of
-    /// `ranks_per_node` ranks, each starting at a node boundary.
-    /// Hierarchical collectives are only valid over such sets.
+    /// Innermost level whose groups can contain an ALIGNED contiguous run
+    /// of `g` ranks (tier size a multiple of `g`); `top_level()` when no
+    /// inner tier can. Used to price in-group traffic on the correct tier.
+    pub fn level_for_group(&self, g: usize) -> usize {
+        self.tiers
+            .iter()
+            .position(|t| t.ranks >= g && t.ranks % g == 0)
+            .unwrap_or_else(|| self.top_level())
+    }
+
+    /// How many leading tiers `members` decomposes into: the count of
+    /// inner levels whose groups the member set tiles exactly (members
+    /// contiguous ascending, first member group-aligned, length a
+    /// multiple of the group size). 0 for strided / non-aligned /
+    /// empty sets. Hierarchical collectives are valid over the first
+    /// `aligned_tier_depth` levels only.
+    pub fn aligned_tier_depth(&self, members: &[Rank]) -> usize {
+        if members.is_empty() || members.windows(2).any(|w| w[1] != w[0] + 1) {
+            return 0;
+        }
+        let len = members.len();
+        self.tiers
+            .iter()
+            .take_while(|t| t.ranks <= len && len % t.ranks == 0 && members[0] % t.ranks == 0)
+            .count()
+    }
+
+    /// Leading tiers the N-level COST MODEL may assume for `members`:
+    /// each tier's groups must either be exactly tiled by the member set
+    /// (hierarchical candidates stay legal there) or contain it whole
+    /// (in-group pricing stays valid). A tier the members straddle
+    /// without tiling — e.g. a node-aligned run crossing one rack
+    /// boundary mid-rack — must be collapsed into the top level before
+    /// pricing, or a "rack-sized" ring would be billed in-rack while its
+    /// straddling hop crosses the spine every lockstep.
+    pub fn chooser_tier_depth(&self, members: &[Rank]) -> usize {
+        if members.is_empty() || members.windows(2).any(|w| w[1] != w[0] + 1) {
+            return 0;
+        }
+        let len = members.len();
+        let (first, last) = (members[0], members[len - 1]);
+        self.tiers
+            .iter()
+            .take_while(|t| {
+                let tiles = t.ranks <= len && len % t.ranks == 0 && first % t.ranks == 0;
+                let contains = first / t.ranks == last / t.ranks;
+                tiles || contains
+            })
+            .count()
+    }
+
+    /// This fabric truncated to its first `depth` inner tiers (outer
+    /// tiers collapse into the top level). Used to restrict algorithm
+    /// choice for communicators only partially aligned to the hierarchy;
+    /// pricing outer-tier hops at the top level is conservative.
+    pub fn restrict_tiers(&self, depth: usize) -> Self {
+        let mut t = self.clone();
+        t.tiers.truncate(depth);
+        t
+    }
+
+    /// Tier sizes usable as hierarchical group stacks over a contiguous
+    /// aligned communicator of `p` ranks: sizes > 1, < p, dividing p
+    /// (ascending; nesting divisibility is inherited from the stack).
+    pub fn hier_group_sizes_for(&self, p: usize) -> Vec<usize> {
+        self.tiers
+            .iter()
+            .map(|t| t.ranks)
+            .filter(|&s| s > 1 && s < p && p % s == 0)
+            .collect()
+    }
+
+    /// True when `members` decompose into whole shared-memory nodes:
+    /// consecutive runs of `ranks_per_node()` ranks, each starting at a
+    /// node boundary — the nodes themselves need NOT be adjacent.
+    /// (Legacy two-tier helper, semantics unchanged from PR 1;
+    /// [`Topology::aligned_tier_depth`] is the N-level generalization
+    /// the engine gates on, which additionally requires a contiguous
+    /// run so outer tiers can be exploited.)
     pub fn ranks_node_aligned(&self, members: &[Rank]) -> bool {
-        let rpn = self.ranks_per_node;
+        let rpn = self.ranks_per_node();
         rpn > 1
             && !members.is_empty()
             && members.len() % rpn == 0
@@ -187,70 +454,66 @@ impl Topology {
             })
     }
 
-    /// Line rate of a tier, Gbit/s.
-    pub fn gbps_of(&self, tier: Tier) -> f64 {
-        match tier {
-            Tier::Intra => self.intra_gbps,
-            Tier::Inter => self.link_gbps,
-        }
+    /// Line rate of a level, Gbit/s.
+    pub fn gbps_at(&self, level: usize) -> f64 {
+        self.tiers.get(level).map_or(self.link_gbps, |t| t.gbps)
     }
 
-    /// Message latency of a tier, ns.
-    pub fn latency_of(&self, tier: Tier) -> Ns {
-        match tier {
-            Tier::Intra => self.intra_latency_ns,
-            Tier::Inter => self.latency_ns,
-        }
+    /// Message latency of a level, ns.
+    pub fn latency_at(&self, level: usize) -> Ns {
+        self.tiers.get(level).map_or(self.latency_ns, |t| t.latency_ns)
     }
 
-    /// Per-message overhead of a tier, ns.
-    pub fn overhead_of(&self, tier: Tier) -> Ns {
-        match tier {
-            Tier::Intra => self.intra_per_msg_overhead_ns,
-            Tier::Inter => self.per_msg_overhead_ns,
-        }
+    /// Per-message overhead of a level, ns.
+    pub fn overhead_at(&self, level: usize) -> Ns {
+        self.tiers.get(level).map_or(self.per_msg_overhead_ns, |t| t.per_msg_overhead_ns)
     }
 
     // -- hop costs ------------------------------------------------------------
 
-    /// Pure wire time for `bytes` on the INTER tier (no latency/overhead).
+    /// Pure wire time for `bytes` on the TOP tier (no latency/overhead).
     /// Legacy helper: flat topologies have only this tier.
     pub fn wire_ns(&self, bytes: u64) -> Ns {
         super::wire_ns(bytes, self.link_gbps)
     }
 
-    /// Full cost of a single INTER-tier point-to-point message.
+    /// Full cost of a single TOP-tier point-to-point message.
     pub fn msg_ns(&self, bytes: u64) -> Ns {
         self.per_msg_overhead_ns + self.wire_ns(bytes) + self.latency_ns
     }
 
-    /// Full cost of a single INTRA-tier point-to-point message.
-    pub fn intra_msg_ns(&self, bytes: u64) -> Ns {
-        self.intra_per_msg_overhead_ns
-            + super::wire_ns(bytes, self.intra_gbps)
-            + self.intra_latency_ns
+    /// Full cost of a single point-to-point message at `level`.
+    pub fn msg_ns_at(&self, level: usize, bytes: u64) -> Ns {
+        self.overhead_at(level)
+            + super::wire_ns(bytes, self.gbps_at(level))
+            + self.latency_at(level)
     }
 
-    /// Wire time of `bytes` between two concrete ranks (tier-priced).
+    /// Full cost of a single INNERMOST-tier message (the top tier on flat
+    /// fabrics). Legacy two-tier helper.
+    pub fn intra_msg_ns(&self, bytes: u64) -> Ns {
+        self.msg_ns_at(0, bytes)
+    }
+
+    /// Wire time of `bytes` between two concrete ranks, priced at the
+    /// hop's deepest common tier.
     pub fn wire_ns_between(&self, src: Rank, dst: Rank, bytes: u64) -> Ns {
-        super::wire_ns(bytes, self.gbps_of(self.tier(src, dst)))
+        super::wire_ns(bytes, self.gbps_at(self.level_of(src, dst)))
     }
 
     /// Per-message overhead between two concrete ranks.
     pub fn overhead_between(&self, src: Rank, dst: Rank) -> Ns {
-        self.overhead_of(self.tier(src, dst))
+        self.overhead_at(self.level_of(src, dst))
     }
 
     /// In-flight latency between two concrete ranks.
     pub fn latency_between(&self, src: Rank, dst: Rank) -> Ns {
-        self.latency_of(self.tier(src, dst))
+        self.latency_at(self.level_of(src, dst))
     }
 
     /// Full cost of a message between two concrete ranks.
     pub fn msg_ns_between(&self, src: Rank, dst: Rank, bytes: u64) -> Ns {
-        self.overhead_between(src, dst)
-            + self.wire_ns_between(src, dst, bytes)
-            + self.latency_between(src, dst)
+        self.msg_ns_at(self.level_of(src, dst), bytes)
     }
 }
 
@@ -349,17 +612,58 @@ mod tests {
     #[test]
     fn smp_presets_resolve_and_roundtrip() {
         let t = Topology::by_name("eth10g-x4").unwrap();
-        assert_eq!(t.ranks_per_node, 4);
+        assert_eq!(t.ranks_per_node(), 4);
         assert_eq!(t.name, "eth10g-x4");
         assert_eq!(Topology::by_name(&t.name).unwrap(), t);
         let o = Topology::omnipath_100g_smp(2);
         assert_eq!(o.name, "omnipath100g-x2");
-        assert_eq!(Topology::by_name("opa-x2").unwrap().ranks_per_node, 2);
+        assert_eq!(Topology::by_name("opa-x2").unwrap().ranks_per_node(), 2);
         assert!(Topology::by_name("nope-x2").is_none());
         // Re-suffixing replaces, never stacks.
-        let again = t.with_ranks_per_node(2);
+        let again = t.with_ranks_per_node(2).unwrap();
         assert_eq!(again.name, "eth10g-x2");
-        assert_eq!(again.with_ranks_per_node(1).name, "eth10g");
+        assert_eq!(again.with_ranks_per_node(1).unwrap().name, "eth10g");
+    }
+
+    #[test]
+    fn zero_ranks_per_node_is_an_error_not_a_panic() {
+        assert!(Topology::eth_10g().with_ranks_per_node(0).is_err());
+        assert!(Topology::by_name("eth10g-x0").is_none());
+        assert!(Topology::by_name("eth10g-x0r4").is_none());
+        assert!(Topology::by_name("eth10g-x2r0").is_none());
+        assert!(Topology::by_name("eth10g-x2r1").is_none());
+        assert!(Topology::eth_10g_smp(2).with_rack(1).is_err());
+    }
+
+    #[test]
+    fn rack_presets_resolve_and_roundtrip() {
+        let t = Topology::by_name("eth10g-x8r16").unwrap();
+        assert_eq!(t.name, "eth10g-x8r16");
+        assert_eq!(t.ranks_per_node(), 8);
+        assert_eq!(t.level_sizes(), vec![8, 128]);
+        assert!(t.tiers[0].shm && !t.tiers[1].shm);
+        // In-rack hops keep the base NIC rate; cross-rack is
+        // oversubscribed 4:1 with doubled latency.
+        let base = Topology::eth_10g();
+        assert_eq!(t.tiers[1].gbps, base.link_gbps);
+        assert_eq!(t.link_gbps, base.link_gbps / RACK_OVERSUBSCRIPTION);
+        assert_eq!(t.latency_ns, base.latency_ns * 2);
+        assert_eq!(Topology::by_name(&t.name).unwrap(), t);
+        // Re-suffixing the node size preserves the rack (nodes-per-rack
+        // is kept, the absolute rack size rescales) without compounding
+        // the spine oversubscription.
+        let again = t.clone().with_ranks_per_node(4).unwrap();
+        assert_eq!(again.name, "eth10g-x4r16");
+        assert_eq!(again.level_sizes(), vec![4, 64]);
+        assert_eq!(again.link_gbps, t.link_gbps);
+        assert_eq!(Topology::by_name(&again.name).unwrap(), again);
+        // A rack with 1 rank per node still resolves.
+        let r = Topology::by_name("eth10g-x1r4").unwrap();
+        assert_eq!(r.level_sizes(), vec![4]);
+        assert!(!r.tiers[0].shm);
+        assert_eq!(r.ranks_per_node(), 1);
+        // Double-racking is rejected.
+        assert!(t.with_rack(4).is_err());
     }
 
     #[test]
@@ -371,12 +675,31 @@ mod tests {
         assert_eq!(t.node_of(4), 1);
         assert!(t.same_node(1, 2));
         assert!(!t.same_node(3, 4));
-        assert_eq!(t.tier(0, 1), Tier::Intra);
-        assert_eq!(t.tier(0, 4), Tier::Inter);
-        // Flat fabrics never resolve to the intra tier.
+        assert_eq!(t.level_of(0, 1), 0);
+        assert_eq!(t.level_of(0, 4), t.top_level());
+        // Flat fabrics never resolve to an inner tier.
         let flat = Topology::eth_10g();
         assert!(!flat.same_node(0, 0));
-        assert_eq!(flat.tier(0, 1), Tier::Inter);
+        assert_eq!(flat.level_of(0, 1), flat.top_level());
+        assert_eq!(flat.num_levels(), 1);
+    }
+
+    #[test]
+    fn three_level_hops_price_at_deepest_common_tier() {
+        let t = Topology::by_name("eth10g-x2r4").unwrap(); // node=2, rack=8
+        assert_eq!(t.num_levels(), 3);
+        assert_eq!(t.level_of(0, 1), 0); // same node
+        assert_eq!(t.level_of(0, 2), 1); // same rack, different node
+        assert_eq!(t.level_of(0, 8), 2); // different rack
+        assert!(t.same_node(0, 1));
+        assert!(!t.same_node(0, 2));
+        let b = 1 << 20;
+        // Deeper tiers are strictly cheaper per hop.
+        assert!(t.msg_ns_between(0, 1, b) < t.msg_ns_between(0, 2, b));
+        assert!(t.msg_ns_between(0, 2, b) < t.msg_ns_between(0, 8, b));
+        // In-rack = ToR params; cross-rack = oversubscribed spine.
+        assert_eq!(t.msg_ns_between(0, 2, b), t.msg_ns_at(1, b));
+        assert_eq!(t.msg_ns_between(0, 8, b), t.msg_ns(b));
     }
 
     #[test]
@@ -384,7 +707,7 @@ mod tests {
         let t = Topology::eth_10g_smp(2);
         let b = 1 << 20;
         assert!(t.msg_ns_between(0, 1, b) < t.msg_ns_between(1, 2, b) / 10);
-        // Inter-tier helpers agree with the legacy flat helpers.
+        // Top-tier helpers agree with the legacy flat helpers.
         assert_eq!(t.msg_ns_between(1, 2, b), t.msg_ns(b));
         assert_eq!(t.msg_ns_between(0, 1, b), t.intra_msg_ns(b));
     }
@@ -394,10 +717,104 @@ mod tests {
         let t = Topology::eth_10g_smp(2);
         assert!(t.ranks_node_aligned(&[0, 1, 2, 3]));
         assert!(t.ranks_node_aligned(&[4, 5]));
+        // Scattered WHOLE nodes still count (PR 1 semantics preserved).
+        assert!(t.ranks_node_aligned(&[0, 1, 4, 5]));
         assert!(!t.ranks_node_aligned(&[1, 2])); // straddles nodes
         assert!(!t.ranks_node_aligned(&[0, 2, 4, 6])); // strided
         assert!(!t.ranks_node_aligned(&[0, 1, 2])); // partial node
         assert!(!t.ranks_node_aligned(&[]));
         assert!(!Topology::eth_10g().ranks_node_aligned(&[0, 1])); // flat
+    }
+
+    #[test]
+    fn aligned_tier_depth_counts_decomposable_levels() {
+        let t = Topology::by_name("eth10g-x2r4").unwrap(); // node=2, rack=8
+        let world16: Vec<usize> = (0..16).collect();
+        assert_eq!(t.aligned_tier_depth(&world16), 2);
+        // One whole rack, starting at a rack boundary.
+        let rack: Vec<usize> = (8..16).collect();
+        assert_eq!(t.aligned_tier_depth(&rack), 2);
+        // Node-aligned but rack-straddling contiguous run: depth 1.
+        let run: Vec<usize> = (4..12).collect();
+        assert_eq!(t.aligned_tier_depth(&run), 1);
+        // Too short for the rack tier.
+        assert_eq!(t.aligned_tier_depth(&[0, 1, 2, 3]), 1);
+        // Strided or misaligned: depth 0.
+        assert_eq!(t.aligned_tier_depth(&[0, 2, 4, 6]), 0);
+        assert_eq!(t.aligned_tier_depth(&[1, 2]), 0);
+        assert_eq!(t.aligned_tier_depth(&[]), 0);
+        assert_eq!(Topology::eth_10g().aligned_tier_depth(&[0, 1]), 0);
+        // Restriction truncates the stack for partially-aligned sets.
+        let restricted = t.restrict_tiers(1);
+        assert_eq!(restricted.level_sizes(), vec![2]);
+        assert_eq!(restricted.link_gbps, t.link_gbps);
+    }
+
+    #[test]
+    fn chooser_tier_depth_keeps_tiled_or_containing_tiers() {
+        let t = Topology::by_name("eth10g-x2r4").unwrap(); // node=2, rack=8
+        // Tiled at both levels.
+        let world16: Vec<usize> = (0..16).collect();
+        assert_eq!(t.chooser_tier_depth(&world16), 2);
+        // Too short to tile the rack but contained in one: the rack tier
+        // stays usable for pricing.
+        assert_eq!(t.chooser_tier_depth(&[0, 1, 2, 3]), 2);
+        assert_eq!(t.chooser_tier_depth(&[8, 9, 10, 11]), 2);
+        // Node-aligned run STRADDLING a rack boundary without tiling it:
+        // the rack tier must be collapsed (its groups are neither tiled
+        // nor containing), even though the length happens to fit.
+        let straddle: Vec<usize> = (6..12).collect();
+        assert_eq!(t.chooser_tier_depth(&straddle), 1);
+        // Whole racks starting on a boundary keep everything.
+        let rack: Vec<usize> = (8..16).collect();
+        assert_eq!(t.chooser_tier_depth(&rack), 2);
+        // Strided / empty: nothing.
+        assert_eq!(t.chooser_tier_depth(&[0, 2, 4, 6]), 0);
+        assert_eq!(t.chooser_tier_depth(&[]), 0);
+    }
+
+    #[test]
+    fn level_for_group_finds_containing_tier() {
+        let t = Topology::by_name("eth10g-x4r8").unwrap(); // node=4, rack=32
+        assert_eq!(t.level_for_group(2), 0); // 2 divides 4
+        assert_eq!(t.level_for_group(4), 0);
+        assert_eq!(t.level_for_group(8), 1); // 8 divides 32 but not 4
+        assert_eq!(t.level_for_group(32), 1);
+        assert_eq!(t.level_for_group(3), t.top_level()); // 3 divides no tier
+        assert_eq!(t.level_for_group(64), t.top_level());
+        assert_eq!(Topology::eth_10g().level_for_group(2), 0);
+    }
+
+    #[test]
+    fn hier_group_sizes_respect_divisibility() {
+        let t = Topology::by_name("eth10g-x8r16").unwrap(); // 8, 128
+        assert_eq!(t.hier_group_sizes_for(256), vec![8, 128]);
+        assert_eq!(t.hier_group_sizes_for(128), vec![8]); // rack == p: excluded
+        assert_eq!(t.hier_group_sizes_for(64), vec![8]); // rack ∤ 64
+        assert_eq!(t.hier_group_sizes_for(12), vec![]); // 8 ∤ 12
+        assert_eq!(Topology::eth_10g().hier_group_sizes_for(64), vec![]);
+    }
+
+    #[test]
+    fn validate_rejects_broken_stacks() {
+        let mut t = Topology::eth_10g();
+        assert!(t.validate().is_ok());
+        t.tiers = vec![TierSpec::shm_node(1)];
+        assert!(t.validate().is_err(), "size < 2");
+        t.tiers = vec![TierSpec::shm_node(4), TierSpec::shm_node(6)];
+        assert!(t.validate().is_err(), "6 not a multiple of 4");
+        t.tiers = vec![TierSpec::shm_node(4), TierSpec::shm_node(4)];
+        assert!(t.validate().is_err(), "not strictly increasing");
+        t.tiers = vec![
+            TierSpec { shm: false, ..TierSpec::shm_node(4) },
+            TierSpec::shm_node(8),
+        ];
+        assert!(t.validate().is_err(), "shm outside a NIC tier");
+        t.tiers = (0..5)
+            .map(|i| TierSpec::shm_node(2usize.pow(i + 1)))
+            .collect();
+        assert!(t.validate().is_err(), "too many tiers");
+        t.tiers = vec![TierSpec::shm_node(2), TierSpec::shm_node(8)];
+        assert!(t.validate().is_ok());
     }
 }

@@ -42,6 +42,17 @@ fn main() -> Result<()> {
                  [--quick] [--out table.json]"
             );
             eprintln!("  simulate/scaling take --tuning-table <t.json> (measured selection)");
+            eprintln!(
+                "  topology presets: eth10g | eth25g | omnipath100g (opa), with the \
+                 suffix grammar <base>[-x<r>[r<k>]]:"
+            );
+            eprintln!(
+                "    -x<r>   r ranks/node on a shared-memory tier (eth10g-x2, opa-x4)"
+            );
+            eprintln!(
+                "    r<k>    k nodes/rack behind a 4:1-oversubscribed spine \
+                 (eth10g-x8r16 = 8 ranks/node x 16 nodes/rack)"
+            );
             if let Some(o) = other {
                 Err(anyhow!("unknown command {o:?}"))
             } else {
@@ -152,10 +163,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown topology {topo_name:?}"))?;
     if let Some(r) = args.get("ranks-per-node") {
         let r: usize = r.parse().context("--ranks-per-node")?;
-        if r == 0 {
-            return Err(anyhow!("--ranks-per-node must be >= 1"));
-        }
-        topo = topo.with_ranks_per_node(r);
+        topo = topo.with_ranks_per_node(r).map_err(|e| anyhow!("--ranks-per-node: {e}"))?;
     }
     let mut spec = if args.bool("quick") { ProbeSpec::quick() } else { ProbeSpec::full() };
     spec.max_ranks = args.usize_or("max-ranks", spec.max_ranks);
@@ -165,7 +173,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     eprintln!(
         "tuning {}: ranks {:?}, {} sizes in [{}, {}]",
         topo.name,
-        spec.rank_grid(),
+        spec.rank_grid_for(&topo),
         spec.size_grid().len(),
         fmt_bytes(spec.min_bytes),
         fmt_bytes(spec.max_bytes),

@@ -36,20 +36,10 @@ impl Communicator {
             core: CommCore::spawn(ep),
             rank,
             world,
-            topo_hint: Topology {
-                // In-process fabric: high bandwidth, microsecond-ish costs.
-                // All ranks share one address space, so the fabric is a
-                // single tier (ranks_per_node = 1: no hierarchy to exploit).
-                name: "shm".into(),
-                link_gbps: 400.0,
-                latency_ns: 2_000,
-                per_msg_overhead_ns: 500,
-                chunk_bytes: 1 << 20,
-                ranks_per_node: 1,
-                intra_gbps: 400.0,
-                intra_latency_ns: 2_000,
-                intra_per_msg_overhead_ns: 500,
-            },
+            // In-process fabric: high bandwidth, microsecond-ish costs.
+            // All ranks share one address space, so the fabric is a
+            // single tier (empty tier stack: no hierarchy to exploit).
+            topo_hint: Topology::flat("shm", 400.0, 2_000, 500, 1 << 20),
         }
     }
 

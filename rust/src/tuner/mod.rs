@@ -23,9 +23,13 @@
 //!   analytic design-space model and the CLI, so every algorithm choice
 //!   goes through one switchable decision point.
 //!
-//! Every later topology feature (multi-rail NICs, 3-level hierarchies)
-//! calibrates against this bridge from "model says" to "measurement
-//! says".
+//! Every later topology feature calibrates against this bridge from
+//! "model says" to "measurement says": the N-level tier stack (PR 4)
+//! already does — the fingerprint hashes every tier's size and physics
+//! (a two-tier table can never silently apply to a three-tier fabric),
+//! the probe's rank grid covers tier-shaped rows, and multi-level
+//! hierarchical candidates are measured like any other. Multi-rail NICs
+//! ride the same path next.
 
 pub mod policy;
 pub mod probe;

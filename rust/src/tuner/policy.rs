@@ -32,22 +32,41 @@ pub fn allreduce_legal(alg: Algorithm, p: usize) -> bool {
     match alg {
         Algorithm::Ring => true,
         Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => p.is_power_of_two(),
-        Algorithm::Hierarchical { ranks_per_node } => {
-            ranks_per_node >= 1 && p % ranks_per_node == 0
-        }
+        // Nesting divisibility is a GroupStack construction invariant;
+        // only the outermost group vs p remains to check.
+        Algorithm::Hierarchical { groups } => p % groups.outermost() == 0,
         Algorithm::Auto => false,
     }
 }
 
-/// Is `alg` a real allgather program over `p` ranks? Only ring and
-/// recursive doubling have allgather builders; every other algorithm
-/// would silently compile to a ring, which a tuned table must not be
-/// credited for. Lockstep with `build`: `legality_matches_builder`.
+/// Is `alg` a real allgather program over `p` ranks? Ring, recursive
+/// doubling and hierarchical have allgather builders; every other
+/// algorithm would silently compile to a ring, which a tuned table must
+/// not be credited for. Lockstep with `build`: `legality_matches_builder`.
 pub fn allgather_legal(alg: Algorithm, p: usize) -> bool {
     match alg {
         Algorithm::Ring => true,
         Algorithm::RecursiveDoubling => p.is_power_of_two(),
+        Algorithm::Hierarchical { groups } => p % groups.outermost() == 0,
         _ => false,
+    }
+}
+
+/// A hierarchical pick from a table must also FIT the live topology's
+/// tier stack: every group size has to be one of its tier sizes. The
+/// engine hands partially-aligned communicators a topology view
+/// truncated to the tiers their members actually tile or fit inside
+/// ([`Topology::chooser_tier_depth`]); a table row measured on the full
+/// fabric may still prefer a deeper stack (divisibility alone cannot
+/// tell), and applying it would run a "rack" phase across a rack
+/// boundary the members straddle. Non-hierarchical picks fit anywhere.
+fn fits_tiers(alg: Algorithm, topo: &Topology) -> bool {
+    match alg {
+        Algorithm::Hierarchical { groups } => {
+            let sizes = topo.level_sizes();
+            groups.iter().all(|g| sizes.contains(&g))
+        }
+        _ => true,
     }
 }
 
@@ -64,7 +83,12 @@ pub enum SelectionPolicy {
     Tuned(TuningTable),
     /// Measured table, consulted ONLY while its fingerprint matches the
     /// live topology; any mismatch falls back to the analytic model
-    /// wholesale. This is what `--tuning-table` installs.
+    /// wholesale. This is what `--tuning-table` installs. Note the
+    /// engine's partially-aligned communicators query through a
+    /// TRUNCATED topology view ([`Topology::restrict_tiers`]) whose
+    /// fingerprint never matches a table measured on the full fabric —
+    /// they deliberately get the analytic model (the table's cells were
+    /// measured on fully-aligned communicators and do not transfer).
     TunedWithFallback(TuningTable),
 }
 
@@ -98,26 +122,25 @@ impl SelectionPolicy {
             return Algorithm::Ring;
         }
         if let Some(t) = self.table_for(topo) {
-            if let Some(alg) =
-                t.lookup(CollectiveKind::Allreduce, p, bytes, &|a| allreduce_legal(a, p))
-            {
+            let legal = |a: Algorithm| fits_tiers(a, topo) && allreduce_legal(a, p);
+            if let Some(alg) = t.lookup(CollectiveKind::Allreduce, p, bytes, &legal) {
                 return alg;
             }
         }
         selector::choose_algorithm(topo, p, bytes)
     }
 
-    /// Allreduce over a strided / non-node-aligned communicator. Tables
-    /// are measured on contiguous communicators, where intra-node hops
-    /// ride shared memory; a strided group gets no such discount, so the
-    /// table only applies on flat fabrics (ranks_per_node == 1, where
-    /// contiguity is irrelevant). Otherwise the all-inter analytic model
-    /// decides — exactly what a mis-applied table would mispredict.
+    /// Allreduce over a strided / non-aligned communicator. Tables are
+    /// measured on contiguous communicators, where in-tier hops get tier
+    /// discounts; a strided group gets none, so the table only applies on
+    /// flat fabrics (empty tier stack, where contiguity is irrelevant).
+    /// Otherwise the all-top analytic model decides — exactly what a
+    /// mis-applied table would mispredict.
     pub fn choose_flat_allreduce(&self, topo: &Topology, p: usize, bytes: u64) -> Algorithm {
         if p <= 1 {
             return Algorithm::Ring;
         }
-        if topo.ranks_per_node <= 1 {
+        if !topo.is_hierarchical() {
             if let Some(t) = self.table_for(topo) {
                 let legal = |a: Algorithm| {
                     !matches!(a, Algorithm::Hierarchical { .. }) && allreduce_legal(a, p)
@@ -137,9 +160,8 @@ impl SelectionPolicy {
             return Algorithm::Ring;
         }
         if let Some(t) = self.table_for(topo) {
-            if let Some(alg) =
-                t.lookup(CollectiveKind::Allgather, p, bytes, &|a| allgather_legal(a, p))
-            {
+            let legal = |a: Algorithm| fits_tiers(a, topo) && allgather_legal(a, p);
+            if let Some(alg) = t.lookup(CollectiveKind::Allgather, p, bytes, &legal) {
                 return alg;
             }
         }
@@ -152,11 +174,12 @@ impl SelectionPolicy {
         if p <= 1 {
             return Algorithm::Ring;
         }
-        if topo.ranks_per_node <= 1 {
+        if !topo.is_hierarchical() {
             if let Some(t) = self.table_for(topo) {
-                if let Some(alg) =
-                    t.lookup(CollectiveKind::Allgather, p, bytes, &|a| allgather_legal(a, p))
-                {
+                let legal = |a: Algorithm| {
+                    !matches!(a, Algorithm::Hierarchical { .. }) && allgather_legal(a, p)
+                };
+                if let Some(alg) = t.lookup(CollectiveKind::Allgather, p, bytes, &legal) {
                     return alg;
                 }
             }
@@ -179,7 +202,7 @@ impl SelectionPolicy {
                 .interpolated(CollectiveKind::Allreduce, p, bytes)
                 .unwrap_or_default()
                 .into_iter()
-                .filter(|(a, _)| allreduce_legal(*a, p))
+                .filter(|(a, _)| fits_tiers(*a, topo) && allreduce_legal(*a, p))
                 .min_by(|x, y| x.1.partial_cmp(&y.1).expect("measured times are finite"));
             if let Some((_, ns)) = cheapest_legal {
                 return ns.ceil() as Ns;
@@ -203,6 +226,8 @@ mod tests {
         // allgather only ring/rdoubling count: `build` compiles anything
         // else to a ring fallback, which legality deliberately rejects.
         use crate::collectives::program::build;
+        let stacks: [&[usize]; 10] =
+            [&[1], &[2], &[3], &[4], &[5], &[8], &[2, 4], &[2, 8], &[3, 6], &[2, 4, 8]];
         for p in 1..=64usize {
             let mut algs = vec![
                 Algorithm::Ring,
@@ -210,20 +235,25 @@ mod tests {
                 Algorithm::HalvingDoubling,
                 Algorithm::Auto,
             ];
-            for rpn in [0usize, 1, 2, 3, 4, 5, 8] {
-                algs.push(Algorithm::Hierarchical { ranks_per_node: rpn });
+            for stack in stacks {
+                algs.push(Algorithm::hier(stack));
             }
-            for alg in algs {
+            for alg in &algs {
                 assert_eq!(
-                    allreduce_legal(alg, p),
-                    build(CollectiveKind::Allreduce, alg, p, 1).is_ok(),
+                    allreduce_legal(*alg, p),
+                    build(CollectiveKind::Allreduce, *alg, p, 1).is_ok(),
                     "allreduce {alg:?} p={p}"
                 );
             }
-            for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling] {
+            for alg in algs.iter().filter(|a| **a != Algorithm::Auto) {
+                // Auto compiles to a ring for allgather (not an error), so
+                // the legality check deliberately excludes it.
+                if *alg == Algorithm::HalvingDoubling {
+                    continue; // same: silently compiles to a ring
+                }
                 assert_eq!(
-                    allgather_legal(alg, p),
-                    build(CollectiveKind::Allgather, alg, p, 1).is_ok(),
+                    allgather_legal(*alg, p),
+                    build(CollectiveKind::Allgather, *alg, p, 1).is_ok(),
                     "allgather {alg:?} p={p}"
                 );
             }
@@ -272,6 +302,30 @@ mod tests {
                 assert_eq!(pick, cell.best().unwrap().0, "{kind:?} p={}", cell.ranks);
             }
         }
+    }
+
+    #[test]
+    fn table_picks_never_exceed_the_live_tier_stack() {
+        use crate::tuner::table::MeasuredCell;
+        // A strict Tuned table (trusted regardless of fingerprint) claims
+        // the 3-level stack wins a cell. Queried through a topology view
+        // that lacks the rack tier — what the engine hands rack-straddling
+        // communicators — the pick must be filtered out, not applied.
+        let full = Topology::by_name("eth10g-x2r4").unwrap();
+        let three = Algorithm::hier(&[2, 8]);
+        let mut table = crate::tuner::TuningTable::for_topology(&full);
+        table.insert(
+            CollectiveKind::Allreduce,
+            MeasuredCell::new(16, 1 << 20, vec![(Algorithm::Ring, 99_999), (three, 10)]),
+        );
+        let policy = SelectionPolicy::Tuned(table);
+        // On the full fabric the measured 3-level winner applies…
+        assert_eq!(policy.choose_allreduce(&full, 16, 1 << 20), three);
+        // …but on the node-only restricted view it must not: the members
+        // behind that view straddle a rack boundary.
+        let restricted = full.restrict_tiers(1);
+        let pick = policy.choose_allreduce(&restricted, 16, 1 << 20);
+        assert_ne!(pick, three, "{pick:?}");
     }
 
     #[test]

@@ -58,6 +58,28 @@ impl ProbeSpec {
         out
     }
 
+    /// [`ProbeSpec::rank_grid`] extended with rows representative of the
+    /// topology's tier shapes: for every tier size s, the multiples s,
+    /// 2s, 3s and 4s (clamped to `max_ranks`). On a 3-level fabric this
+    /// guarantees cells where the multi-level hierarchical candidates
+    /// exist (p a strict multiple of the rack size), so the measured
+    /// table actually covers 2- AND 3-level shapes instead of whatever
+    /// the generic grid happens to hit.
+    pub fn rank_grid_for(&self, topo: &Topology) -> Vec<usize> {
+        let mut out = self.rank_grid();
+        for s in topo.level_sizes() {
+            for m in 1..=4usize {
+                let p = s * m;
+                if p >= 2 && p <= self.max_ranks {
+                    out.push(p);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// Log-spaced byte sizes from min to max inclusive (ascending).
     pub fn size_grid(&self) -> Vec<u64> {
         let k = self.size_points.max(2);
@@ -80,7 +102,7 @@ impl ProbeSpec {
 pub fn probe_candidates(topo: &Topology, kind: CollectiveKind, p: usize) -> Vec<Algorithm> {
     match kind {
         CollectiveKind::Allreduce => candidate_algorithms(topo, p),
-        CollectiveKind::Allgather => allgather_candidates(p),
+        CollectiveKind::Allgather => allgather_candidates(topo, p),
         _ => vec![Algorithm::Ring],
     }
 }
@@ -106,7 +128,7 @@ pub fn tune_with_progress(
     spec: &ProbeSpec,
     mut progress: impl FnMut(usize, usize),
 ) -> TuningTable {
-    let ranks = spec.rank_grid();
+    let ranks = spec.rank_grid_for(topo);
     let sizes = spec.size_grid();
     let total = TUNED_KINDS.len() * ranks.len() * sizes.len();
     let mut done = 0;
@@ -169,6 +191,35 @@ mod tests {
             }
         }
         assert!(table.matches(&topo));
+    }
+
+    #[test]
+    fn tier_shaped_rank_rows_cover_multi_level_cells() {
+        // On a 3-level fabric the probe grid must include rack-multiple
+        // rows, and those cells must measure the 3-level candidate too.
+        let topo = Topology::by_name("eth10g-x2r4").unwrap(); // node=2, rack=8
+        let spec = ProbeSpec { max_ranks: 32, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 2 };
+        let grid = spec.rank_grid_for(&topo);
+        for p in [8usize, 16, 24, 32] {
+            assert!(grid.contains(&p), "{grid:?} missing {p}");
+        }
+        // Flat topologies keep the generic grid.
+        assert_eq!(spec.rank_grid_for(&Topology::eth_10g()), spec.rank_grid());
+        let table = tune(&topo, &spec);
+        let three = crate::collectives::Algorithm::hier(&[2, 8]);
+        let cell16 = table
+            .cells(CollectiveKind::Allreduce)
+            .iter()
+            .find(|c| c.ranks == 16 && c.bytes == 1 << 10)
+            .expect("rack-multiple row measured");
+        assert!(cell16.time_of(three).is_some(), "{cell16:?}");
+        // ...and the allgather grid measures its hierarchical candidate.
+        let ag16 = table
+            .cells(CollectiveKind::Allgather)
+            .iter()
+            .find(|c| c.ranks == 16 && c.bytes == 1 << 10)
+            .unwrap();
+        assert!(ag16.time_of(three).is_some(), "{ag16:?}");
     }
 
     #[test]

@@ -21,19 +21,22 @@ use crate::Ns;
 
 /// Stable identity of the fabric a table was measured on: every parameter
 /// that influences simulated timings (NOT the display name — renaming a
-/// preset must not invalidate its measurements).
+/// preset must not invalidate its measurements). Hashes the FULL tier
+/// stack — all levels' group sizes and physics — so a table probed on a
+/// two-tier fabric never silently applies to a three-tier one (the
+/// pre-tier-stack `v1` format can never match and falls back cleanly).
 pub fn fingerprint(t: &Topology) -> String {
-    format!(
-        "v1|g{}|l{}|o{}|c{}|r{}|ig{}|il{}|io{}",
-        t.link_gbps,
-        t.latency_ns,
-        t.per_msg_overhead_ns,
-        t.chunk_bytes,
-        t.ranks_per_node,
-        t.intra_gbps,
-        t.intra_latency_ns,
-        t.intra_per_msg_overhead_ns,
-    )
+    let mut s = format!(
+        "v2|g{}|l{}|o{}|c{}",
+        t.link_gbps, t.latency_ns, t.per_msg_overhead_ns, t.chunk_bytes,
+    );
+    for tier in &t.tiers {
+        s.push_str(&format!(
+            "|t{}:g{}:l{}:o{}:m{}",
+            tier.ranks, tier.gbps, tier.latency_ns, tier.per_msg_overhead_ns, tier.shm as u8,
+        ));
+    }
+    s
 }
 
 /// Table key of a tunable collective kind. Rooted collectives and barrier
@@ -47,24 +50,29 @@ pub fn kind_key(kind: CollectiveKind) -> Option<&'static str> {
 }
 
 /// Stable serialization key of an algorithm (`Display` collapses the
-/// hierarchical node size, which the table must preserve).
+/// hierarchical group stack, which the table must preserve):
+/// `"hier:8"` for the two-tier case, `"hier:8x128"` for deeper stacks
+/// (innermost first — [`crate::collectives::GroupStack`]'s `Display`).
 pub fn alg_key(alg: Algorithm) -> String {
     match alg {
-        Algorithm::Hierarchical { ranks_per_node } => format!("hier:{ranks_per_node}"),
+        Algorithm::Hierarchical { groups } => format!("hier:{groups}"),
         other => other.to_string(),
     }
 }
 
-/// Inverse of [`alg_key`].
+/// Inverse of [`alg_key`]. Structurally invalid group stacks (bad
+/// nesting, too deep) are rejected, not folded.
 pub fn parse_alg_key(s: &str) -> Option<Algorithm> {
     match s {
         "ring" => Some(Algorithm::Ring),
         "rdoubling" => Some(Algorithm::RecursiveDoubling),
         "halving" => Some(Algorithm::HalvingDoubling),
-        _ => s
-            .strip_prefix("hier:")
-            .and_then(|r| r.parse().ok())
-            .map(|ranks_per_node| Algorithm::Hierarchical { ranks_per_node }),
+        _ => {
+            let body = s.strip_prefix("hier:")?;
+            let groups: Option<Vec<usize>> =
+                body.split('x').map(|g| g.parse().ok()).collect();
+            Algorithm::try_hier(&groups?)
+        }
     }
 }
 
@@ -431,6 +439,29 @@ mod tests {
     }
 
     #[test]
+    fn fingerprints_hash_the_full_tier_stack() {
+        // Same node tier, different (or absent) rack tier: a two-tier
+        // table must never silently apply to a three-tier fabric.
+        let two = Topology::by_name("eth10g-x8").unwrap();
+        let three = Topology::by_name("eth10g-x8r16").unwrap();
+        let three_other = Topology::by_name("eth10g-x8r4").unwrap();
+        assert_ne!(fingerprint(&two), fingerprint(&three));
+        assert_ne!(fingerprint(&three), fingerprint(&three_other));
+        // Same stack, different tier physics: distinct.
+        let mut warped = three.clone();
+        warped.tiers[1].gbps *= 2.0;
+        assert_ne!(fingerprint(&three), fingerprint(&warped));
+        let mut chan = three.clone();
+        chan.tiers[0].shm = false;
+        assert_ne!(fingerprint(&three), fingerprint(&chan));
+        // A table measured on the two-tier fabric is ignored on the
+        // three-tier one (the PR 3 fingerprint-mismatch fallback).
+        let table = TuningTable::for_topology(&two);
+        assert!(table.matches(&two));
+        assert!(!table.matches(&three));
+    }
+
+    #[test]
     fn json_roundtrip_and_rejects_garbage() {
         let t = sample();
         let s = t.to_json_string();
@@ -457,12 +488,20 @@ mod tests {
             A::Ring,
             A::RecursiveDoubling,
             A::HalvingDoubling,
-            A::Hierarchical { ranks_per_node: 4 },
+            A::hier(&[4]),
+            A::hier(&[2, 8]),
+            A::hier(&[2, 8, 64]),
         ] {
             assert_eq!(parse_alg_key(&alg_key(alg)), Some(alg), "{alg:?}");
         }
+        // The two-tier PR 3 format is still parsed.
+        assert_eq!(parse_alg_key("hier:4"), Some(A::hier(&[4])));
+        assert_eq!(parse_alg_key("hier:8x128"), Some(A::hier(&[8, 128])));
         assert_eq!(parse_alg_key("nope"), None);
         assert_eq!(parse_alg_key("hier:x"), None);
+        assert_eq!(parse_alg_key("hier:"), None);
+        assert_eq!(parse_alg_key("hier:3x7"), None, "broken nesting is rejected");
+        assert_eq!(parse_alg_key("hier:0"), None);
     }
 
     #[test]

@@ -236,18 +236,23 @@ fn prop_build_validates_instead_of_panicking() {
         Config { cases: 200, seed: 38 },
         |r| {
             let p = 1 + r.usize_below(17);
-            let alg = match r.below(4) {
+            let alg = match r.below(5) {
                 0 => A::Ring,
                 1 => A::RecursiveDoubling,
                 2 => A::HalvingDoubling,
-                _ => A::Hierarchical { ranks_per_node: 1 + r.usize_below(6) },
+                3 => A::hier(&[1 + r.usize_below(6)]),
+                _ => {
+                    let g1 = 1 + r.usize_below(4);
+                    let g2 = g1 * (1 + r.usize_below(4));
+                    A::hier(&[g1, g2])
+                }
             };
             (p, 1 + r.usize_below(50), alg)
         },
         |&(p, n, alg)| {
             let legal = match alg {
                 A::RecursiveDoubling | A::HalvingDoubling => p.is_power_of_two(),
-                A::Hierarchical { ranks_per_node } => p % ranks_per_node == 0,
+                A::Hierarchical { groups } => p % groups.outermost() == 0,
                 _ => true,
             };
             match program::build(CollectiveKind::Allreduce, alg, p, n) {
@@ -258,7 +263,7 @@ fn prop_build_validates_instead_of_panicking() {
                     expect_eq("program count", progs.len(), p)
                 }
                 Err(BuildError::NonPowerOfTwoRanks { .. })
-                | Err(BuildError::InvalidNodeGrouping { .. }) => {
+                | Err(BuildError::InvalidTierGrouping { .. }) => {
                     if legal {
                         return Err(format!("{alg:?} p={p}: spurious BuildError"));
                     }
@@ -266,6 +271,229 @@ fn prop_build_validates_instead_of_panicking() {
                 }
                 Err(e) => Err(format!("{alg:?} p={p}: unexpected error {e}")),
             }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// N-level recursive builders (3-level socket/node/rack shapes, p <= 64)
+// ---------------------------------------------------------------------------
+
+/// Random nested shape: branch factors per level (socket, node, rack,
+/// top), p = their product clamped to 64, groups = cumulative products
+/// with branch 1 levels dropped. Mixed: non-pow2 branches included.
+fn gen_shape(r: &mut mlsl::util::prng::Prng) -> (usize, Vec<usize>, usize) {
+    let branches = [
+        1 + r.usize_below(4), // socket
+        1 + r.usize_below(4), // node
+        1 + r.usize_below(3), // rack
+        1 + r.usize_below(4), // top
+    ];
+    let mut p = 1usize;
+    let mut groups = Vec::new();
+    for (i, &b) in branches.iter().enumerate() {
+        if p * b > 64 {
+            break;
+        }
+        p *= b;
+        if i < 3 && b > 1 {
+            groups.push(p);
+        }
+    }
+    // Drop a trailing group equal to p (a single top group is the
+    // degenerate "everyone in one rack" case — keep it sometimes).
+    if groups.last() == Some(&p) && r.below(2) == 0 {
+        groups.pop();
+    }
+    if p < 2 {
+        p = 2;
+        groups.clear();
+    }
+    (p, groups, 1 + r.usize_below(200))
+}
+
+/// Hierarchy isolation: a rank that is not a leader of its level-g group
+/// never communicates outside that group (so non-leaders never touch the
+/// top tier, and level-i leaders never skip levels).
+fn assert_tier_isolation(progs: &[Program], groups: &[usize]) -> Result<(), String> {
+    for prog in progs {
+        let r = prog.rank;
+        for step in &prog.steps {
+            for peer in step
+                .send
+                .iter()
+                .map(|s| s.to)
+                .chain(step.recv.iter().map(|v| v.from))
+            {
+                for &g in groups {
+                    if r % g != 0 && peer / g != r / g {
+                        return Err(format!(
+                            "rank {r} (non-leader of its {g}-group) peers with {peer}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn scaled(rest: &[usize], g: usize) -> Vec<usize> {
+    rest.iter().map(|s| s / g).collect()
+}
+
+/// Expected total on-wire elements, mirroring the builders' phase
+/// structure exactly (full-buffer trees per level, flat top phase,
+/// per-segment gathers/scatters with exact `segments` arithmetic).
+fn ar_hier_volume(p: usize, n: usize, groups: &[usize], inner: A) -> usize {
+    match groups.split_first() {
+        None => match inner {
+            A::RecursiveDoubling => p * (p.trailing_zeros() as usize) * n,
+            _ => 2 * n * (p - 1),
+        },
+        Some((&g, rest)) => {
+            let blocks = p / g;
+            2 * n * (p - blocks) + ar_hier_volume(blocks, n, &scaled(rest, g), inner)
+        }
+    }
+}
+
+fn rs_hier_volume(p: usize, n: usize, groups: &[usize]) -> usize {
+    match groups.split_first() {
+        None => n * (p - 1),
+        Some((&g, rest)) => {
+            let seg = program::segments(n, p);
+            let blocks = p / g;
+            let reduce_up = n * (g - 1) * blocks;
+            let scatter: usize =
+                (0..p).filter(|r| r % g != 0).map(|r| seg[r + 1] - seg[r]).sum();
+            reduce_up + scatter + rs_hier_volume(blocks, n, &scaled(rest, g))
+        }
+    }
+}
+
+fn ag_hier_volume(p: usize, n: usize, groups: &[usize]) -> usize {
+    match groups.split_first() {
+        None => n * (p - 1),
+        Some((&g, rest)) => {
+            let seg = program::segments(n, p);
+            let blocks = p / g;
+            let gather: usize =
+                (0..p).filter(|r| r % g != 0).map(|r| seg[r + 1] - seg[r]).sum();
+            let down = n * (g - 1) * blocks;
+            gather + down + ag_hier_volume(blocks, n, &scaled(rest, g))
+        }
+    }
+}
+
+fn bcast_hier_volume(p: usize, n: usize, root: usize, groups: &[usize]) -> usize {
+    match groups.split_first() {
+        None => n * (p - 1),
+        Some((&g, rest)) => {
+            let blocks = p / g;
+            let relay = if root % g != 0 { n } else { 0 };
+            relay + n * (g - 1) * blocks + bcast_hier_volume(blocks, n, root / g, &scaled(rest, g))
+        }
+    }
+}
+
+#[test]
+fn prop_multilevel_allreduce_correct_isolated_and_counted() {
+    prop_run(
+        Config { cases: 120, seed: 51 },
+        |r| {
+            let (p, groups, n) = gen_shape(r);
+            let leaders = p / groups.last().copied().unwrap_or(1);
+            let inner = if leaders.is_power_of_two() {
+                match r.below(3) {
+                    0 => A::Ring,
+                    1 => A::RecursiveDoubling,
+                    _ => A::HalvingDoubling,
+                }
+            } else {
+                A::Ring
+            };
+            (p, groups, n, inner)
+        },
+        |(p, groups, n, inner)| {
+            let (p, n) = (*p, *n);
+            let progs = program::allreduce_hierarchical_levels(p, n, groups, *inner);
+            let finals = sym_run(&progs, init_bufs(CollectiveKind::Allreduce, p, n))?;
+            check(CollectiveKind::Allreduce, p, n, &finals)?;
+            assert_tier_isolation(&progs, groups)?;
+            expect_eq(
+                "allreduce levels total elems",
+                total_sent_elems(&progs),
+                ar_hier_volume(p, n, groups, *inner),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_multilevel_reduce_scatter_correct_isolated_and_counted() {
+    use mlsl::collectives::verify::check_reduce_scatter_layout;
+    prop_run(
+        Config { cases: 120, seed: 52 },
+        gen_shape,
+        |(p, groups, n)| {
+            let (p, n) = (*p, *n);
+            let progs = program::reduce_scatter_hierarchical(p, n, groups);
+            let finals = sym_run(&progs, init_bufs(CollectiveKind::ReduceScatter, p, n))?;
+            // Natural ownership: rank r owns fully-reduced segment r.
+            check_reduce_scatter_layout(p, n, &finals, 0)?;
+            assert_tier_isolation(&progs, groups)?;
+            expect_eq(
+                "hier reduce-scatter total elems",
+                total_sent_elems(&progs),
+                rs_hier_volume(p, n, groups),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_multilevel_allgather_correct_isolated_and_counted() {
+    prop_run(
+        Config { cases: 120, seed: 53 },
+        gen_shape,
+        |(p, groups, n)| {
+            let (p, n) = (*p, *n);
+            let progs = program::allgather_hierarchical(p, n, groups);
+            let finals = sym_run(&progs, init_bufs(CollectiveKind::Allgather, p, n))?;
+            check(CollectiveKind::Allgather, p, n, &finals)?;
+            assert_tier_isolation(&progs, groups)?;
+            expect_eq(
+                "hier allgather total elems",
+                total_sent_elems(&progs),
+                ag_hier_volume(p, n, groups),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_multilevel_broadcast_any_root_correct_isolated_and_counted() {
+    prop_run(
+        Config { cases: 150, seed: 54 },
+        |r| {
+            let (p, groups, n) = gen_shape(r);
+            let root = r.usize_below(p);
+            (p, groups, n, root)
+        },
+        |(p, groups, n, root)| {
+            let (p, n, root) = (*p, *n, *root);
+            let progs = program::broadcast_hierarchical(p, n, root, groups);
+            let finals = sym_run(&progs, init_bufs(CollectiveKind::Broadcast { root }, p, n))?;
+            check(CollectiveKind::Broadcast { root }, p, n, &finals)?;
+            assert_tier_isolation(&progs, groups)?;
+            // n(p−1) down the trees plus one full-buffer relay per level
+            // at which the (sub-)root is not a leader.
+            expect_eq(
+                "hier broadcast total elems",
+                total_sent_elems(&progs),
+                bcast_hier_volume(p, n, root, groups),
+            )
         },
     );
 }

@@ -6,17 +6,8 @@ use mlsl::fabric::{MsgDesc, NetSim, SimEvent};
 use mlsl::util::proptest::{run, Config};
 
 fn test_topo() -> Topology {
-    Topology {
-        name: "prop".into(),
-        link_gbps: 8.0, // 1 byte/ns
-        latency_ns: 500,
-        per_msg_overhead_ns: 50,
-        chunk_bytes: 1 << 20,
-        ranks_per_node: 1,
-        intra_gbps: 8.0,
-        intra_latency_ns: 500,
-        intra_per_msg_overhead_ns: 50,
-    }
+    // 8 Gbps = 1 byte/ns; flat (empty tier stack).
+    Topology::flat("prop", 8.0, 500, 50, 1 << 20)
 }
 
 /// Random message workload.
