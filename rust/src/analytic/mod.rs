@@ -167,7 +167,10 @@ pub fn best_group_size_with_policy(
                     // that tier's boundary otherwise — ultimately the
                     // top): socket-sized groups ride the socket tier,
                     // node-sized the node tier, rack-sized the rack.
-                    let hop = topo.msg_ns_at(topo.level_for_group(g), bytes / g as u64);
+                    // Rail-aware: each hop's chunks stripe across the
+                    // tier's rails (wire term only; alpha is paid once).
+                    let hop =
+                        topo.striped_msg_ns_at(topo.level_for_group(g), bytes / g as u64);
                     act_ns += 2 * (g as u64 - 1) * hop;
                 }
                 if groups > 1 && layer.weight_elems > 0 {

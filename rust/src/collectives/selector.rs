@@ -23,6 +23,14 @@
 //! so a rack-oversubscribed fabric can pick a 3-level reduction. On flat
 //! fabrics (empty tier stack) every formula collapses to the classic
 //! single-tier model.
+//!
+//! **Multi-rail fabrics**: every bandwidth term above is divided by the
+//! rails the message actually occupies ([`Topology::stripe_count`] —
+//! the level's rail count capped by whole chunks in flight, exactly the
+//! striping `fabric::sim` executes), while the alpha terms are NEVER
+//! discounted: a striped transfer still pays one overhead and one
+//! latency. Sub-chunk latency-bound messages therefore price (and run)
+//! identically to the single-rail fabric.
 
 use super::Algorithm;
 use crate::fabric::gbps_to_bytes_per_ns;
@@ -37,6 +45,17 @@ fn alpha(topo: &Topology, level: usize) -> f64 {
 /// Bandwidth of a level, bytes/ns.
 fn bw(topo: &Topology, level: usize) -> f64 {
     gbps_to_bytes_per_ns(topo.gbps_at(level))
+}
+
+/// Rail-aware EFFECTIVE bandwidth of a level for one message of
+/// `msg_bytes`: the per-rail line rate times the rails the transfer
+/// actually occupies ([`Topology::stripe_count`] — the level's rail
+/// count, capped by whole chunks in flight). Striping divides only the
+/// bandwidth term: sub-chunk latency-bound messages get factor 1, and
+/// alpha is NEVER discounted (the per-message overhead and latency are
+/// paid once regardless of rails — see `fabric::sim`).
+fn eff_bw(topo: &Topology, level: usize, msg_bytes: f64) -> f64 {
+    bw(topo, level) * topo.stripe_count(level, msg_bytes.max(0.0) as u64) as f64
 }
 
 /// How a flat algorithm's participants sit on the fabric, for pricing.
@@ -88,16 +107,18 @@ fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout: Layout) 
     match alg {
         Algorithm::Ring => {
             // Lockstep pipeline: each step is gated by its slowest hop —
-            // the deepest tier containing the whole ring.
+            // the deepest tier containing the whole ring. Per-step
+            // segments of n/p bytes stripe across the level's rails.
             let l = ring_level(topo, p, layout);
-            2.0 * (pf - 1.0) * (alpha(topo, l) + n / pf / bw(topo, l))
+            let m = n / pf;
+            2.0 * (pf - 1.0) * (alpha(topo, l) + m / eff_bw(topo, l, m))
         }
         Algorithm::RecursiveDoubling => {
             let mut total = 0.0;
             let mut d = 1;
             while d < p {
                 let l = level_at(topo, d, layout);
-                total += alpha(topo, l) + n / bw(topo, l);
+                total += alpha(topo, l) + n / eff_bw(topo, l, n);
                 d <<= 1;
             }
             total
@@ -109,7 +130,8 @@ fn flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout: Layout) 
             let mut d = p / 2;
             while d >= 1 {
                 let l = level_at(topo, d, layout);
-                total += 2.0 * (alpha(topo, l) + n * d as f64 / pf / bw(topo, l));
+                let m = n * d as f64 / pf;
+                total += 2.0 * (alpha(topo, l) + m / eff_bw(topo, l, m));
                 d /= 2;
             }
             total
@@ -137,7 +159,7 @@ fn hier_tree_cost(topo: &Topology, groups: &super::GroupStack, n: f64) -> f64 {
         if branch > 1 {
             let rounds = (branch as f64).log2().ceil();
             let l = topo.level_for_group(g);
-            total += 2.0 * rounds * (alpha(topo, l) + n / bw(topo, l));
+            total += 2.0 * rounds * (alpha(topo, l) + n / eff_bw(topo, l, n));
         }
         prev = g;
     }
@@ -299,7 +321,8 @@ fn allgather_flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout
         Algorithm::Ring => {
             // p−1 lockstep steps of n/p bytes, gated by the slowest hop.
             let l = ring_level(topo, p, layout);
-            (pf - 1.0) * (alpha(topo, l) + n / pf / bw(topo, l))
+            let m = n / pf;
+            (pf - 1.0) * (alpha(topo, l) + m / eff_bw(topo, l, m))
         }
         Algorithm::RecursiveDoubling if p.is_power_of_two() => {
             // The round at partner distance d exchanges the held block of
@@ -308,7 +331,8 @@ fn allgather_flat_cost(topo: &Topology, alg: Algorithm, p: usize, n: f64, layout
             let mut d = 1;
             while d < p {
                 let l = level_at(topo, d, layout);
-                total += alpha(topo, l) + n * d as f64 / pf / bw(topo, l);
+                let m = n * d as f64 / pf;
+                total += alpha(topo, l) + m / eff_bw(topo, l, m);
                 d <<= 1;
             }
             total
@@ -346,9 +370,10 @@ pub fn predict_allgather_ns(topo: &Topology, alg: Algorithm, p: usize, bytes: u6
                     // member share each; broadcast down: ⌈log₂ branch⌉
                     // full-buffer rounds.
                     let share = n * prev as f64 / p as f64;
-                    total += (branch as f64 - 1.0) * (alpha(topo, l) + share / bw(topo, l));
+                    total +=
+                        (branch as f64 - 1.0) * (alpha(topo, l) + share / eff_bw(topo, l, share));
                     let rounds = (branch as f64).log2().ceil();
-                    total += rounds * (alpha(topo, l) + n / bw(topo, l));
+                    total += rounds * (alpha(topo, l) + n / eff_bw(topo, l, n));
                 }
                 prev = g;
             }
@@ -725,6 +750,46 @@ mod tests {
         assert!(
             !matches!(pick, Algorithm::Hierarchical { groups } if groups.len() > 1),
             "{pick:?}"
+        );
+    }
+
+    #[test]
+    fn rail_striping_discounts_bandwidth_not_latency() {
+        let flat = Topology::eth_10g();
+        let e4 = flat.clone().with_rails(4).unwrap();
+        // Latency-bound sizes (every message under one chunk): the rail
+        // count is invisible — identical predictions, alpha undivided.
+        for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling, Algorithm::HalvingDoubling] {
+            assert_eq!(
+                predict_allreduce_ns(&flat, alg, 64, 4 << 10),
+                predict_allreduce_ns(&e4, alg, 64, 4 << 10),
+                "{alg:?}"
+            );
+            assert_eq!(
+                predict_flat_inter_allreduce_ns(&flat, alg, 16, 4 << 10),
+                predict_flat_inter_allreduce_ns(&e4, alg, 16, 4 << 10),
+                "{alg:?} strided"
+            );
+        }
+        // Bandwidth-bound ring (1 MiB per-step segments = 4 chunks): the
+        // 4 rails buy close to 4x, but never more, and never touch alpha.
+        let big = 64u64 << 20;
+        let t1 = predict_allreduce_ns(&flat, Algorithm::Ring, 64, big);
+        let t4 = predict_allreduce_ns(&e4, Algorithm::Ring, 64, big);
+        let ratio = t1 as f64 / t4 as f64;
+        assert!((3.2..4.0).contains(&ratio), "ratio={ratio} t1={t1} t4={t4}");
+        // Allgather pricing stripes the same way.
+        let g1 = predict_allgather_ns(&flat, Algorithm::Ring, 64, big);
+        let g4 = predict_allgather_ns(&e4, Algorithm::Ring, 64, big);
+        assert!((3.2..4.0).contains(&(g1 as f64 / g4 as f64)));
+        // A crossover still exists on the striped fabric and the picks
+        // stay shape-consistent: fewest rounds small, bandwidth-optimal
+        // large.
+        assert_eq!(choose_algorithm(&e4, 64, 1024), Algorithm::RecursiveDoubling);
+        let large_pick = choose_algorithm(&e4, 64, 256 << 20);
+        assert!(
+            matches!(large_pick, Algorithm::Ring | Algorithm::HalvingDoubling),
+            "{large_pick:?}"
         );
     }
 

@@ -116,26 +116,34 @@ impl SimCollectives {
         done
     }
 
-    /// Feed a fabric event; returns any rank completions it triggered.
-    pub fn on_event(&mut self, sim: &mut NetSim, ev: &SimEvent) -> Vec<Completion> {
-        let mut done = Vec::new();
+    /// Feed a fabric event, APPENDING any rank completions it triggered
+    /// to `done`. Takes a caller-owned buffer instead of returning a
+    /// fresh `Vec` because this runs once per delivered message — the
+    /// simulator event loop's L3 hot path (see the `Nic::order` min-heap
+    /// note in `fabric/sim.rs`); callers clear and reuse one scratch
+    /// buffer across the whole run.
+    pub fn on_event_into(
+        &mut self,
+        sim: &mut NetSim,
+        ev: &SimEvent,
+        done: &mut Vec<Completion>,
+    ) {
         if let SimEvent::MsgDelivered { msg, .. } = ev {
             let coll_id = msg.tag;
             let finished = {
                 let Some(op) = self.ops.get_mut(&coll_id) else {
-                    return done;
+                    return;
                 };
                 let dst = op.inv[&msg.dst];
                 let src = op.inv[&msg.src];
                 op.ranks[dst].arrivals.entry(src).or_default().push_back(());
-                Self::advance(op, sim, coll_id, dst, &mut done);
+                Self::advance(op, sim, coll_id, dst, done);
                 op.ranks.iter().all(|r| r.done_at.is_some())
             };
             if finished {
                 self.ops.remove(&coll_id);
             }
         }
-        done
     }
 
     /// Walk rank `r`'s program as far as possible.
@@ -196,7 +204,7 @@ pub fn time_collective(
     let mut completions = exec.post(sim, 1, programs, wire, priority);
     while exec.in_flight() > 0 {
         let ev = sim.next().expect("fabric drained with op in flight: deadlock");
-        completions.extend(exec.on_event(sim, &ev));
+        exec.on_event_into(sim, &ev, &mut completions);
     }
     completions.iter().map(|c| c.at).max().unwrap_or(0)
 }
@@ -320,6 +328,28 @@ mod tests {
     }
 
     #[test]
+    fn rail_striping_speeds_up_bandwidth_bound_ring_only() {
+        let p = 8;
+        let time_on = |topo: Topology, n: usize| {
+            time_collective(&mut NetSim::new(topo, p), allreduce_ring(p, n), WireDtype::F32, 1)
+        };
+        let base = Topology::eth_10g();
+        let e2 = base.clone().with_rails(2).unwrap();
+        // Bandwidth-bound (4 MiB per-step segments, 16 chunks): the
+        // second rail nearly halves the wall time.
+        let big = 8usize << 20; // elements
+        let t1 = time_on(base.clone(), big);
+        let t2 = time_on(e2.clone(), big);
+        assert!(
+            t1 as f64 / t2 as f64 >= 1.8,
+            "2-rail bandwidth-bound speedup: t1={t1} t2={t2}"
+        );
+        // Latency-bound (sub-chunk steps): byte-identical timing.
+        let small = 256usize;
+        assert_eq!(time_on(base, small), time_on(e2, small));
+    }
+
+    #[test]
     fn concurrent_ops_with_priorities_order_completions() {
         // Bulk op posted first at low priority; urgent posted right after.
         // Urgent must complete first on the shared wires.
@@ -331,7 +361,7 @@ mod tests {
         completions.extend(exec.post(&mut s, 20, allreduce_ring(p, 1024), WireDtype::F32, 0));
         while exec.in_flight() > 0 {
             let ev = s.next().unwrap();
-            completions.extend(exec.on_event(&mut s, &ev));
+            exec.on_event_into(&mut s, &ev, &mut completions);
         }
         let urgent_done = completions.iter().filter(|c| c.coll_id == 20).map(|c| c.at).max().unwrap();
         let bulk_done = completions.iter().filter(|c| c.coll_id == 10).map(|c| c.at).max().unwrap();

@@ -5,7 +5,7 @@
 //!
 //! ## Topology preset suffix grammar
 //!
-//! `--topo` resolves `<base>[-x<r>[r<k>]]` through
+//! `--topo` resolves `<base>[-x<r>[r<k>][e<l>]]` through
 //! [`Topology::by_name`]:
 //!
 //! * `<base>` — a flat preset: `eth10g`, `eth25g`, `omnipath100g`/`opa`;
@@ -15,10 +15,16 @@
 //! * `r<k>` — `k` nodes per rack behind an oversubscribed spine
 //!   (`eth10g-x8r16` = 8 ranks/node × 16 nodes/rack = rack tier of 128
 //!   ranks): in-rack hops keep the base NIC rate at half the latency,
-//!   cross-rack hops pay 4× less bandwidth and 2× latency.
+//!   cross-rack hops pay 4× less bandwidth and 2× latency;
+//! * `e<l>` — every node drives `l` independent NIC egress rails
+//!   (`eth10g-x8r16e2`; a flat multi-rail fabric is `eth10g-x1e4`):
+//!   bandwidth-bound transfers stripe whole chunks across the rails for
+//!   up to `l`× injection bandwidth, latency-bound messages ride one
+//!   rail and pay one overhead; `--rails l` is the flag equivalent and
+//!   overrides a preset's suffix.
 //!
-//! Malformed suffixes (`-x0`, `-x2r1`) are configuration errors, not
-//! panics.
+//! Malformed suffixes (`-x0`, `-x2r1`, `-x2e0`) are configuration
+//! errors, not panics.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -92,6 +98,13 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
         .parse()
         .context("--ranks-per-node")?;
     topo = topo.with_ranks_per_node(rpn).map_err(|e| anyhow!("--ranks-per-node: {e}"))?;
+    // Multi-rail override: `--rails l` (or an `e<l>` preset suffix) gives
+    // every node `l` independent NIC egress rails; chunk programs stripe
+    // bandwidth-bound transfers across them (see fabric::sim).
+    let rails: u32 = get("rails", &topo.rails.to_string()).parse().context("--rails")?;
+    if rails != topo.rails {
+        topo = topo.with_rails(rails).map_err(|e| anyhow!("--rails: {e}"))?;
+    }
     let node_name = get("node", "skylake");
     let node =
         NodeSpec::by_name(&node_name).ok_or_else(|| anyhow!("unknown node {node_name:?}"))?;
@@ -132,6 +145,18 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
             std::fs::read_to_string(path).with_context(|| format!("read tuning table {path}"))?;
         let table = crate::tuner::TuningTable::parse(&text)
             .map_err(|e| anyhow!("parse tuning table {path}: {e}"))?;
+        // Surface the fingerprint-mismatch fallback at install time (one
+        // place for every subcommand) instead of silently running
+        // analytic: a table probed on a different fabric — e.g.
+        // single-rail vs striped, where the v3 fingerprint differs —
+        // must be visibly rejected.
+        if !table.matches(&cfg.topo) {
+            eprintln!(
+                "warning: tuning table {path} fingerprint does not match {} — \
+                 analytic fallback",
+                cfg.topo.name
+            );
+        }
         cfg.selection = crate::tuner::SelectionPolicy::TunedWithFallback(table);
     }
     Ok(cfg)
@@ -234,6 +259,37 @@ mod tests {
         let cfg = engine_config(&args("")).unwrap();
         assert_eq!(cfg.topo.ranks_per_node(), 1);
         assert!(!cfg.topo.is_hierarchical());
+    }
+
+    #[test]
+    fn rail_flags_and_suffixes_thread_through() {
+        // Preset suffix form.
+        let cfg = engine_config(&args("--topo eth10g-x2e2")).unwrap();
+        assert_eq!(cfg.topo.name, "eth10g-x2e2");
+        assert_eq!(cfg.topo.rails, 2);
+        // Explicit flag form overrides the preset's rail count.
+        let cfg = engine_config(&args("--topo eth10g-x2e2 --rails 4")).unwrap();
+        assert_eq!(cfg.topo.name, "eth10g-x2e4");
+        assert_eq!(cfg.topo.rails, 4);
+        // Flag on a flat preset.
+        let cfg = engine_config(&args("--topo opa --rails 2")).unwrap();
+        assert_eq!(cfg.topo.name, "omnipath100g-x1e2");
+        assert_eq!(cfg.topo.rails, 2);
+        // Rails survive a ranks-per-node override (rescale preserves
+        // rail counts).
+        let cfg = engine_config(&args("--topo eth10g-x8r16e2 --ranks-per-node 2")).unwrap();
+        assert_eq!(cfg.topo.name, "eth10g-x2r16e2");
+        assert_eq!(cfg.topo.rails, 2);
+        // Default stays single-rail.
+        let cfg = engine_config(&args("")).unwrap();
+        assert_eq!(cfg.topo.rails, 1);
+        // Malformed values are clean config errors — including absurd
+        // rail counts (capped, so the sim never allocates for them).
+        assert!(engine_config(&args("--rails 0")).is_err());
+        assert!(engine_config(&args("--rails two")).is_err());
+        assert!(engine_config(&args("--rails 999999999")).is_err());
+        assert!(engine_config(&args("--topo eth10g-x2e0")).is_err());
+        assert!(engine_config(&args("--topo eth10g-x2e999999999")).is_err());
     }
 
     #[test]

@@ -242,7 +242,10 @@ impl Engine {
         for n in 0..p {
             self.try_advance(n);
         }
-        // Event loop.
+        // Event loop. One scratch completion buffer serves the whole
+        // run — on_event_into appends into it instead of allocating a
+        // fresh Vec per delivered message (this loop is the L3 hot path).
+        let mut completions: Vec<crate::collectives::simexec::Completion> = Vec::new();
         while self.nodes.iter().any(|n| n.phase != NodePhase::Done) {
             let Some(ev) = self.sim.next() else {
                 panic!(
@@ -255,8 +258,9 @@ impl Engine {
                     self.on_compute_done(node, tag, at, total_iters);
                 }
                 ev => {
-                    let completions = self.colls.on_event(&mut self.sim, &ev);
-                    for c in completions {
+                    completions.clear();
+                    self.colls.on_event_into(&mut self.sim, &ev, &mut completions);
+                    for c in completions.drain(..) {
                         self.on_comm_done(c.coll_id, c.rank);
                     }
                 }
@@ -266,8 +270,9 @@ impl Engine {
         // exchanges) so traffic accounting is policy-independent.
         while self.colls.in_flight() > 0 {
             let Some(ev) = self.sim.next() else { break };
-            let completions = self.colls.on_event(&mut self.sim, &ev);
-            for c in completions {
+            completions.clear();
+            self.colls.on_event_into(&mut self.sim, &ev, &mut completions);
+            for c in completions.drain(..) {
                 self.on_comm_done(c.coll_id, c.rank);
             }
         }

@@ -24,13 +24,16 @@
 //! **deepest common tier** — the innermost level whose contiguous group
 //! contains both endpoints; hops confined to a shared-memory tier ride a
 //! separate per-rank shm channel and never contend with NIC traffic. The
-//! `-x<r>[r<k>]` preset suffixes (`eth10g-x2`, `opa-x4`, `eth10g-x8r16`)
-//! select the paper's testbeds at r ranks/node and optionally k
-//! nodes/rack; an empty tier stack collapses to the old flat model,
-//! bit-for-bit. Hierarchical collectives
+//! `-x<r>[r<k>][e<l>]` preset suffixes (`eth10g-x2`, `opa-x4`,
+//! `eth10g-x8r16e2`) select the paper's testbeds at r ranks/node,
+//! optionally k nodes/rack and optionally l NIC egress rails per node;
+//! an empty tier stack collapses to the old flat model, bit-for-bit.
+//! Hierarchical collectives
 //! ([`crate::collectives::Algorithm::Hierarchical`]) exploit the fast
 //! tiers by reducing onto one leader per group at every level before
-//! touching the slowest wire.
+//! touching the slowest wire; multi-rail nodes additionally stripe each
+//! bandwidth-bound transfer's chunks across their rails ([`sim`]),
+//! multiplying injection bandwidth without discounting latency.
 
 pub mod event;
 pub mod shm;

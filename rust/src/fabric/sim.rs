@@ -27,6 +27,17 @@
 //!   nor be delayed by NIC traffic: shared-memory copies never cross the
 //!   NIC. In-rack and cross-rack hops both ride the NIC (priced at their
 //!   own tier's rate/latency) and contend under strict priority there.
+//! * **Multi-rail NICs**: each node owns [`Topology::max_rails`]
+//!   independent egress rails, each serializing at the per-rail line
+//!   rate with its own strict-priority queue, generation counter and
+//!   busy accounting. A transfer is striped into
+//!   [`Topology::stripe_count`] chunk pieces, piece `i` riding rail
+//!   `(i + src) % rails` — a pure assignment, so resume/replay stays
+//!   byte-identical. Bandwidth-bound transfers occupy every rail
+//!   (aggregate injection bandwidth scales with the rail count);
+//!   latency-bound sub-chunk messages ride one rail and pay one
+//!   overhead. Delivery fires `latency` after the LAST piece leaves the
+//!   wire.
 //!
 //! The simulator is deterministic: equal-time events fire in issue order.
 
@@ -50,8 +61,8 @@ pub enum SimEvent {
 /// Which egress channel of a node a transfer serializes on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Chan {
-    /// The NIC: strict-priority, preemptive — the contended tier.
-    Inter,
+    /// One NIC rail: strict-priority, preemptive — the contended tier.
+    Inter { rail: u32 },
     /// The intra-node shared-memory channel: priority-free FIFO.
     Shm,
 }
@@ -105,12 +116,21 @@ impl Nic {
 }
 
 /// Aggregate traffic statistics, per priority class.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct SimStats {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
-    pub bytes_by_priority: HashMap<Priority, u64>,
+    /// Bytes per priority class, indexed directly by the `u8` class —
+    /// a fixed-size array instead of a `HashMap` keeps the per-send
+    /// accounting branch- and alloc-free on the event-loop hot path.
+    pub bytes_by_priority: [u64; 256],
     pub preemptions: u64,
+}
+
+impl Default for SimStats {
+    fn default() -> Self {
+        Self { msgs_sent: 0, bytes_sent: 0, bytes_by_priority: [0; 256], preemptions: 0 }
+    }
 }
 
 /// The simulator. Drive it by posting sends/computes, then repeatedly
@@ -119,20 +139,27 @@ pub struct NetSim {
     topo: Topology,
     p: usize,
     queue: EventQueue<Internal>,
-    nics: Vec<Nic>,
+    /// Per-rank NIC egress RAILS: `nics[rank][rail]`, each an
+    /// independent strict-priority server at the per-rail line rate.
+    /// Single-rail topologies degenerate to the classic one-NIC model.
+    nics: Vec<Vec<Nic>>,
     /// Per-RANK shared-memory egress channels (intra-node hops only):
     /// same serialization model as the per-rank NIC but a single free
     /// class — FIFO, no urgency, no preemption. Co-located ranks copy
     /// concurrently (each models its own copy engine / memory port).
     shms: Vec<Nic>,
     msgs: Vec<MsgDesc>,
+    /// Per logical message: egress pieces still on the wires. Delivery
+    /// is scheduled when the count hits zero (the last rail finishes).
+    egress_left: Vec<u32>,
     next_xfer_id: u64,
     pub stats: SimStats,
 }
 
 impl NetSim {
     pub fn new(topo: Topology, p: usize) -> Self {
-        let nics = (0..p).map(|_| Nic::default()).collect();
+        let rails = topo.max_rails().max(1) as usize;
+        let nics = (0..p).map(|_| (0..rails).map(|_| Nic::default()).collect()).collect();
         let shms = (0..p).map(|_| Nic::default()).collect();
         Self {
             topo,
@@ -141,23 +168,15 @@ impl NetSim {
             nics,
             shms,
             msgs: Vec::new(),
+            egress_left: Vec::new(),
             next_xfer_id: 0,
             stats: SimStats::default(),
         }
     }
 
-    /// The channel a message serializes on, per the topology's tiers.
-    fn chan_of(&self, msg: &MsgDesc) -> Chan {
-        if self.topo.same_node(msg.src, msg.dst) {
-            Chan::Shm
-        } else {
-            Chan::Inter
-        }
-    }
-
     fn chan_mut(&mut self, node: Rank, chan: Chan) -> &mut Nic {
         match chan {
-            Chan::Inter => &mut self.nics[node],
+            Chan::Inter { rail } => &mut self.nics[node][rail as usize],
             Chan::Shm => &mut self.shms[node],
         }
     }
@@ -175,7 +194,10 @@ impl NetSim {
     }
 
     /// Post a point-to-point message. It contends for `msg.src`'s egress
-    /// wire under strict priority.
+    /// wires under strict priority; NIC-tier transfers are striped into
+    /// [`Topology::stripe_count`] chunk pieces across the rails (pure
+    /// per-chunk rail assignment `(i + src) % rails`), shared-memory
+    /// copies ride the rank's single shm channel.
     pub fn send(&mut self, msg: MsgDesc) {
         assert!(msg.src < self.p && msg.dst < self.p, "rank out of range");
         assert_ne!(msg.src, msg.dst, "self-send");
@@ -184,36 +206,58 @@ impl NetSim {
         // Tier pricing: every hop costs its deepest-common-tier rate.
         // Hops confined to a shared-memory tier serialize on their own
         // channel, bypassing the NIC priority queue.
-        let chan = self.chan_of(&msg);
-        let cost = self.topo.overhead_between(msg.src, msg.dst)
-            + self.topo.wire_ns_between(msg.src, msg.dst, msg.bytes);
+        let level = self.topo.level_of(msg.src, msg.dst);
+        let shm = self.topo.same_node(msg.src, msg.dst);
+        let overhead = self.topo.overhead_at(level);
+        let gbps = self.topo.gbps_at(level);
         // Urgency classes apply only on the contended inter tier; the shm
         // channel is one free class (FIFO by transfer id).
-        let class = match chan {
-            Chan::Inter => msg.priority,
-            Chan::Shm => 0,
+        let (pieces, class, rails) = if shm {
+            (1u32, 0, 1usize)
+        } else {
+            (
+                self.topo.stripe_count(level, msg.bytes),
+                msg.priority,
+                self.topo.rails_at(level).max(1) as usize,
+            )
         };
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
-        *self.stats.bytes_by_priority.entry(msg.priority).or_insert(0) += msg.bytes;
+        self.stats.bytes_by_priority[msg.priority as usize] += msg.bytes;
         self.msgs.push(msg.clone());
-        let id = self.next_xfer_id;
-        self.next_xfer_id += 1;
+        self.egress_left.push(pieces);
         let now = self.queue.now();
-        let nic = self.chan_mut(node, chan);
-        nic.slab.insert(
-            id,
-            Transfer { msg_idx, remaining_ns: cost.max(1), checkpoint: now, running: false },
-        );
-        nic.order.push(Reverse((class, id)));
-        // Fast path: the channel is already busy with an equal-or-higher
-        // priority transfer — no preemption, nothing to reschedule.
-        if let Some(run) = nic.running {
-            if nic.head() == Some(run) {
-                return;
+        for i in 0..pieces as u64 {
+            // Balanced split (same arithmetic as program::segments): the
+            // pieces partition msg.bytes exactly.
+            let piece = msg.bytes * (i + 1) / pieces as u64 - msg.bytes * i / pieces as u64;
+            // Every piece pays its rail's injection overhead; pieces move
+            // concurrently, so the overhead is not multiplied in wall
+            // time — only in per-rail busy accounting.
+            let cost = overhead + super::wire_ns(piece, gbps);
+            let chan = if shm {
+                Chan::Shm
+            } else {
+                Chan::Inter { rail: ((i as usize + msg.src) % rails) as u32 }
+            };
+            let id = self.next_xfer_id;
+            self.next_xfer_id += 1;
+            let nic = self.chan_mut(node, chan);
+            nic.slab.insert(
+                id,
+                Transfer { msg_idx, remaining_ns: cost.max(1), checkpoint: now, running: false },
+            );
+            nic.order.push(Reverse((class, id)));
+            // Fast path: the channel is already busy with an equal-or-
+            // higher priority transfer — no preemption, nothing to
+            // reschedule.
+            if let Some(run) = nic.running {
+                if nic.head() == Some(run) {
+                    continue;
+                }
             }
+            self.reschedule(node, chan);
         }
-        self.reschedule(node, chan);
     }
 
     /// Post a compute timer on `node` for `dur_ns`; fires `ComputeDone{tag}`.
@@ -229,11 +273,15 @@ impl NetSim {
 
     /// Gate/ungate a node's egress (models absence of async progress:
     /// transfers only advance while the host is inside the library).
-    /// Applies to BOTH channels — shared-memory copies also need host
-    /// cycles, which a library without a progress thread only spends
-    /// inside blocking calls.
+    /// Applies to EVERY channel — all NIC rails plus the shm channel;
+    /// shared-memory copies also need host cycles, which a library
+    /// without a progress thread only spends inside blocking calls.
     pub fn set_comm_gated(&mut self, node: Rank, gated: bool) {
-        for chan in [Chan::Inter, Chan::Shm] {
+        let rails = self.nics[node].len();
+        let chans = (0..rails)
+            .map(|rail| Chan::Inter { rail: rail as u32 })
+            .chain(std::iter::once(Chan::Shm));
+        for chan in chans {
             if self.chan_mut(node, chan).gated != gated {
                 self.chan_mut(node, chan).gated = gated;
                 self.reschedule(node, chan);
@@ -246,13 +294,31 @@ impl NetSim {
         self.queue.is_empty()
     }
 
-    /// NIC busy fraction so far for `node` (inter-tier wire utilization;
-    /// the shm channel is tracked separately by [`Self::shm_utilization`]).
+    /// Egress rails each node drives (1 on single-rail topologies).
+    pub fn num_rails(&self) -> usize {
+        self.nics.first().map_or(1, |rails| rails.len())
+    }
+
+    /// Total ns `node`'s NIC wires were busy, summed over all rails.
+    pub fn nic_busy_ns(&self, node: Rank) -> Ns {
+        self.nics[node].iter().map(|n| n.busy_ns).sum()
+    }
+
+    /// Busy ns of one specific rail of `node`.
+    pub fn rail_busy_ns(&self, node: Rank, rail: usize) -> Ns {
+        self.nics[node][rail].busy_ns
+    }
+
+    /// NIC busy fraction so far for `node`: aggregate rail busy time over
+    /// aggregate rail capacity (inter-tier wire utilization; the shm
+    /// channel is tracked separately by [`Self::shm_utilization`]).
+    /// Identical to the classic single-NIC fraction on 1-rail fabrics.
     pub fn nic_utilization(&self, node: Rank) -> f64 {
         if self.now() == 0 {
             return 0.0;
         }
-        self.nics[node].busy_ns as f64 / self.now() as f64
+        let rails = self.nics[node].len().max(1) as f64;
+        self.nic_busy_ns(node) as f64 / (self.now() as f64 * rails)
     }
 
     /// Shared-memory channel busy fraction so far for `node`.
@@ -268,7 +334,7 @@ impl NetSim {
     fn reschedule(&mut self, node: Rank, chan: Chan) {
         let now = self.queue.now();
         let nic = match chan {
-            Chan::Inter => &mut self.nics[node],
+            Chan::Inter { rail } => &mut self.nics[node][rail as usize],
             Chan::Shm => &mut self.shms[node],
         };
 
@@ -295,7 +361,8 @@ impl NetSim {
         // is a NIC-only phenomenon (and only the NIC counts them).
         let Some(id) = nic.head() else { return };
         if let Some(prev) = was_running {
-            if chan == Chan::Inter && prev != id && nic.slab.contains_key(&prev) {
+            if matches!(chan, Chan::Inter { .. }) && prev != id && nic.slab.contains_key(&prev)
+            {
                 self.stats.preemptions += 1;
             }
         }
@@ -333,12 +400,18 @@ impl NetSim {
                     if let Some(since) = nic.busy_since.take() {
                         nic.busy_ns += at - since;
                     }
-                    // In-flight latency (tier-priced), then delivery.
-                    let lat = {
-                        let m = &self.msgs[t.msg_idx];
-                        self.topo.latency_between(m.src, m.dst)
-                    };
-                    self.queue.push_in(lat, Internal::Deliver { msg_idx: t.msg_idx });
+                    let msg_idx = t.msg_idx;
+                    // A striped transfer leaves the wire when its LAST
+                    // rail piece does; then in-flight latency
+                    // (tier-priced, paid once), then delivery.
+                    self.egress_left[msg_idx] -= 1;
+                    if self.egress_left[msg_idx] == 0 {
+                        let lat = {
+                            let m = &self.msgs[msg_idx];
+                            self.topo.latency_between(m.src, m.dst)
+                        };
+                        self.queue.push_in(lat, Internal::Deliver { msg_idx });
+                    }
                     self.reschedule(node, chan);
                 }
             }
@@ -507,6 +580,7 @@ mod tests {
             latency_ns: 200,
             per_msg_overhead_ns: 10,
             shm: true,
+            rails: 1,
         }];
         topo.validate().unwrap();
         NetSim::new(topo, 4)
@@ -628,6 +702,7 @@ mod tests {
                 latency_ns: 200,
                 per_msg_overhead_ns: 10,
                 shm: true,
+                rails: 1,
             },
             crate::fabric::topology::TierSpec {
                 ranks: 4,
@@ -635,6 +710,7 @@ mod tests {
                 latency_ns: 500,
                 per_msg_overhead_ns: 50,
                 shm: false,
+                rails: 1,
             },
         ];
         topo.validate().unwrap();
@@ -701,5 +777,127 @@ mod tests {
         s.drain();
         // Wire busy 10_100 of the 11_100 total (delivery at 11_100).
         assert!((s.nic_utilization(0) - 10_100.0 / 11_100.0).abs() < 1e-9);
+    }
+
+    /// Flat 2-rail fabric: 8 Gbps/rail = 1 B/ns, alpha 1000, gamma 100,
+    /// chunk 1000 bytes.
+    fn railed(rails: u32) -> NetSim {
+        let topo = Topology::flat("test", 8.0, 1_000, 100, 1_000)
+            .with_rails(rails)
+            .unwrap();
+        NetSim::new(topo, 4)
+    }
+
+    #[test]
+    fn chunked_transfer_stripes_across_rails() {
+        let mut s = railed(2);
+        assert_eq!(s.num_rails(), 2);
+        // 2000 bytes = 2 chunks: pieces of 1000 on rails 0 and 1, each
+        // 100 + 1000 egress in parallel, delivery 1000 later.
+        s.send(msg(0, 1, 2_000, 1, 7));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 7);
+                assert_eq!(at, 2_100, "striped: wire halves, alpha+gamma do not");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Each rail was busy gamma + its piece's wire time.
+        assert_eq!(s.rail_busy_ns(0, 0), 1_100);
+        assert_eq!(s.rail_busy_ns(0, 1), 1_100);
+        assert_eq!(s.nic_busy_ns(0), 2_200);
+        // Single message, single logical delivery, single stats entry.
+        assert_eq!(s.stats.msgs_sent, 1);
+        assert_eq!(s.stats.bytes_sent, 2_000);
+        assert_eq!(s.stats.bytes_by_priority[1], 2_000);
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn sub_chunk_messages_ride_one_rail() {
+        // A latency-bound message (under one chunk) must behave exactly
+        // as on the single-rail fabric: one rail, one overhead.
+        let mut s1 = railed(1);
+        let mut s2 = railed(2);
+        for s in [&mut s1, &mut s2] {
+            s.send(msg(0, 1, 999, 1, 1));
+        }
+        let at1 = match s1.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => at,
+            other => panic!("{other:?}"),
+        };
+        let at2 = match s2.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => at,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(at1, at2, "zero regression for latency-bound sizes");
+        assert_eq!(at1, 100 + 999 + 1_000);
+        // Exactly one rail accrued busy time.
+        let busy: Vec<Ns> = (0..2).map(|r| s2.rail_busy_ns(0, r)).collect();
+        assert_eq!(busy.iter().filter(|&&b| b > 0).count(), 1);
+    }
+
+    #[test]
+    fn rails_preserve_priority_preemption() {
+        let mut s = railed(2);
+        // Bulk 20_000 bytes: 10_000-byte pieces on rails 0 and 1.
+        s.send(msg(0, 1, 20_000, 9, 1));
+        // Urgent sub-chunk message rides rail (0 + 0) % 2 = 0 and must
+        // preempt ONLY that rail's piece.
+        s.send(msg(0, 2, 500, 0, 2));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 2, "urgent first");
+                assert_eq!(at, 100 + 500 + 1_000);
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 1);
+                // Rail 1's piece egresses undisturbed at 10_100; rail 0's
+                // is pushed back by the urgent 600 to 10_700 — delivery
+                // gates on the last piece.
+                assert_eq!(at, 10_700 + 1_000);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(s.stats.preemptions >= 1);
+    }
+
+    #[test]
+    fn striping_is_work_conserving_modulo_per_rail_overhead() {
+        // Same transfer on 1 vs 4 rails: summed busy time differs only by
+        // the extra per-piece injection overheads (and ceil rounding).
+        let bytes = 40_000u64;
+        let mut s1 = railed(1);
+        let mut s4 = railed(4);
+        s1.send(msg(0, 1, bytes, 1, 1));
+        s4.send(msg(0, 1, bytes, 1, 1));
+        s1.drain();
+        s4.drain();
+        let wire1 = s1.nic_busy_ns(0) - 100; // one overhead
+        let wire4 = s4.nic_busy_ns(0) - 4 * 100; // one per rail piece
+        assert!(
+            wire1.abs_diff(wire4) <= 4,
+            "wire work must be conserved: {wire1} vs {wire4}"
+        );
+    }
+
+    #[test]
+    fn gating_freezes_every_rail() {
+        let mut s = railed(2);
+        s.set_comm_gated(0, true);
+        s.send(msg(0, 1, 2_000, 1, 1)); // striped across both rails
+        s.compute(0, 5_000, 9);
+        assert_eq!(
+            s.next().unwrap(),
+            SimEvent::ComputeDone { node: 0, tag: 9, at: 5_000 }
+        );
+        s.set_comm_gated(0, false);
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 5_000 + 2_100),
+            other => panic!("{other:?}"),
+        }
     }
 }

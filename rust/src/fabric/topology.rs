@@ -15,13 +15,19 @@
 //! collapses to the old flat single-tier model and every legacy helper
 //! (`wire_ns`, `msg_ns`) keeps pricing the top tier.
 //!
-//! Preset names follow the suffix grammar `<base>[-x<r>[r<k>]]`:
+//! Preset names follow the suffix grammar `<base>[-x<r>[r<k>][e<l>]]`:
 //! `-x<r>` puts `r` ranks on each shared-memory node (`eth10g-x2`,
-//! `opa-x4`), and the optional `r<k>` groups `k` nodes per rack behind an
+//! `opa-x4`), the optional `r<k>` groups `k` nodes per rack behind an
 //! oversubscribed spine (`eth10g-x8r16` = 8 ranks/node × 16 nodes/rack;
 //! in-rack hops keep the NIC line rate while cross-rack hops pay
-//! [`RACK_OVERSUBSCRIPTION`]× less bandwidth and 2× latency). Suffixes
-//! round-trip through [`Topology::by_name`].
+//! [`RACK_OVERSUBSCRIPTION`]× less bandwidth and 2× latency), and the
+//! optional `e<l>` gives every node `l` independent NIC egress **rails**
+//! (`eth10g-x8r16e2` = 2 rails/node; `eth10g-x1e4` = a flat fabric whose
+//! nodes drive 4 rails). Each rail serializes at the per-rail line rate
+//! with its own priority queue in [`crate::fabric::sim`]; chunk programs
+//! stripe bandwidth-bound transfers across rails ([`Topology::stripe_count`])
+//! while latency-bound small messages ride one rail and pay one overhead.
+//! Suffixes round-trip through [`Topology::by_name`].
 //!
 //! Numbers are public-spec-derived, not measured on the authors' clusters;
 //! EXPERIMENTS.md compares *shapes* (who wins, by what factor), which these
@@ -51,6 +57,12 @@ pub const RACK_OVERSUBSCRIPTION: f64 = 4.0;
 /// `Copy`-able with a fixed-size backing array.
 pub const MAX_TIERS: usize = 4;
 
+/// Most NIC egress rails a node may drive. Real nodes aggregate 2–8;
+/// the cap keeps an absurd `e<l>` suffix (or `--rails`) a clean
+/// configuration error instead of letting [`crate::fabric::sim`]
+/// allocate one egress server per claimed rail.
+pub const MAX_RAILS: u32 = 64;
+
 /// One level of the fabric hierarchy: `ranks` contiguous ranks form a
 /// group wired with these link parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,6 +83,12 @@ pub struct TierSpec {
     /// form a prefix of the stack: nothing outside a NIC-crossing tier
     /// can be shared memory again.
     pub shm: bool,
+    /// Independent egress rails a node drives for hops confined to this
+    /// tier: each rail serializes at `gbps` with its own priority queue,
+    /// so a transfer striped across `rails` chunks sees up to `rails`×
+    /// the injection bandwidth. Must be >= 1; shm tiers have exactly 1
+    /// (the per-rank copy channel is not a NIC endpoint).
+    pub rails: u32,
 }
 
 impl TierSpec {
@@ -83,6 +101,7 @@ impl TierSpec {
             latency_ns: INTRA_LATENCY_NS,
             per_msg_overhead_ns: INTRA_OVERHEAD_NS,
             shm: true,
+            rails: 1,
         }
     }
 }
@@ -103,8 +122,16 @@ pub struct Topology {
     /// makes small messages latency-bound and motivates prioritization.
     pub per_msg_overhead_ns: Ns,
     /// Chunk size collectives use on this fabric, bytes. Preemption is
-    /// chunk-granular, so this is also the preemption latency knob.
+    /// chunk-granular, so this is also the preemption latency knob — and
+    /// the rail-striping granularity: a transfer only occupies as many
+    /// rails as it has whole chunks ([`Topology::stripe_count`]).
     pub chunk_bytes: u64,
+    /// Independent NIC egress rails per node on the TOP tier (>= 1).
+    /// Real Cloud/HPC nodes aggregate 2–4 NIC rails; driving them
+    /// concurrently multiplies the injection bandwidth of
+    /// bandwidth-bound collectives ([`crate::fabric::sim`] models one
+    /// egress server per rail). The `e<l>` preset suffix sets this.
+    pub rails: u32,
     /// Nested inner tiers, innermost first (empty = flat single-tier
     /// fabric). Invariants (see [`Topology::validate`]): at most
     /// [`MAX_TIERS`] entries; sizes >= 2, strictly increasing, each
@@ -121,6 +148,7 @@ impl Topology {
             latency_ns,
             per_msg_overhead_ns,
             chunk_bytes,
+            rails: 1,
             tiers: Vec::new(),
         }
     }
@@ -152,11 +180,23 @@ impl Topology {
                 self.tiers.len()
             ));
         }
+        if self.rails == 0 || self.rails > MAX_RAILS {
+            return Err(format!("top tier rails must be in 1..={MAX_RAILS}"));
+        }
         let mut prev_ranks = 1usize;
         let mut seen_nic = false;
         for (i, t) in self.tiers.iter().enumerate() {
             if t.ranks < 2 {
                 return Err(format!("tier {i}: group size must be >= 2, got {}", t.ranks));
+            }
+            if t.rails == 0 || t.rails > MAX_RAILS {
+                return Err(format!("tier {i}: rails must be in 1..={MAX_RAILS}"));
+            }
+            if t.shm && t.rails != 1 {
+                return Err(format!(
+                    "tier {i}: shared-memory tiers have a single copy channel per \
+                     rank, not NIC rails"
+                ));
             }
             if t.ranks <= prev_ranks || t.ranks % prev_ranks != 0 {
                 return Err(format!(
@@ -176,15 +216,20 @@ impl Topology {
         Ok(())
     }
 
-    /// Parse an smp/rack preset suffix body (the part after `-x`):
-    /// `<r>` or `<r>r<k>`. Returns (ranks_per_node, nodes_per_rack).
-    fn parse_suffix(suffix: &str) -> Option<(usize, Option<usize>)> {
-        match suffix.split_once('r') {
+    /// Parse an smp/rack/rail preset suffix body (the part after `-x`):
+    /// `<r>[r<k>][e<l>]`. Returns (ranks_per_node, nodes_per_rack,
+    /// rails).
+    fn parse_suffix(suffix: &str) -> Option<(usize, Option<usize>, Option<u32>)> {
+        let (head, rails) = match suffix.split_once('e') {
+            Some((h, e)) => (h, Some(e.parse().ok()?)),
+            None => (suffix, None),
+        };
+        match head.split_once('r') {
             Some((r, k)) => {
                 let (r, k) = (r.parse().ok()?, k.parse().ok()?);
-                Some((r, Some(k)))
+                Some((r, Some(k), rails))
             }
-            None => Some((suffix.parse().ok()?, None)),
+            None => Some((head.parse().ok()?, None, rails)),
         }
     }
 
@@ -206,17 +251,39 @@ impl Topology {
             .map(|rack| rack.ranks / rpn.max(1))
     }
 
+    /// Canonical preset name for the current tier stack:
+    /// `<base>[-x<r>[r<k>][e<l>]]`, omitting the whole suffix when the
+    /// topology is flat and single-rail. All suffix-applying builders
+    /// regenerate the name through here so presets round-trip through
+    /// [`Topology::by_name`] regardless of application order.
+    fn suffixed_name(&self) -> String {
+        let base = self.base_name();
+        let r = self.ranks_per_node();
+        let rack = self.nodes_per_rack().filter(|&k| k >= 2);
+        let mut suffix = String::new();
+        if r > 1 || rack.is_some() || self.rails > 1 {
+            suffix = format!("-x{r}");
+            if let Some(k) = rack {
+                suffix.push_str(&format!("r{k}"));
+            }
+            if self.rails > 1 {
+                suffix.push_str(&format!("e{}", self.rails));
+            }
+        }
+        format!("{base}{suffix}")
+    }
+
     /// Multi-rank-per-node variant of any preset: `r` ranks share each
     /// node's NIC-facing tiers and talk shared-memory within the node.
     /// An existing rack tier is preserved (its absolute size rescales to
-    /// keep the same nodes-per-rack count). The name gains an `-x<r>`
-    /// suffix so presets resolve round-trip through [`Topology::by_name`].
-    /// `r == 0` is a configuration error (not a panic).
+    /// keep the same nodes-per-rack count), and so are its (and the top
+    /// tier's) rail counts. The name gains an `-x<r>` suffix so presets
+    /// resolve round-trip through [`Topology::by_name`]. `r == 0` is a
+    /// configuration error (not a panic).
     pub fn with_ranks_per_node(mut self, r: usize) -> Result<Self, String> {
         if r == 0 {
             return Err("ranks_per_node must be >= 1".into());
         }
-        let base = self.base_name();
         let rack = self.nodes_per_rack();
         // Rebuild the node tier, preserving any custom node physics (the
         // outermost shm tier IS the node — matching `ranks_per_node`).
@@ -227,22 +294,19 @@ impl Topology {
             .find(|t| t.shm)
             .cloned()
             .unwrap_or_else(|| TierSpec::shm_node(r));
+        // Rack params carry their rail count through the rescale, exactly
+        // like their physics (gbps/latency/overhead).
         let rack_params = self.tiers.iter().find(|t| !t.shm).cloned();
         self.tiers.clear();
         if r > 1 {
             self.tiers.push(TierSpec { ranks: r, ..node_params });
         }
-        let mut suffix = if r == 1 { String::new() } else { format!("-x{r}") };
         if let (Some(k), Some(params)) = (rack, rack_params) {
             if k >= 2 {
                 self.tiers.push(TierSpec { ranks: r * k, ..params });
-                if suffix.is_empty() {
-                    suffix = format!("-x{r}");
-                }
-                suffix.push_str(&format!("r{k}"));
             }
         }
-        self.name = format!("{base}{suffix}");
+        self.name = self.suffixed_name();
         self.validate()?;
         Ok(self)
     }
@@ -267,11 +331,35 @@ impl Topology {
             latency_ns: self.latency_ns / 2,
             per_msg_overhead_ns: self.per_msg_overhead_ns,
             shm: false,
+            // The rack tier rides the same physical NIC endpoints as the
+            // spine: it inherits the node's rail count.
+            rails: self.rails,
         });
         self.link_gbps /= RACK_OVERSUBSCRIPTION;
         self.latency_ns *= 2;
-        let base = self.base_name();
-        self.name = format!("{base}-x{rpn}r{nodes_per_rack}");
+        self.name = self.suffixed_name();
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Multi-rail variant of any preset: every node drives `l`
+    /// independent NIC egress rails on ALL NIC-crossing tiers (the rails
+    /// are physical node endpoints shared by the in-rack and cross-rack
+    /// paths; shared-memory tiers are untouched). The name gains an
+    /// `e<l>` suffix (`eth10g-x2e2`; a flat preset becomes
+    /// `eth10g-x1e4`) so presets round-trip through
+    /// [`Topology::by_name`]. `l == 0` is a configuration error.
+    pub fn with_rails(mut self, l: u32) -> Result<Self, String> {
+        if l == 0 {
+            return Err("rails must be >= 1".into());
+        }
+        self.rails = l;
+        for t in &mut self.tiers {
+            if !t.shm {
+                t.rails = l;
+            }
+        }
+        self.name = self.suffixed_name();
         self.validate()?;
         Ok(self)
     }
@@ -295,15 +383,20 @@ impl Topology {
     }
 
     /// Resolve a preset name; `-x<r>` suffixes select the smp variant
-    /// (e.g. `eth10g-x2`, `opa-x4`) and `-x<r>r<k>` adds a rack tier of
-    /// `k` nodes (e.g. `eth10g-x8r16`). Malformed suffixes (e.g. `-x0`)
-    /// resolve to `None`, which the CLI reports as a configuration error.
+    /// (e.g. `eth10g-x2`, `opa-x4`), `r<k>` adds a rack tier of `k`
+    /// nodes (e.g. `eth10g-x8r16`) and `e<l>` gives every node `l` NIC
+    /// rails (e.g. `eth10g-x8r16e2`, `opa-x1e4`). Malformed suffixes
+    /// (e.g. `-x0`, `e0`) resolve to `None`, which the CLI reports as a
+    /// configuration error.
     pub fn by_name(name: &str) -> Option<Self> {
         if let Some((base, suffix)) = name.rsplit_once("-x") {
-            if let Some((r, rack)) = Self::parse_suffix(suffix) {
+            if let Some((r, rack, rails)) = Self::parse_suffix(suffix) {
                 let mut topo = Self::by_name(base)?.with_ranks_per_node(r).ok()?;
                 if let Some(k) = rack {
                     topo = topo.with_rack(k).ok()?;
+                }
+                if let Some(l) = rails {
+                    topo = topo.with_rails(l).ok()?;
                 }
                 return Some(topo);
             }
@@ -469,6 +562,34 @@ impl Topology {
         self.tiers.get(level).map_or(self.per_msg_overhead_ns, |t| t.per_msg_overhead_ns)
     }
 
+    /// Egress rails available to a hop confined to `level`.
+    pub fn rails_at(&self, level: usize) -> u32 {
+        self.tiers.get(level).map_or(self.rails, |t| t.rails)
+    }
+
+    /// Most rails any level drives — the number of egress servers each
+    /// node owns in [`crate::fabric::sim`] (rails are physical node
+    /// endpoints; per-hop striping is capped by [`Topology::rails_at`]).
+    pub fn max_rails(&self) -> u32 {
+        self.tiers.iter().map(|t| t.rails).fold(self.rails, u32::max)
+    }
+
+    /// Rails a `bytes`-sized transfer at `level` actually occupies: the
+    /// level's rail count, capped by the number of whole
+    /// [`Topology::chunk_bytes`] chunks in flight. Latency-bound small
+    /// messages (under one chunk) ride ONE rail and pay one overhead —
+    /// striping discounts only the bandwidth term, never alpha. Pure
+    /// (deterministic in its arguments), so simulator replay and the
+    /// analytic model agree exactly.
+    pub fn stripe_count(&self, level: usize, bytes: u64) -> u32 {
+        let rails = self.rails_at(level) as u64;
+        if rails <= 1 {
+            return 1;
+        }
+        let chunks = (bytes / self.chunk_bytes.max(1)).max(1);
+        rails.min(chunks) as u32
+    }
+
     // -- hop costs ------------------------------------------------------------
 
     /// Pure wire time for `bytes` on the TOP tier (no latency/overhead).
@@ -514,6 +635,20 @@ impl Topology {
     /// Full cost of a message between two concrete ranks.
     pub fn msg_ns_between(&self, src: Rank, dst: Rank, bytes: u64) -> Ns {
         self.msg_ns_at(self.level_of(src, dst), bytes)
+    }
+
+    /// Wall time of a single point-to-point message at `level` when its
+    /// chunks stripe across the level's rails: the largest piece gates
+    /// delivery, the pieces move concurrently, and the per-message
+    /// overhead and latency are paid once (not divided — rails never
+    /// discount alpha). Identical to [`Topology::msg_ns_at`] on
+    /// single-rail fabrics and for sub-chunk messages.
+    pub fn striped_msg_ns_at(&self, level: usize, bytes: u64) -> Ns {
+        let k = self.stripe_count(level, bytes) as u64;
+        let piece = bytes.div_ceil(k.max(1));
+        self.overhead_at(level)
+            + super::wire_ns(piece, self.gbps_at(level))
+            + self.latency_at(level)
     }
 }
 
@@ -667,6 +802,121 @@ mod tests {
     }
 
     #[test]
+    fn rail_presets_resolve_and_roundtrip() {
+        let t = Topology::by_name("eth10g-x8r16e2").unwrap();
+        assert_eq!(t.name, "eth10g-x8r16e2");
+        assert_eq!(t.rails, 2);
+        assert_eq!(t.level_sizes(), vec![8, 128]);
+        // Rails live on every NIC tier; the shm tier keeps its single
+        // copy channel.
+        assert_eq!(t.tiers[0].rails, 1);
+        assert_eq!(t.tiers[1].rails, 2);
+        assert_eq!(t.rails_at(0), 1);
+        assert_eq!(t.rails_at(1), 2);
+        assert_eq!(t.rails_at(t.top_level()), 2);
+        assert_eq!(t.max_rails(), 2);
+        assert_eq!(Topology::by_name(&t.name).unwrap(), t);
+        // Flat multi-rail: `-x1e4`.
+        let flat = Topology::by_name("eth10g-x1e4").unwrap();
+        assert_eq!(flat.name, "eth10g-x1e4");
+        assert_eq!(flat.rails, 4);
+        assert!(flat.tiers.is_empty());
+        assert_eq!(Topology::by_name(&flat.name).unwrap(), flat);
+        assert_eq!(
+            Topology::eth_10g().with_rails(4).unwrap().name,
+            "eth10g-x1e4"
+        );
+        // e1 normalizes away (re-suffixing replaces, never stacks).
+        assert_eq!(flat.with_rails(1).unwrap().name, "eth10g");
+        // Builder order does not matter: rails-then-rack == rack-then-rails.
+        let a = Topology::eth_10g()
+            .with_ranks_per_node(2)
+            .unwrap()
+            .with_rails(2)
+            .unwrap()
+            .with_rack(4)
+            .unwrap();
+        let b = Topology::by_name("eth10g-x2r4e2").unwrap();
+        assert_eq!(a, b);
+        // Malformed rail suffixes are config errors, not panics — and
+        // absurd rail counts are capped (the sim allocates one egress
+        // server per rail; `e999999999` must not OOM).
+        assert!(Topology::by_name("eth10g-x2e0").is_none());
+        assert!(Topology::by_name("eth10g-x2e").is_none());
+        assert!(Topology::by_name("eth10g-x2r4e0").is_none());
+        assert!(Topology::by_name("eth10g-x2e999999999").is_none());
+        assert!(Topology::eth_10g().with_rails(0).is_err());
+        assert!(Topology::eth_10g().with_rails(MAX_RAILS + 1).is_err());
+        assert!(Topology::eth_10g().with_rails(MAX_RAILS).is_ok());
+    }
+
+    /// Regression (preemptive bugfix): rescaling ranks-per-node must
+    /// preserve rail counts the same way it preserves the rack tier —
+    /// the rails describe the node's physical NIC endpoints, which a
+    /// re-described grouping does not change.
+    #[test]
+    fn rescale_preserves_rail_counts() {
+        let t = Topology::by_name("eth10g-x8r16e2").unwrap();
+        let again = t.clone().with_ranks_per_node(4).unwrap();
+        assert_eq!(again.name, "eth10g-x4r16e2");
+        assert_eq!(again.level_sizes(), vec![4, 64]);
+        assert_eq!(again.rails, 2);
+        assert_eq!(again.tiers[1].rails, 2, "rack tier keeps its rails");
+        assert_eq!(Topology::by_name(&again.name).unwrap(), again);
+        // Without a rack tier too.
+        let flat = Topology::by_name("eth10g-x4e2").unwrap();
+        let re = flat.with_ranks_per_node(2).unwrap();
+        assert_eq!(re.name, "eth10g-x2e2");
+        assert_eq!(re.rails, 2);
+        // Down to one rank per node the rails still survive.
+        let one = Topology::by_name("eth10g-x4e2")
+            .unwrap()
+            .with_ranks_per_node(1)
+            .unwrap();
+        assert_eq!(one.name, "eth10g-x1e2");
+        assert_eq!(one.rails, 2);
+        assert_eq!(Topology::by_name(&one.name).unwrap(), one);
+    }
+
+    #[test]
+    fn stripe_count_caps_by_rails_and_chunks() {
+        let t = Topology::eth_10g().with_rails(4).unwrap(); // chunk 256 KiB
+        let c = t.chunk_bytes;
+        let top = t.top_level();
+        // Sub-chunk messages ride one rail.
+        assert_eq!(t.stripe_count(top, 1), 1);
+        assert_eq!(t.stripe_count(top, c - 1), 1);
+        // Whole chunks occupy one rail each, capped at the rail count.
+        assert_eq!(t.stripe_count(top, c), 1);
+        assert_eq!(t.stripe_count(top, 2 * c), 2);
+        assert_eq!(t.stripe_count(top, 3 * c), 3);
+        assert_eq!(t.stripe_count(top, 100 * c), 4);
+        // Single-rail fabrics never stripe.
+        assert_eq!(Topology::eth_10g().stripe_count(0, 100 * c), 1);
+        // Shm tiers (rails 1) never stripe.
+        let smp = Topology::eth_10g_smp(2).with_rails(4).unwrap();
+        assert_eq!(smp.stripe_count(0, 100 * c), 1);
+        assert_eq!(smp.stripe_count(smp.top_level(), 100 * c), 4);
+    }
+
+    #[test]
+    fn striped_msg_divides_wire_not_alpha() {
+        let t = Topology::eth_10g().with_rails(2).unwrap();
+        let top = t.top_level();
+        let b = 4 * t.chunk_bytes;
+        let single = t.msg_ns_at(top, b);
+        let striped = t.striped_msg_ns_at(top, b);
+        let fixed = t.overhead_at(top) + t.latency_at(top);
+        // Wire time halves; overhead + latency are paid once, undivided.
+        assert_eq!(striped, fixed + t.wire_ns(b.div_ceil(2)));
+        assert!(striped < single);
+        // Sub-chunk and single-rail cases are identical to msg_ns_at.
+        assert_eq!(t.striped_msg_ns_at(top, 100), t.msg_ns_at(top, 100));
+        let flat = Topology::eth_10g();
+        assert_eq!(flat.striped_msg_ns_at(0, b), flat.msg_ns_at(0, b));
+    }
+
+    #[test]
     fn tiers_resolve_by_node_grouping() {
         let t = Topology::eth_10g_smp(4);
         assert!(t.is_hierarchical());
@@ -815,6 +1065,17 @@ mod tests {
             .collect();
         assert!(t.validate().is_err(), "too many tiers");
         t.tiers = vec![TierSpec::shm_node(2), TierSpec::shm_node(8)];
+        assert!(t.validate().is_ok());
+        // Rail invariants: >= 1 everywhere, shm tiers exactly 1.
+        t.tiers.clear();
+        t.rails = 0;
+        assert!(t.validate().is_err(), "top rails must be >= 1");
+        t.rails = 2;
+        t.tiers = vec![TierSpec { rails: 0, shm: false, ..TierSpec::shm_node(4) }];
+        assert!(t.validate().is_err(), "tier rails must be >= 1");
+        t.tiers = vec![TierSpec { rails: 2, ..TierSpec::shm_node(4) }];
+        assert!(t.validate().is_err(), "shm tiers have no NIC rails");
+        t.tiers = vec![TierSpec { rails: 2, shm: false, ..TierSpec::shm_node(4) }];
         assert!(t.validate().is_ok());
     }
 }

@@ -10,6 +10,10 @@
 //!   tuning table on a topology (every candidate algorithm across a
 //!   log-spaced rank-count × message-size grid; `--quick` for a tiny CI
 //!   grid) and print the measured crossovers
+//! * `topo      eth10g-x8r16e2` — dump the parsed tier stack of a preset
+//!   (per-tier group size, gbps, latency, overhead, shm flag, rails), so
+//!   suffix-grammar mistakes are inspectable without reading simulator
+//!   output
 //! * `train     --artifacts artifacts/small --ranks 2 --steps 100` — the
 //!   REAL data-parallel trainer over PJRT + prioritized collectives
 
@@ -34,17 +38,19 @@ fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("scaling") => cmd_scaling(&args),
         Some("tune") => cmd_tune(&args),
+        Some("topo") => cmd_topo(&args),
         Some("train") => cmd_train(&args),
         other => {
-            eprintln!("usage: mlsl <info|simulate|scaling|tune|train> [--flags]");
+            eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|train> [--flags]");
             eprintln!(
-                "  tune: --topo <preset> [--ranks-per-node r] [--max-ranks n] \
-                 [--quick] [--out table.json]"
+                "  tune: --topo <preset> [--ranks-per-node r] [--rails l] \
+                 [--max-ranks n] [--quick] [--out table.json]"
             );
+            eprintln!("  topo: <preset> — dump the parsed tier stack (debug aid)");
             eprintln!("  simulate/scaling take --tuning-table <t.json> (measured selection)");
             eprintln!(
                 "  topology presets: eth10g | eth25g | omnipath100g (opa), with the \
-                 suffix grammar <base>[-x<r>[r<k>]]:"
+                 suffix grammar <base>[-x<r>[r<k>][e<l>]]:"
             );
             eprintln!(
                 "    -x<r>   r ranks/node on a shared-memory tier (eth10g-x2, opa-x4)"
@@ -52,6 +58,10 @@ fn main() -> Result<()> {
             eprintln!(
                 "    r<k>    k nodes/rack behind a 4:1-oversubscribed spine \
                  (eth10g-x8r16 = 8 ranks/node x 16 nodes/rack)"
+            );
+            eprintln!(
+                "    e<l>    l NIC egress rails per node; chunk programs stripe \
+                 across them (eth10g-x8r16e2, flat multi-rail = eth10g-x1e4)"
             );
             if let Some(o) = other {
                 Err(anyhow!("unknown command {o:?}"))
@@ -165,6 +175,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
         let r: usize = r.parse().context("--ranks-per-node")?;
         topo = topo.with_ranks_per_node(r).map_err(|e| anyhow!("--ranks-per-node: {e}"))?;
     }
+    if let Some(l) = args.get("rails") {
+        let l: u32 = l.parse().context("--rails")?;
+        topo = topo.with_rails(l).map_err(|e| anyhow!("--rails: {e}"))?;
+    }
     let mut spec = if args.bool("quick") { ProbeSpec::quick() } else { ProbeSpec::full() };
     spec.max_ranks = args.usize_or("max-ranks", spec.max_ranks);
     if spec.max_ranks < 2 {
@@ -174,7 +188,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "tuning {}: ranks {:?}, {} sizes in [{}, {}]",
         topo.name,
         spec.rank_grid_for(&topo),
-        spec.size_grid().len(),
+        spec.size_grid_for(&topo).len(),
         fmt_bytes(spec.min_bytes),
         fmt_bytes(spec.max_bytes),
     );
@@ -232,6 +246,50 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         None => println!("{json}"),
     }
+    Ok(())
+}
+
+/// Dump the parsed tier stack of a topology preset — the debug surface
+/// for the `<base>[-x<r>[r<k>][e<l>]]` suffix grammar: what grouping,
+/// physics and rail counts a name actually resolved to.
+fn cmd_topo(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("topo").map(String::from))
+        .ok_or_else(|| anyhow!("usage: mlsl topo <preset> (e.g. mlsl topo eth10g-x8r16e2)"))?;
+    let topo = Topology::by_name(&name)
+        .ok_or_else(|| anyhow!("unknown topology {name:?} (malformed suffix?)"))?;
+    println!(
+        "{}: {} level(s), {} rank(s)/node, chunk {}",
+        topo.name,
+        topo.num_levels(),
+        topo.ranks_per_node(),
+        fmt_bytes(topo.chunk_bytes),
+    );
+    let mut rows = Vec::new();
+    for level in 0..topo.num_levels() {
+        let (kind, group) = match topo.tiers.get(level) {
+            Some(t) => (if t.shm { "shm" } else { "nic" }, t.ranks.to_string()),
+            None => ("top", "world".to_string()),
+        };
+        rows.push(vec![
+            level.to_string(),
+            kind.to_string(),
+            group,
+            format!("{}", topo.gbps_at(level)),
+            fmt_ns(topo.latency_at(level)),
+            fmt_ns(topo.overhead_at(level)),
+            topo.rails_at(level).to_string(),
+        ]);
+    }
+    print_table(
+        &format!("parsed tier stack: {} (innermost first)", topo.name),
+        &["level", "kind", "group", "gbps", "latency", "overhead", "rails"],
+        &rows,
+    );
+    println!("fingerprint: {}", mlsl::tuner::table::fingerprint(&topo));
     Ok(())
 }
 

@@ -29,7 +29,12 @@
 //! (a two-tier table can never silently apply to a three-tier fabric),
 //! the probe's rank grid covers tier-shaped rows, and multi-level
 //! hierarchical candidates are measured like any other. Multi-rail NICs
-//! ride the same path next.
+//! ride the same path: the `v3` fingerprint hashes every level's rail
+//! count (a table probed single-rail never silently applies to a
+//! striped fabric — `TunedWithFallback` falls back to the analytic
+//! model on mismatch), and the probe's size grid gains a rail dimension
+//! (`ProbeSpec::size_grid_for` adds the whole-chunk stripe-transition
+//! sizes where striping moves the measured crossovers).
 
 pub mod policy;
 pub mod probe;

@@ -80,6 +80,31 @@ impl ProbeSpec {
         out
     }
 
+    /// [`ProbeSpec::size_grid`] extended with the topology's RAIL
+    /// dimension: on a multi-rail fabric the striping discount switches
+    /// on in whole-chunk steps ([`Topology::stripe_count`]), so the grid
+    /// adds the stripe-transition sizes `k · chunk_bytes` for
+    /// k = 1..=max_rails — the buffer sizes at which a full-buffer round
+    /// (recursive doubling's regime) starts occupying its k-th rail.
+    /// The measured latency/bandwidth crossovers move exactly across
+    /// this region, which the generic log-spaced grid can miss.
+    /// Single-rail fabrics keep the generic grid unchanged.
+    pub fn size_grid_for(&self, topo: &Topology) -> Vec<u64> {
+        let mut out = self.size_grid();
+        let rails = topo.max_rails() as u64;
+        if rails > 1 {
+            for k in 1..=rails {
+                let b = k * topo.chunk_bytes;
+                if (self.min_bytes..=self.max_bytes).contains(&b) {
+                    out.push(b);
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+        }
+        out
+    }
+
     /// Log-spaced byte sizes from min to max inclusive (ascending).
     pub fn size_grid(&self) -> Vec<u64> {
         let k = self.size_points.max(2);
@@ -129,7 +154,7 @@ pub fn tune_with_progress(
     mut progress: impl FnMut(usize, usize),
 ) -> TuningTable {
     let ranks = spec.rank_grid_for(topo);
-    let sizes = spec.size_grid();
+    let sizes = spec.size_grid_for(topo);
     let total = TUNED_KINDS.len() * ranks.len() * sizes.len();
     let mut done = 0;
     let mut table = TuningTable::for_topology(topo);
@@ -220,6 +245,36 @@ mod tests {
             .find(|c| c.ranks == 16 && c.bytes == 1 << 10)
             .unwrap();
         assert!(ag16.time_of(three).is_some(), "{ag16:?}");
+    }
+
+    #[test]
+    fn size_grid_gains_a_rail_dimension_on_striped_fabrics() {
+        let spec =
+            ProbeSpec { max_ranks: 8, min_bytes: 1 << 10, max_bytes: 4 << 20, size_points: 3 };
+        // Single-rail fabrics keep the generic grid.
+        let flat = Topology::eth_10g(); // chunk 256 KiB
+        assert_eq!(spec.size_grid_for(&flat), spec.size_grid());
+        // Multi-rail fabrics add the stripe-transition sizes k·chunk.
+        let e4 = flat.clone().with_rails(4).unwrap();
+        let grid = spec.size_grid_for(&e4);
+        for k in 1..=4u64 {
+            assert!(grid.contains(&(k * e4.chunk_bytes)), "{grid:?} missing {k}·chunk");
+        }
+        assert!(grid.windows(2).all(|w| w[0] < w[1]), "sorted+deduped: {grid:?}");
+        // Out-of-range transitions are clamped away.
+        let tiny =
+            ProbeSpec { max_ranks: 8, min_bytes: 1 << 10, max_bytes: 64 << 10, size_points: 3 };
+        assert_eq!(tiny.size_grid_for(&e4), tiny.size_grid());
+        // The probed table measures those cells like any other.
+        let quick = ProbeSpec { max_ranks: 4, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 2 };
+        let e2 = flat.with_rails(2).unwrap();
+        let table = tune(&e2, &quick);
+        let cell = table
+            .cells(CollectiveKind::Allreduce)
+            .iter()
+            .find(|c| c.ranks == 4 && c.bytes == 2 * e2.chunk_bytes)
+            .expect("rail-transition cell measured");
+        assert!(cell.best().is_some());
     }
 
     #[test]

@@ -23,17 +23,25 @@ use crate::Ns;
 /// that influences simulated timings (NOT the display name — renaming a
 /// preset must not invalidate its measurements). Hashes the FULL tier
 /// stack — all levels' group sizes and physics — so a table probed on a
-/// two-tier fabric never silently applies to a three-tier one (the
-/// pre-tier-stack `v1` format can never match and falls back cleanly).
+/// two-tier fabric never silently applies to a three-tier one, and (v3)
+/// every level's RAIL count — rail striping moves the measured
+/// latency/bandwidth crossovers, so a table probed single-rail must
+/// never silently apply to a striped fabric. The pre-rail `v2` and
+/// pre-tier-stack `v1` formats can never match and fall back cleanly.
 pub fn fingerprint(t: &Topology) -> String {
     let mut s = format!(
-        "v2|g{}|l{}|o{}|c{}",
-        t.link_gbps, t.latency_ns, t.per_msg_overhead_ns, t.chunk_bytes,
+        "v3|g{}|l{}|o{}|c{}|e{}",
+        t.link_gbps, t.latency_ns, t.per_msg_overhead_ns, t.chunk_bytes, t.rails,
     );
     for tier in &t.tiers {
         s.push_str(&format!(
-            "|t{}:g{}:l{}:o{}:m{}",
-            tier.ranks, tier.gbps, tier.latency_ns, tier.per_msg_overhead_ns, tier.shm as u8,
+            "|t{}:g{}:l{}:o{}:m{}:e{}",
+            tier.ranks,
+            tier.gbps,
+            tier.latency_ns,
+            tier.per_msg_overhead_ns,
+            tier.shm as u8,
+            tier.rails,
         ));
     }
     s
@@ -459,6 +467,28 @@ mod tests {
         let table = TuningTable::for_topology(&two);
         assert!(table.matches(&two));
         assert!(!table.matches(&three));
+    }
+
+    #[test]
+    fn fingerprints_hash_rail_counts() {
+        // v3: a single-rail table must never silently apply to a striped
+        // fabric (striping moves the measured crossovers).
+        let single = Topology::by_name("eth10g-x2").unwrap();
+        let striped = Topology::by_name("eth10g-x2e2").unwrap();
+        let wider = Topology::by_name("eth10g-x2e4").unwrap();
+        assert!(fingerprint(&single).starts_with("v3|"));
+        assert_ne!(fingerprint(&single), fingerprint(&striped));
+        assert_ne!(fingerprint(&striped), fingerprint(&wider));
+        // Flat fabrics hash their top-tier rails too.
+        assert_ne!(
+            fingerprint(&Topology::eth_10g()),
+            fingerprint(&Topology::by_name("eth10g-x1e2").unwrap())
+        );
+        let table = TuningTable::for_topology(&single);
+        assert!(table.matches(&single));
+        assert!(!table.matches(&striped), "single-rail table on striped fabric");
+        let striped_table = TuningTable::for_topology(&striped);
+        assert!(!striped_table.matches(&single), "and vice versa");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Property tests for multi-rail striping: rails are a pure fabric-level
+//! bandwidth optimization, INVISIBLE to collective semantics.
+//!
+//! Three invariant families, randomized over every program builder
+//! (ring / recursive doubling / halving-doubling / hierarchical, across
+//! allreduce, allgather, reduce-scatter and broadcast):
+//!
+//! * **correctness is rail-independent** — the chunk programs (and so
+//!   the symbolic-executor results they produce) never see the rail
+//!   count, and executing them on rails ∈ {1, 2, 4} delivers the
+//!   byte-identical multiset of logical messages — the stream the
+//!   symbolic payloads ride on — moving exactly the programs' bytes;
+//! * **striping never slows an idle-fabric collective** — every piece's
+//!   egress is no longer than the unstriped transfer's;
+//! * **work conservation** — summed per-rail `busy_ns` for a
+//!   bandwidth-bound transfer equals the single-rail `busy_ns` within
+//!   per-piece rounding, and sub-chunk (latency-bound) traffic produces
+//!   byte-identical event streams at any rail count.
+
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::simexec::SimCollectives;
+use mlsl::collectives::verify::{init_bufs, run as sym_run};
+use mlsl::collectives::{Algorithm as A, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::{MsgDesc, NetSim, SimEvent};
+use mlsl::util::proptest::{run as prop_run, Config};
+
+const RAILS: [u32; 3] = [1, 2, 4];
+
+/// Flat test fabric: 8 Gbps = 1 B/ns per rail, alpha 1000 ns, 512-byte
+/// chunks (small enough that modest element counts stripe).
+fn topo(rails: u32, gamma: u64) -> Topology {
+    Topology::flat("railtest", 8.0, 1_000, gamma, 512)
+        .with_rails(rails)
+        .unwrap()
+}
+
+/// Random (p, n, kind, algorithm) over every builder legal at p.
+fn gen_case(r: &mut mlsl::util::prng::Prng) -> (usize, usize, CollectiveKind, A) {
+    let p = 2 + r.usize_below(11);
+    let n = 1 + r.usize_below(2_000);
+    let root = r.usize_below(p);
+    let mut cands: Vec<(CollectiveKind, A)> = vec![
+        (CollectiveKind::Allreduce, A::Ring),
+        (CollectiveKind::Allgather, A::Ring),
+        (CollectiveKind::ReduceScatter, A::Ring),
+        (CollectiveKind::Broadcast { root }, A::Ring),
+    ];
+    if p.is_power_of_two() {
+        cands.push((CollectiveKind::Allreduce, A::RecursiveDoubling));
+        cands.push((CollectiveKind::Allreduce, A::HalvingDoubling));
+        cands.push((CollectiveKind::Allgather, A::RecursiveDoubling));
+    }
+    for d in (2..p).filter(|d| p % d == 0) {
+        let hier = A::hier(&[d]);
+        cands.push((CollectiveKind::Allreduce, hier));
+        cands.push((CollectiveKind::Allgather, hier));
+        cands.push((CollectiveKind::ReduceScatter, hier));
+        cands.push((CollectiveKind::Broadcast { root }, hier));
+    }
+    let (kind, alg) = cands[r.usize_below(cands.len())];
+    (p, n, kind, alg)
+}
+
+#[test]
+fn prop_rail_striping_invisible_to_collective_correctness() {
+    prop_run(
+        Config { cases: 80, seed: 61 },
+        gen_case,
+        |&(p, n, kind, alg)| {
+            // The builders take no topology at all — the SAME programs
+            // run on every rail count (striping lives entirely inside
+            // the fabric) — and they are symbolically correct.
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            sym_run(&progs, init_bufs(kind, p, n))?;
+            // Timed execution per rail count: completes, and the full
+            // multiset of logically-delivered messages (src, dst, wire
+            // bytes) is byte-identical across rails — what the symbolic
+            // payloads ride on. Striping only splits EGRESS into rail
+            // pieces; the delivery stream a receiver consumes must be
+            // indistinguishable, or resume/replay (and reductions fed by
+            // the arrivals) would diverge between rail counts.
+            let reference_sent: u64 = progs
+                .iter()
+                .flat_map(|pr| &pr.steps)
+                .filter_map(|s| s.send.map(|x| 4 * x.range.len as u64)) // f32 wire
+                .sum();
+            let mut t_single = 0;
+            let mut reference_deliveries: Option<Vec<(usize, usize, u64)>> = None;
+            for (i, &rails) in RAILS.iter().enumerate() {
+                let mut sim = NetSim::new(topo(rails, 100), p);
+                let mut exec = SimCollectives::new();
+                let mut completions = exec.post(&mut sim, 1, progs.clone(), WireDtype::F32, 1);
+                let mut delivered: Vec<(usize, usize, u64)> = Vec::new();
+                while exec.in_flight() > 0 {
+                    let ev = sim
+                        .next()
+                        .ok_or_else(|| format!("{kind:?}/{alg:?} rails={rails}: deadlock"))?;
+                    if let SimEvent::MsgDelivered { msg, .. } = &ev {
+                        delivered.push((msg.src, msg.dst, msg.bytes));
+                    }
+                    exec.on_event_into(&mut sim, &ev, &mut completions);
+                }
+                let t = completions.iter().map(|c| c.at).max().unwrap_or(0);
+                delivered.sort_unstable();
+                match &reference_deliveries {
+                    None => reference_deliveries = Some(delivered),
+                    Some(want) => {
+                        if &delivered != want {
+                            return Err(format!(
+                                "{kind:?}/{alg:?} p={p} rails={rails}: delivered-message \
+                                 multiset diverged from the single-rail run"
+                            ));
+                        }
+                    }
+                }
+                if sim.stats.bytes_sent != reference_sent {
+                    return Err(format!(
+                        "{kind:?}/{alg:?} p={p} rails={rails}: moved {} bytes, \
+                         programs carry {reference_sent}",
+                        sim.stats.bytes_sent
+                    ));
+                }
+                if i == 0 {
+                    t_single = t;
+                }
+                // Every piece's egress is no longer than the unstriped
+                // transfer's, so more rails can only help; the 1% slack
+                // absorbs equal-time tie-break reshuffles only.
+                if t > t_single + t_single / 100 {
+                    return Err(format!(
+                        "{kind:?}/{alg:?} p={p} rails={rails}: striping slowed an \
+                         idle-fabric collective ({t} > {t_single})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rail_striping_is_work_conserving() {
+    prop_run(
+        Config { cases: 100, seed: 62 },
+        |r| {
+            // At least one whole chunk so striping engages; gamma = 0 so
+            // busy time is pure wire work.
+            let bytes = 512 + r.below(40_000);
+            let rails = [2u32, 4][r.usize_below(2)];
+            (bytes, rails)
+        },
+        |&(bytes, rails)| {
+            let mut s1 = NetSim::new(topo(1, 0), 2);
+            let mut sr = NetSim::new(topo(rails, 0), 2);
+            for s in [&mut s1, &mut sr] {
+                s.send(MsgDesc { src: 0, dst: 1, bytes, priority: 1, tag: 1 });
+                s.drain();
+            }
+            let single = s1.nic_busy_ns(0);
+            let summed: u64 = (0..sr.num_rails()).map(|i| sr.rail_busy_ns(0, i)).sum();
+            if summed != sr.nic_busy_ns(0) {
+                return Err("nic_busy_ns must be the per-rail sum".into());
+            }
+            // Each of the <= rails pieces rounds its wire time up at most
+            // 1 ns.
+            if summed.abs_diff(single) > rails as u64 {
+                return Err(format!(
+                    "bytes={bytes} rails={rails}: summed per-rail busy {summed} vs \
+                     single-rail {single}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sub_chunk_traffic_byte_identical_across_rails() {
+    prop_run(
+        Config { cases: 80, seed: 63 },
+        |r| {
+            // A burst of latency-bound messages (all under one 512-byte
+            // chunk) from random sources at random priorities.
+            let k = 1 + r.usize_below(6);
+            let msgs: Vec<MsgDesc> = (0..k)
+                .map(|i| {
+                    let src = r.usize_below(4);
+                    let dst = (src + 1 + r.usize_below(3)) % 4;
+                    MsgDesc {
+                        src,
+                        dst,
+                        bytes: 1 + r.below(511),
+                        priority: r.below(4) as u8,
+                        tag: i as u64,
+                    }
+                })
+                .collect();
+            msgs
+        },
+        |msgs| {
+            // Sub-chunk messages ride one rail: the full delivery event
+            // stream must be byte-identical at every rail count — the
+            // "zero regression for latency-bound sizes" guarantee.
+            let mut reference = None;
+            for &rails in &RAILS {
+                let mut sim = NetSim::new(topo(rails, 100), 4);
+                for m in msgs {
+                    sim.send(m.clone());
+                }
+                let events = sim.drain();
+                match &reference {
+                    None => reference = Some(events),
+                    Some(want) => {
+                        if &events != want {
+                            return Err(format!("rails={rails}: event stream diverged"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
