@@ -808,6 +808,36 @@ pub fn build(
     })
 }
 
+/// Surviving-member view of a communicator after elastic churn: drops
+/// inactive ranks while KEEPING the original fabric rank ids and their
+/// relative order. Program ranks of a rebuilt collective are simply
+/// positions in this list — nobody's payload identity is renumbered,
+/// which is what lets survivors keep their data across a membership
+/// change.
+pub fn survivors(
+    members: Vec<crate::Rank>,
+    alive: impl Fn(crate::Rank) -> bool,
+) -> Vec<crate::Rank> {
+    members.into_iter().filter(|r| alive(*r)).collect()
+}
+
+/// Rebuild a collective for the post-churn survivor set: filters
+/// `members` through `alive`, compiles `alg` at the shrunken rank count
+/// and returns the programs together with the fabric rank map to post
+/// them with (program rank i runs on fabric node `map[i]` — see
+/// `SimCollectives::post_mapped`).
+pub fn rebuild_for_survivors(
+    kind: CollectiveKind,
+    alg: super::Algorithm,
+    members: &[crate::Rank],
+    alive: impl Fn(crate::Rank) -> bool,
+    n: usize,
+) -> Result<(Vec<Program>, Vec<crate::Rank>), BuildError> {
+    let map = survivors(members.to_vec(), alive);
+    let programs = build(kind, alg, map.len(), n)?;
+    Ok((programs, map))
+}
+
 /// Total bytes a single rank puts on the wire for this program.
 pub fn rank_send_bytes(prog: &Program, elem_bytes: usize) -> u64 {
     prog.steps

@@ -189,6 +189,25 @@ impl SimCollectives {
     pub fn op_age(&self, coll_id: u64, now: Ns) -> Option<Ns> {
         self.ops.get(&coll_id).map(|op| now - op.posted_at)
     }
+
+    /// Fabric node ids an in-flight collective spans (program rank i runs
+    /// on `members[i]`). None once completed or aborted.
+    pub fn members_of(&self, coll_id: u64) -> Option<&[Rank]> {
+        self.ops.get(&coll_id).map(|op| op.map.as_slice())
+    }
+
+    /// Shrink the in-flight set: drop a collective whose membership just
+    /// changed under it. Messages it already put on the wire still drain
+    /// through the simulator (the fabric does not unsend bytes) but their
+    /// deliveries hit [`Self::on_event_into`]'s unknown-id path and are
+    /// ignored — no completion is ever reported for an aborted op. The
+    /// elastic engine quiesces at iteration boundaries and rebuilds via
+    /// [`crate::collectives::program::rebuild_for_survivors`]; this is
+    /// the escape hatch for plans that cannot wait out the iteration.
+    /// Returns false if the id was not in flight.
+    pub fn abort(&mut self, coll_id: u64) -> bool {
+        self.ops.remove(&coll_id).is_some()
+    }
 }
 
 /// Convenience: run a single collective to completion on an otherwise idle
@@ -347,6 +366,28 @@ mod tests {
         // Latency-bound (sub-chunk steps): byte-identical timing.
         let small = 256usize;
         assert_eq!(time_on(base, small), time_on(e2, small));
+    }
+
+    #[test]
+    fn abort_drops_op_and_in_flight_messages_drain_harmlessly() {
+        let p = 4;
+        let mut s = sim(p);
+        let mut exec = SimCollectives::new();
+        let mut completions = Vec::new();
+        completions.extend(exec.post(&mut s, 7, allreduce_ring(p, 1 << 20), WireDtype::F32, 1));
+        assert_eq!(exec.in_flight(), 1);
+        assert_eq!(exec.members_of(7), Some(&[0usize, 1, 2, 3][..]));
+        assert!(exec.abort(7));
+        assert!(!exec.abort(7), "second abort of same id must be a no-op");
+        assert_eq!(exec.in_flight(), 0);
+        assert_eq!(exec.members_of(7), None);
+        // First-step sends are already on the wire; draining them must not
+        // panic, resurrect the op, or produce completions.
+        while let Some(ev) = s.next() {
+            exec.on_event_into(&mut s, &ev, &mut completions);
+        }
+        assert!(completions.is_empty(), "{completions:?}");
+        assert_eq!(exec.in_flight(), 0);
     }
 
     #[test]

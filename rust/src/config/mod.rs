@@ -25,6 +25,24 @@
 //!
 //! Malformed suffixes (`-x0`, `-x2r1`, `-x2e0`) are configuration
 //! errors, not panics.
+//!
+//! ## Chaos and churn grammar
+//!
+//! * `--chaos <seed>` — install a seeded fault-injection plan
+//!   ([`crate::fabric::ChaosPlan::generate`]) covering the whole run:
+//!   tier-level latency spikes, temporary zero-bandwidth windows, dead
+//!   NIC rails and per-node compute slowdowns. The plan is a pure
+//!   function of `(seed, topology, world size, horizon)` — the same
+//!   seed on the same config replays the exact same faults, event for
+//!   event (the determinism guarantee `mlsl chaos` checks).
+//! * `--churn <spec>` — membership changes between engine iterations:
+//!   `op:rank@iter[,op:rank@iter...]` where `op` is `leave` or `join`,
+//!   `rank` is a fabric rank id and `iter` the completed iteration the
+//!   change applies after (`0` = right after warmup). Example:
+//!   `--churn leave:3@1,join:3@2`. Survivors keep their rank ids and
+//!   their data; specs that would double-leave, rejoin a present rank,
+//!   reference an out-of-range rank or empty the cluster are
+//!   configuration errors.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -136,6 +154,29 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.iterations = iterations;
     cfg.record_timeline = args.bool("timeline");
     cfg.jitter = get("jitter", "0.0").parse().context("--jitter")?;
+    // Elastic membership: `--churn leave:3@1,join:3@2` (see the module
+    // doc's grammar section). Validated against the world size here so a
+    // bad spec dies as a config error, not mid-simulation.
+    if let Some(spec) = args.get("churn").or_else(|| file.get("churn")) {
+        let plan =
+            crate::engine::ChurnPlan::parse(spec).map_err(|e| anyhow!("--churn: {e}"))?;
+        plan.validate(cfg.dist.world()).map_err(|e| anyhow!("--churn: {e}"))?;
+        cfg.churn = Some(plan);
+    }
+    // Fault injection: `--chaos <seed>` derives the full schedule from
+    // the seed, the topology, the world size and a horizon sized to the
+    // configured run (compute time × iterations, with headroom for the
+    // communication the schedule will expose) — deterministic in all
+    // four, which is what makes chaos runs replayable.
+    if let Some(seed) = args.get("chaos").or_else(|| file.get("chaos")) {
+        let seed: u64 = seed.parse().context("--chaos")?;
+        let horizon = cfg
+            .compute_ns_per_iter()
+            .saturating_mul((cfg.iterations as u64 + 1) * 2)
+            .max(1_000_000);
+        cfg.chaos =
+            Some(crate::fabric::ChaosPlan::generate(seed, &cfg.topo, cfg.dist.world(), horizon));
+    }
     // Measured collective selection: `--tuning-table <path>` loads a table
     // produced by `mlsl tune` and installs it with analytic fallback (a
     // table whose fingerprint does not match this topology is ignored at
@@ -208,6 +249,34 @@ mod tests {
         assert!(engine_config(&args("--mode nope")).is_err());
         assert!(engine_config(&args("--ranks-per-node 0")).is_err());
         assert!(engine_config(&args("--ranks-per-node two")).is_err());
+    }
+
+    #[test]
+    fn chaos_and_churn_flags_thread_through() {
+        // No flags → no plans installed.
+        let cfg = engine_config(&args("")).unwrap();
+        assert!(cfg.chaos.is_none());
+        assert!(cfg.churn.is_none());
+        // Same seed + config → identical plan (the determinism guarantee
+        // starts at config resolution).
+        let a = engine_config(&args("--topo eth10g-x2e2 --nodes 8 --chaos 42")).unwrap();
+        let b = engine_config(&args("--topo eth10g-x2e2 --nodes 8 --chaos 42")).unwrap();
+        assert_eq!(a.chaos, b.chaos);
+        assert!(a.chaos.is_some());
+        // Different seed → different plan.
+        let c = engine_config(&args("--topo eth10g-x2e2 --nodes 8 --chaos 43")).unwrap();
+        assert_ne!(a.chaos, c.chaos);
+        // Churn parses, validates against the world size and sorts.
+        let cfg = engine_config(&args("--nodes 4 --churn leave:3@1,join:3@2")).unwrap();
+        let plan = cfg.churn.unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].after_iter, 1);
+        // Bad specs are config errors, not panics mid-run.
+        assert!(engine_config(&args("--nodes 4 --churn leave:9@1")).is_err());
+        assert!(engine_config(&args("--nodes 4 --churn join:0@1")).is_err());
+        assert!(engine_config(&args("--nodes 4 --churn nonsense")).is_err());
+        assert!(engine_config(&args("--nodes 1 --churn leave:0@1")).is_err());
+        assert!(engine_config(&args("--chaos notanumber")).is_err());
     }
 
     #[test]

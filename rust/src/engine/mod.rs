@@ -25,11 +25,11 @@ pub use report::Report;
 
 use std::collections::HashMap;
 
-use crate::collectives::program::{build, CollectiveKind};
+use crate::collectives::program::{build, survivors, CollectiveKind};
 use crate::collectives::simexec::SimCollectives;
 use crate::collectives::{PriorityPolicy, WireDtype};
 use crate::fabric::topology::{NodeSpec, Topology};
-use crate::fabric::{NetSim, SimEvent};
+use crate::fabric::{ChaosPlan, NetSim, SimEvent};
 use crate::metrics::Timeline;
 use crate::mlsl::Distribution;
 use crate::models::ModelDesc;
@@ -55,6 +55,100 @@ impl CommMode {
     }
 }
 
+/// One elastic-membership change, applied at an iteration boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnOp {
+    /// The rank leaves the run. Survivors KEEP their rank ids and data
+    /// partitions; subsequent communicators simply span fewer members.
+    Leave(Rank),
+    /// A previously-left rank rejoins at the boundary.
+    Join(Rank),
+}
+
+/// A churn op plus the iteration after whose completion it applies
+/// (0 = the warmup iteration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub after_iter: usize,
+    pub op: ChurnOp,
+}
+
+/// An ordered schedule of membership changes. The engine quiesces at the
+/// first iteration boundary past each event (every active node parked,
+/// no collective in flight, no partially-joined op), applies every event
+/// due at that boundary, then releases the survivors — so membership
+/// only ever changes between iterations, never mid-collective.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ChurnPlan {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnPlan {
+    /// Parse the CLI grammar: `leave:<rank>@<iter>[,join:<rank>@<iter>...]`
+    /// — e.g. `leave:3@1,join:3@3`. Events are sorted by iteration
+    /// (stable, so same-boundary events keep their written order).
+    pub fn parse(spec: &str) -> Result<ChurnPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let part = part.trim();
+            let (op_name, rest) = part.split_once(':').ok_or_else(|| {
+                format!("{part:?}: expected leave:<rank>@<iter> or join:<rank>@<iter>")
+            })?;
+            let (rank_s, iter_s) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("{part:?}: missing @<iter>"))?;
+            let rank: Rank = rank_s.parse().map_err(|_| format!("{part:?}: bad rank {rank_s:?}"))?;
+            let after_iter: usize =
+                iter_s.parse().map_err(|_| format!("{part:?}: bad iteration {iter_s:?}"))?;
+            let op = match op_name {
+                "leave" => ChurnOp::Leave(rank),
+                "join" => ChurnOp::Join(rank),
+                other => return Err(format!("{part:?}: unknown op {other:?} (leave|join)")),
+            };
+            events.push(ChurnEvent { after_iter, op });
+        }
+        if events.is_empty() {
+            return Err("empty churn spec".into());
+        }
+        events.sort_by_key(|e| e.after_iter);
+        Ok(ChurnPlan { events })
+    }
+
+    /// Replay the schedule against a `p`-rank world and reject anything
+    /// the engine would have to panic on: out-of-range ranks, leaving a
+    /// rank twice, joining a rank that never left, or leaving everyone.
+    pub fn validate(&self, p: usize) -> Result<(), String> {
+        let mut active = vec![true; p];
+        for e in &self.events {
+            let (r, what) = match e.op {
+                ChurnOp::Leave(r) => (r, "leave"),
+                ChurnOp::Join(r) => (r, "join"),
+            };
+            if r >= p {
+                return Err(format!("{what}:{r}@{}: rank {r} out of range (p={p})", e.after_iter));
+            }
+            match e.op {
+                ChurnOp::Leave(r) => {
+                    if !active[r] {
+                        return Err(format!("leave:{r}@{}: rank {r} already left", e.after_iter));
+                    }
+                    active[r] = false;
+                }
+                ChurnOp::Join(r) => {
+                    if active[r] {
+                        return Err(format!("join:{r}@{}: rank {r} never left", e.after_iter));
+                    }
+                    active[r] = true;
+                }
+            }
+            if active.iter().all(|a| !a) {
+                return Err(format!("after leave @{}: no survivors", e.after_iter));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Simulated-training configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -73,6 +167,12 @@ pub struct EngineConfig {
     /// Measured iterations (one extra warmup iteration is always run).
     pub iterations: usize,
     pub record_timeline: bool,
+    /// Elastic membership: ranks leaving/joining at iteration boundaries
+    /// (`--churn`). None = fixed membership.
+    pub churn: Option<ChurnPlan>,
+    /// Seeded fault injection installed into the fabric (`--chaos`):
+    /// link flaps, dead NIC rails, node slowdowns. None = healthy run.
+    pub chaos: Option<ChaosPlan>,
     /// Per-(node, layer, iteration) compute jitter: relative std-dev of a
     /// deterministic log-normal-ish perturbation. Real clusters have
     /// stragglers (OS noise, memory layout, thermal); every
@@ -96,6 +196,8 @@ impl EngineConfig {
             wire: WireDtype::F32,
             iterations: 3,
             record_timeline: false,
+            churn: None,
+            chaos: None,
             jitter: 0.0,
         }
     }
@@ -146,6 +248,10 @@ enum NodePhase {
     BwdAct(usize),
     /// BulkSync: waiting for the post-backward gradient exchange.
     BulkWait,
+    /// Parked at an iteration boundary while elastic churn quiesces the
+    /// cluster (see [`ChurnPlan`]); released once the membership change
+    /// is applied.
+    Hold,
     Done,
 }
 
@@ -199,6 +305,17 @@ pub struct Engine {
     /// (kind, issue-iteration) → coll id, so joiners find pending ops.
     open: HashMap<(CommKind, usize, usize), u64>, // (kind, iter, comm_group_key)
     next_id: u64,
+    /// Elastic membership: is rank i currently part of the run? All true
+    /// until a [`ChurnOp::Leave`] applies; communicators only ever span
+    /// active ranks (survivors keep their ids — no renumbering).
+    active: Vec<bool>,
+    /// Next unapplied event of `cfg.churn`.
+    churn_idx: usize,
+    /// Human-readable record of applied membership changes.
+    pub churn_log: Vec<String>,
+    /// Earliest observed fwd(0) start per iteration index (cluster-level),
+    /// feeding [`Report::per_iter_ns`].
+    first_starts: Vec<Ns>,
     pub timeline: Timeline,
 }
 
@@ -206,7 +323,10 @@ impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
         let p = cfg.dist.world();
         let nl = cfg.model.layers.len();
-        let sim = NetSim::new(cfg.topo.clone(), p);
+        let mut sim = NetSim::new(cfg.topo.clone(), p);
+        if let Some(plan) = cfg.chaos.clone() {
+            sim.set_chaos(plan);
+        }
         let nodes = (0..p)
             .map(|_| NodeState {
                 phase: NodePhase::FwdWait(0),
@@ -225,6 +345,10 @@ impl Engine {
             metas: HashMap::new(),
             open: HashMap::new(),
             next_id: 1,
+            active: vec![true; p],
+            churn_idx: 0,
+            churn_log: Vec::new(),
+            first_starts: Vec::new(),
             timeline: Timeline::new(),
         }
     }
@@ -279,7 +403,14 @@ impl Engine {
         let timeline = std::mem::replace(&mut self.timeline, Timeline::new());
         let iter_starts: Vec<Vec<Ns>> =
             self.nodes.iter().map(|n| n.iter_starts.clone()).collect();
-        report::build_report(&self.cfg, &self.sim, &iter_starts, timeline)
+        report::build_report(
+            &self.cfg,
+            &self.sim,
+            &iter_starts,
+            &self.first_starts,
+            self.churn_log.clone(),
+            timeline,
+        )
     }
 
     // -- state machine ------------------------------------------------------
@@ -329,6 +460,14 @@ impl Engine {
                     if l == 0 {
                         let now = self.sim.now();
                         self.nodes[n].iter_starts.push(now);
+                        // Cluster-level first start of this iteration
+                        // index (sim time is monotonic, so the first
+                        // recorder IS the earliest).
+                        let iter = self.nodes[n].iter;
+                        while self.first_starts.len() <= iter {
+                            self.first_starts.push(Ns::MAX);
+                        }
+                        self.first_starts[iter] = self.first_starts[iter].min(now);
                     }
                     self.nodes[n].phase = NodePhase::FwdCompute(l);
                     self.start_compute(n, NodePhase::FwdCompute(l));
@@ -340,7 +479,7 @@ impl Engine {
                 }
                 NodePhase::FwdAct(_) | NodePhase::BwdAct(_) | NodePhase::BulkWait => return,
                 NodePhase::FwdCompute(_) => return, // compute in flight
-                NodePhase::Done => return,
+                NodePhase::Hold | NodePhase::Done => return,
             }
         }
     }
@@ -421,14 +560,103 @@ impl Engine {
     }
 
     fn finish_iteration(&mut self, n: Rank, total_iters: usize) {
-        let node = &mut self.nodes[n];
-        node.iter += 1;
-        if node.iter >= total_iters {
-            node.phase = NodePhase::Done;
+        self.nodes[n].iter += 1;
+        // Elastic churn: park at the first boundary past the next
+        // unapplied event; the change applies once the whole cluster is
+        // quiesced there.
+        let must_hold = self.cfg.churn.as_ref().is_some_and(|c| {
+            c.events
+                .get(self.churn_idx)
+                .is_some_and(|e| self.nodes[n].iter > e.after_iter)
+        });
+        if must_hold {
+            self.nodes[n].phase = NodePhase::Hold;
+            self.maybe_apply_churn(total_iters);
             return;
         }
-        node.phase = NodePhase::FwdWait(0);
+        if self.nodes[n].iter >= total_iters {
+            self.nodes[n].phase = NodePhase::Done;
+            return;
+        }
+        self.nodes[n].phase = NodePhase::FwdWait(0);
         self.try_advance(n);
+    }
+
+    /// Apply every churn event due at the current boundary once the
+    /// cluster is quiesced: every active node parked (Hold or Done) past
+    /// the event's iteration, nothing in flight, nothing half-joined.
+    /// Then release the held survivors (and any joiners) into the next
+    /// iteration. Safe to call eagerly — it is a no-op until quiesced.
+    fn maybe_apply_churn(&mut self, total_iters: usize) {
+        let nl = self.layer_count();
+        let mut applied = false;
+        loop {
+            let Some(ev) = self
+                .cfg
+                .churn
+                .as_ref()
+                .and_then(|c| c.events.get(self.churn_idx))
+                .copied()
+            else {
+                break;
+            };
+            let quiesced = self
+                .nodes
+                .iter()
+                .enumerate()
+                .all(|(i, nd)| {
+                    !self.active[i]
+                        || (matches!(nd.phase, NodePhase::Hold | NodePhase::Done)
+                            && nd.iter > ev.after_iter)
+                })
+                && self.colls.in_flight() == 0
+                && self.open.is_empty();
+            if !quiesced {
+                break;
+            }
+            match ev.op {
+                ChurnOp::Leave(r) => {
+                    assert!(self.active[r], "churn: rank {r} left twice");
+                    self.active[r] = false;
+                    self.nodes[r].phase = NodePhase::Done;
+                }
+                ChurnOp::Join(r) => {
+                    assert!(!self.active[r], "churn: rank {r} joined while active");
+                    self.active[r] = true;
+                    // The joiner re-enters at the boundary iteration with
+                    // no prior gradients outstanding; it is released with
+                    // the survivors below.
+                    self.nodes[r].iter = ev.after_iter + 1;
+                    self.nodes[r].grad_done = vec![true; nl];
+                    self.nodes[r].grads_outstanding = 0;
+                    self.nodes[r].phase = NodePhase::Hold;
+                }
+            }
+            let survivors = self.active.iter().filter(|a| **a).count();
+            let (what, r) = match ev.op {
+                ChurnOp::Leave(r) => ("leave", r),
+                ChurnOp::Join(r) => ("join", r),
+            };
+            self.churn_log.push(format!(
+                "{what} rank {r} after iter {} ({survivors} active)",
+                ev.after_iter
+            ));
+            self.churn_idx += 1;
+            applied = true;
+        }
+        if !applied {
+            return;
+        }
+        for i in 0..self.nodes.len() {
+            if self.active[i] && self.nodes[i].phase == NodePhase::Hold {
+                if self.nodes[i].iter >= total_iters {
+                    self.nodes[i].phase = NodePhase::Done;
+                } else {
+                    self.nodes[i].phase = NodePhase::FwdWait(0);
+                    self.try_advance(i);
+                }
+            }
+        }
     }
 
     // -- communication issue points ------------------------------------------
@@ -440,7 +668,9 @@ impl Engine {
         let iter = self.nodes[n].iter;
         self.nodes[n].grad_done[l] = false;
         self.nodes[n].grads_outstanding += 1;
-        let members = self.cfg.dist.data_peers(n);
+        // Elastic churn: the communicator spans the SURVIVING data peers
+        // only, keeping their original rank ids (no renumbering).
+        let members = survivors(self.cfg.dist.data_peers(n), |r| self.active[r]);
         let group_key = self.cfg.dist.rank_in_group(n);
         let elems = self.cfg.model.layers[l].weight_elems.div_ceil(self.cfg.dist.group_size());
         let priority = match self.cfg.mode {
@@ -460,7 +690,7 @@ impl Engine {
             return false;
         }
         let iter = self.nodes[n].iter;
-        let members = self.cfg.dist.group_members(n);
+        let members = survivors(self.cfg.dist.group_members(n), |r| self.active[r]);
         let group_key = self.cfg.dist.group_of(n);
         // The group jointly holds g·batch samples of activations; the ring
         // allgather makes every member hold the group batch.
@@ -517,41 +747,14 @@ impl Engine {
                 CommKind::Grad { .. } => CollectiveKind::Allreduce,
                 _ => CollectiveKind::Allgather,
             };
-            // Hierarchical programs (and tier-discounted pricing) assume
-            // program-rank groups map onto physical tier groups, AT EVERY
-            // LEVEL the algorithm exploits. Gate per level: the chooser
-            // sees the topology truncated to the leading tiers the member
-            // set either tiles exactly or fits wholly inside
-            // (`chooser_tier_depth`) — a tier the members straddle
-            // without tiling would let the cost model bill straddling
-            // hops at an inner tier they never ride. Fully aligned sets
-            // (e.g. the world under pure data parallelism) keep the whole
-            // stack; strided hybrid communicators (aligned depth 0) get
-            // the flat all-top choice. Either way, the configured
-            // selection policy (analytic model or measured tuning table)
-            // decides.
+            // The member-set-aware chooser applies the per-level
+            // alignment gate (tier truncation for partially-aligned
+            // sets, the flat path for strided or post-churn
+            // non-contiguous survivor sets) before consulting the
+            // configured policy — see
+            // [`SelectionPolicy::choose_for_members`].
             let bytes = (4 * elems) as u64;
-            let depth = self.cfg.topo.aligned_tier_depth(&members);
-            let usable = self.cfg.topo.chooser_tier_depth(&members);
-            let restricted;
-            let choose_topo = if usable >= self.cfg.topo.tiers.len() {
-                &self.cfg.topo
-            } else {
-                restricted = self.cfg.topo.restrict_tiers(usable);
-                &restricted
-            };
-            let alg = match (ckind, depth > 0) {
-                (CollectiveKind::Allreduce, true) => {
-                    self.cfg.selection.choose_allreduce(choose_topo, pm, bytes)
-                }
-                (CollectiveKind::Allreduce, false) => {
-                    self.cfg.selection.choose_flat_allreduce(&self.cfg.topo, pm, bytes)
-                }
-                (_, true) => self.cfg.selection.choose_allgather(choose_topo, pm, bytes),
-                (_, false) => {
-                    self.cfg.selection.choose_flat_allgather(&self.cfg.topo, pm, bytes)
-                }
-            };
+            let alg = self.cfg.selection.choose_for_members(&self.cfg.topo, &members, ckind, bytes);
             let programs = build(ckind, alg, pm, elems)
                 .expect("selection policies only return buildable algorithms");
             if self.cfg.record_timeline && members.contains(&0) {
@@ -587,6 +790,17 @@ impl Engine {
             self.metas.remove(&coll_id);
         }
         self.complete_comm_for(kind, node);
+        // A completion may have been the last thing churn was quiescing
+        // on (held nodes' trailing gradient exchanges draining).
+        if self
+            .cfg
+            .churn
+            .as_ref()
+            .is_some_and(|c| self.churn_idx < c.events.len())
+        {
+            let total = self.total_iters();
+            self.maybe_apply_churn(total);
+        }
     }
 
     fn complete_comm_for(&mut self, kind: CommKind, node: Rank) {
@@ -619,6 +833,17 @@ impl Engine {
 
     fn total_iters(&self) -> usize {
         self.cfg.iterations + 1
+    }
+
+    /// Currently-active ranks (the elastic-membership view; all ranks
+    /// until a leave applies).
+    pub fn active_ranks(&self) -> Vec<Rank> {
+        self.active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| **a)
+            .map(|(i, _)| i)
+            .collect()
     }
 }
 
@@ -831,6 +1056,125 @@ mod tests {
             rt.bytes_per_node,
             ra.bytes_per_node
         );
+    }
+
+    #[test]
+    fn churn_spec_parses_and_validates() {
+        let plan = ChurnPlan::parse("leave:3@1,join:3@3,leave:0@2").unwrap();
+        assert_eq!(plan.events.len(), 3);
+        // Sorted by boundary iteration, written order kept within one.
+        assert_eq!(plan.events[0], ChurnEvent { after_iter: 1, op: ChurnOp::Leave(3) });
+        assert_eq!(plan.events[1], ChurnEvent { after_iter: 2, op: ChurnOp::Leave(0) });
+        assert_eq!(plan.events[2], ChurnEvent { after_iter: 3, op: ChurnOp::Join(3) });
+        assert!(plan.validate(4).is_ok());
+        assert!(plan.validate(3).is_err(), "rank 3 out of range at p=3");
+        for bad in [
+            "", "leave:3", "leave:3@", "nuke:3@1", "leave:x@1", "leave:1@y",
+            "leave:1@1,leave:1@2",        // left twice
+            "join:2@1",                   // never left
+            "leave:0@1,leave:1@1",        // no survivors at p=2
+        ] {
+            let err = ChurnPlan::parse(bad).and_then(|p| p.validate(2));
+            assert!(err.is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn churn_leave_shrinks_membership_and_completes() {
+        let mut c = cfg("resnet50", 4, CommMode::MlslAsync { comm_cores: 2 });
+        c.iterations = 3;
+        c.churn = Some(ChurnPlan::parse("leave:3@1").unwrap());
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        assert_eq!(e.active_ranks(), vec![0, 1, 2]);
+        assert_eq!(r.churn_log.len(), 1);
+        assert!(r.churn_log[0].contains("leave rank 3"), "{:?}", r.churn_log);
+        // Quiesce leaves no dangling bookkeeping behind.
+        assert!(e.metas.is_empty());
+        assert!(e.open.is_empty());
+        // The leaver ran iterations 0 and 1 only.
+        assert_eq!(e.nodes[3].iter_starts.len(), 2);
+        assert_eq!(e.nodes[0].iter_starts.len(), 4);
+    }
+
+    #[test]
+    fn churn_join_rejoins_a_left_rank() {
+        let mut c = cfg("resnet50", 4, CommMode::BulkSync);
+        c.iterations = 4;
+        c.churn = Some(ChurnPlan::parse("leave:2@1,join:2@2").unwrap());
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        assert_eq!(e.active_ranks(), vec![0, 1, 2, 3]);
+        assert_eq!(r.churn_log.len(), 2);
+        // Rank 2 sat out exactly one iteration (iter 2): starts for
+        // iters 0, 1, 3, 4 only.
+        assert_eq!(e.nodes[2].iter_starts.len(), 4);
+        assert_eq!(e.nodes[0].iter_starts.len(), 5);
+    }
+
+    #[test]
+    fn churn_to_single_survivor_still_completes() {
+        let mut c = cfg("resnet50", 2, CommMode::BulkSync);
+        c.iterations = 2;
+        c.churn = Some(ChurnPlan::parse("leave:1@0").unwrap());
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        assert_eq!(e.active_ranks(), vec![0]);
+        assert_eq!(r.churn_log.len(), 1);
+    }
+
+    #[test]
+    fn per_iter_spans_cover_every_boundary() {
+        let mut c = cfg("resnet50", 4, CommMode::BulkSync);
+        c.iterations = 3;
+        let r = simulate(c);
+        // 4 iterations (warmup + 3) → 3 boundary-to-boundary spans.
+        assert_eq!(r.per_iter_ns.len(), 3);
+        assert!(r.per_iter_ns.iter().all(|&d| d > 0));
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic_and_slower_than_healthy() {
+        use crate::fabric::ChaosPlan;
+        let topo = Topology::by_name("eth10g-x2e2").unwrap();
+        let mk = |chaos: Option<ChaosPlan>| {
+            let mut c = cfg("resnet50", 8, CommMode::BulkSync);
+            c.topo = topo.clone();
+            c.iterations = 2;
+            c.chaos = chaos;
+            c
+        };
+        let healthy = simulate(mk(None));
+        let horizon = healthy.iter_ns.saturating_mul(4).max(1_000_000);
+        let plan = ChaosPlan::generate(42, &topo, 8, horizon);
+        let a = simulate(mk(Some(plan.clone())));
+        let b = simulate(mk(Some(plan)));
+        // Same seed ⇒ identical run, down to every counter.
+        assert_eq!(a.iter_ns, b.iter_ns);
+        assert_eq!(a.bytes_per_node, b.bytes_per_node);
+        assert_eq!(a.chaos, b.chaos);
+        // Faults moved the clock, never the traffic.
+        assert_eq!(a.bytes_per_node, healthy.bytes_per_node);
+        assert!(a.iter_ns >= healthy.iter_ns, "chaos={} healthy={}", a.iter_ns, healthy.iter_ns);
+    }
+
+    #[test]
+    fn chaos_and_churn_compose() {
+        use crate::fabric::ChaosPlan;
+        let topo = Topology::by_name("eth10g-x2e2").unwrap();
+        let mut c = cfg("resnet50", 8, CommMode::MlslAsync { comm_cores: 2 });
+        c.topo = topo.clone();
+        c.iterations = 3;
+        c.chaos = Some(ChaosPlan::generate(7, &topo, 8, 100_000_000));
+        c.churn = Some(ChurnPlan::parse("leave:5@1").unwrap());
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        assert_eq!(e.active_ranks().len(), 7);
+        assert!(e.metas.is_empty());
     }
 
     #[test]

@@ -22,6 +22,18 @@ pub struct Report {
     pub bytes_per_node: u64,
     /// NIC-level preemption count over the whole run.
     pub preemptions: u64,
+    /// Wall-clock span of each iteration index (earliest fwd(0) start of
+    /// iteration i+1 minus that of iteration i, across ALL nodes). Unlike
+    /// `iter_ns` this stays meaningful under elastic churn, where
+    /// leavers/joiners have gaps in their per-node start sequences; the
+    /// recovery bench reads the post-churn entries directly.
+    pub per_iter_ns: Vec<Ns>,
+    /// Fault-injection accounting for the run (all zeros when no
+    /// [`crate::fabric::ChaosPlan`] was installed).
+    pub chaos: crate::fabric::ChaosStats,
+    /// Human-readable membership-change log, one line per applied
+    /// leave/join, in application order.
+    pub churn_log: Vec<String>,
     pub timeline: Timeline,
 }
 
@@ -36,6 +48,8 @@ pub(crate) fn build_report(
     cfg: &EngineConfig,
     sim: &NetSim,
     iter_starts: &[Vec<Ns>],
+    first_starts: &[Ns],
+    churn_log: Vec<String>,
     timeline: Timeline,
 ) -> Report {
     // Per node: mean delta between consecutive fwd(0) starts, skipping the
@@ -53,6 +67,15 @@ pub(crate) fn build_report(
         }
     }
     let iter_ns = crate::util::stats::mean(&deltas).round() as Ns;
+    // Cluster-wide iteration spans from the earliest fwd(0) start of each
+    // iteration index; Ns::MAX marks indices no node ever started (can
+    // only happen for trailing indices under pathological churn plans).
+    let mut per_iter_ns = Vec::new();
+    for w in first_starts.windows(2) {
+        if w[0] != Ns::MAX && w[1] != Ns::MAX {
+            per_iter_ns.push(w[1] - w[0]);
+        }
+    }
     let compute_ns = cfg.compute_ns_per_iter();
     let p = cfg.dist.world();
     // Every node contributes `batch` samples regardless of grouping.
@@ -65,6 +88,9 @@ pub(crate) fn build_report(
         throughput_samples_per_s: throughput,
         bytes_per_node: sim.stats.bytes_sent / p as u64,
         preemptions: sim.stats.preemptions,
+        per_iter_ns,
+        chaos: sim.chaos_stats,
+        churn_log,
         timeline,
     }
 }

@@ -40,7 +40,7 @@ pub mod shm;
 pub mod sim;
 pub mod topology;
 
-pub use sim::{NetSim, SimEvent};
+pub use sim::{ChaosPlan, ChaosStats, FlapWindow, NetSim, RailDeath, SimEvent};
 pub use topology::{NodeSpec, Topology};
 
 use crate::{Ns, Priority, Rank};

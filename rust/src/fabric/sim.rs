@@ -39,6 +39,16 @@
 //!   overhead. Delivery fires `latency` after the LAST piece leaves the
 //!   wire.
 //!
+//! * **Chaos mode**: a seeded [`ChaosPlan`] (driven by
+//!   [`crate::util::prng`]) injects link flaps (tier-level latency
+//!   spikes and temporary zero-bandwidth windows), dead NIC rails
+//!   (striping re-routes over the surviving rails with the same
+//!   `(chunk + src) % rails` assignment, queued pieces migrate
+//!   mid-transfer without losing banked progress) and per-node compute
+//!   slowdown factors. Every fault is scheduled from the plan alone, so
+//!   the same seed yields a byte-identical event stream — faults bend
+//!   *timing*, never payloads.
+//!
 //! The simulator is deterministic: equal-time events fire in issue order.
 
 use std::cmp::Reverse;
@@ -47,6 +57,7 @@ use std::collections::{BinaryHeap, HashMap};
 use super::event::EventQueue;
 use super::topology::Topology;
 use super::MsgDesc;
+use crate::util::prng::Prng;
 use crate::{Ns, Priority, Rank};
 
 /// Externally visible simulation events.
@@ -74,6 +85,10 @@ enum Internal {
     EgressDone { node: Rank, chan: Chan, xfer: u64, gen: u64 },
     Deliver { msg_idx: usize },
     ComputeDone { node: Rank, tag: u64 },
+    /// A zero-bandwidth flap window opens (`on`) or closes (`!on`).
+    ChaosGate { on: bool },
+    /// Scheduled death of `plan.rail_deaths[idx]`.
+    RailDie { idx: usize },
 }
 
 struct Transfer {
@@ -82,6 +97,9 @@ struct Transfer {
     remaining_ns: Ns,
     checkpoint: Ns,
     running: bool,
+    /// Urgency class the piece was enqueued under — carried so a
+    /// rail-death migration can re-enqueue it at the same priority.
+    class: Priority,
 }
 
 /// Per-NIC egress queue. Transfers live in `slab`; `order` is a
@@ -93,6 +111,12 @@ struct Nic {
     slab: HashMap<u64, Transfer>,
     order: BinaryHeap<Reverse<(Priority, u64)>>,
     gated: bool,
+    /// Gated by an active zero-bandwidth chaos window — kept separate
+    /// from the engine-driven `gated` flag so fault injection and
+    /// MPI-style progress gating compose without clobbering each other.
+    chaos_gated: bool,
+    /// Rail killed by a [`ChaosPlan`]: never serves traffic again.
+    dead: bool,
     /// Generation counter invalidating stale EgressDone events.
     gen: u64,
     /// Total ns the wire was busy (for utilization metrics).
@@ -133,6 +157,138 @@ impl Default for SimStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Chaos mode: seeded fault injection
+// ---------------------------------------------------------------------------
+
+/// One link-flap window on a NIC tier. A zero-bandwidth flap gates every
+/// NIC rail fleet-wide for the window (the blast radius of a switch
+/// brown-out: nothing injects until it clears); a latency flap multiplies
+/// the in-flight latency of messages whose deepest common tier is
+/// `level`, applied when delivery is scheduled. Multipliers are integer
+/// milli-units (1000 = healthy) so replay comparisons stay exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlapWindow {
+    /// NIC tier the flap lives on (never a shared-memory level).
+    pub level: usize,
+    /// Window [from, until) in sim ns.
+    pub from: Ns,
+    pub until: Ns,
+    /// true → zero-bandwidth window; false → latency spike only.
+    pub zero_bw: bool,
+    /// Latency multiplier in milli-units (1000 = unchanged).
+    pub latency_mult_milli: u64,
+}
+
+/// Scheduled death of one NIC egress rail. From `at` on, the rail serves
+/// nothing: its queued pieces migrate to the surviving rails (banked
+/// progress preserved) and new transfers stripe over survivors only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RailDeath {
+    pub node: Rank,
+    pub rail: u32,
+    pub at: Ns,
+}
+
+/// A seeded fault-injection schedule. Everything is derived from the
+/// seed up front — [`NetSim`] consumes the plan as pure data, so two
+/// runs with the same plan (hence the same seed) produce byte-identical
+/// event streams. Faults bend timing only; payloads are never corrupted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    pub flaps: Vec<FlapWindow>,
+    pub rail_deaths: Vec<RailDeath>,
+    /// Per-node compute slowdown in milli-units (1000 = healthy). A
+    /// straggler at 2500 takes 2.5× the healthy compute time.
+    pub slowdown_milli: Vec<u64>,
+}
+
+impl ChaosPlan {
+    /// A quiet plan (no faults) — useful as a baseline in tests.
+    pub fn quiet(seed: u64, p: usize) -> Self {
+        Self { seed, flaps: Vec::new(), rail_deaths: Vec::new(), slowdown_milli: vec![1000; p] }
+    }
+
+    /// Derive a full fault schedule from `seed` for a `p`-rank run of
+    /// roughly `horizon_ns`: 1–3 link flaps on NIC tiers (a third of
+    /// them zero-bandwidth, the rest 2–10× latency spikes), up to one
+    /// rail death per surviving-rail margin on multi-rail fabrics
+    /// (never a node's last rail), and a handful of node slowdowns
+    /// (1.1–2.5×). Deterministic in its arguments.
+    pub fn generate(seed: u64, topo: &Topology, p: usize, horizon_ns: Ns) -> Self {
+        let mut r = Prng::seed(seed);
+        let horizon = horizon_ns.max(1000);
+        let nic_levels = topo.nic_levels();
+        let mut flaps = Vec::new();
+        if !nic_levels.is_empty() {
+            for _ in 0..1 + r.below(3) {
+                let level = nic_levels[r.usize_below(nic_levels.len())];
+                let from = r.below(horizon * 3 / 4);
+                let dur = horizon / 20 + r.below((horizon / 10).max(1));
+                let zero_bw = r.below(3) == 0;
+                let latency_mult_milli = if zero_bw { 1000 } else { 2000 + r.below(8001) };
+                flaps.push(FlapWindow {
+                    level,
+                    from,
+                    until: from + dur,
+                    zero_bw,
+                    latency_mult_milli,
+                });
+            }
+        }
+        let rails = topo.max_rails();
+        let mut rail_deaths: Vec<RailDeath> = Vec::new();
+        if rails > 1 && p > 0 {
+            let kills = 1 + r.below(rails.min(3) as u64 - 1);
+            for _ in 0..kills {
+                let node = r.usize_below(p);
+                let rail = r.below(rails as u64) as u32;
+                let at = horizon / 4 + r.below(horizon / 2);
+                let already = rail_deaths.iter().filter(|d| d.node == node).count() as u32;
+                let dup = rail_deaths.iter().any(|d| d.node == node && d.rail == rail);
+                // Never schedule a node's last rail to die.
+                if !dup && already + 1 < rails {
+                    rail_deaths.push(RailDeath { node, rail, at });
+                }
+            }
+        }
+        let mut slowdown_milli = vec![1000u64; p];
+        if p > 0 {
+            for _ in 0..1 + r.below((p as u64 / 8).max(1)) {
+                let node = r.usize_below(p);
+                slowdown_milli[node] = 1100 + r.below(1401); // 1.1–2.5×
+            }
+        }
+        Self { seed, flaps, rail_deaths, slowdown_milli }
+    }
+
+    /// Latency multiplier active at `now` for tier `level` (milli-units;
+    /// overlapping spikes compound).
+    fn latency_mult_at(&self, level: usize, now: Ns) -> u64 {
+        let mut m = 1000u64;
+        for f in &self.flaps {
+            if !f.zero_bw && f.level == level && f.from <= now && now < f.until {
+                m = m.saturating_mul(f.latency_mult_milli) / 1000;
+            }
+        }
+        m
+    }
+}
+
+/// Counters for faults actually applied during a run (all driven purely
+/// by the plan, so deterministic under a seed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    pub zero_bw_windows: u64,
+    pub latency_spikes: u64,
+    pub rails_killed: u64,
+    /// Queued egress pieces migrated off a dying rail mid-transfer.
+    pub transfers_rerouted: u64,
+    /// Compute timers stretched by a per-node slowdown factor.
+    pub slowdowns_applied: u64,
+}
+
 /// The simulator. Drive it by posting sends/computes, then repeatedly
 /// calling [`NetSim::next`] and reacting to the returned events.
 pub struct NetSim {
@@ -153,7 +309,12 @@ pub struct NetSim {
     /// is scheduled when the count hits zero (the last rail finishes).
     egress_left: Vec<u32>,
     next_xfer_id: u64,
+    /// Installed fault schedule ([`NetSim::set_chaos`]); None = healthy.
+    chaos: Option<ChaosPlan>,
+    /// Active zero-bandwidth windows (they may overlap).
+    zero_bw_active: u32,
     pub stats: SimStats,
+    pub chaos_stats: ChaosStats,
 }
 
 impl NetSim {
@@ -170,8 +331,43 @@ impl NetSim {
             msgs: Vec::new(),
             egress_left: Vec::new(),
             next_xfer_id: 0,
+            chaos: None,
+            zero_bw_active: 0,
             stats: SimStats::default(),
+            chaos_stats: ChaosStats::default(),
         }
+    }
+
+    /// Install a fault schedule: flap windows and rail deaths become
+    /// queued events relative to `now`, slowdown factors scale every
+    /// subsequent [`NetSim::compute`]. The plan is pure data, so the
+    /// run stays deterministic (same plan ⇒ same event stream).
+    pub fn set_chaos(&mut self, plan: ChaosPlan) {
+        let now = self.queue.now();
+        for f in &plan.flaps {
+            if f.zero_bw {
+                self.queue.push_in(f.from.saturating_sub(now), Internal::ChaosGate { on: true });
+                self.queue
+                    .push_in(f.until.saturating_sub(now), Internal::ChaosGate { on: false });
+            }
+        }
+        for (idx, d) in plan.rail_deaths.iter().enumerate() {
+            assert!(d.node < self.p, "rail death on rank {} of {}", d.node, self.p);
+            self.queue.push_in(d.at.saturating_sub(now), Internal::RailDie { idx });
+        }
+        let mut plan = plan;
+        plan.slowdown_milli.resize(self.p, 1000);
+        self.chaos = Some(plan);
+    }
+
+    /// Is `rail` of `node` dead (killed by the chaos plan)?
+    pub fn rail_dead(&self, node: Rank, rail: usize) -> bool {
+        self.nics[node][rail].dead
+    }
+
+    /// Surviving (non-dead) rails of `node`.
+    pub fn alive_rails(&self, node: Rank) -> usize {
+        self.nics[node].iter().filter(|n| !n.dead).count()
     }
 
     fn chan_mut(&mut self, node: Rank, chan: Chan) -> &mut Nic {
@@ -211,15 +407,25 @@ impl NetSim {
         let overhead = self.topo.overhead_at(level);
         let gbps = self.topo.gbps_at(level);
         // Urgency classes apply only on the contended inter tier; the shm
-        // channel is one free class (FIFO by transfer id).
-        let (pieces, class, rails) = if shm {
-            (1u32, 0, 1usize)
+        // channel is one free class (FIFO by transfer id). Striping runs
+        // over the SURVIVING rails: with no rail deaths `alive` is the
+        // identity [0..rails] and the assignment below is byte-identical
+        // to the healthy `(i + src) % rails`.
+        let (pieces, class, alive) = if shm {
+            (1u32, 0, vec![0usize])
         } else {
-            (
-                self.topo.stripe_count(level, msg.bytes),
-                msg.priority,
-                self.topo.rails_at(level).max(1) as usize,
-            )
+            let level_rails =
+                (self.topo.rails_at(level).max(1) as usize).min(self.nics[node].len());
+            let mut alive: Vec<usize> =
+                (0..level_rails).filter(|&r| !self.nics[node][r].dead).collect();
+            if alive.is_empty() {
+                // Every rail of this tier died; fall back to any
+                // surviving physical rail (kill_rail guarantees one).
+                alive = (0..self.nics[node].len()).filter(|&r| !self.nics[node][r].dead).collect();
+            }
+            assert!(!alive.is_empty(), "node {node} has no surviving rails");
+            let pieces = self.topo.stripe_count(level, msg.bytes).min(alive.len() as u32);
+            (pieces, msg.priority, alive)
         };
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
@@ -238,14 +444,20 @@ impl NetSim {
             let chan = if shm {
                 Chan::Shm
             } else {
-                Chan::Inter { rail: ((i as usize + msg.src) % rails) as u32 }
+                Chan::Inter { rail: alive[(i as usize + msg.src) % alive.len()] as u32 }
             };
             let id = self.next_xfer_id;
             self.next_xfer_id += 1;
             let nic = self.chan_mut(node, chan);
             nic.slab.insert(
                 id,
-                Transfer { msg_idx, remaining_ns: cost.max(1), checkpoint: now, running: false },
+                Transfer {
+                    msg_idx,
+                    remaining_ns: cost.max(1),
+                    checkpoint: now,
+                    running: false,
+                    class,
+                },
             );
             nic.order.push(Reverse((class, id)));
             // Fast path: the channel is already busy with an equal-or-
@@ -261,9 +473,20 @@ impl NetSim {
     }
 
     /// Post a compute timer on `node` for `dur_ns`; fires `ComputeDone{tag}`.
+    /// A chaos slowdown factor for `node` stretches the duration.
     pub fn compute(&mut self, node: Rank, dur_ns: Ns, tag: u64) {
         assert!(node < self.p);
-        self.queue.push_in(dur_ns.max(1), Internal::ComputeDone { node, tag });
+        let dur = match &self.chaos {
+            Some(plan) => {
+                let m = plan.slowdown_milli.get(node).copied().unwrap_or(1000);
+                if m != 1000 {
+                    self.chaos_stats.slowdowns_applied += 1;
+                }
+                dur_ns.saturating_mul(m) / 1000
+            }
+            None => dur_ns,
+        };
+        self.queue.push_in(dur.max(1), Internal::ComputeDone { node, tag });
     }
 
     /// Fire an event after `dur_ns` with no resource use (scheduling aid).
@@ -352,7 +575,7 @@ impl NetSim {
         }
         nic.gen += 1;
 
-        if nic.gated {
+        if nic.gated || nic.chaos_gated || nic.dead {
             return;
         }
         // 2. Elect the head: lowest (priority, id) — FIFO within a class.
@@ -408,15 +631,106 @@ impl NetSim {
                     if self.egress_left[msg_idx] == 0 {
                         let lat = {
                             let m = &self.msgs[msg_idx];
-                            self.topo.latency_between(m.src, m.dst)
+                            let base = self.topo.latency_between(m.src, m.dst);
+                            // A latency flap active on the hop's tier
+                            // stretches the in-flight time — timing
+                            // only, never the payload.
+                            match &self.chaos {
+                                Some(plan) => {
+                                    let level = self.topo.level_of(m.src, m.dst);
+                                    let mult = plan.latency_mult_at(level, at);
+                                    if mult != 1000 {
+                                        self.chaos_stats.latency_spikes += 1;
+                                    }
+                                    base.saturating_mul(mult) / 1000
+                                }
+                                None => base,
+                            }
                         };
                         self.queue.push_in(lat, Internal::Deliver { msg_idx });
                     }
                     self.reschedule(node, chan);
                 }
+                Internal::ChaosGate { on } => {
+                    if on {
+                        self.zero_bw_active += 1;
+                        if self.zero_bw_active == 1 {
+                            self.chaos_stats.zero_bw_windows += 1;
+                            self.set_chaos_gate(true);
+                        }
+                    } else {
+                        self.zero_bw_active = self.zero_bw_active.saturating_sub(1);
+                        if self.zero_bw_active == 0 {
+                            self.set_chaos_gate(false);
+                        }
+                    }
+                }
+                Internal::RailDie { idx } => {
+                    let Some(plan) = &self.chaos else { continue };
+                    let RailDeath { node, rail, .. } = plan.rail_deaths[idx];
+                    self.kill_rail(node, rail as usize);
+                }
             }
         }
         None
+    }
+
+    /// Open/close the zero-bandwidth gate on every NIC rail of every
+    /// node (shared-memory channels keep flowing: a fabric brown-out
+    /// does not stall in-node copies).
+    fn set_chaos_gate(&mut self, on: bool) {
+        for node in 0..self.p {
+            for rail in 0..self.nics[node].len() {
+                if self.nics[node][rail].chaos_gated != on {
+                    self.nics[node][rail].chaos_gated = on;
+                    self.reschedule(node, Chan::Inter { rail: rail as u32 });
+                }
+            }
+        }
+    }
+
+    /// Kill one NIC rail: bank the running piece's progress, mark the
+    /// rail dead, and migrate its queued pieces (in transfer-id order —
+    /// deterministic, HashMap iteration never leaks into behavior) to
+    /// the surviving rails via the same `(id + node) % alive` assignment
+    /// striping uses. Refuses to kill a node's last surviving rail.
+    fn kill_rail(&mut self, node: Rank, rail: usize) {
+        let alive: Vec<usize> = (0..self.nics[node].len())
+            .filter(|&r| r != rail && !self.nics[node][r].dead)
+            .collect();
+        if alive.is_empty() || self.nics[node][rail].dead {
+            return; // last rail or already dead: refuse, keep the fabric live
+        }
+        self.nics[node][rail].dead = true;
+        // Banks the running piece's progress, accrues busy time, bumps
+        // the generation (stale EgressDone events die), and — because
+        // the rail is now dead — elects nothing.
+        self.reschedule(node, Chan::Inter { rail: rail as u32 });
+        let nic = &mut self.nics[node][rail];
+        let mut orphans: Vec<(u64, Transfer)> = nic.slab.drain().collect();
+        nic.order.clear();
+        orphans.sort_by_key(|(id, _)| *id);
+        self.chaos_stats.rails_killed += 1;
+        self.chaos_stats.transfers_rerouted += orphans.len() as u64;
+        let mut touched: Vec<usize> = Vec::new();
+        let now = self.queue.now();
+        for (id, mut t) in orphans {
+            let target = alive[(id as usize + node) % alive.len()];
+            t.running = false;
+            t.checkpoint = now;
+            let class = t.class;
+            let dst = &mut self.nics[node][target];
+            dst.slab.insert(id, t);
+            dst.order.push(Reverse((class, id)));
+            if !touched.contains(&target) {
+                touched.push(target);
+            }
+        }
+        for target in touched {
+            // Skip the fast path: a migrated piece may outrank the
+            // target rail's running head.
+            self.reschedule(node, Chan::Inter { rail: target as u32 });
+        }
     }
 
     /// Run the simulation to completion, collecting all events.
@@ -899,5 +1213,205 @@ mod tests {
             SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 5_000 + 2_100),
             other => panic!("{other:?}"),
         }
+    }
+
+    // -- chaos mode ---------------------------------------------------------
+
+    #[test]
+    fn zero_bw_window_stalls_egress_exactly_for_the_window() {
+        let mut s = sim();
+        s.set_chaos(ChaosPlan {
+            seed: 0,
+            flaps: vec![FlapWindow {
+                level: 0,
+                from: 1_000,
+                until: 5_000,
+                zero_bw: true,
+                latency_mult_milli: 1000,
+            }],
+            rail_deaths: vec![],
+            slowdown_milli: vec![1000; 4],
+        });
+        // Egress would finish at 1_100; the window opens at 1_000 with
+        // 100 ns of wire left, which resumes at 5_000: egress 5_100,
+        // delivery 6_100.
+        s.send(msg(0, 1, 1_000, 1, 7));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (7, 6_100));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.chaos_stats.zero_bw_windows, 1);
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn latency_flap_stretches_in_flight_time_only() {
+        let mut s = sim();
+        s.set_chaos(ChaosPlan {
+            seed: 0,
+            flaps: vec![FlapWindow {
+                level: 0,
+                from: 0,
+                until: 10_000,
+                zero_bw: false,
+                latency_mult_milli: 3_000,
+            }],
+            rail_deaths: vec![],
+            slowdown_milli: vec![1000; 4],
+        });
+        s.send(msg(0, 1, 1_000, 1, 7));
+        // Egress 100 + 1000 unchanged; latency 1000 × 3 = 3000.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (7, 1_100 + 3_000));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.chaos_stats.latency_spikes, 1);
+    }
+
+    #[test]
+    fn slowdown_scales_compute_only() {
+        let mut s = sim();
+        let mut slow = vec![1000u64; 4];
+        slow[2] = 2_500;
+        s.set_chaos(ChaosPlan {
+            seed: 0,
+            flaps: vec![],
+            rail_deaths: vec![],
+            slowdown_milli: slow,
+        });
+        s.compute(2, 10_000, 1); // straggler: 25_000
+        s.compute(3, 10_000, 2); // healthy: 10_000
+        assert_eq!(
+            s.next().unwrap(),
+            SimEvent::ComputeDone { node: 3, tag: 2, at: 10_000 }
+        );
+        assert_eq!(
+            s.next().unwrap(),
+            SimEvent::ComputeDone { node: 2, tag: 1, at: 25_000 }
+        );
+        assert_eq!(s.chaos_stats.slowdowns_applied, 1);
+        // Messages are not slowed.
+        s.send(msg(2, 3, 1_000, 1, 9));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 25_000 + 2_100),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rail_death_migrates_queued_pieces_and_conserves_work() {
+        let mut s = railed(2);
+        s.set_chaos(ChaosPlan {
+            seed: 0,
+            flaps: vec![],
+            rail_deaths: vec![RailDeath { node: 0, rail: 1, at: 5_000 }],
+            slowdown_milli: vec![1000; 4],
+        });
+        // 20_000 bytes = two 10_000-byte pieces, one per rail, each
+        // egress 100 + 10_000 = 10_100.
+        s.send(msg(0, 1, 20_000, 1, 7));
+        // At 5_000 rail 1 dies with 5_100 banked remaining; the piece
+        // migrates behind rail 0's (FIFO by id): rail 0 finishes its own
+        // at 10_100, runs the orphan 5_100 more -> egress 15_200,
+        // delivery 16_200.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.tag, at), (7, 16_200));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.chaos_stats.rails_killed, 1);
+        assert_eq!(s.chaos_stats.transfers_rerouted, 1);
+        assert!(s.rail_dead(0, 1));
+        assert_eq!(s.alive_rails(0), 1);
+        // Work conservation: rail 1 was busy until its death, rail 0
+        // carried the rest — the summed busy time is the full two-piece
+        // cost.
+        assert_eq!(s.rail_busy_ns(0, 1), 5_000);
+        assert_eq!(s.rail_busy_ns(0, 0), 15_200);
+        assert_eq!(s.nic_busy_ns(0), 2 * 10_100);
+        // New sends stripe over the lone survivor.
+        s.send(msg(0, 1, 20_000, 1, 8));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!(m.tag, 8);
+                // One piece (lone survivor), full wire time: posted at
+                // 16_200, egress 100 + 20_000 -> 36_300, delivery 37_300.
+                assert_eq!(at, 37_300);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn last_rail_never_dies() {
+        let mut s = railed(1);
+        s.set_chaos(ChaosPlan {
+            seed: 0,
+            flaps: vec![],
+            rail_deaths: vec![RailDeath { node: 0, rail: 0, at: 10 }],
+            slowdown_milli: vec![1000; 4],
+        });
+        s.send(msg(0, 1, 1_000, 1, 1));
+        // The kill is refused: traffic flows normally.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 2_100),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.chaos_stats.rails_killed, 0);
+        assert_eq!(s.alive_rails(0), 1);
+    }
+
+    #[test]
+    fn chaos_plan_generation_is_deterministic_and_valid() {
+        let topo = Topology::flat("t", 8.0, 1_000, 100, 512).with_rails(4).unwrap();
+        let a = ChaosPlan::generate(42, &topo, 8, 1_000_000);
+        let b = ChaosPlan::generate(42, &topo, 8, 1_000_000);
+        assert_eq!(a, b, "same seed must derive the same plan");
+        let c = ChaosPlan::generate(43, &topo, 8, 1_000_000);
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(!a.flaps.is_empty());
+        assert_eq!(a.slowdown_milli.len(), 8);
+        for f in &a.flaps {
+            assert!(f.from < f.until);
+            assert!(topo.nic_levels().contains(&f.level));
+        }
+        for d in &a.rail_deaths {
+            assert!(d.node < 8 && d.rail < 4);
+        }
+        // Never all rails of one node.
+        for n in 0..8 {
+            let kills = a.rail_deaths.iter().filter(|d| d.node == n).count();
+            assert!(kills < 4);
+        }
+        // Shm tiers are never flapped.
+        let smp = smp();
+        let p = ChaosPlan::generate(7, smp.topology(), 4, 1_000_000);
+        for f in &p.flaps {
+            assert_eq!(f.level, smp.topology().top_level());
+        }
+    }
+
+    #[test]
+    fn same_chaos_seed_yields_byte_identical_event_streams() {
+        let topo = Topology::flat("t", 8.0, 1_000, 100, 512).with_rails(2).unwrap();
+        let run = || {
+            let mut s = NetSim::new(topo.clone(), 4);
+            s.set_chaos(ChaosPlan::generate(99, &topo, 4, 200_000));
+            for i in 0..12u64 {
+                let src = (i % 4) as usize;
+                let dst = (src + 1 + (i as usize % 3)) % 4;
+                s.send(msg(src, dst, 700 * (i + 1), (i % 3) as u8, i));
+            }
+            (s.drain(), s.chaos_stats)
+        };
+        let (ev1, st1) = run();
+        let (ev2, st2) = run();
+        assert_eq!(ev1, ev2, "chaos must be deterministic under a seed");
+        assert_eq!(st1, st2);
     }
 }

@@ -458,6 +458,16 @@ impl Topology {
         !self.tiers.is_empty()
     }
 
+    /// Levels whose hops ride the NIC (everything except shared-memory
+    /// tiers), innermost first and always including the top fabric.
+    /// These are the levels link faults ([`crate::fabric::sim::ChaosPlan`])
+    /// can live on: shm copies never cross a flappable wire.
+    pub fn nic_levels(&self) -> Vec<usize> {
+        (0..self.num_levels())
+            .filter(|&l| !self.tiers.get(l).is_some_and(|t| t.shm))
+            .collect()
+    }
+
     /// Innermost level whose groups can contain an ALIGNED contiguous run
     /// of `g` ranks (tier size a multiple of `g`); `top_level()` when no
     /// inner tier can. Used to price in-group traffic on the correct tier.
@@ -1021,6 +1031,17 @@ mod tests {
         // Strided / empty: nothing.
         assert_eq!(t.chooser_tier_depth(&[0, 2, 4, 6]), 0);
         assert_eq!(t.chooser_tier_depth(&[]), 0);
+    }
+
+    #[test]
+    fn nic_levels_skip_shared_memory_tiers() {
+        // Flat: only the top fabric.
+        assert_eq!(Topology::eth_10g().nic_levels(), vec![0]);
+        // smp: the shm node tier (level 0) is not flappable.
+        assert_eq!(Topology::eth_10g_smp(4).nic_levels(), vec![1]);
+        // node(shm) + rack(nic) + spine: levels 1 and 2.
+        let t = Topology::by_name("eth10g-x2r4").unwrap();
+        assert_eq!(t.nic_levels(), vec![1, 2]);
     }
 
     #[test]

@@ -40,8 +40,9 @@ fn main() -> Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("topo") => cmd_topo(&args),
         Some("train") => cmd_train(&args),
+        Some("chaos") => cmd_chaos(&args),
         other => {
-            eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|train> [--flags]");
+            eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|train|chaos> [--flags]");
             eprintln!(
                 "  tune: --topo <preset> [--ranks-per-node r] [--rails l] \
                  [--max-ranks n] [--quick] [--out table.json]"
@@ -62,6 +63,19 @@ fn main() -> Result<()> {
             eprintln!(
                 "    e<l>    l NIC egress rails per node; chunk programs stripe \
                  across them (eth10g-x8r16e2, flat multi-rail = eth10g-x1e4)"
+            );
+            eprintln!(
+                "  fault injection: --chaos <seed> installs a seeded fault plan \
+                 (link flaps, dead rails, slowdowns; same seed = same faults)"
+            );
+            eprintln!(
+                "  elastic membership: --churn op:rank@iter[,op:rank@iter...] \
+                 with op in leave|join (e.g. --churn leave:3@1,join:3@2)"
+            );
+            eprintln!(
+                "  chaos: --seed s [--churn spec] [simulate flags] — seeded \
+                 chaos run, replayed twice (determinism check) + post-churn \
+                 collective verification"
             );
             if let Some(o) = other {
                 Err(anyhow!("unknown command {o:?}"))
@@ -130,6 +144,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("  throughput       {:.1} samples/s", r.throughput_samples_per_s);
     println!("  bytes/node/run   {}", fmt_bytes(r.bytes_per_node));
     println!("  NIC preemptions  {}", r.preemptions);
+    for line in &r.churn_log {
+        println!("  churn            {line}");
+    }
+    if r.chaos != mlsl::fabric::ChaosStats::default() {
+        println!(
+            "  chaos            {} zero-bw window(s), {} latency spike(s), \
+             {} rail death(s) ({} transfer(s) rerouted), {} slowdown(s)",
+            r.chaos.zero_bw_windows,
+            r.chaos.latency_spikes,
+            r.chaos.rails_killed,
+            r.chaos.transfers_rerouted,
+            r.chaos.slowdowns_applied,
+        );
+    }
     if timeline {
         println!("{}", r.timeline.ascii_gantt(100));
     }
@@ -290,6 +318,106 @@ fn cmd_topo(args: &Args) -> Result<()> {
         &rows,
     );
     println!("fingerprint: {}", mlsl::tuner::table::fingerprint(&topo));
+    Ok(())
+}
+
+/// Seeded chaos drill: install a `--chaos` fault plan (plus a `--churn`
+/// membership change — one node leaving by default), run the SAME
+/// simulation twice and require byte-identical results (the determinism
+/// guarantee: every fault is a pure function of the seed), then check
+/// the post-churn collectives bitwise against the symbolic executor.
+/// The final `recovery ok:` line is the CI grep target.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let seed = args.usize_or("seed", 42) as u64;
+    let mut sub = args.with("chaos", &seed.to_string());
+    let world = engine_config(&sub)?.dist.world();
+    if sub.get("churn").is_none() {
+        // Default drill: the highest rank leaves right after iteration 1.
+        if world < 2 {
+            return Err(anyhow!("chaos drill needs --nodes >= 2 (someone must leave)"));
+        }
+        sub = sub.with("churn", &format!("leave:{}@1", world - 1));
+    }
+    let cfg = engine_config(&sub)?;
+    let plan = cfg.chaos.clone().expect("--chaos installs a plan");
+    let slowdowns = plan.slowdown_milli.iter().filter(|m| **m != 1000).count();
+    println!(
+        "chaos plan (seed {seed}) on {} at p={world}: {} link flap(s), \
+         {} rail death(s), {} node slowdown(s)",
+        cfg.topo.name,
+        plan.flaps.len(),
+        plan.rail_deaths.len(),
+        slowdowns,
+    );
+
+    let a = simulate(cfg.clone());
+    let b = simulate(cfg.clone());
+    if a.iter_ns != b.iter_ns || a.bytes_per_node != b.bytes_per_node || a.chaos != b.chaos {
+        return Err(anyhow!(
+            "determinism violated: two runs with seed {seed} disagree \
+             (iter {} vs {}, bytes {} vs {})",
+            a.iter_ns,
+            b.iter_ns,
+            a.bytes_per_node,
+            b.bytes_per_node
+        ));
+    }
+    println!(
+        "determinism ok: two seeded runs agree (iter {}, {}/node, \
+         {} fault event(s) applied)",
+        fmt_ns(a.iter_ns),
+        fmt_bytes(a.bytes_per_node),
+        a.chaos.zero_bw_windows
+            + a.chaos.latency_spikes
+            + a.chaos.rails_killed
+            + a.chaos.slowdowns_applied,
+    );
+    for line in &a.churn_log {
+        println!("churn: {line}");
+    }
+
+    // Post-churn membership: replay the validated plan.
+    let mut active = vec![true; world];
+    if let Some(churn) = &cfg.churn {
+        for e in &churn.events {
+            match e.op {
+                mlsl::engine::ChurnOp::Leave(r) => active[r] = false,
+                mlsl::engine::ChurnOp::Join(r) => active[r] = true,
+            }
+        }
+    }
+    let survivors: Vec<usize> = (0..world).filter(|r| active[*r]).collect();
+    let p_after = survivors.len();
+    // Bitwise verification of the collectives the survivors will run,
+    // at the shrunken rank count, through the symbolic executor.
+    use mlsl::collectives::program::CollectiveKind as K;
+    use mlsl::collectives::Algorithm;
+    let n = 4096;
+    for (kind, label) in [
+        (K::Allreduce, "allreduce"),
+        (K::Allgather, "allgather"),
+        (K::Broadcast { root: 0 }, "broadcast"),
+    ] {
+        let alg = match kind {
+            K::Allreduce => cfg.selection.choose_for_members(
+                &cfg.topo,
+                &survivors,
+                K::Allreduce,
+                (4 * n) as u64,
+            ),
+            _ => Algorithm::Ring,
+        };
+        mlsl::collectives::verify::verify(kind, alg, p_after, n)
+            .map_err(|e| anyhow!("post-churn {label} ({alg}) at p={p_after}: {e}"))?;
+        println!("verified: post-churn {label} ({alg}) bitwise-correct at p={p_after}");
+    }
+    println!(
+        "recovery ok: {p_after}/{world} rank(s) survive, iter {} under {} \
+         rerouted transfer(s) and {} preemption(s)",
+        fmt_ns(a.iter_ns),
+        a.chaos.transfers_rerouted,
+        a.preemptions,
+    );
     Ok(())
 }
 

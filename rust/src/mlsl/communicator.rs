@@ -30,6 +30,17 @@ impl Communicator {
         fabric(p).into_iter().map(|ep| Communicator::from_endpoint(ep, p)).collect()
     }
 
+    /// Rebuild a world for the survivors of a membership change: a fresh
+    /// fully-connected fabric sized to the survivor count, returned as
+    /// `(old fabric rank, communicator)` pairs so callers keep addressing
+    /// each participant — and its data — by its ORIGINAL rank id. Only
+    /// the wire-level ranks are renumbered (they are positions in the
+    /// survivor list, the same convention the simulated path's
+    /// `rebuild_for_survivors` uses); nobody's payload moves.
+    pub fn elastic_world(survivors: &[Rank]) -> Vec<(Rank, Communicator)> {
+        survivors.iter().copied().zip(Communicator::world(survivors.len())).collect()
+    }
+
     pub fn from_endpoint(ep: ShmEndpoint, world: usize) -> Self {
         let rank = ep.rank;
         Self {
@@ -213,6 +224,29 @@ mod tests {
         });
         for v in outs {
             assert_eq!(v, (0..5).map(|i| 4.0 * i as f32).sum());
+        }
+    }
+
+    #[test]
+    fn elastic_world_keeps_survivor_ids_without_renumbering_data() {
+        // World of 4 loses rank 2. The rebuilt world spans [0, 1, 3]; each
+        // survivor still contributes a value keyed by its ORIGINAL rank id
+        // and the allreduce must sum exactly those.
+        let survivors = [0usize, 1, 3];
+        let pairs = Communicator::elastic_world(&survivors);
+        assert_eq!(pairs.len(), 3);
+        let handles: Vec<_> = pairs
+            .into_iter()
+            .map(|(old_rank, c)| {
+                thread::spawn(move || {
+                    assert_eq!(c.world_size(), 3);
+                    (old_rank, c.allreduce(vec![old_rank as f32; 16]))
+                })
+            })
+            .collect();
+        for h in handles {
+            let (old_rank, out) = h.join().unwrap();
+            assert!(out.iter().all(|v| *v == 4.0), "rank {old_rank}: {out:?}"); // 0+1+3
         }
     }
 

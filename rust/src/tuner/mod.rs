@@ -42,4 +42,4 @@ pub mod table;
 
 pub use policy::SelectionPolicy;
 pub use probe::{tune, ProbeSpec};
-pub use table::TuningTable;
+pub use table::{out_of_grid_count, TuningTable};

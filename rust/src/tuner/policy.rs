@@ -187,6 +187,39 @@ impl SelectionPolicy {
         selector::choose_flat_allgather_algorithm(topo, p, bytes)
     }
 
+    /// One-stop choice for an arbitrary member list (the engine's path,
+    /// including post-churn survivor sets): node-aligned contiguous
+    /// groups get the hierarchical chooser over a topology view
+    /// truncated to the tiers the members actually tile
+    /// ([`Topology::chooser_tier_depth`]); anything strided or
+    /// non-contiguous — which elastic departures routinely produce —
+    /// gets the flat chooser. Centralising this gate here means churned
+    /// communicators and healthy ones choose through the same code.
+    pub fn choose_for_members(
+        &self,
+        topo: &Topology,
+        members: &[crate::Rank],
+        kind: CollectiveKind,
+        bytes: u64,
+    ) -> Algorithm {
+        let p = members.len();
+        let depth = topo.aligned_tier_depth(members);
+        let usable = topo.chooser_tier_depth(members);
+        let restricted;
+        let view = if usable >= topo.tiers.len() {
+            topo
+        } else {
+            restricted = topo.restrict_tiers(usable);
+            &restricted
+        };
+        match (kind, depth > 0) {
+            (CollectiveKind::Allreduce, true) => self.choose_allreduce(view, p, bytes),
+            (CollectiveKind::Allreduce, false) => self.choose_flat_allreduce(topo, p, bytes),
+            (_, true) => self.choose_allgather(view, p, bytes),
+            (_, false) => self.choose_flat_allgather(topo, p, bytes),
+        }
+    }
+
     /// Predicted allreduce time under this policy: tuned policies answer
     /// from measured (log-interpolated) cells when they can, the analytic
     /// policy from the closed-form model — so design-space analyses built
@@ -343,6 +376,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn choose_for_members_gates_on_alignment() {
+        let topo = Topology::by_name("eth10g-x2e2").unwrap();
+        let policy = SelectionPolicy::default();
+        let bytes = 1u64 << 20;
+        // Whole-node contiguous members: hierarchical chooser on the
+        // (here untruncated) tier view.
+        let aligned: Vec<usize> = (0..8).collect();
+        assert_eq!(
+            policy.choose_for_members(&topo, &aligned, CollectiveKind::Allreduce, bytes),
+            policy.choose_allreduce(&topo, 8, bytes)
+        );
+        assert_eq!(
+            policy.choose_for_members(&topo, &aligned, CollectiveKind::Allgather, bytes),
+            policy.choose_allgather(&topo, 8, bytes)
+        );
+        // A post-churn survivor set with a hole is non-contiguous: the
+        // flat chooser decides (no tier discounts apply to it).
+        let holed: Vec<usize> = vec![0, 1, 2, 4, 5, 6, 7];
+        assert_eq!(topo.aligned_tier_depth(&holed), 0);
+        assert_eq!(
+            policy.choose_for_members(&topo, &holed, CollectiveKind::Allreduce, bytes),
+            policy.choose_flat_allreduce(&topo, 7, bytes)
+        );
     }
 
     #[test]

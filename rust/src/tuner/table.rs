@@ -12,12 +12,26 @@
 //! topology is reused by the engine, benches and examples.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use crate::collectives::program::CollectiveKind;
 use crate::collectives::Algorithm;
 use crate::fabric::topology::Topology;
 use crate::util::json::Json;
 use crate::Ns;
+
+/// Process-wide count of lookups whose rank count fell OUTSIDE the
+/// probed grid (below the smallest or above the largest measured row)
+/// and were clamped to the edge row. Post-churn rank counts routinely
+/// land here; the count lets tests and operators detect that a table is
+/// being stretched instead of silently trusting extrapolated picks.
+static OUT_OF_GRID: AtomicU64 = AtomicU64::new(0);
+static OUT_OF_GRID_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Lookups clamped to a grid-edge row so far (process-wide, monotonic).
+pub fn out_of_grid_count() -> u64 {
+    OUT_OF_GRID.load(Ordering::Relaxed)
+}
 
 /// Stable identity of the fabric a table was measured on: every parameter
 /// that influences simulated timings (NOT the display name — renaming a
@@ -167,12 +181,35 @@ impl TuningTable {
         out
     }
 
-    /// The measured rank-count row nearest to `p` in log space (ties to
-    /// the smaller row), as size-sorted cells.
-    fn nearest_row(&self, kind: CollectiveKind, p: usize) -> Option<Vec<&MeasuredCell>> {
+    /// The measured rank-count row a lookup at `p` snaps to: nearest in
+    /// log space inside the probed grid (ties to the smaller row), the
+    /// edge row when `p` falls OUTSIDE the grid entirely. Out-of-grid
+    /// queries used to ride the nearest-distance scan silently — an
+    /// elastic shrink below the smallest probed row (or a query above
+    /// the largest) would apply that row's measurements as if they were
+    /// local, with nothing telling the operator the table never covered
+    /// this rank count. The clamp is now explicit, counted
+    /// ([`out_of_grid_count`]) and warned about once per process.
+    pub fn snapped_row(&self, kind: CollectiveKind, p: usize) -> Option<usize> {
         let cells = self.cells(kind);
         if cells.is_empty() || p == 0 {
             return None;
+        }
+        let min = cells.iter().map(|c| c.ranks).min().expect("non-empty");
+        let max = cells.iter().map(|c| c.ranks).max().expect("non-empty");
+        if p < min || p > max {
+            let clamped = if p < min { min } else { max };
+            OUT_OF_GRID.fetch_add(1, Ordering::Relaxed);
+            if !OUT_OF_GRID_WARNED.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "warning: tuning table for {} has no row at p={p} \
+                     (probed grid spans {min}..={max}); clamping to the \
+                     p={clamped} row — consider re-tuning after large \
+                     membership changes",
+                    self.topo_name
+                );
+            }
+            return Some(clamped);
         }
         let dist = |r: usize| ((r as f64).ln() - (p as f64).ln()).abs();
         let mut best: Option<usize> = None;
@@ -183,8 +220,13 @@ impl TuningTable {
                 _ => {}
             }
         }
-        let row_p = best?;
-        Some(cells.iter().filter(|c| c.ranks == row_p).collect())
+        best
+    }
+
+    /// Size-sorted cells of [`Self::snapped_row`]'s pick.
+    fn nearest_row(&self, kind: CollectiveKind, p: usize) -> Option<Vec<&MeasuredCell>> {
+        let row_p = self.snapped_row(kind, p)?;
+        Some(self.cells(kind).iter().filter(|c| c.ranks == row_p).collect())
     }
 
     /// Per-algorithm times at (p, bytes): nearest rank row, then
@@ -411,6 +453,27 @@ mod tests {
         assert_eq!(t.lookup(K::Allreduce, 7, 1 << 10, &legal7), Some(A::Ring));
         // Unmeasured kind → None.
         assert_eq!(t.lookup(K::Allgather, 8, 1 << 10, &any), None);
+    }
+
+    #[test]
+    fn out_of_grid_rank_counts_clamp_to_edge_rows_and_are_counted() {
+        let t = sample(); // measured rows: p = 6 and p = 8
+        let any = |_: Algorithm| true;
+        let before = out_of_grid_count();
+        // Below the grid: clamp to the smallest row, not a silent
+        // nearest-distance extrapolation.
+        assert_eq!(t.snapped_row(K::Allreduce, 2), Some(6));
+        // Above it: clamp to the largest.
+        assert_eq!(t.snapped_row(K::Allreduce, 100), Some(8));
+        // (>= not ==: the counter is process-wide and other tests run in
+        // parallel.)
+        assert!(out_of_grid_count() >= before + 2);
+        // Clamped lookups still answer, from the edge row's cells.
+        assert_eq!(t.lookup(K::Allreduce, 2, 1 << 20, &any), Some(A::Ring));
+        // In-grid queries keep the log-nearest snap (7 → 8).
+        assert_eq!(t.snapped_row(K::Allreduce, 7), Some(8));
+        assert_eq!(t.snapped_row(K::Allreduce, 0), None);
+        assert_eq!(t.snapped_row(K::Allgather, 4), None);
     }
 
     #[test]

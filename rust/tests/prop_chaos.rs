@@ -1,0 +1,219 @@
+//! Property tests for chaos-mode fault injection: faults bend the
+//! CLOCK, never the data — and everything is a pure function of the
+//! seed.
+//!
+//! Three invariant families:
+//!
+//! * **seed determinism** — the same `ChaosPlan` seed derives the same
+//!   plan, and two simulators running it over the same traffic emit
+//!   byte-identical event streams down to every fault counter;
+//! * **no corrupt payloads** — a collective executed under link flaps,
+//!   rail deaths and slowdowns completes and delivers exactly the
+//!   healthy run's multiset of logical messages (same sources,
+//!   destinations and byte counts — faults may only delay them);
+//! * **work conservation across rail death** — when a rail dies
+//!   mid-transfer its queued pieces migrate to surviving rails and the
+//!   summed per-rail busy time still accounts for the whole transfer,
+//!   matching the healthy single-rail run within per-piece rounding.
+
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::simexec::SimCollectives;
+use mlsl::collectives::{Algorithm as A, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::{ChaosPlan, MsgDesc, NetSim, RailDeath, SimEvent};
+use mlsl::util::proptest::{run as prop_run, Config};
+
+/// Flat multi-rail test fabric (8 Gbps = 1 B/ns per rail, 512-byte
+/// chunks) — the same physics as prop_rails, so striping engages.
+fn flat_topo(rails: u32, gamma: u64) -> Topology {
+    Topology::flat("chaostest", 8.0, 1_000, gamma, 512)
+        .with_rails(rails)
+        .unwrap()
+}
+
+#[test]
+fn prop_same_seed_same_plan_same_event_stream() {
+    let topo = Topology::by_name("eth10g-x2e2").unwrap();
+    let p = 8;
+    prop_run(
+        Config { cases: 60, seed: 81 },
+        |r| {
+            let seed = r.below(u64::MAX);
+            let horizon = 10_000 + r.below(10_000_000);
+            let k = 1 + r.usize_below(8);
+            let msgs: Vec<MsgDesc> = (0..k)
+                .map(|i| {
+                    let src = r.usize_below(p);
+                    let dst = (src + 1 + r.usize_below(p - 1)) % p;
+                    MsgDesc {
+                        src,
+                        dst,
+                        bytes: 1 + r.below(64 << 10),
+                        priority: r.below(4) as u8,
+                        tag: i as u64,
+                    }
+                })
+                .collect();
+            (seed, horizon, msgs)
+        },
+        |(seed, horizon, msgs)| {
+            // Plan derivation is a pure function of its arguments.
+            let plan = ChaosPlan::generate(*seed, &topo, p, *horizon);
+            if plan != ChaosPlan::generate(*seed, &topo, p, *horizon) {
+                return Err(format!("seed {seed}: plan derivation not deterministic"));
+            }
+            // Two independent simulators under the same plan and traffic:
+            // byte-identical event streams, identical fault accounting.
+            let run = |plan: ChaosPlan| {
+                let mut sim = NetSim::new(topo.clone(), p);
+                sim.set_chaos(plan);
+                for m in msgs {
+                    sim.send(m.clone());
+                }
+                (sim.drain(), sim.chaos_stats)
+            };
+            let (ev_a, stats_a) = run(plan.clone());
+            let (ev_b, stats_b) = run(plan);
+            if ev_a != ev_b {
+                return Err(format!("seed {seed}: event streams diverged"));
+            }
+            if stats_a != stats_b {
+                return Err(format!(
+                    "seed {seed}: fault counters diverged ({stats_a:?} vs {stats_b:?})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_faulted_collectives_deliver_uncorrupted_payloads() {
+    prop_run(
+        Config { cases: 60, seed: 82 },
+        |r| {
+            let p = 2 + r.usize_below(7); // 2..9
+            let n = 1 + r.usize_below(2_000);
+            let seed = r.below(u64::MAX);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                A::RecursiveDoubling
+            } else {
+                A::Ring
+            };
+            let kind = if r.below(2) == 0 {
+                CollectiveKind::Allreduce
+            } else {
+                CollectiveKind::Allgather
+            };
+            (p, n, seed, kind, alg)
+        },
+        |&(p, n, seed, kind, alg)| {
+            type Delivered = Vec<(usize, usize, u64)>;
+            let topo = flat_topo(4, 100);
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            let run = |chaos: Option<ChaosPlan>| -> Result<(Delivered, u64), String> {
+                let mut sim = NetSim::new(topo.clone(), p);
+                if let Some(plan) = chaos {
+                    sim.set_chaos(plan);
+                }
+                let mut exec = SimCollectives::new();
+                let mut completions = exec.post(&mut sim, 1, progs.clone(), WireDtype::F32, 1);
+                let mut delivered = Vec::new();
+                while exec.in_flight() > 0 {
+                    let ev = sim
+                        .next()
+                        .ok_or_else(|| format!("{kind:?}/{alg} p={p}: deadlock under faults"))?;
+                    if let SimEvent::MsgDelivered { msg, .. } = &ev {
+                        delivered.push((msg.src, msg.dst, msg.bytes));
+                    }
+                    exec.on_event_into(&mut sim, &ev, &mut completions);
+                }
+                if completions.len() != p {
+                    return Err(format!(
+                        "{kind:?}/{alg} p={p}: {} of {p} ranks completed",
+                        completions.len()
+                    ));
+                }
+                delivered.sort_unstable();
+                Ok((delivered, sim.stats.bytes_sent))
+            };
+            let (healthy, healthy_bytes) = run(None)?;
+            // A horizon spanning the healthy run so the faults actually
+            // overlap the collective's lifetime.
+            let plan = ChaosPlan::generate(seed, &topo, p, 200_000);
+            let (faulted, faulted_bytes) = run(Some(plan))?;
+            if faulted != healthy {
+                return Err(format!(
+                    "{kind:?}/{alg} p={p} seed={seed}: faulted run delivered a \
+                     different logical-message multiset"
+                ));
+            }
+            if faulted_bytes != healthy_bytes {
+                return Err(format!(
+                    "{kind:?}/{alg} p={p} seed={seed}: faulted run moved \
+                     {faulted_bytes} bytes, healthy moved {healthy_bytes}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rail_death_mid_transfer_conserves_work() {
+    prop_run(
+        Config { cases: 100, seed: 83 },
+        |r| {
+            // At least one whole chunk so striping engages; gamma = 0 so
+            // busy time is pure wire work.
+            let bytes = 512 + r.below(40_000);
+            let rails = [2u32, 4][r.usize_below(2)];
+            let rail = r.below(rails as u64) as u32;
+            let at = r.below(bytes); // 1 B/ns: somewhere inside the transfer
+            (bytes, rails, rail, at)
+        },
+        |&(bytes, rails, rail, at)| {
+            // Healthy single-rail reference.
+            let mut s1 = NetSim::new(flat_topo(1, 0), 2);
+            s1.send(MsgDesc { src: 0, dst: 1, bytes, priority: 1, tag: 1 });
+            s1.drain();
+            let single = s1.nic_busy_ns(0);
+            // Striped run with one rail dying mid-transfer.
+            let mut sr = NetSim::new(flat_topo(rails, 0), 2);
+            sr.set_chaos(ChaosPlan {
+                seed: 0,
+                flaps: Vec::new(),
+                rail_deaths: vec![RailDeath { node: 0, rail, at }],
+                slowdown_milli: vec![1000; 2],
+            });
+            sr.send(MsgDesc { src: 0, dst: 1, bytes, priority: 1, tag: 1 });
+            let events = sr.drain();
+            if !events
+                .iter()
+                .any(|e| matches!(e, SimEvent::MsgDelivered { msg, .. } if msg.bytes == bytes))
+            {
+                return Err(format!("bytes={bytes} rails={rails}: message never delivered"));
+            }
+            if !sr.rail_dead(0, rail as usize) {
+                return Err(format!("rail {rail} still alive after its death event"));
+            }
+            if sr.alive_rails(0) != rails as usize - 1 {
+                return Err(format!("expected {} surviving rails", rails - 1));
+            }
+            let summed: u64 = (0..sr.num_rails()).map(|i| sr.rail_busy_ns(0, i)).sum();
+            if summed != sr.nic_busy_ns(0) {
+                return Err("nic_busy_ns must be the per-rail sum".into());
+            }
+            // Work conservation: the dying rail's queued pieces migrate
+            // with their remaining wire time intact; each of the <= rails
+            // pieces rounds at most 1 ns.
+            if summed.abs_diff(single) > rails as u64 {
+                return Err(format!(
+                    "bytes={bytes} rails={rails} death@{at}: summed per-rail \
+                     busy {summed} vs single-rail {single}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

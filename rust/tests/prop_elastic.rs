@@ -1,0 +1,154 @@
+//! Property tests for elastic membership: after any churn sequence the
+//! surviving communicator is just a smaller communicator — same
+//! collective semantics, same bitwise results, and nobody's identity
+//! moves.
+//!
+//! Three invariant families:
+//!
+//! * **post-rebuild collectives are bitwise-correct** — for random
+//!   leave/join/leave sequences at p ∈ 2..33, the programs
+//!   `rebuild_for_survivors` compiles at the shrunken rank count pass
+//!   the symbolic executor's exact payload check for allreduce,
+//!   allgather and broadcast;
+//! * **survivors keep their data without renumbering** — the rebuild's
+//!   fabric-rank map IS the survivor list, in original id order, for
+//!   contiguous and strided member sets alike;
+//! * **the engine completes under random churn** — random leave (and
+//!   optional rejoin) schedules across flat, tiered and multi-rail
+//!   presets finish every configured iteration with clean bookkeeping.
+
+use mlsl::collectives::program::{rebuild_for_survivors, survivors, CollectiveKind};
+use mlsl::collectives::verify::{check, init_bufs, run as sym_run};
+use mlsl::collectives::Algorithm as A;
+use mlsl::engine::{simulate, ChurnPlan, CommMode, EngineConfig};
+use mlsl::fabric::topology::Topology;
+use mlsl::models::ModelDesc;
+use mlsl::util::proptest::{run as prop_run, Config};
+
+#[test]
+fn prop_post_churn_collectives_bitwise_correct() {
+    prop_run(
+        Config { cases: 150, seed: 71 },
+        |r| {
+            let p = 2 + r.usize_below(31); // p in 2..33
+            let n = 1 + r.usize_below(1_000);
+            // A churn history folded down to its final membership: each
+            // rank may leave, then some leavers rejoin (leave/join/leave
+            // sequences only ever matter through the final active set).
+            let mut alive: Vec<bool> = (0..p).map(|_| r.below(3) > 0).collect();
+            for a in alive.iter_mut() {
+                if !*a && r.below(4) == 0 {
+                    *a = true; // rejoin
+                }
+            }
+            alive[r.usize_below(p)] = true; // never leave everyone
+            (p, n, alive)
+        },
+        |(p, n, alive)| {
+            let (p, n) = (*p, *n);
+            let members: Vec<usize> = (0..p).collect();
+            let surv = survivors(members.clone(), |r| alive[r]);
+            let want: Vec<usize> = (0..p).filter(|r| alive[*r]).collect();
+            if surv != want {
+                return Err(format!("survivor ids renumbered: {surv:?} vs {want:?}"));
+            }
+            let p2 = surv.len();
+            let mut cases = vec![
+                (CollectiveKind::Allreduce, A::Ring),
+                (CollectiveKind::Allgather, A::Ring),
+                (CollectiveKind::Broadcast { root: 0 }, A::Ring),
+            ];
+            if p2.is_power_of_two() && p2 >= 2 {
+                cases.push((CollectiveKind::Allreduce, A::RecursiveDoubling));
+            }
+            for (kind, alg) in cases {
+                let (progs, map) = rebuild_for_survivors(kind, alg, &members, |r| alive[r], n)
+                    .map_err(|e| format!("{kind:?}/{alg} at p'={p2}: {e}"))?;
+                if map != surv {
+                    return Err(format!(
+                        "{kind:?}: rebuild map {map:?} is not the survivor list {surv:?}"
+                    ));
+                }
+                if progs.len() != p2 {
+                    return Err(format!("{kind:?}: {} programs for {p2} survivors", progs.len()));
+                }
+                // Bitwise check through the symbolic executor: program
+                // rank i's payload carries survivor map[i]'s identity.
+                let finals = sym_run(&progs, init_bufs(kind, p2, n))
+                    .map_err(|e| format!("{kind:?}/{alg} p'={p2}: {e}"))?;
+                check(kind, p2, n, &finals)
+                    .map_err(|e| format!("{kind:?}/{alg} p'={p2}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn survivors_preserve_ids_and_order_for_strided_members() {
+    // Strided (hybrid-parallel) member lists shrink the same way:
+    // filtering, never renumbering — and the helper is order-preserving
+    // even when ids are non-monotonic.
+    let strided = vec![1usize, 5, 9, 13];
+    assert_eq!(survivors(strided.clone(), |r| r != 9), vec![1, 5, 13]);
+    assert_eq!(survivors(strided.clone(), |_| true), strided);
+    assert_eq!(survivors(strided, |_| false), Vec::<usize>::new());
+    let shuffled = vec![7usize, 2, 11, 4];
+    assert_eq!(survivors(shuffled, |r| r != 2), vec![7, 11, 4]);
+}
+
+#[test]
+fn prop_engine_completes_under_random_churn() {
+    let presets = ["eth10g", "eth10g-x2", "eth10g-x2e2"];
+    prop_run(
+        Config { cases: 24, seed: 72 },
+        |r| {
+            let preset = r.usize_below(presets.len());
+            let p = 2 + r.usize_below(7); // 2..9 nodes
+            let leaver = r.usize_below(p);
+            let boundary = r.usize_below(2); // after warmup or iter 1
+            let rejoin = r.below(2) == 0;
+            let bulk = r.below(2) == 0;
+            (preset, p, leaver, boundary, rejoin, bulk)
+        },
+        |&(preset, p, leaver, boundary, rejoin, bulk)| {
+            let mut spec = format!("leave:{leaver}@{boundary}");
+            if rejoin {
+                spec.push_str(&format!(",join:{leaver}@{}", boundary + 1));
+            }
+            let plan = ChurnPlan::parse(&spec).map_err(|e| format!("{spec}: {e}"))?;
+            plan.validate(p).map_err(|e| format!("{spec} at p={p}: {e}"))?;
+            let topo = Topology::by_name(presets[preset]).expect("preset exists");
+            let mut cfg = EngineConfig::new(
+                ModelDesc::by_name("resnet50").expect("model exists"),
+                topo,
+                p,
+            );
+            cfg.iterations = 2;
+            cfg.mode = if bulk {
+                CommMode::BulkSync
+            } else {
+                CommMode::MlslAsync { comm_cores: 2 }
+            };
+            cfg.churn = Some(plan);
+            let r = simulate(cfg);
+            if r.iter_ns == 0 {
+                return Err(format!("{spec}: zero iteration time"));
+            }
+            let applied = if rejoin { 2 } else { 1 };
+            if r.churn_log.len() != applied {
+                return Err(format!(
+                    "{spec} on {}: {} churn events applied, expected {applied} \
+                     ({:?})",
+                    presets[preset],
+                    r.churn_log.len(),
+                    r.churn_log
+                ));
+            }
+            if r.per_iter_ns.is_empty() || r.per_iter_ns.iter().any(|&d| d == 0) {
+                return Err(format!("{spec}: degenerate per-iteration spans {:?}", r.per_iter_ns));
+            }
+            Ok(())
+        },
+    );
+}

@@ -198,6 +198,59 @@ fn tuned_policy_is_near_optimal_off_grid_at_the_extremes() {
 }
 
 #[test]
+fn post_churn_rank_counts_outside_the_grid_clamp_instead_of_extrapolating() {
+    use mlsl::collectives::Algorithm;
+    use mlsl::tuner::out_of_grid_count;
+    use mlsl::tuner::policy::allreduce_legal;
+    use mlsl::tuner::table::MeasuredCell;
+    // Regression: the nearest-row lookup used to ride its log-distance
+    // scan for ANY p — an elastic shrink below the smallest probed row
+    // (or growth above the largest) silently applied a far-away row's
+    // measurements. Now the clamp is explicit, counted and warned about.
+    let mut table = TuningTable::for_topology(&Topology::eth_10g());
+    for p in [8usize, 32] {
+        table.insert(
+            CollectiveKind::Allreduce,
+            MeasuredCell::new(
+                p,
+                1 << 20,
+                vec![
+                    (Algorithm::Ring, 1_000 * p as u64),
+                    (Algorithm::RecursiveDoubling, 900 * p as u64),
+                ],
+            ),
+        );
+    }
+    let before = out_of_grid_count();
+    // Post-churn shrink below the smallest probed row: clamp to p=8.
+    assert_eq!(table.snapped_row(CollectiveKind::Allreduce, 3), Some(8));
+    // Growth above the largest probed row: clamp to p=32.
+    assert_eq!(table.snapped_row(CollectiveKind::Allreduce, 100), Some(32));
+    // Both clamps are visible on the process-wide counter (>= because
+    // tests run in parallel).
+    assert!(out_of_grid_count() >= before + 2);
+    // The clamped row's preference (rdoubling) is still filtered by
+    // legality at the ACTUAL rank count — rdoubling does not exist at
+    // p=3, so the pick degrades to ring rather than an unbuildable alg.
+    let legal3 = |a: Algorithm| allreduce_legal(a, 3);
+    assert_eq!(
+        table.lookup(CollectiveKind::Allreduce, 3, 1 << 20, &legal3),
+        Some(Algorithm::Ring)
+    );
+    // In-grid queries keep the log-nearest snap, no clamp involved:
+    // ln-distance puts 12 nearer 8, 20 nearer 32.
+    assert_eq!(table.snapped_row(CollectiveKind::Allreduce, 12), Some(8));
+    assert_eq!(table.snapped_row(CollectiveKind::Allreduce, 20), Some(32));
+    // A tuned policy riding the clamped row never errors in build —
+    // the same guarantee the randomized legality sweep above checks.
+    let policy = SelectionPolicy::Tuned(table);
+    for p in [2usize, 3, 5, 64, 100] {
+        let pick = policy.choose_allreduce(&Topology::eth_10g(), p, 1 << 20);
+        program::build(CollectiveKind::Allreduce, pick, p, 64).unwrap();
+    }
+}
+
+#[test]
 fn tune_then_load_drives_the_engine_end_to_end() {
     // The CLI path, without the CLI: probe a table, serialize it, load it
     // through the config layer, run a simulated iteration under it.
