@@ -46,8 +46,8 @@ fn main() {
     // -- a tuning table probed on the HEALTHY world ---------------------
     // Rank rows 32 and 128 bracket the post-churn count; every timing is
     // a real simulator measurement so "measured best" means something.
-    let hier8 = Algorithm::hierarchical(&[8]).unwrap();
-    let hier8x128 = Algorithm::hierarchical(&[8, 128]).unwrap();
+    let hier8 = Algorithm::try_hier(&[8]).unwrap();
+    let hier8x128 = Algorithm::try_hier(&[8, 128]).unwrap();
     let mut table = TuningTable::for_topology(&topo);
     for p in [32usize, P] {
         let mut algs = vec![Algorithm::Ring, Algorithm::RecursiveDoubling, hier8];

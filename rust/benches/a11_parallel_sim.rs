@@ -1,0 +1,228 @@
+//! **Ablation A11**: the partitioned parallel simulator
+//! (`collectives::parexec`) — conservative-lookahead windows over
+//! node-sharded `NetSim`s (`--sim-threads`).
+//!
+//! The observable contract this bench ASSERTS:
+//!
+//! * **exactness** — a partitioned run reproduces the serial simulator
+//!   byte-for-byte: full delivered-message/completion equality for real
+//!   ring programs at p = 256, and identical finish times / message
+//!   counts for the O(p)-state pattern workloads at p = 1024 — before
+//!   any timing is taken;
+//! * **speedup** — the full p = 4096 ring allreduce (33.5 M messages)
+//!   runs >= 2x faster with 4 worker threads than serial (asserted only
+//!   when the host actually has >= 4 cores);
+//! * **scale** — p = 65,536 workloads (full recursive doubling, and a
+//!   128-round ring window, honestly labeled) complete in wall-clock
+//!   seconds; a full 131,070-round ring at that scale is ~8.6e9
+//!   messages, which no event-driven simulator does in seconds, so the
+//!   bench prints the linear extrapolation instead of pretending.
+//!
+//! Emits `BENCH_parallel_sim.json` (repo root) with serial vs.
+//! partitioned wall-clock per case; the representative numbers are
+//! recorded in `docs/ARCHITECTURE.md` §"Simulator performance".
+//!
+//! Run: `cargo bench --bench a11_parallel_sim`
+
+use std::time::Instant;
+
+use mlsl::collectives::parexec::{
+    run_collective, run_collective_serial, run_pattern, FleetConfig, ParOutcome, Pattern,
+    PatternSpec,
+};
+use mlsl::collectives::program::allreduce_ring;
+use mlsl::collectives::WireDtype;
+use mlsl::fabric::topology::Topology;
+use mlsl::metrics::print_table;
+
+const THREADS: usize = 4;
+
+fn topo() -> Topology {
+    Topology::eth_10g() // 10 Gbit/s, 30 us alpha: lookahead = 30 us
+}
+
+fn time_pattern(spec: &PatternSpec, cfg: &FleetConfig) -> (f64, ParOutcome) {
+    let t0 = Instant::now();
+    let out = run_pattern(&topo(), spec, cfg);
+    (t0.elapsed().as_secs_f64() * 1e3, out)
+}
+
+struct Case {
+    label: &'static str,
+    spec: PatternSpec,
+    serial_ms: f64,
+    par_ms: f64,
+}
+
+fn main() {
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // -- exactness first: nothing below is worth timing if this fails --
+    // Real chunk programs, byte-level equality at p = 256.
+    let t = topo();
+    let (p, n) = (256usize, 64 << 10);
+    let serial =
+        run_collective_serial(&t, p, allreduce_ring(p, n), WireDtype::F32, 1, None, true);
+    for (shards, threads) in [(2usize, 1usize), (4, 4)] {
+        let cfg = FleetConfig { shards, threads, chaos: None, record_deliveries: true };
+        let par = run_collective(&t, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
+        assert_eq!(par.delivered, serial.delivered, "shards={shards}");
+        assert_eq!(par.completions, serial.completions, "shards={shards}");
+        assert_eq!(par.finish_ns, serial.finish_ns, "shards={shards}");
+        assert_eq!(par.final_clock, serial.final_clock, "shards={shards}");
+    }
+    // Pattern workload equality at p = 1024 (the scale path).
+    let eq_spec = PatternSpec::ring_allreduce(1024, 64 << 10);
+    let base = run_pattern(
+        &t,
+        &eq_spec,
+        &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+    );
+    let fleet = run_pattern(&t, &eq_spec, &FleetConfig::threaded(THREADS));
+    assert_eq!(fleet.finish_ns, base.finish_ns, "p=1024 ring finish");
+    assert_eq!(fleet.stats.msgs_sent, base.stats.msgs_sent);
+    assert_eq!(fleet.stats.bytes_sent, base.stats.bytes_sent);
+    println!("equivalence: serial == partitioned at p=256 (programs) and p=1024 (pattern)");
+
+    // -- the measured ladder -------------------------------------------
+    let mut cases = vec![
+        Case {
+            label: "ring allreduce (full)",
+            spec: PatternSpec::ring_allreduce(1024, 64 << 10),
+            serial_ms: 0.0,
+            par_ms: 0.0,
+        },
+        Case {
+            label: "ring allreduce (full)",
+            spec: PatternSpec::ring_allreduce(4096, 64 << 10),
+            serial_ms: 0.0,
+            par_ms: 0.0,
+        },
+        Case {
+            label: "recursive doubling (full)",
+            spec: PatternSpec::rdoubling_allreduce(16384, 1 << 20),
+            serial_ms: 0.0,
+            par_ms: 0.0,
+        },
+        Case {
+            label: "recursive doubling (full)",
+            spec: PatternSpec::rdoubling_allreduce(65536, 1 << 20),
+            serial_ms: 0.0,
+            par_ms: 0.0,
+        },
+        Case {
+            label: "ring window (128 rounds)",
+            spec: PatternSpec {
+                pattern: Pattern::Ring,
+                p: 65536,
+                msg_bytes: 64 << 10,
+                rounds: 128,
+                priority: 1,
+            },
+            serial_ms: 0.0,
+            par_ms: 0.0,
+        },
+    ];
+    let serial_cfg = FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false };
+    let par_cfg = FleetConfig::threaded(THREADS);
+    for c in &mut cases {
+        let (s_ms, s_out) = time_pattern(&c.spec, &serial_cfg);
+        let (p_ms, p_out) = time_pattern(&c.spec, &par_cfg);
+        assert_eq!(p_out.finish_ns, s_out.finish_ns, "{} p={}", c.label, c.spec.p);
+        assert_eq!(p_out.stats.msgs_sent, s_out.stats.msgs_sent);
+        c.serial_ms = s_ms;
+        c.par_ms = p_ms;
+    }
+
+    let mut rows = Vec::new();
+    for c in &cases {
+        rows.push(vec![
+            format!("{} p={}", c.label, c.spec.p),
+            c.spec.total_msgs().to_string(),
+            format!("{:.0}", c.serial_ms),
+            format!("{:.0}", c.par_ms),
+            format!("{:.2}x", c.serial_ms / c.par_ms.max(1e-9)),
+        ]);
+    }
+    print_table(
+        &format!("A11: serial vs {THREADS}-thread partitioned simulation, eth10g"),
+        &["workload", "msgs", "serial ms", "partitioned ms", "speedup"],
+        &rows,
+    );
+
+    // -- asserts on the ladder ------------------------------------------
+    // p = 65,536 completes in wall-clock seconds, partitioned.
+    for c in &cases {
+        if c.spec.p == 65536 {
+            assert!(
+                c.par_ms < 60_000.0,
+                "{} p=65536 took {:.0} ms partitioned — not 'seconds'",
+                c.label,
+                c.par_ms
+            );
+        }
+    }
+    // >= 2x at p = 4096 with 4 workers — only meaningful on a >= 4-core
+    // host (CI runners qualify; a 2-core laptop prints SKIP).
+    let big_ring = &cases[1];
+    let speedup = big_ring.serial_ms / big_ring.par_ms.max(1e-9);
+    if host_cores >= THREADS {
+        assert!(
+            speedup >= 2.0,
+            "p=4096 ring: {THREADS}-thread speedup {speedup:.2}x < 2x \
+             (serial {:.0} ms, partitioned {:.0} ms, {host_cores} cores)",
+            big_ring.serial_ms,
+            big_ring.par_ms
+        );
+    } else {
+        println!("SKIP speedup assert: host has {host_cores} cores (< {THREADS})");
+    }
+
+    // Honest extrapolation for the full ring at p = 65,536: steady-state
+    // ring throughput is round-invariant, so scale the 128-round window.
+    let window = &cases[4];
+    let full_rounds = 2 * (65536 - 1) as f64;
+    let scale = full_rounds / window.spec.rounds as f64;
+    println!(
+        "\nfull p=65536 ring ({:.2e} msgs) extrapolates to ~{:.0} min serial, ~{:.0} min \
+         at {THREADS} threads",
+        full_rounds * 65536.0,
+        window.serial_ms * scale / 60_000.0,
+        window.par_ms * scale / 60_000.0,
+    );
+
+    // -- emit BENCH_parallel_sim.json at the repo root ------------------
+    let mut json = String::from("{\n  \"bench\": \"a11_parallel_sim\",\n");
+    json.push_str(&format!("  \"threads\": {THREADS},\n  \"host_cores\": {host_cores},\n"));
+    json.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let pat = match c.spec.pattern {
+            Pattern::Ring => "ring",
+            Pattern::RecursiveDoubling => "rdoubling",
+        };
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"pattern\": \"{pat}\", \"p\": {}, \
+             \"rounds\": {}, \"msgs\": {}, \"serial_ms\": {:.1}, \
+             \"partitioned_ms\": {:.1}, \"speedup\": {:.2}}}{}\n",
+            c.label,
+            c.spec.p,
+            c.spec.rounds,
+            c.spec.total_msgs(),
+            c.serial_ms,
+            c.par_ms,
+            c.serial_ms / c.par_ms.max(1e-9),
+            if i + 1 < cases.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_parallel_sim.json");
+    std::fs::write(out, &json).expect("write BENCH_parallel_sim.json");
+    println!("wrote {out}");
+
+    println!("\nexpected shape: ring traffic is neighbor-local, so contiguous node shards");
+    println!("keep almost every message shard-local and the speedup approaches the worker");
+    println!("count; recursive doubling's late rounds all cross shards, so coordinator");
+    println!("mail-routing caps its speedup — still ahead of serial at the p where it");
+    println!("matters. Exactness is asserted before timing: the partitioned clock is an");
+    println!("implementation detail, never a different answer. OK");
+}

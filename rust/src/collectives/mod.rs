@@ -20,7 +20,11 @@
 //! for allgather too (ring vs block-doubling). The closed forms here are
 //! the *analytic* arm of [`crate::tuner::SelectionPolicy`]; the tuned arm
 //! replaces them with crossovers measured by running these same programs
-//! through [`simexec`] on the live topology.
+//! through [`simexec`] on the live topology. [`parexec`] runs the same
+//! timing workloads over a *partitioned* fleet of simulator shards with
+//! conservative-lookahead windows (`--sim-threads`), producing
+//! byte-identical results to [`simexec`] while scaling to
+//! datacenter-size rank counts — see `docs/ARCHITECTURE.md`.
 //!
 //! ## Hierarchical (N-level) collectives
 //!
@@ -44,6 +48,7 @@
 //! root (leader relay) have hierarchical builders too ([`program`]).
 
 pub mod exec;
+pub mod parexec;
 pub mod priority;
 pub mod program;
 pub mod quant;

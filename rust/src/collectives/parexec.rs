@@ -1,0 +1,689 @@
+//! Partitioned parallel execution of simulated workloads: conservative
+//! PDES over a fleet of [`NetSim`] shards.
+//!
+//! # How it works
+//!
+//! The fabric is split into `shards` node-contiguous sub-simulators
+//! ([`NetSim::new_partition`] / [`crate::fabric::par::shard_of`]), each
+//! with its own event heap. The coordinator repeatedly:
+//!
+//! 1. takes the fleet minimum of [`NetSim::next_event_time`] (`w_min`),
+//! 2. lets every shard execute all local events strictly before
+//!    `w_min + lookahead` ([`NetSim::next_before`]) — in parallel on
+//!    scoped worker threads when `threads > 1`,
+//! 3. drains each shard's cross-partition outbox ([`NetSim::take_mail`]),
+//!    sorts the mail deterministically
+//!    ([`crate::fabric::par::mail_key`]) and injects every message into
+//!    its destination shard ([`NetSim::inject_delivery`]).
+//!
+//! `lookahead` is [`Topology::lookahead_ns`]: a cross-shard hop always
+//! rides a NIC tier (nodes are never split), so a message produced by an
+//! event at time `t ≥ w_min` is delivered at
+//! `t + latency ≥ w_min + lookahead` — never inside any shard's past.
+//! That makes the windowed run *exact*, not approximate: for a
+//! single-collective (uniform-priority) workload the fleet produces the
+//! byte-identical delivered-message multiset, identical completion
+//! timestamps, identical final clocks and identical chaos fault counters
+//! as the serial simulator — `tests/prop_parallel.rs` proves it shape by
+//! shape, and the `a11_parallel_sim` bench demonstrates the speedup.
+//!
+//! # Why the engine's driver loop is NOT partitioned
+//!
+//! The engine ([`crate::engine`]) posts a collective at the instant its
+//! *last* member reaches the issue point and releases churn holds the
+//! same way: a zero-latency coupling from one rank's event to sends on
+//! *every* rank. Conservative PDES requires strictly positive lookahead
+//! on every cross-partition dependency, so those barriers cannot be
+//! windowed without rollback (optimistic PDES), which is out of scope.
+//! The engine therefore keeps its exact serial loop at any
+//! `--sim-threads` setting, while everything underneath it that is
+//! barrier-free parallelizes: standalone collective timing (this
+//! module) and tuning-grid probing ([`crate::tuner::probe`]). Mixed-
+//! priority multi-collective workloads have the same caveat — FIFO
+//! order *within* one priority class on one NIC is only reproduced
+//! exactly for uniform-priority workloads, which is exactly what the
+//! tuner and the benches time. See `docs/ARCHITECTURE.md` §"Partitioned
+//! mode" for the full argument.
+
+use super::program::Program;
+use super::simexec::{Completion, SimCollectives};
+use super::WireDtype;
+use crate::fabric::par::{mail_key, shard_of, Mail};
+use crate::fabric::sim::{ChaosPlan, ChaosStats, SimStats};
+use crate::fabric::topology::Topology;
+use crate::fabric::{MsgDesc, NetSim, SimEvent};
+use crate::{Ns, Priority, Rank};
+
+/// Collective id `run_collective` posts under (single-workload runs).
+const COLL_ID: u64 = 1;
+
+/// Fleet shape for a partitioned run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Sub-simulators the fabric is split into (1 = a single shard,
+    /// which reproduces the serial pop sequence trivially).
+    pub shards: usize,
+    /// Worker threads driving the shards inside each window (1 = step
+    /// the shards sequentially; results are identical either way).
+    pub threads: usize,
+    /// Fault schedule installed on every shard (each shard applies the
+    /// owned-rank subset of the plan; see [`NetSim::set_chaos`]).
+    pub chaos: Option<ChaosPlan>,
+    /// Record every `MsgDelivered` into [`ParOutcome::delivered`]
+    /// (memory ∝ message count — equivalence tests only).
+    pub record_deliveries: bool,
+}
+
+impl FleetConfig {
+    /// `threads` workers over `threads` shards, nothing recorded.
+    pub fn threaded(threads: usize) -> Self {
+        let t = threads.max(1);
+        Self { shards: t, threads: t, chaos: None, record_deliveries: false }
+    }
+}
+
+/// Everything a partitioned run produces, aggregated over the fleet.
+#[derive(Debug, Clone)]
+pub struct ParOutcome {
+    /// Time the workload finished: max completion / recorded-delivery
+    /// timestamp (0 for an empty workload).
+    pub finish_ns: Ns,
+    /// Max shard clock after the full drain — includes trailing chaos
+    /// windows, so it is comparable with a drained serial run.
+    pub final_clock: Ns,
+    /// Per-rank completions, sorted by `(at, rank)`; one per rank for a
+    /// collective run, empty for pattern runs.
+    pub completions: Vec<Completion>,
+    /// Delivered-message multiset, sorted; only filled when
+    /// [`FleetConfig::record_deliveries`] is set.
+    pub delivered: Vec<(MsgDesc, Ns)>,
+    /// Fleet-summed traffic stats (equal to the serial run's).
+    pub stats: SimStats,
+    /// Fleet-aggregated fault counters (equal to the serial run's).
+    pub chaos: ChaosStats,
+}
+
+/// One shard's reactive workload: posts initial work, then reacts to
+/// the events its shard surfaces.
+pub trait ShardDriver: Send {
+    fn start(&mut self, sim: &mut NetSim);
+    fn on_event(&mut self, sim: &mut NetSim, ev: SimEvent);
+}
+
+/// Lookahead actually safe under `chaos`: [`Topology::lookahead_ns`]
+/// scaled down by any sub-healthy latency multiplier a hand-built plan
+/// might carry ([`ChaosPlan::generate`] never shrinks latency, so the
+/// scale is 1 for generated plans). Never below 1 ns — the window must
+/// make progress.
+pub fn effective_lookahead(topo: &Topology, chaos: Option<&ChaosPlan>) -> Ns {
+    let mut scale_milli = 1000u64;
+    if let Some(plan) = chaos {
+        for f in plan.flaps.iter().filter(|f| !f.zero_bw && f.latency_mult_milli < 1000) {
+            scale_milli = scale_milli * f.latency_mult_milli / 1000;
+        }
+    }
+    (topo.lookahead_ns().saturating_mul(scale_milli) / 1000).max(1)
+}
+
+/// The coordinator: run every shard to quiescence under conservative-
+/// lookahead windows, routing cross-partition mail at window boundaries.
+pub fn run_fleet<D: ShardDriver>(
+    shards: &mut [NetSim],
+    drivers: &mut [D],
+    lookahead: Ns,
+    threads: usize,
+) {
+    assert_eq!(shards.len(), drivers.len());
+    let topo = shards[0].topology().clone();
+    let p = shards[0].num_nodes();
+    let nshards = shards.len();
+    for (sim, drv) in shards.iter_mut().zip(drivers.iter_mut()) {
+        drv.start(sim);
+    }
+    loop {
+        // Window base: the earliest pending event fleet-wide. All
+        // outboxes are empty here (mail is routed before re-entering the
+        // loop), so an empty fleet queue means the run is complete.
+        let Some(w_min) = shards.iter().filter_map(|s| s.next_event_time()).min() else {
+            break;
+        };
+        let horizon = w_min.saturating_add(lookahead.max(1));
+        let mut mail: Vec<Mail> = Vec::new();
+        if threads > 1 && nshards > 1 {
+            // One scoped worker per shard: each owns a disjoint
+            // (&mut NetSim, &mut D) pair, so the shards advance truly
+            // concurrently; the join is the window barrier.
+            let batches: Vec<Vec<Mail>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = shards
+                    .iter_mut()
+                    .zip(drivers.iter_mut())
+                    .map(|(sim, drv)| {
+                        scope.spawn(move || {
+                            while let Some(ev) = sim.next_before(horizon) {
+                                drv.on_event(sim, ev);
+                            }
+                            sim.take_mail()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+            });
+            for b in batches {
+                mail.extend(b);
+            }
+        } else {
+            for (sim, drv) in shards.iter_mut().zip(drivers.iter_mut()) {
+                while let Some(ev) = sim.next_before(horizon) {
+                    drv.on_event(sim, ev);
+                }
+                mail.extend(sim.take_mail());
+            }
+        }
+        // Deterministic routing: the injection order is a pure function
+        // of the mail set, never of shard iteration or thread timing.
+        // Lookahead guarantees m.at >= horizon > every shard clock, so
+        // injection never lands in a shard's past.
+        mail.sort_by_key(mail_key);
+        for m in mail {
+            let dst = shard_of(&topo, p, nshards, m.msg.dst);
+            shards[dst].inject_delivery(m.at, m.msg);
+        }
+    }
+}
+
+/// Fleet-sum / fleet-aggregate the per-shard counters. All counters are
+/// owner-counted on exactly one shard and sum to the serial value —
+/// except `zero_bw_windows`, which every shard counts identically
+/// (gate events are replicated fleet-wide), so the aggregate takes the
+/// max instead of the sum.
+fn aggregate_stats(shards: &[NetSim]) -> (SimStats, ChaosStats) {
+    let mut stats = SimStats::default();
+    let mut chaos = ChaosStats::default();
+    for s in shards {
+        stats.msgs_sent += s.stats.msgs_sent;
+        stats.bytes_sent += s.stats.bytes_sent;
+        stats.preemptions += s.stats.preemptions;
+        for (acc, b) in stats.bytes_by_priority.iter_mut().zip(s.stats.bytes_by_priority.iter())
+        {
+            *acc += b;
+        }
+        chaos.zero_bw_windows = chaos.zero_bw_windows.max(s.chaos_stats.zero_bw_windows);
+        chaos.latency_spikes += s.chaos_stats.latency_spikes;
+        chaos.rails_killed += s.chaos_stats.rails_killed;
+        chaos.transfers_rerouted += s.chaos_stats.transfers_rerouted;
+        chaos.slowdowns_applied += s.chaos_stats.slowdowns_applied;
+    }
+    (stats, chaos)
+}
+
+// ---------------------------------------------------------------------------
+// Program-driven runs (real collective builders)
+// ---------------------------------------------------------------------------
+
+/// Per-shard driver walking one collective's chunk programs through a
+/// replicated [`SimCollectives`]: the shard holds real programs for its
+/// owned ranks and empty stand-ins for foreign ones (their sends are the
+/// owner's job; their instant phantom completions are filtered out).
+struct CollDriver {
+    shard: usize,
+    shards: usize,
+    exec: SimCollectives,
+    programs: Option<Vec<Program>>,
+    wire: WireDtype,
+    priority: Priority,
+    completions: Vec<Completion>,
+    delivered: Option<Vec<(MsgDesc, Ns)>>,
+}
+
+impl ShardDriver for CollDriver {
+    fn start(&mut self, sim: &mut NetSim) {
+        let programs = self.programs.take().expect("started once");
+        let done =
+            self.exec.post(sim, COLL_ID, programs, self.wire, self.priority);
+        self.completions.extend(done);
+    }
+
+    fn on_event(&mut self, sim: &mut NetSim, ev: SimEvent) {
+        if let Some(log) = &mut self.delivered {
+            if let SimEvent::MsgDelivered { msg, at } = &ev {
+                log.push((msg.clone(), *at));
+            }
+        }
+        self.exec.on_event_into(sim, &ev, &mut self.completions);
+    }
+}
+
+/// Run one collective (all `p` ranks, identity map) over a partitioned
+/// fleet and return the aggregated outcome. With `cfg.shards == 1` this
+/// is the serial pop sequence, windowed.
+///
+/// Panics if the fleet quiesces with unfinished ranks (a deadlocked
+/// program — same contract as [`super::simexec::time_collective`]).
+pub fn run_collective(
+    topo: &Topology,
+    p: usize,
+    programs: Vec<Program>,
+    wire: WireDtype,
+    priority: Priority,
+    cfg: &FleetConfig,
+) -> ParOutcome {
+    assert_eq!(programs.len(), p, "one program per rank");
+    let shards_n = cfg.shards.max(1);
+    let mut shards: Vec<NetSim> = (0..shards_n)
+        .map(|s| {
+            let mut sim = if shards_n == 1 {
+                NetSim::new(topo.clone(), p)
+            } else {
+                NetSim::new_partition(topo.clone(), p, s, shards_n)
+            };
+            if let Some(plan) = &cfg.chaos {
+                sim.set_chaos(plan.clone());
+            }
+            sim
+        })
+        .collect();
+    let mut drivers: Vec<CollDriver> = (0..shards_n)
+        .map(|s| CollDriver {
+            shard: s,
+            shards: shards_n,
+            exec: SimCollectives::new(),
+            programs: Some(
+                programs
+                    .iter()
+                    .map(|pr| {
+                        if shards_n == 1 || shard_of(topo, p, shards_n, pr.rank) == s {
+                            pr.clone()
+                        } else {
+                            Program { rank: pr.rank, steps: Vec::new() }
+                        }
+                    })
+                    .collect(),
+            ),
+            wire,
+            priority,
+            completions: Vec::new(),
+            delivered: cfg.record_deliveries.then(Vec::new),
+        })
+        .collect();
+    let lookahead = effective_lookahead(topo, cfg.chaos.as_ref());
+    run_fleet(&mut shards, &mut drivers, lookahead, cfg.threads);
+
+    let mut completions: Vec<Completion> = Vec::with_capacity(p);
+    let mut delivered = Vec::new();
+    for d in &mut drivers {
+        // Phantom completions (foreign empty programs) report the post
+        // time; only the owner's are real.
+        completions.extend(d.completions.iter().filter(|c| {
+            d.shards == 1 || shard_of(topo, p, d.shards, c.rank) == d.shard
+        }));
+        if let Some(log) = &mut d.delivered {
+            delivered.append(log);
+        }
+        assert_eq!(d.exec.in_flight(), 0, "fleet drained with op in flight: deadlock");
+    }
+    assert_eq!(completions.len(), p, "every rank must complete exactly once");
+    completions.sort_by_key(|c| (c.at, c.rank));
+    delivered.sort_by_key(delivery_key);
+    let (stats, chaos) = aggregate_stats(&shards);
+    ParOutcome {
+        finish_ns: completions.iter().map(|c| c.at).max().unwrap_or(0),
+        final_clock: shards.iter().map(|s| s.now()).max().unwrap_or(0),
+        completions,
+        delivered,
+        stats,
+        chaos,
+    }
+}
+
+/// Reference serial run of the same workload on the classic simulator
+/// (plain [`NetSim::next`] loop, fully drained): what the partitioned
+/// fleet must byte-identically reproduce.
+pub fn run_collective_serial(
+    topo: &Topology,
+    p: usize,
+    programs: Vec<Program>,
+    wire: WireDtype,
+    priority: Priority,
+    chaos: Option<&ChaosPlan>,
+    record_deliveries: bool,
+) -> ParOutcome {
+    let mut sim = NetSim::new(topo.clone(), p);
+    if let Some(plan) = chaos {
+        sim.set_chaos(plan.clone());
+    }
+    let mut exec = SimCollectives::new();
+    let mut completions = exec.post(&mut sim, COLL_ID, programs, wire, priority);
+    let mut delivered = Vec::new();
+    while let Some(ev) = sim.next() {
+        if record_deliveries {
+            if let SimEvent::MsgDelivered { msg, at } = &ev {
+                delivered.push((msg.clone(), *at));
+            }
+        }
+        exec.on_event_into(&mut sim, &ev, &mut completions);
+    }
+    assert_eq!(exec.in_flight(), 0, "fabric drained with op in flight: deadlock");
+    assert_eq!(completions.len(), p);
+    completions.sort_by_key(|c| (c.at, c.rank));
+    delivered.sort_by_key(delivery_key);
+    let shards = [sim];
+    let (stats, chaos) = aggregate_stats(&shards);
+    ParOutcome {
+        finish_ns: completions.iter().map(|c| c.at).max().unwrap_or(0),
+        final_clock: shards[0].now(),
+        completions,
+        delivered,
+        stats,
+        chaos,
+    }
+}
+
+fn delivery_key(d: &(MsgDesc, Ns)) -> (Ns, Rank, Rank, u64, u64, Priority) {
+    (d.1, d.0.src, d.0.dst, d.0.tag, d.0.bytes, d.0.priority)
+}
+
+/// Time one collective over a `threads`-way partitioned fleet — the
+/// parallel counterpart of [`super::simexec::time_collective`], exact
+/// for its single-collective workload at any thread count.
+pub fn time_collective_partitioned(
+    topo: &Topology,
+    p: usize,
+    programs: Vec<Program>,
+    wire: WireDtype,
+    priority: Priority,
+    threads: usize,
+) -> Ns {
+    run_collective(topo, p, programs, wire, priority, &FleetConfig::threaded(threads)).finish_ns
+}
+
+// ---------------------------------------------------------------------------
+// Pattern-driven runs (datacenter-scale benches)
+// ---------------------------------------------------------------------------
+
+/// Synthetic collective dataflows with O(p) driver state: at p = 65,536 a
+/// ring allreduce's explicit chunk programs would hold billions of steps,
+/// so the scale benches drive the fabric with the *pattern* instead —
+/// round k's send is gated on round k-1's receive, exactly the chunk
+/// programs' dependency structure, with per-round partners below.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Rank r sends to (r+1) mod p every round (2(p−1) rounds = the full
+    /// ring allreduce: reduce-scatter then allgather).
+    Ring,
+    /// Round k pairs rank r with r XOR 2^k (p must be a power of two;
+    /// log2(p) rounds = the full recursive-doubling allreduce).
+    RecursiveDoubling,
+}
+
+/// A pattern workload: `rounds` rounds of `msg_bytes` messages per rank.
+#[derive(Debug, Clone)]
+pub struct PatternSpec {
+    pub pattern: Pattern,
+    pub p: usize,
+    pub msg_bytes: u64,
+    pub rounds: usize,
+    pub priority: Priority,
+}
+
+impl PatternSpec {
+    /// The full ring allreduce at `p` with `seg_bytes` per-step segments.
+    pub fn ring_allreduce(p: usize, seg_bytes: u64) -> Self {
+        Self { pattern: Pattern::Ring, p, msg_bytes: seg_bytes, rounds: 2 * (p - 1), priority: 1 }
+    }
+
+    /// The full recursive-doubling allreduce at `p` (power of two) with
+    /// `msg_bytes` full-buffer messages.
+    pub fn rdoubling_allreduce(p: usize, msg_bytes: u64) -> Self {
+        assert!(p.is_power_of_two(), "recursive doubling needs a power-of-two p");
+        Self {
+            pattern: Pattern::RecursiveDoubling,
+            p,
+            msg_bytes,
+            rounds: p.trailing_zeros() as usize,
+            priority: 1,
+        }
+    }
+
+    fn partner(&self, r: Rank, round: usize) -> Rank {
+        match self.pattern {
+            Pattern::Ring => (r + 1) % self.p,
+            Pattern::RecursiveDoubling => r ^ (1usize << round),
+        }
+    }
+
+    /// Total messages the whole fabric moves.
+    pub fn total_msgs(&self) -> u64 {
+        self.p as u64 * self.rounds as u64
+    }
+}
+
+struct PatternDriver {
+    spec: PatternSpec,
+    /// Rounds sent / received per rank (only owned ranks ever advance
+    /// past the initial post — foreign sends are dropped by the shard).
+    sent: Vec<u32>,
+    recvd: Vec<u32>,
+    last_at: Ns,
+}
+
+impl PatternDriver {
+    fn try_send(&mut self, sim: &mut NetSim, r: Rank) {
+        // Round k's send is gated on k receives (rounds 0..k-1 consumed).
+        while (self.sent[r] as usize) < self.spec.rounds && self.recvd[r] >= self.sent[r] {
+            let k = self.sent[r] as usize;
+            sim.send(MsgDesc {
+                src: r,
+                dst: self.spec.partner(r, k),
+                bytes: self.spec.msg_bytes,
+                priority: self.spec.priority,
+                tag: k as u64,
+            });
+            self.sent[r] += 1;
+        }
+    }
+}
+
+impl ShardDriver for PatternDriver {
+    fn start(&mut self, sim: &mut NetSim) {
+        for r in 0..self.spec.p {
+            self.try_send(sim, r); // the shard drops foreign sends itself
+        }
+    }
+
+    fn on_event(&mut self, sim: &mut NetSim, ev: SimEvent) {
+        if let SimEvent::MsgDelivered { msg, at } = ev {
+            self.last_at = self.last_at.max(at);
+            self.recvd[msg.dst] += 1;
+            self.try_send(sim, msg.dst);
+        }
+    }
+}
+
+/// Run a [`PatternSpec`] over a partitioned fleet; `finish_ns` is the
+/// last delivery. `cfg.shards == 1` with [`NetSim::new`] semantics is
+/// the serial reference.
+pub fn run_pattern(topo: &Topology, spec: &PatternSpec, cfg: &FleetConfig) -> ParOutcome {
+    assert!(spec.p >= 2, "patterns need at least two ranks");
+    if spec.pattern == Pattern::RecursiveDoubling {
+        assert!(spec.p.is_power_of_two() && spec.rounds <= spec.p.trailing_zeros() as usize);
+    }
+    let shards_n = cfg.shards.max(1);
+    let mut shards: Vec<NetSim> = (0..shards_n)
+        .map(|s| {
+            let mut sim = if shards_n == 1 {
+                NetSim::new(topo.clone(), spec.p)
+            } else {
+                NetSim::new_partition(topo.clone(), spec.p, s, shards_n)
+            };
+            if let Some(plan) = &cfg.chaos {
+                sim.set_chaos(plan.clone());
+            }
+            sim
+        })
+        .collect();
+    let mut drivers: Vec<PatternDriver> = (0..shards_n)
+        .map(|_| PatternDriver {
+            spec: spec.clone(),
+            sent: vec![0; spec.p],
+            recvd: vec![0; spec.p],
+            last_at: 0,
+        })
+        .collect();
+    let lookahead = effective_lookahead(topo, cfg.chaos.as_ref());
+    run_fleet(&mut shards, &mut drivers, lookahead, cfg.threads);
+    // Every owned rank must have received all its rounds.
+    for (s, d) in drivers.iter().enumerate() {
+        for r in 0..spec.p {
+            if shards_n == 1 || shard_of(topo, spec.p, shards_n, r) == s {
+                assert_eq!(
+                    d.recvd[r] as usize, spec.rounds,
+                    "rank {r} on shard {s} starved: pattern deadlock"
+                );
+            }
+        }
+    }
+    let (stats, chaos) = aggregate_stats(&shards);
+    ParOutcome {
+        finish_ns: drivers.iter().map(|d| d.last_at).max().unwrap_or(0),
+        final_clock: shards.iter().map(|s| s.now()).max().unwrap_or(0),
+        completions: Vec::new(),
+        delivered: Vec::new(),
+        stats,
+        chaos,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::program::{allreduce_rdoubling, allreduce_ring};
+
+    fn flat() -> Topology {
+        // 8 Gbps = 1 B/ns, alpha 1000, gamma 100.
+        Topology::flat("t", 8.0, 1_000, 100, 1 << 20)
+    }
+
+    #[test]
+    fn partitioned_ring_matches_serial_exactly() {
+        let topo = flat();
+        let p = 8;
+        let n = 4 << 10;
+        let serial = run_collective_serial(
+            &topo,
+            p,
+            allreduce_ring(p, n),
+            WireDtype::F32,
+            1,
+            None,
+            true,
+        );
+        for shards in [1usize, 2, 3, 4] {
+            for threads in [1usize, 2, 4] {
+                let cfg = FleetConfig {
+                    shards,
+                    threads,
+                    chaos: None,
+                    record_deliveries: true,
+                };
+                let par =
+                    run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
+                assert_eq!(par.completions, serial.completions, "shards={shards}");
+                assert_eq!(par.delivered, serial.delivered, "shards={shards}");
+                assert_eq!(par.finish_ns, serial.finish_ns);
+                assert_eq!(par.final_clock, serial.final_clock);
+                assert_eq!(par.stats.msgs_sent, serial.stats.msgs_sent);
+                assert_eq!(par.stats.bytes_sent, serial.stats.bytes_sent);
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_counters_survive_partitioning() {
+        let topo = flat();
+        let p = 8;
+        let n = 64 << 10;
+        let plan = ChaosPlan::generate(41, &topo, p, 2_000_000);
+        let serial = run_collective_serial(
+            &topo,
+            p,
+            allreduce_ring(p, n),
+            WireDtype::F32,
+            1,
+            Some(&plan),
+            true,
+        );
+        let cfg = FleetConfig {
+            shards: 4,
+            threads: 2,
+            chaos: Some(plan),
+            record_deliveries: true,
+        };
+        let par = run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
+        assert_eq!(par.delivered, serial.delivered);
+        assert_eq!(par.chaos, serial.chaos);
+        assert_eq!(par.final_clock, serial.final_clock);
+    }
+
+    #[test]
+    fn pattern_runs_match_their_program_counterparts_shape() {
+        // The ring pattern's finish time must equal the real ring
+        // program's at matched segment size (same dependency structure).
+        let topo = flat();
+        let p = 8;
+        let n = 8 * 1024; // elements; seg = n/p elems = 4096 bytes
+        let t_prog = run_collective_serial(
+            &topo,
+            p,
+            allreduce_ring(p, n),
+            WireDtype::F32,
+            1,
+            None,
+            false,
+        )
+        .finish_ns;
+        let spec = PatternSpec::ring_allreduce(p, (n / p * 4) as u64);
+        let t_pat =
+            run_pattern(&topo, &spec, &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false })
+                .finish_ns;
+        assert_eq!(t_pat, t_prog);
+    }
+
+    #[test]
+    fn pattern_partitioning_is_exact_at_any_shard_count() {
+        let topo = flat();
+        for spec in [
+            PatternSpec::ring_allreduce(12, 2_000),
+            PatternSpec::rdoubling_allreduce(16, 8_000),
+        ] {
+            let serial = run_pattern(
+                &topo,
+                &spec,
+                &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+            );
+            for threads in [2usize, 4] {
+                let par = run_pattern(&topo, &spec, &FleetConfig::threaded(threads));
+                assert_eq!(par.finish_ns, serial.finish_ns, "{spec:?} threads={threads}");
+                assert_eq!(par.stats.msgs_sent, serial.stats.msgs_sent);
+                assert_eq!(par.stats.msgs_sent, spec.total_msgs());
+                assert_eq!(par.stats.bytes_sent, serial.stats.bytes_sent);
+            }
+        }
+    }
+
+    #[test]
+    fn effective_lookahead_shrinks_only_for_hand_built_sub_healthy_flaps() {
+        let topo = flat();
+        assert_eq!(effective_lookahead(&topo, None), 1_000);
+        let gen = ChaosPlan::generate(7, &topo, 4, 1_000_000);
+        assert_eq!(effective_lookahead(&topo, Some(&gen)), 1_000, "generated plans never shrink");
+        let mut plan = ChaosPlan::quiet(0, 4);
+        plan.flaps.push(crate::fabric::FlapWindow {
+            level: 0,
+            from: 0,
+            until: 1_000,
+            zero_bw: false,
+            latency_mult_milli: 500, // half latency: lookahead must halve
+        });
+        assert_eq!(effective_lookahead(&topo, Some(&plan)), 500);
+    }
+}

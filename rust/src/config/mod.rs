@@ -26,6 +26,21 @@
 //! Malformed suffixes (`-x0`, `-x2r1`, `-x2e0`) are configuration
 //! errors, not panics.
 //!
+//! The full grammar with every base preset's tier parameters and worked
+//! examples (e.g. `eth10g-x8r16e2`) is documented in `docs/PRESETS.md`;
+//! `mlsl` with no subcommand prints the short form.
+//!
+//! ## Simulator threading
+//!
+//! `--sim-threads <n>` (default 1) partitions the discrete-event fabric
+//! into `n` node-contiguous shards driven by `n` worker threads under
+//! conservative-lookahead windows ([`crate::collectives::parexec`]).
+//! `1` is today's exact serial path; any `n` produces byte-identical
+//! results for the single-collective timing workloads it accelerates
+//! (standalone collective timing and `mlsl tune` grid probing — the
+//! engine's iteration loop itself stays serial, see
+//! `docs/ARCHITECTURE.md`).
+//!
 //! ## Chaos and churn grammar
 //!
 //! * `--chaos <seed>` — install a seeded fault-injection plan
@@ -143,6 +158,10 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     let wire =
         WireDtype::by_name(&wire_name).ok_or_else(|| anyhow!("unknown wire dtype {wire_name:?}"))?;
     let iterations: usize = get("iterations", "3").parse().context("--iterations")?;
+    let sim_threads: usize = get("sim-threads", "1").parse().context("--sim-threads")?;
+    if sim_threads == 0 {
+        return Err(anyhow!("--sim-threads must be >= 1"));
+    }
 
     let mut cfg = EngineConfig::new(model, topo, nodes);
     cfg.node = node;
@@ -154,6 +173,7 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.iterations = iterations;
     cfg.record_timeline = args.bool("timeline");
     cfg.jitter = get("jitter", "0.0").parse().context("--jitter")?;
+    cfg.sim_threads = sim_threads;
     // Elastic membership: `--churn leave:3@1,join:3@2` (see the module
     // doc's grammar section). Validated against the world size here so a
     // bad spec dies as a config error, not mid-simulation.
@@ -192,11 +212,10 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
         // single-rail vs striped, where the v3 fingerprint differs —
         // must be visibly rejected.
         if !table.matches(&cfg.topo) {
-            eprintln!(
-                "warning: tuning table {path} fingerprint does not match {} — \
-                 analytic fallback",
+            crate::util::warn::warn(format!(
+                "tuning table {path} fingerprint does not match {} — analytic fallback",
                 cfg.topo.name
-            );
+            ));
         }
         cfg.selection = crate::tuner::SelectionPolicy::TunedWithFallback(table);
     }
@@ -277,6 +296,14 @@ mod tests {
         assert!(engine_config(&args("--nodes 4 --churn nonsense")).is_err());
         assert!(engine_config(&args("--nodes 1 --churn leave:0@1")).is_err());
         assert!(engine_config(&args("--chaos notanumber")).is_err());
+    }
+
+    #[test]
+    fn sim_threads_parses_and_defaults_to_serial() {
+        assert_eq!(engine_config(&args("")).unwrap().sim_threads, 1);
+        assert_eq!(engine_config(&args("--sim-threads 4")).unwrap().sim_threads, 4);
+        assert!(engine_config(&args("--sim-threads 0")).is_err());
+        assert!(engine_config(&args("--sim-threads four")).is_err());
     }
 
     #[test]

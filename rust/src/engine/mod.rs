@@ -18,6 +18,21 @@
 //! Nodes are symmetric (same model, same batch) so they proceed in
 //! lockstep; collectives are posted when every member has reached the
 //! issue point (exact under symmetry).
+//!
+//! # Why this loop is serial even under `--sim-threads`
+//!
+//! The iteration loop posts a collective at the instant its *last*
+//! member reaches the issue point, and churn quiesce/release does the
+//! same — one rank's event triggers sends on every rank with **zero**
+//! simulated latency. Conservative-lookahead partitioning
+//! ([`crate::collectives::parexec`]) requires strictly positive
+//! lookahead on every cross-partition dependency, so these barriers
+//! cannot be windowed without optimistic rollback. The engine therefore
+//! always runs its exact serial event loop;
+//! [`EngineConfig::sim_threads`] instead accelerates the barrier-free
+//! simulation paths underneath (standalone collective timing and tuner
+//! grid probing). The full argument is in `docs/ARCHITECTURE.md`
+//! §"Partitioned mode".
 
 pub mod report;
 
@@ -180,6 +195,18 @@ pub struct EngineConfig {
     /// the dominant sub-100% term in weak scaling at large node counts.
     /// 0.0 = perfectly balanced (unit tests); the Fig. 2 bench uses 0.03.
     pub jitter: f64,
+    /// Worker threads for *partitioned* fabric simulation
+    /// (`--sim-threads`, default 1 = the exact serial path). The engine's
+    /// own iteration loop is always serial — `join_or_post` releases a
+    /// collective at the instant its last member arrives and churn
+    /// quiesce/release points couple every rank with zero latency, which
+    /// conservative lookahead cannot window (see
+    /// [`crate::collectives::parexec`] and `docs/ARCHITECTURE.md`). The
+    /// thread count instead accelerates the barrier-free simulation
+    /// paths: standalone collective timing
+    /// ([`crate::collectives::parexec::time_collective_partitioned`])
+    /// and tuning-grid probing ([`crate::tuner::probe::tune_threaded`]).
+    pub sim_threads: usize,
 }
 
 impl EngineConfig {
@@ -199,6 +226,7 @@ impl EngineConfig {
             churn: None,
             chaos: None,
             jitter: 0.0,
+            sim_threads: 1,
         }
     }
 

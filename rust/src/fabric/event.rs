@@ -83,6 +83,15 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.at)
     }
 
+    /// Fast-forward the clock of an idle queue to `at` (no-op when the
+    /// clock is already past it). Used by batched drivers that post work
+    /// at absolute times: events pushed afterwards with `push_in` are
+    /// relative to the new clock. Callers must not skip over pending
+    /// events — the `NetSim` wrapper asserts that.
+    pub fn advance_to(&mut self, at: Ns) {
+        self.now = self.now.max(at);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -128,6 +137,17 @@ mod tests {
         q.push_at(50, "early");
         assert_eq!(q.pop(), Some((100, "early")));
         assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn advance_to_fast_forwards_but_never_rewinds() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.advance_to(500);
+        assert_eq!(q.now(), 500);
+        q.advance_to(100); // no rewind
+        assert_eq!(q.now(), 500);
+        q.push_in(5, "z");
+        assert_eq!(q.pop(), Some((505, "z")));
     }
 
     #[test]

@@ -36,6 +36,7 @@
 //! multiplying injection bandwidth without discounting latency.
 
 pub mod event;
+pub mod par;
 pub mod shm;
 pub mod sim;
 pub mod topology;

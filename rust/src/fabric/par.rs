@@ -1,0 +1,141 @@
+//! Node partitioning for the parallel simulator: shard assignment and
+//! cross-partition mail.
+//!
+//! The partitioned simulator ([`crate::collectives::parexec`]) splits the
+//! fabric into `shards` independently-advancing [`super::NetSim`]
+//! instances. The split is by **contiguous node blocks** — never through
+//! a shared-memory node — so every rank's egress servers (NIC rails and
+//! shm channel) live wholly on one shard and a cross-shard hop is always
+//! a NIC-tier hop. That is the property conservative lookahead leans on:
+//! every cross-shard message spends at least
+//! [`Topology::lookahead_ns`](super::Topology::lookahead_ns) in flight,
+//! so a shard may execute all local events strictly before
+//! `min(shard clocks) + lookahead` without ever receiving mail in its
+//! past. See `docs/ARCHITECTURE.md` §"Partitioned mode".
+
+use super::topology::Topology;
+use super::MsgDesc;
+use crate::{Ns, Rank};
+
+/// A cross-partition message in coordinator custody: it left the wire on
+/// the source shard at `egress_at` and must be delivered on the
+/// destination shard at `at` (in-flight latency already priced by the
+/// source shard, chaos flaps included).
+///
+/// `egress_at` exists purely for determinism: the coordinator sorts mail
+/// by `(at, egress_at, src, dst, tag)` before injection so delivery-time
+/// ties resolve identically on every run, independent of shard count and
+/// thread scheduling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mail {
+    /// Absolute delivery time at `msg.dst`.
+    pub at: Ns,
+    /// Absolute time the last egress piece left the source wire.
+    pub egress_at: Ns,
+    pub msg: MsgDesc,
+}
+
+/// Deterministic sort key making mail injection order a pure function of
+/// the mail set (never of shard iteration or thread completion order).
+pub fn mail_key(m: &Mail) -> (Ns, Ns, Rank, Rank, u64) {
+    (m.at, m.egress_at, m.msg.src, m.msg.dst, m.msg.tag)
+}
+
+/// Number of shared-memory nodes a `p`-rank fabric on `topo` has (the
+/// unit of partitioning: a node is never split across shards).
+pub fn num_nodes(topo: &Topology, p: usize) -> usize {
+    let rpn = topo.ranks_per_node().max(1);
+    p.div_ceil(rpn)
+}
+
+/// Which shard of a `shards`-way partition owns `rank`.
+///
+/// Nodes are split into `shards` contiguous, balanced blocks (block `s`
+/// spans nodes `[s·nodes/shards, (s+1)·nodes/shards)`, so block sizes
+/// differ by at most one and some blocks are empty when
+/// `shards > nodes`). All ranks of one node map to one shard by
+/// construction, keeping shm traffic shard-local.
+pub fn shard_of(topo: &Topology, p: usize, shards: usize, rank: Rank) -> usize {
+    assert!(shards >= 1, "at least one shard");
+    assert!(rank < p, "rank {rank} of {p}");
+    let nodes = num_nodes(topo, p).max(1);
+    let node = topo.node_of(rank);
+    // Inverse of the balanced-block boundary b(s) = s·nodes/shards:
+    // the unique s with b(s) <= node < b(s+1).
+    ((node + 1) * shards - 1) / nodes
+}
+
+/// Ranks owned by shard `shard` (ascending). The concatenation over all
+/// shards is exactly `0..p`.
+pub fn ranks_of(topo: &Topology, p: usize, shards: usize, shard: usize) -> Vec<Rank> {
+    (0..p).filter(|&r| shard_of(topo, p, shards, r) == shard).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_ranks_split_into_contiguous_balanced_blocks() {
+        let topo = Topology::flat("t", 8.0, 1_000, 100, 1 << 20);
+        // 4 ranks, 2 shards: {0,1} and {2,3} (pinned by the sim.rs
+        // partition test too).
+        let s: Vec<usize> = (0..4).map(|r| shard_of(&topo, 4, 2, r)).collect();
+        assert_eq!(s, vec![0, 0, 1, 1]);
+        // 5 ranks, 2 shards: sizes differ by at most one.
+        let s: Vec<usize> = (0..5).map(|r| shard_of(&topo, 5, 2, r)).collect();
+        assert_eq!(s, vec![0, 0, 1, 1, 1]);
+        // More shards than nodes: some shards own nothing, all ranks owned.
+        let s: Vec<usize> = (0..2).map(|r| shard_of(&topo, 2, 4, r)).collect();
+        assert_eq!(s, vec![1, 3]);
+        assert!(ranks_of(&topo, 2, 4, 0).is_empty());
+        assert_eq!(ranks_of(&topo, 2, 4, 1), vec![0]);
+    }
+
+    #[test]
+    fn shm_nodes_are_never_split() {
+        let topo = Topology::eth_10g_smp(4); // 4 ranks/node
+        for p in [4usize, 8, 12, 16, 20] {
+            for shards in 1..=5usize {
+                for r in 0..p {
+                    let peer = (r / 4) * 4; // first rank of r's node
+                    assert_eq!(
+                        shard_of(&topo, p, shards, r),
+                        shard_of(&topo, p, shards, peer),
+                        "p={p} shards={shards} rank={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_rank_is_owned_exactly_once_and_blocks_are_monotonic() {
+        let topo = Topology::eth_10g_smp(2);
+        for p in [2usize, 6, 10, 64] {
+            for shards in [1usize, 2, 3, 4, 7] {
+                let owners: Vec<usize> =
+                    (0..p).map(|r| shard_of(&topo, p, shards, r)).collect();
+                assert!(owners.iter().all(|&s| s < shards));
+                assert!(owners.windows(2).all(|w| w[0] <= w[1]), "{owners:?}");
+                let total: usize =
+                    (0..shards).map(|s| ranks_of(&topo, p, shards, s).len()).sum();
+                assert_eq!(total, p);
+            }
+        }
+    }
+
+    #[test]
+    fn mail_sorts_deterministically() {
+        let msg = |src, dst, tag| MsgDesc { src, dst, bytes: 8, priority: 1, tag };
+        let mut mail = vec![
+            Mail { at: 20, egress_at: 10, msg: msg(1, 2, 5) },
+            Mail { at: 10, egress_at: 9, msg: msg(3, 0, 1) },
+            Mail { at: 10, egress_at: 2, msg: msg(2, 0, 4) },
+            Mail { at: 10, egress_at: 9, msg: msg(0, 3, 0) },
+        ];
+        mail.sort_by_key(mail_key);
+        let tags: Vec<u64> = mail.iter().map(|m| m.msg.tag).collect();
+        assert_eq!(tags, vec![4, 0, 1, 5]);
+    }
+}

@@ -48,6 +48,17 @@
 //!   slowdown factors. Every fault is scheduled from the plan alone, so
 //!   the same seed yields a byte-identical event stream — faults bend
 //!   *timing*, never payloads.
+//! * **Partitioned mode** ([`super::par`]): a `NetSim` can be built as
+//!   one shard of a node-partitioned fleet
+//!   ([`NetSim::new_partition`]). A shard silently ignores work posted
+//!   for ranks it does not own and, when a message's destination lives
+//!   on another shard, emits [`super::par::Mail`] into an outbox
+//!   ([`NetSim::take_mail`]) instead of scheduling local delivery; the
+//!   coordinator routes mail at conservative-lookahead window
+//!   boundaries ([`crate::collectives::parexec`]). Every
+//!   cross-partition hop rides a NIC tier and therefore pays at least
+//!   [`Topology::lookahead_ns`] of in-flight latency — the lower bound
+//!   that makes windowed execution exact.
 //!
 //! The simulator is deterministic: equal-time events fire in issue order.
 
@@ -55,6 +66,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use super::event::EventQueue;
+use super::par::{shard_of, Mail};
 use super::topology::Topology;
 use super::MsgDesc;
 use crate::util::prng::Prng;
@@ -83,7 +95,7 @@ enum Internal {
     /// Candidate egress completion for (node, chan, xfer); validated by
     /// the channel's generation counter.
     EgressDone { node: Rank, chan: Chan, xfer: u64, gen: u64 },
-    Deliver { msg_idx: usize },
+    Deliver { msg_id: u64 },
     ComputeDone { node: Rank, tag: u64 },
     /// A zero-bandwidth flap window opens (`on`) or closes (`!on`).
     ChaosGate { on: bool },
@@ -92,7 +104,7 @@ enum Internal {
 }
 
 struct Transfer {
-    msg_idx: usize,
+    msg_id: u64,
     /// Remaining egress time (overhead + wire) at `checkpoint`.
     remaining_ns: Ns,
     checkpoint: Ns,
@@ -289,6 +301,25 @@ pub struct ChaosStats {
     pub slowdowns_applied: u64,
 }
 
+/// A logical message with egress pieces still on the wires (or, for an
+/// injected cross-partition arrival, waiting on its Deliver event).
+/// Entries are removed at delivery, so the map is bounded by the
+/// in-flight count — not by every message ever sent.
+struct InFlight {
+    msg: MsgDesc,
+    /// Egress pieces still on the wires. Delivery is scheduled when the
+    /// count hits zero (the last rail finishes); 0 from the start for
+    /// injected cross-partition arrivals.
+    egress_left: u32,
+}
+
+/// Which shard of a node-partitioned fleet this simulator instance is.
+#[derive(Debug, Clone, Copy)]
+struct Part {
+    shard: usize,
+    shards: usize,
+}
+
 /// The simulator. Drive it by posting sends/computes, then repeatedly
 /// calling [`NetSim::next`] and reacting to the returned events.
 pub struct NetSim {
@@ -304,15 +335,20 @@ pub struct NetSim {
     /// class — FIFO, no urgency, no preemption. Co-located ranks copy
     /// concurrently (each models its own copy engine / memory port).
     shms: Vec<Nic>,
-    msgs: Vec<MsgDesc>,
-    /// Per logical message: egress pieces still on the wires. Delivery
-    /// is scheduled when the count hits zero (the last rail finishes).
-    egress_left: Vec<u32>,
+    /// Messages currently on the wires / in flight, keyed by a
+    /// monotonic per-simulator id.
+    inflight: HashMap<u64, InFlight>,
+    next_msg_id: u64,
     next_xfer_id: u64,
     /// Installed fault schedule ([`NetSim::set_chaos`]); None = healthy.
     chaos: Option<ChaosPlan>,
     /// Active zero-bandwidth windows (they may overlap).
     zero_bw_active: u32,
+    /// Partitioned mode: which shard this instance owns; None = the
+    /// whole fabric (the classic serial simulator).
+    part: Option<Part>,
+    /// Cross-partition messages awaiting coordinator routing.
+    outbox: Vec<Mail>,
     pub stats: SimStats,
     pub chaos_stats: ChaosStats,
 }
@@ -328,13 +364,38 @@ impl NetSim {
             queue: EventQueue::new(),
             nics,
             shms,
-            msgs: Vec::new(),
-            egress_left: Vec::new(),
+            inflight: HashMap::new(),
+            next_msg_id: 0,
             next_xfer_id: 0,
             chaos: None,
             zero_bw_active: 0,
+            part: None,
+            outbox: Vec::new(),
             stats: SimStats::default(),
             chaos_stats: ChaosStats::default(),
+        }
+    }
+
+    /// Build shard `shard` of a `shards`-way node-partitioned fleet.
+    /// The shard owns the contiguous node block [`shard_of`] maps to it;
+    /// work posted for any other shard's ranks is silently ignored and
+    /// messages destined off-shard surface as [`Mail`] via
+    /// [`NetSim::take_mail`] instead of local deliveries. See
+    /// [`crate::collectives::parexec`] for the coordinator that makes a
+    /// fleet of shards behave exactly like one serial simulator.
+    pub fn new_partition(topo: Topology, p: usize, shard: usize, shards: usize) -> Self {
+        assert!(shard < shards, "shard {shard} of {shards}");
+        let mut sim = Self::new(topo, p);
+        sim.part = Some(Part { shard, shards });
+        sim
+    }
+
+    /// Does this simulator instance own `rank`? Always true for the
+    /// serial (non-partitioned) simulator.
+    pub fn owns(&self, rank: Rank) -> bool {
+        match self.part {
+            Some(part) => shard_of(&self.topo, self.p, part.shards, rank) == part.shard,
+            None => true,
         }
     }
 
@@ -353,7 +414,11 @@ impl NetSim {
         }
         for (idx, d) in plan.rail_deaths.iter().enumerate() {
             assert!(d.node < self.p, "rail death on rank {} of {}", d.node, self.p);
-            self.queue.push_in(d.at.saturating_sub(now), Internal::RailDie { idx });
+            // Partitioned mode: a rail death is local to its node, so
+            // only the owning shard schedules (and counts) it.
+            if self.owns(d.node) {
+                self.queue.push_in(d.at.saturating_sub(now), Internal::RailDie { idx });
+            }
         }
         let mut plan = plan;
         plan.slowdown_milli.resize(self.p, 1000);
@@ -397,8 +462,15 @@ impl NetSim {
     pub fn send(&mut self, msg: MsgDesc) {
         assert!(msg.src < self.p && msg.dst < self.p, "rank out of range");
         assert_ne!(msg.src, msg.dst, "self-send");
+        // Partitioned mode: only the shard owning the source simulates
+        // (and accounts) the send — drivers replicated across shards may
+        // post every rank's traffic and rely on this filter.
+        if !self.owns(msg.src) {
+            return;
+        }
         let node = msg.src;
-        let msg_idx = self.msgs.len();
+        let msg_id = self.next_msg_id;
+        self.next_msg_id += 1;
         // Tier pricing: every hop costs its deepest-common-tier rate.
         // Hops confined to a shared-memory tier serialize on their own
         // channel, bypassing the NIC priority queue.
@@ -430,8 +502,7 @@ impl NetSim {
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
         self.stats.bytes_by_priority[msg.priority as usize] += msg.bytes;
-        self.msgs.push(msg.clone());
-        self.egress_left.push(pieces);
+        self.inflight.insert(msg_id, InFlight { msg: msg.clone(), egress_left: pieces });
         let now = self.queue.now();
         for i in 0..pieces as u64 {
             // Balanced split (same arithmetic as program::segments): the
@@ -452,7 +523,7 @@ impl NetSim {
             nic.slab.insert(
                 id,
                 Transfer {
-                    msg_idx,
+                    msg_id,
                     remaining_ns: cost.max(1),
                     checkpoint: now,
                     running: false,
@@ -476,6 +547,9 @@ impl NetSim {
     /// A chaos slowdown factor for `node` stretches the duration.
     pub fn compute(&mut self, node: Rank, dur_ns: Ns, tag: u64) {
         assert!(node < self.p);
+        if !self.owns(node) {
+            return;
+        }
         let dur = match &self.chaos {
             Some(plan) => {
                 let m = plan.slowdown_milli.get(node).copied().unwrap_or(1000);
@@ -500,6 +574,9 @@ impl NetSim {
     /// shared-memory copies also need host cycles, which a library
     /// without a progress thread only spends inside blocking calls.
     pub fn set_comm_gated(&mut self, node: Rank, gated: bool) {
+        if !self.owns(node) {
+            return;
+        }
         let rails = self.nics[node].len();
         let chans = (0..rails)
             .map(|rail| Chan::Inter { rail: rail as u32 })
@@ -602,77 +679,158 @@ impl NetSim {
     /// Advance to and return the next externally-visible event.
     pub fn next(&mut self) -> Option<SimEvent> {
         while let Some((at, ev)) = self.queue.pop() {
-            match ev {
-                Internal::ComputeDone { node, tag } => {
-                    return Some(SimEvent::ComputeDone { node, tag, at });
-                }
-                Internal::Deliver { msg_idx } => {
-                    return Some(SimEvent::MsgDelivered {
-                        msg: self.msgs[msg_idx].clone(),
-                        at,
-                    });
-                }
-                Internal::EgressDone { node, chan, xfer, gen } => {
-                    let nic = self.chan_mut(node, chan);
-                    if nic.gen != gen {
-                        continue; // stale: the channel was rescheduled since
-                    }
-                    let t = nic.slab.remove(&xfer).expect("generation-valid transfer exists");
-                    debug_assert!(t.running);
-                    nic.running = None;
-                    if let Some(since) = nic.busy_since.take() {
-                        nic.busy_ns += at - since;
-                    }
-                    let msg_idx = t.msg_idx;
-                    // A striped transfer leaves the wire when its LAST
-                    // rail piece does; then in-flight latency
-                    // (tier-priced, paid once), then delivery.
-                    self.egress_left[msg_idx] -= 1;
-                    if self.egress_left[msg_idx] == 0 {
-                        let lat = {
-                            let m = &self.msgs[msg_idx];
-                            let base = self.topo.latency_between(m.src, m.dst);
-                            // A latency flap active on the hop's tier
-                            // stretches the in-flight time — timing
-                            // only, never the payload.
-                            match &self.chaos {
-                                Some(plan) => {
-                                    let level = self.topo.level_of(m.src, m.dst);
-                                    let mult = plan.latency_mult_at(level, at);
-                                    if mult != 1000 {
-                                        self.chaos_stats.latency_spikes += 1;
-                                    }
-                                    base.saturating_mul(mult) / 1000
-                                }
-                                None => base,
-                            }
-                        };
-                        self.queue.push_in(lat, Internal::Deliver { msg_idx });
-                    }
-                    self.reschedule(node, chan);
-                }
-                Internal::ChaosGate { on } => {
-                    if on {
-                        self.zero_bw_active += 1;
-                        if self.zero_bw_active == 1 {
-                            self.chaos_stats.zero_bw_windows += 1;
-                            self.set_chaos_gate(true);
-                        }
-                    } else {
-                        self.zero_bw_active = self.zero_bw_active.saturating_sub(1);
-                        if self.zero_bw_active == 0 {
-                            self.set_chaos_gate(false);
-                        }
-                    }
-                }
-                Internal::RailDie { idx } => {
-                    let Some(plan) = &self.chaos else { continue };
-                    let RailDeath { node, rail, .. } = plan.rail_deaths[idx];
-                    self.kill_rail(node, rail as usize);
-                }
+            if let Some(out) = self.dispatch(at, ev) {
+                return Some(out);
             }
         }
         None
+    }
+
+    /// Like [`NetSim::next`] but only processes events strictly before
+    /// `horizon` — the partitioned window step. Events at or past the
+    /// horizon stay queued; `None` means this window is exhausted, not
+    /// that the simulation is done.
+    pub fn next_before(&mut self, horizon: Ns) -> Option<SimEvent> {
+        while self.queue.peek_time().is_some_and(|t| t < horizon) {
+            let (at, ev) = self.queue.pop().expect("peeked event exists");
+            if let Some(out) = self.dispatch(at, ev) {
+                return Some(out);
+            }
+        }
+        None
+    }
+
+    /// Timestamp of the earliest pending event, if any (the shard clock
+    /// the partition coordinator takes the fleet minimum over).
+    pub fn next_event_time(&self) -> Option<Ns> {
+        self.queue.peek_time()
+    }
+
+    /// Inject a cross-partition arrival: `msg` delivers locally at
+    /// absolute time `at` (already includes the in-flight latency the
+    /// source shard priced). Conservative lookahead guarantees
+    /// `at >= now` — mail never arrives in a shard's past.
+    pub fn inject_delivery(&mut self, at: Ns, msg: MsgDesc) {
+        debug_assert!(
+            at >= self.queue.now(),
+            "cross-partition mail at {at} violates shard clock {}",
+            self.queue.now()
+        );
+        let msg_id = self.next_msg_id;
+        self.next_msg_id += 1;
+        self.inflight.insert(msg_id, InFlight { msg, egress_left: 0 });
+        self.queue.push_at(at, Internal::Deliver { msg_id });
+    }
+
+    /// Drain the outbox of cross-partition messages produced since the
+    /// last call (empty on the serial simulator).
+    pub fn take_mail(&mut self) -> Vec<Mail> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Fast-forward an idle simulator's clock to `at` so subsequently
+    /// posted work starts there (no-op when the clock is already past
+    /// it). Panics if a pending event would be skipped — batched
+    /// drivers must process everything before `at` first.
+    pub fn advance_idle_to(&mut self, at: Ns) {
+        if let Some(t) = self.queue.peek_time() {
+            assert!(t >= at, "advance_idle_to({at}) would skip a pending event at {t}");
+        }
+        self.queue.advance_to(at);
+    }
+
+    /// Process one internal event; `Some` = externally visible.
+    fn dispatch(&mut self, at: Ns, ev: Internal) -> Option<SimEvent> {
+        match ev {
+            Internal::ComputeDone { node, tag } => {
+                Some(SimEvent::ComputeDone { node, tag, at })
+            }
+            Internal::Deliver { msg_id } => {
+                let inf = self.inflight.remove(&msg_id).expect("in-flight message exists");
+                Some(SimEvent::MsgDelivered { msg: inf.msg, at })
+            }
+            Internal::EgressDone { node, chan, xfer, gen } => {
+                let nic = self.chan_mut(node, chan);
+                if nic.gen != gen {
+                    return None; // stale: the channel was rescheduled since
+                }
+                let t = nic.slab.remove(&xfer).expect("generation-valid transfer exists");
+                debug_assert!(t.running);
+                nic.running = None;
+                if let Some(since) = nic.busy_since.take() {
+                    nic.busy_ns += at - since;
+                }
+                let msg_id = t.msg_id;
+                // A striped transfer leaves the wire when its LAST rail
+                // piece does; then in-flight latency (tier-priced, paid
+                // once), then delivery.
+                let done = {
+                    let inf = self.inflight.get_mut(&msg_id).expect("in-flight message exists");
+                    inf.egress_left -= 1;
+                    inf.egress_left == 0
+                };
+                if done {
+                    let (src, dst) = {
+                        let m = &self.inflight[&msg_id].msg;
+                        (m.src, m.dst)
+                    };
+                    let base = self.topo.latency_between(src, dst);
+                    // A latency flap active on the hop's tier stretches
+                    // the in-flight time — timing only, never the
+                    // payload. Counted on the SOURCE shard in
+                    // partitioned mode.
+                    let lat = match &self.chaos {
+                        Some(plan) => {
+                            let level = self.topo.level_of(src, dst);
+                            let mult = plan.latency_mult_at(level, at);
+                            if mult != 1000 {
+                                self.chaos_stats.latency_spikes += 1;
+                            }
+                            base.saturating_mul(mult) / 1000
+                        }
+                        None => base,
+                    };
+                    if self.owns(dst) {
+                        self.queue.push_in(lat, Internal::Deliver { msg_id });
+                    } else {
+                        // Destination lives on another shard: hand the
+                        // message to the coordinator with its delivery
+                        // time fully priced. `egress_at` preserves the
+                        // serial delivery-queue insertion order on
+                        // delivery-time ties.
+                        let inf = self.inflight.remove(&msg_id).expect("just seen");
+                        self.outbox.push(Mail {
+                            at: at.saturating_add(lat),
+                            egress_at: at,
+                            msg: inf.msg,
+                        });
+                    }
+                }
+                self.reschedule(node, chan);
+                None
+            }
+            Internal::ChaosGate { on } => {
+                if on {
+                    self.zero_bw_active += 1;
+                    if self.zero_bw_active == 1 {
+                        self.chaos_stats.zero_bw_windows += 1;
+                        self.set_chaos_gate(true);
+                    }
+                } else {
+                    self.zero_bw_active = self.zero_bw_active.saturating_sub(1);
+                    if self.zero_bw_active == 0 {
+                        self.set_chaos_gate(false);
+                    }
+                }
+                None
+            }
+            Internal::RailDie { idx } => {
+                let Some(plan) = &self.chaos else { return None };
+                let RailDeath { node, rail, .. } = plan.rail_deaths[idx];
+                self.kill_rail(node, rail as usize);
+                None
+            }
+        }
     }
 
     /// Open/close the zero-bandwidth gate on every NIC rail of every
@@ -1394,6 +1552,81 @@ mod tests {
         for f in &p.flaps {
             assert_eq!(f.level, smp.topology().top_level());
         }
+    }
+
+    // -- partitioned mode ----------------------------------------------------
+
+    #[test]
+    fn partitioned_shard_drops_foreign_work_and_mails_cross_shard_msgs() {
+        let topo = Topology::flat("test", 8.0, 1_000, 100, 1 << 20);
+        let mut s0 = NetSim::new_partition(topo.clone(), 4, 0, 2);
+        let mut s1 = NetSim::new_partition(topo, 4, 1, 2);
+        assert!(s0.owns(0) && s0.owns(1) && !s0.owns(2) && !s0.owns(3));
+        assert!(s1.owns(2) && s1.owns(3) && !s1.owns(0) && !s1.owns(1));
+        // Foreign send: silently ignored — no stats, no events.
+        s1.send(msg(0, 1, 1_000, 1, 7));
+        assert_eq!(s1.stats.msgs_sent, 0);
+        assert!(s1.idle());
+        // Local send on the owner: behaves exactly like the serial sim.
+        s0.send(msg(0, 1, 1_000, 1, 7));
+        assert_eq!(
+            s0.next().unwrap(),
+            SimEvent::MsgDelivered { msg: msg(0, 1, 1_000, 1, 7), at: 2_100 }
+        );
+        // Cross-shard send: egress simulated locally, delivery mailed.
+        s0.send(msg(1, 2, 1_000, 2, 8));
+        assert!(s0.next().is_none(), "no local delivery for a cross-shard message");
+        let mail = s0.take_mail();
+        assert_eq!(mail.len(), 1);
+        assert_eq!(mail[0].msg, msg(1, 2, 1_000, 2, 8));
+        // Posted at t=2_100 (clock after the first delivery): egress done
+        // at 2_100 + 100 + 1_000 = 3_200, delivery one latency later.
+        assert_eq!(mail[0].egress_at, 3_200);
+        assert_eq!(mail[0].at, 4_200);
+        // The destination shard injects and delivers at exactly that time.
+        s1.inject_delivery(mail[0].at, mail[0].msg.clone());
+        assert_eq!(
+            s1.next().unwrap(),
+            SimEvent::MsgDelivered { msg: msg(1, 2, 1_000, 2, 8), at: 4_200 }
+        );
+        assert!(s1.inflight.is_empty());
+    }
+
+    #[test]
+    fn advance_idle_to_fast_forwards_the_clock() {
+        let mut s = sim();
+        s.advance_idle_to(10_000);
+        s.send(msg(0, 1, 1_000, 1, 1));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 12_100),
+            other => panic!("{other:?}"),
+        }
+        // Rewinding is a no-op, not an error, once the queue is idle.
+        s.advance_idle_to(5);
+        assert_eq!(s.now(), 12_100);
+    }
+
+    #[test]
+    fn next_before_stops_at_the_horizon() {
+        let mut s = sim();
+        s.send(msg(0, 1, 1_000, 1, 1)); // egress done 1_100, delivery 2_100
+        assert!(s.next_before(2_100).is_none(), "delivery at 2_100 is not before 2_100");
+        assert_eq!(s.next_event_time(), Some(2_100));
+        match s.next_before(2_101).unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 2_100),
+            other => panic!("{other:?}"),
+        }
+        assert!(s.idle());
+    }
+
+    #[test]
+    fn inflight_slab_is_bounded_by_live_messages() {
+        let mut s = sim();
+        for i in 0..10 {
+            s.send(msg(0, 1, 1_000, 1, i));
+        }
+        s.drain();
+        assert!(s.inflight.is_empty(), "delivered messages must leave the slab");
     }
 
     #[test]

@@ -584,6 +584,28 @@ impl Topology {
         self.tiers.iter().map(|t| t.rails).fold(self.rails, u32::max)
     }
 
+    /// Conservative-lookahead bound for the partitioned simulator
+    /// ([`crate::collectives::parexec`]): the minimum in-flight latency
+    /// of any NIC tier. A node-partitioned fleet ([`crate::fabric::par`])
+    /// never splits a shared-memory node across shards, so every
+    /// cross-shard hop is a NIC-tier hop and spends at least this long
+    /// in flight after leaving the source wire — which is what lets a
+    /// shard safely execute all local events strictly before
+    /// `min(shard clocks) + lookahead_ns()`. Chaos latency flaps only
+    /// ever stretch latency ([`ChaosPlan::generate`] multipliers are
+    /// ≥ 1×), so the bound survives fault injection; hand-built plans
+    /// with shrinking multipliers must scale it down (the parexec
+    /// coordinator does).
+    ///
+    /// [`ChaosPlan::generate`]: crate::fabric::sim::ChaosPlan::generate
+    pub fn lookahead_ns(&self) -> Ns {
+        self.nic_levels()
+            .into_iter()
+            .map(|l| self.latency_at(l))
+            .min()
+            .unwrap_or(self.latency_ns)
+    }
+
     /// Rails a `bytes`-sized transfer at `level` actually occupies: the
     /// level's rail count, capped by the number of whole
     /// [`Topology::chunk_bytes`] chunks in flight. Latency-bound small
@@ -727,6 +749,27 @@ mod tests {
         // 10 Gbps = 1.25 B/ns -> 1 MiB takes 1048576/1.25 ≈ 838861 ns.
         assert_eq!(t.wire_ns(1_048_576), 838_861);
         assert!(t.wire_ns(2 * 1_048_576) >= 2 * t.wire_ns(1_048_576) - 1);
+    }
+
+    #[test]
+    fn lookahead_is_the_min_nic_tier_latency() {
+        // Flat fabric: the only NIC level is the top tier.
+        let flat = Topology::flat("t", 8.0, 1_000, 100, 1 << 20);
+        assert_eq!(flat.lookahead_ns(), 1_000);
+        // Shm tier does not lower the bound (its hops never cross shards).
+        let smp = Topology::eth_10g_smp(4);
+        assert_eq!(smp.lookahead_ns(), smp.latency_at(smp.top_level()));
+        // A faster in-rack NIC tier does.
+        let racked = Topology::by_name("eth10g-x2r4").unwrap();
+        let min_nic = racked
+            .nic_levels()
+            .into_iter()
+            .map(|l| racked.latency_at(l))
+            .min()
+            .unwrap();
+        assert_eq!(racked.lookahead_ns(), min_nic);
+        assert!(racked.lookahead_ns() < racked.latency_at(racked.top_level()));
+        assert!(racked.lookahead_ns() > 0);
     }
 
     #[test]

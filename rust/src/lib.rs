@@ -5,6 +5,16 @@
 //! DL-specific communication/scaling library. See `DESIGN.md` for the full
 //! system inventory and the per-experiment index.
 //!
+//! Two guided tours live under `docs/`:
+//!
+//! * `docs/ARCHITECTURE.md` — the whole stack top to bottom (topology →
+//!   chunk programs → selection → tuner → event-driven fabric, including
+//!   the partitioned parallel-simulation mode behind `--sim-threads` →
+//!   engine churn/chaos), with the data-flow diagram, the warning
+//!   contract and measured simulator performance;
+//! * `docs/PRESETS.md` — every topology preset, the
+//!   `<base>[-x<r>[r<k>][e<l>]]` suffix grammar and worked examples.
+//!
 //! ## Layout
 //!
 //! * [`fabric`] — the cluster substrate: a discrete-event network simulator
@@ -14,7 +24,10 @@
 //! * [`collectives`] — allreduce / reduce-scatter / allgather / broadcast as
 //!   per-rank *chunk programs* (ring, recursive halving-doubling, binomial
 //!   tree), size-adaptive algorithm selection, and low-precision wire
-//!   formats (fp32 / bf16 / int8 with per-block scales).
+//!   formats (fp32 / bf16 / int8 with per-block scales); includes the
+//!   partitioned parallel executor ([`collectives::parexec`]) that runs
+//!   timing workloads over sharded simulators with byte-identical
+//!   results.
 //! * [`progress`] — the asynchronous progress engine: dedicated "comm
 //!   cores" (threads) drive chunk programs off the compute path, with
 //!   message prioritization and chunk-granular preemption.

@@ -45,7 +45,7 @@ fn main() -> Result<()> {
             eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|train|chaos> [--flags]");
             eprintln!(
                 "  tune: --topo <preset> [--ranks-per-node r] [--rails l] \
-                 [--max-ranks n] [--quick] [--out table.json]"
+                 [--max-ranks n] [--quick] [--sim-threads t] [--out table.json]"
             );
             eprintln!("  topo: <preset> — dump the parsed tier stack (debug aid)");
             eprintln!("  simulate/scaling take --tuning-table <t.json> (measured selection)");
@@ -63,6 +63,15 @@ fn main() -> Result<()> {
             eprintln!(
                 "    e<l>    l NIC egress rails per node; chunk programs stripe \
                  across them (eth10g-x8r16e2, flat multi-rail = eth10g-x1e4)"
+            );
+            eprintln!(
+                "    full grammar, per-preset tier parameters and worked \
+                 examples: docs/PRESETS.md"
+            );
+            eprintln!(
+                "  parallel simulation: --sim-threads <t> partitions the \
+                 discrete-event fabric into t shards stepped by t worker \
+                 threads (byte-identical results; docs/ARCHITECTURE.md)"
             );
             eprintln!(
                 "  fault injection: --chaos <seed> installs a seeded fault plan \
@@ -212,19 +221,30 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if spec.max_ranks < 2 {
         return Err(anyhow!("--max-ranks must be >= 2"));
     }
+    let threads = args.usize_or("sim-threads", 1);
+    if threads == 0 {
+        return Err(anyhow!("--sim-threads must be >= 1"));
+    }
     eprintln!(
-        "tuning {}: ranks {:?}, {} sizes in [{}, {}]",
+        "tuning {}: ranks {:?}, {} sizes in [{}, {}]{}",
         topo.name,
         spec.rank_grid_for(&topo),
         spec.size_grid_for(&topo).len(),
         fmt_bytes(spec.min_bytes),
         fmt_bytes(spec.max_bytes),
+        if threads > 1 { format!(", {threads} probe threads") } else { String::new() },
     );
-    let table = probe::tune_with_progress(&topo, &spec, |done, total| {
-        if done % 25 == 0 || done == total {
-            eprintln!("  probed {done}/{total} cells");
-        }
-    });
+    // Grid cells are independent measurements, so the threaded probe
+    // emits a byte-identical table (see tuner::probe::tune_threaded).
+    let table = if threads > 1 {
+        probe::tune_threaded(&topo, &spec, threads)
+    } else {
+        probe::tune_with_progress(&topo, &spec, |done, total| {
+            if done % 25 == 0 || done == total {
+                eprintln!("  probed {done}/{total} cells");
+            }
+        })
+    };
 
     // Measured crossover summary: per (kind, rank row), where the winner
     // changes along the size axis. Only with --out: without the flag,

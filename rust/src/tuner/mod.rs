@@ -12,7 +12,10 @@
 //! * [`probe`] times every candidate algorithm for each tunable
 //!   [`crate::collectives::CollectiveKind`] across a log-spaced
 //!   (rank count × message size) grid by executing real chunk programs
-//!   through the discrete-event fabric on the live topology;
+//!   through the discrete-event fabric on the live topology — every
+//!   cell on its own private fabric, so `--sim-threads n` stripes the
+//!   grid across `n` workers ([`probe::tune_threaded`]) and still emits
+//!   a byte-identical table (see `docs/ARCHITECTURE.md`);
 //! * [`table`] persists the measurements as a [`TuningTable`] keyed by a
 //!   topology *fingerprint*, with per-cell winners, crossover extraction
 //!   and nearest-cell + log-interpolated lookup, serialized via
@@ -41,5 +44,5 @@ pub mod probe;
 pub mod table;
 
 pub use policy::SelectionPolicy;
-pub use probe::{tune, ProbeSpec};
+pub use probe::{tune, tune_threaded, ProbeSpec};
 pub use table::{out_of_grid_count, TuningTable};

@@ -4,6 +4,10 @@
 //! [`crate::collectives::simexec`] on the live [`Topology`] — the same
 //! cycle-accurate instrument the engine times training with, so measured
 //! winners transfer directly to engine runs.
+//!
+//! Cells are independent (one private fabric each), so the grid is
+//! embarrassingly parallel: [`tune_threaded`] stripes it across worker
+//! threads and produces a byte-identical table (`--sim-threads`).
 
 use crate::collectives::program::{build, CollectiveKind};
 use crate::collectives::selector::{allgather_candidates, candidate_algorithms};
@@ -180,6 +184,65 @@ pub fn tune(topo: &Topology, spec: &ProbeSpec) -> TuningTable {
     tune_with_progress(topo, spec, |_, _| {})
 }
 
+/// Measure the whole grid with `threads` worker threads
+/// (`mlsl tune --sim-threads n`).
+///
+/// Every grid cell is an independent measurement on its own private
+/// [`NetSim`] ([`measure_ns`]), so the grid is striped across scoped
+/// threads with no shared state at all. Results are inserted in the
+/// serial grid order afterwards, so the produced table — including its
+/// JSON serialization — is byte-identical to [`tune`]'s at any thread
+/// count. `threads <= 1` takes the serial path unchanged.
+pub fn tune_threaded(topo: &Topology, spec: &ProbeSpec, threads: usize) -> TuningTable {
+    if threads <= 1 {
+        return tune(topo, spec);
+    }
+    let ranks = spec.rank_grid_for(topo);
+    let sizes = spec.size_grid_for(topo);
+    let mut cells: Vec<(CollectiveKind, usize, u64)> = Vec::new();
+    for kind in TUNED_KINDS {
+        for &p in &ranks {
+            for &bytes in &sizes {
+                cells.push((kind, p, bytes));
+            }
+        }
+    }
+    let nthreads = threads.min(cells.len()).max(1);
+    let computed: Vec<Vec<(usize, MeasuredCell)>> = std::thread::scope(|scope| {
+        let cells = &cells;
+        let handles: Vec<_> = (0..nthreads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    // Stripe, don't chunk: the expensive large-p cells sit
+                    // at the end of the grid and would all land on the
+                    // last worker otherwise.
+                    let mut i = w;
+                    while i < cells.len() {
+                        let (kind, p, bytes) = cells[i];
+                        let cands = probe_candidates(topo, kind, p);
+                        let timings: Vec<(Algorithm, Ns)> = cands
+                            .iter()
+                            .map(|&a| (a, measure_ns(topo, kind, a, p, bytes)))
+                            .collect();
+                        out.push((i, MeasuredCell::new(p, bytes, timings)));
+                        i += nthreads;
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("probe worker panicked")).collect()
+    });
+    let mut flat: Vec<(usize, MeasuredCell)> = computed.into_iter().flatten().collect();
+    flat.sort_by_key(|&(i, _)| i);
+    let mut table = TuningTable::for_topology(topo);
+    for (i, cell) in flat {
+        table.insert(cells[i].0, cell);
+    }
+    table
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +338,20 @@ mod tests {
             .find(|c| c.ranks == 4 && c.bytes == 2 * e2.chunk_bytes)
             .expect("rail-transition cell measured");
         assert!(cell.best().is_some());
+    }
+
+    #[test]
+    fn threaded_tune_matches_serial_byte_for_byte() {
+        let topo = Topology::eth_10g_smp(2);
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let serial = tune(&topo, &spec);
+        for threads in [2usize, 3] {
+            let par = tune_threaded(&topo, &spec, threads);
+            assert_eq!(par.to_json_string(), serial.to_json_string(), "threads={threads}");
+        }
+        // threads=1 is literally the serial path.
+        assert_eq!(tune_threaded(&topo, &spec, 1).to_json_string(), serial.to_json_string());
     }
 
     #[test]

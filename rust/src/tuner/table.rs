@@ -201,13 +201,13 @@ impl TuningTable {
             let clamped = if p < min { min } else { max };
             OUT_OF_GRID.fetch_add(1, Ordering::Relaxed);
             if !OUT_OF_GRID_WARNED.swap(true, Ordering::Relaxed) {
-                eprintln!(
-                    "warning: tuning table for {} has no row at p={p} \
+                crate::util::warn::warn(format!(
+                    "tuning table for {} has no row at p={p} \
                      (probed grid spans {min}..={max}); clamping to the \
                      p={clamped} row — consider re-tuning after large \
                      membership changes",
                     self.topo_name
-                );
+                ));
             }
             return Some(clamped);
         }

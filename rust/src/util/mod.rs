@@ -6,6 +6,8 @@
 //! AOT manifests), [`cli`] flag parsing (would be `clap`), [`prng`] a
 //! deterministic xorshift generator (would be `rand`), and [`proptest`] a
 //! minimal property-testing harness used by the randomized invariant tests.
+//! [`warn`] is the single stderr funnel for user-facing diagnostics (the
+//! warning contract is documented in `docs/ARCHITECTURE.md`).
 
 pub mod bf16;
 pub mod cli;
@@ -13,3 +15,4 @@ pub mod json;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
+pub mod warn;

@@ -1,0 +1,35 @@
+//! The library's single warning funnel.
+//!
+//! Every user-facing diagnostic that is *not* part of a subcommand's
+//! payload goes through [`warn`], which writes one `warning: `-prefixed
+//! line to **stderr**. The contract (documented in
+//! `docs/ARCHITECTURE.md` §"Warning contract"):
+//!
+//! * stdout stays machine-consumable — `mlsl tune` without `--out`
+//!   pipes a pure-JSON table, simulate reports stay parseable;
+//! * warnings are grep-stable — CI asserts on the `analytic fallback`
+//!   and out-of-grid messages, so call sites keep their key phrases;
+//! * one-shot warnings (e.g. the tuning-table out-of-grid clamp in
+//!   [`crate::tuner::table`]) implement their own latching and call
+//!   [`warn`] at most once per process.
+
+/// Emit `warning: {msg}` on stderr.
+pub fn warn(msg: impl AsRef<str>) {
+    eprintln!("{}", format_warning(msg.as_ref()));
+}
+
+/// The exact line [`warn`] prints (separated out so tests can pin the
+/// format without capturing stderr).
+pub fn format_warning(msg: &str) -> String {
+    format!("warning: {msg}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_is_stable() {
+        assert_eq!(format_warning("x — analytic fallback"), "warning: x — analytic fallback");
+    }
+}

@@ -1,0 +1,167 @@
+//! Property tests for the partitioned parallel simulator
+//! (`collectives::parexec`): partitioning is an *implementation detail*
+//! of the clock, never of the physics.
+//!
+//! For random topologies, collective builders, sizes and chaos plans,
+//! a partitioned run at any (shards, threads) must reproduce the serial
+//! simulator **byte-identically**:
+//!
+//! * the delivered-message multiset (every src/dst/bytes/priority/tag,
+//!   with its delivery timestamp);
+//! * per-rank completion timestamps and the finish time;
+//! * the final fabric clock after full drain (trailing chaos windows
+//!   included);
+//! * traffic stats and every chaos fault counter.
+//!
+//! See `docs/ARCHITECTURE.md` §"Partitioned mode" for why conservative
+//! lookahead makes this exact rather than approximate.
+
+use mlsl::collectives::parexec::{
+    run_collective, run_collective_serial, run_pattern, FleetConfig, PatternSpec,
+};
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::{Algorithm as A, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::ChaosPlan;
+use mlsl::util::proptest::{run as prop_run, Config};
+
+/// Random test fabric: flat, smp, multi-rail or racked — the partition
+/// boundary must be safe on all of them.
+fn random_topo(pick: usize) -> Topology {
+    match pick % 4 {
+        0 => Topology::flat("partest", 8.0, 1_000, 100, 1 << 20),
+        1 => Topology::by_name("eth10g-x2").unwrap(),
+        2 => Topology::by_name("eth10g-x2e2").unwrap(),
+        _ => Topology::by_name("eth10g-x2r4").unwrap(),
+    }
+}
+
+#[test]
+fn prop_partitioned_collectives_match_serial_byte_for_byte() {
+    prop_run(
+        Config { cases: 40, seed: 91 },
+        |r| {
+            let topo_pick = r.usize_below(4);
+            let p = 2 + r.usize_below(63); // 2..65
+            let n = 1 + r.usize_below(2_000);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                A::RecursiveDoubling
+            } else {
+                A::Ring
+            };
+            let kind = if r.below(2) == 0 {
+                CollectiveKind::Allreduce
+            } else {
+                CollectiveKind::Allgather
+            };
+            let chaos_seed = if r.below(2) == 0 { Some(r.below(u64::MAX)) } else { None };
+            let shards = 2 + r.usize_below(3); // 2..=4
+            let threads = [1usize, 2, 4][r.usize_below(3)];
+            (topo_pick, p, n, kind, alg, chaos_seed, shards, threads)
+        },
+        |&(topo_pick, p, n, kind, alg, chaos_seed, shards, threads)| {
+            let topo = random_topo(topo_pick);
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            let chaos = chaos_seed.map(|s| ChaosPlan::generate(s, &topo, p, 2_000_000));
+            let label = format!(
+                "{kind:?}/{alg} p={p} n={n} topo={} chaos={chaos_seed:?} \
+                 shards={shards} threads={threads}",
+                topo.name
+            );
+            let serial = run_collective_serial(
+                &topo,
+                p,
+                progs.clone(),
+                WireDtype::F32,
+                1,
+                chaos.as_ref(),
+                true,
+            );
+            let cfg = FleetConfig { shards, threads, chaos, record_deliveries: true };
+            let par = run_collective(&topo, p, progs.clone(), WireDtype::F32, 1, &cfg);
+            if par.delivered != serial.delivered {
+                return Err(format!("{label}: delivered-message multisets diverged"));
+            }
+            if par.completions != serial.completions {
+                return Err(format!("{label}: completion timestamps diverged"));
+            }
+            if par.finish_ns != serial.finish_ns || par.final_clock != serial.final_clock {
+                return Err(format!(
+                    "{label}: finish {} vs {} / final clock {} vs {}",
+                    par.finish_ns, serial.finish_ns, par.final_clock, serial.final_clock
+                ));
+            }
+            if par.stats.msgs_sent != serial.stats.msgs_sent
+                || par.stats.bytes_sent != serial.stats.bytes_sent
+                || par.stats.bytes_by_priority != serial.stats.bytes_by_priority
+            {
+                return Err(format!("{label}: traffic stats diverged"));
+            }
+            if par.chaos != serial.chaos {
+                return Err(format!(
+                    "{label}: chaos counters diverged ({:?} vs {:?})",
+                    par.chaos, serial.chaos
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pattern_runs_are_partition_invariant() {
+    // The O(p)-state pattern drivers (the datacenter-scale bench path)
+    // obey the same invariant: finish time, message count and moved
+    // bytes are independent of the partitioning.
+    prop_run(
+        Config { cases: 40, seed: 92 },
+        |r| {
+            let topo_pick = r.usize_below(4);
+            let pow2 = r.below(2) == 0;
+            let p = if pow2 {
+                1usize << (2 + r.usize_below(5)) // 4..=64
+            } else {
+                3 + r.usize_below(62) // 3..65
+            };
+            let bytes = 1 + r.below(64 << 10);
+            let shards = 2 + r.usize_below(3);
+            let threads = [1usize, 2, 4][r.usize_below(3)];
+            (topo_pick, pow2, p, bytes, shards, threads)
+        },
+        |&(topo_pick, pow2, p, bytes, shards, threads)| {
+            let topo = random_topo(topo_pick);
+            let spec = if pow2 {
+                PatternSpec::rdoubling_allreduce(p, bytes)
+            } else {
+                PatternSpec::ring_allreduce(p, bytes)
+            };
+            let label = format!(
+                "{:?} p={p} bytes={bytes} topo={} shards={shards} threads={threads}",
+                spec.pattern, topo.name
+            );
+            let serial = run_pattern(
+                &topo,
+                &spec,
+                &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+            );
+            let par = run_pattern(
+                &topo,
+                &spec,
+                &FleetConfig { shards, threads, chaos: None, record_deliveries: false },
+            );
+            if par.finish_ns != serial.finish_ns || par.final_clock != serial.final_clock {
+                return Err(format!(
+                    "{label}: finish {} vs {} / clock {} vs {}",
+                    par.finish_ns, serial.finish_ns, par.final_clock, serial.final_clock
+                ));
+            }
+            if par.stats.msgs_sent != serial.stats.msgs_sent
+                || par.stats.msgs_sent != spec.total_msgs()
+                || par.stats.bytes_sent != serial.stats.bytes_sent
+            {
+                return Err(format!("{label}: traffic stats diverged"));
+            }
+            Ok(())
+        },
+    );
+}
