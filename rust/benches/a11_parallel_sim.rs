@@ -62,9 +62,10 @@ fn main() {
     let t = topo();
     let (p, n) = (256usize, 64 << 10);
     let serial =
-        run_collective_serial(&t, p, allreduce_ring(p, n), WireDtype::F32, 1, None, true);
+        run_collective_serial(&t, p, allreduce_ring(p, n), WireDtype::F32, 1, None, true, false);
     for (shards, threads) in [(2usize, 1usize), (4, 4)] {
-        let cfg = FleetConfig { shards, threads, chaos: None, record_deliveries: true };
+        let cfg =
+            FleetConfig { shards, threads, chaos: None, record_deliveries: true, trace: false };
         let par = run_collective(&t, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
         assert_eq!(par.delivered, serial.delivered, "shards={shards}");
         assert_eq!(par.completions, serial.completions, "shards={shards}");
@@ -76,7 +77,7 @@ fn main() {
     let base = run_pattern(
         &t,
         &eq_spec,
-        &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+        &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false, trace: false },
     );
     let fleet = run_pattern(&t, &eq_spec, &FleetConfig::threaded(THREADS));
     assert_eq!(fleet.finish_ns, base.finish_ns, "p=1024 ring finish");
@@ -123,7 +124,8 @@ fn main() {
             par_ms: 0.0,
         },
     ];
-    let serial_cfg = FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false };
+    let serial_cfg =
+        FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false, trace: false };
     let par_cfg = FleetConfig::threaded(THREADS);
     for c in &mut cases {
         let (s_ms, s_out) = time_pattern(&c.spec, &serial_cfg);

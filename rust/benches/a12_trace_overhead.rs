@@ -1,0 +1,170 @@
+//! **Ablation A12**: the deterministic trace layer (`mlsl::trace`) —
+//! what observation costs, and what the critical-path analyzer says
+//! about the a6-style hierarchical workload.
+//!
+//! The observable contract this bench ASSERTS:
+//!
+//! * **zero behavioral impact** — a traced p = 256 ring allreduce
+//!   produces byte-identical completions, delivered messages, finish
+//!   time and traffic stats to the untraced run (checked before any
+//!   timing is taken);
+//! * **disabled-path stability** — two interleaved min-of-N batches of
+//!   the *untraced* run agree within 2% wall-clock: the trace hooks
+//!   (one branch on an `Option` that is `None`) leave no measurable
+//!   residue on the hot path (re-measured up to 3 times to ride out
+//!   scheduler noise before failing);
+//! * **bounded recording cost** — the traced run is at most 2.5x the
+//!   untraced wall-clock on the same workload (it records one span per
+//!   message plus busy intervals);
+//! * **attribution** — on the hierarchical (a6-style) allreduce at
+//!   16 MiB, the critical path's per-tier decomposition puts the
+//!   majority of hop time on the inter-node tier: the leader phase is
+//!   the bottleneck the paper's hierarchical analysis predicts.
+//!
+//! Emits `BENCH_trace_overhead.json` (repo root).
+//!
+//! Run: `cargo bench --bench a12_trace_overhead`
+
+use std::time::Instant;
+
+use mlsl::collectives::parexec::{run_collective_serial, ParOutcome};
+use mlsl::collectives::program::{allreduce_hierarchical, allreduce_ring};
+use mlsl::collectives::{Algorithm, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::trace::critical::critical_path;
+
+const REPS: usize = 7;
+const RETRIES: usize = 3;
+
+fn run_ring(topo: &Topology, p: usize, n: usize, record: bool, trace: bool) -> ParOutcome {
+    run_collective_serial(
+        topo,
+        p,
+        allreduce_ring(p, n),
+        WireDtype::F32,
+        1,
+        None,
+        record,
+        trace,
+    )
+}
+
+/// Min-of-`REPS` wall-clock milliseconds for one arm.
+fn min_ms(topo: &Topology, p: usize, n: usize, trace: bool) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let out = run_ring(topo, p, n, false, trace);
+        assert!(out.finish_ns > 0);
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    best
+}
+
+fn main() {
+    let topo = Topology::eth_10g();
+    let (p, n) = (256usize, 64 << 10);
+
+    // -- behavioral identity first: nothing below matters if this fails --
+    let off = run_ring(&topo, p, n, true, false);
+    let on = run_ring(&topo, p, n, true, true);
+    assert!(off.trace.is_none(), "untraced run must not allocate a trace");
+    let trace = on.trace.as_ref().expect("traced run records spans");
+    assert!(trace.span_count() > 0);
+    assert_eq!(on.completions, off.completions, "tracing changed completions");
+    assert_eq!(on.delivered, off.delivered, "tracing changed the delivered multiset");
+    assert_eq!(on.finish_ns, off.finish_ns, "tracing changed the finish time");
+    assert_eq!(on.final_clock, off.final_clock);
+    assert_eq!(on.stats.msgs_sent, off.stats.msgs_sent);
+    assert_eq!(on.stats.bytes_sent, off.stats.bytes_sent);
+    assert_eq!(on.stats.preemptions, off.stats.preemptions);
+    println!(
+        "identity: traced == untraced at p={p} ring ({} spans recorded, finish {} ns)",
+        trace.span_count(),
+        on.finish_ns
+    );
+
+    // -- disabled-path stability: interleaved A/B, min-of-{REPS} --------
+    let (mut base_a, mut base_b, mut drift) = (0.0f64, 0.0f64, f64::MAX);
+    for attempt in 0..RETRIES {
+        base_a = min_ms(&topo, p, n, false);
+        base_b = min_ms(&topo, p, n, false);
+        drift = (base_a - base_b).abs() / base_a.min(base_b).max(1e-9);
+        if drift <= 0.02 {
+            break;
+        }
+        println!("  drift {:.1}% on attempt {} — re-measuring", drift * 100.0, attempt + 1);
+    }
+    assert!(
+        drift <= 0.02,
+        "disabled-path A/B drift {:.2}% > 2% after {RETRIES} attempts \
+         ({base_a:.2} ms vs {base_b:.2} ms)",
+        drift * 100.0
+    );
+    println!(
+        "disabled path: {base_a:.2} ms vs {base_b:.2} ms interleaved ({:.2}% drift)",
+        drift * 100.0
+    );
+
+    // -- recording cost: traced vs untraced wall-clock ------------------
+    let untraced_ms = base_a.min(base_b);
+    let traced_ms = min_ms(&topo, p, n, true);
+    let ratio = traced_ms / untraced_ms.max(1e-9);
+    println!("recording cost: {untraced_ms:.2} ms untraced, {traced_ms:.2} ms traced ({ratio:.2}x)");
+    assert!(
+        ratio <= 2.5,
+        "traced run is {ratio:.2}x the untraced wall-clock (> 2.5x bound)"
+    );
+
+    // -- critical-path attribution on the hierarchical workload ---------
+    // a6 shape: 4 ranks/node over eth10g shm tiers, 16 ranks total,
+    // 16 MiB of f32 gradient — large enough that the leaders' inter-node
+    // ring dominates the intra-node reduce/broadcast phases.
+    let smp = Topology::by_name("eth10g-x4").expect("preset");
+    let (hp, rpn) = (16usize, 4usize);
+    let big_n = (16usize << 20) / 4; // 16 MiB of f32
+    let hier = run_collective_serial(
+        &smp,
+        hp,
+        allreduce_hierarchical(hp, big_n, rpn, Algorithm::Ring),
+        WireDtype::F32,
+        1,
+        None,
+        false,
+        true,
+    );
+    let htrace = hier.trace.as_ref().expect("traced");
+    let cp = critical_path(htrace, 1).expect("collective 1 leaves hops");
+    print!("{}", cp.render(3));
+    let inter = cp.level_share(1);
+    assert!(
+        inter > 0.5,
+        "hierarchical 16 MiB: inter-node tier carries {:.0}% of the critical path \
+         (expected the leader phase to dominate)",
+        inter * 100.0
+    );
+    println!(
+        "attribution: inter-node tier = {:.0}% of the 16 MiB hierarchical critical path",
+        inter * 100.0
+    );
+
+    // -- emit BENCH_trace_overhead.json at the repo root ----------------
+    let json = format!(
+        "{{\n  \"bench\": \"a12_trace_overhead\",\n  \"p\": {p},\n  \"elems\": {n},\n  \
+         \"spans\": {},\n  \"untraced_ms\": {untraced_ms:.3},\n  \
+         \"disabled_drift_pct\": {:.3},\n  \"traced_ms\": {traced_ms:.3},\n  \
+         \"traced_ratio\": {ratio:.3},\n  \"hier_inter_tier_share\": {:.3}\n}}\n",
+        trace.span_count(),
+        drift * 100.0,
+        inter,
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace_overhead.json");
+    std::fs::write(out, &json).expect("write BENCH_trace_overhead.json");
+    println!("wrote {out}");
+
+    println!("\nexpected shape: the disabled path is one never-taken branch per event, so");
+    println!("the A/B batches are statistically identical; recording appends fixed-size");
+    println!("span records (no per-event allocation beyond the buffer growth), keeping the");
+    println!("traced run within a small constant of untraced; and at 16 MiB the hierarchy's");
+    println!("leader ring owns the critical path, matching the selector's cost model. OK");
+}

@@ -52,6 +52,7 @@ use crate::fabric::par::{mail_key, shard_of, Mail};
 use crate::fabric::sim::{ChaosPlan, ChaosStats, SimStats};
 use crate::fabric::topology::Topology;
 use crate::fabric::{MsgDesc, NetSim, SimEvent};
+use crate::trace::Trace;
 use crate::{Ns, Priority, Rank};
 
 /// Collective id `run_collective` posts under (single-workload runs).
@@ -72,13 +73,17 @@ pub struct FleetConfig {
     /// Record every `MsgDelivered` into [`ParOutcome::delivered`]
     /// (memory ∝ message count — equivalence tests only).
     pub record_deliveries: bool,
+    /// Enable span tracing on every shard; per-shard buffers are merged
+    /// into [`ParOutcome::trace`], byte-identical to the serial run's
+    /// normalized trace (see `docs/TRACING.md`).
+    pub trace: bool,
 }
 
 impl FleetConfig {
     /// `threads` workers over `threads` shards, nothing recorded.
     pub fn threaded(threads: usize) -> Self {
         let t = threads.max(1);
-        Self { shards: t, threads: t, chaos: None, record_deliveries: false }
+        Self { shards: t, threads: t, chaos: None, record_deliveries: false, trace: false }
     }
 }
 
@@ -101,6 +106,9 @@ pub struct ParOutcome {
     pub stats: SimStats,
     /// Fleet-aggregated fault counters (equal to the serial run's).
     pub chaos: ChaosStats,
+    /// Merged, normalized trace; only filled when [`FleetConfig::trace`]
+    /// is set.
+    pub trace: Option<Trace>,
 }
 
 /// One shard's reactive workload: posts initial work, then reacts to
@@ -216,6 +224,19 @@ fn aggregate_stats(shards: &[NetSim]) -> (SimStats, ChaosStats) {
     (stats, chaos)
 }
 
+/// Drain and merge the fleet's per-shard trace buffers. Every span is
+/// recorded on exactly one shard (hops on the source, compute/busy on
+/// the owner, collective marks owner-gated — see `fabric/sim.rs`), so
+/// the merge is a plain sorted union equal to the serial trace.
+fn collect_trace(shards: &mut [NetSim], on: bool) -> Option<Trace> {
+    if !on {
+        return None;
+    }
+    Some(Trace::merge(
+        shards.iter_mut().filter_map(NetSim::take_trace).collect(),
+    ))
+}
+
 // ---------------------------------------------------------------------------
 // Program-driven runs (real collective builders)
 // ---------------------------------------------------------------------------
@@ -279,6 +300,7 @@ pub fn run_collective(
             if let Some(plan) = &cfg.chaos {
                 sim.set_chaos(plan.clone());
             }
+            sim.set_trace(cfg.trace);
             sim
         })
         .collect();
@@ -325,6 +347,7 @@ pub fn run_collective(
     completions.sort_by_key(|c| (c.at, c.rank));
     delivered.sort_by_key(delivery_key);
     let (stats, chaos) = aggregate_stats(&shards);
+    let trace = collect_trace(&mut shards, cfg.trace);
     ParOutcome {
         finish_ns: completions.iter().map(|c| c.at).max().unwrap_or(0),
         final_clock: shards.iter().map(|s| s.now()).max().unwrap_or(0),
@@ -332,12 +355,14 @@ pub fn run_collective(
         delivered,
         stats,
         chaos,
+        trace,
     }
 }
 
 /// Reference serial run of the same workload on the classic simulator
 /// (plain [`NetSim::next`] loop, fully drained): what the partitioned
 /// fleet must byte-identically reproduce.
+#[allow(clippy::too_many_arguments)]
 pub fn run_collective_serial(
     topo: &Topology,
     p: usize,
@@ -346,11 +371,13 @@ pub fn run_collective_serial(
     priority: Priority,
     chaos: Option<&ChaosPlan>,
     record_deliveries: bool,
+    trace: bool,
 ) -> ParOutcome {
     let mut sim = NetSim::new(topo.clone(), p);
     if let Some(plan) = chaos {
         sim.set_chaos(plan.clone());
     }
+    sim.set_trace(trace);
     let mut exec = SimCollectives::new();
     let mut completions = exec.post(&mut sim, COLL_ID, programs, wire, priority);
     let mut delivered = Vec::new();
@@ -366,8 +393,9 @@ pub fn run_collective_serial(
     assert_eq!(completions.len(), p);
     completions.sort_by_key(|c| (c.at, c.rank));
     delivered.sort_by_key(delivery_key);
-    let shards = [sim];
+    let mut shards = [sim];
     let (stats, chaos) = aggregate_stats(&shards);
+    let tr = collect_trace(&mut shards, trace);
     ParOutcome {
         finish_ns: completions.iter().map(|c| c.at).max().unwrap_or(0),
         final_clock: shards[0].now(),
@@ -375,6 +403,7 @@ pub fn run_collective_serial(
         delivered,
         stats,
         chaos,
+        trace: tr,
     }
 }
 
@@ -518,6 +547,7 @@ pub fn run_pattern(topo: &Topology, spec: &PatternSpec, cfg: &FleetConfig) -> Pa
             if let Some(plan) = &cfg.chaos {
                 sim.set_chaos(plan.clone());
             }
+            sim.set_trace(cfg.trace);
             sim
         })
         .collect();
@@ -543,6 +573,7 @@ pub fn run_pattern(topo: &Topology, spec: &PatternSpec, cfg: &FleetConfig) -> Pa
         }
     }
     let (stats, chaos) = aggregate_stats(&shards);
+    let trace = collect_trace(&mut shards, cfg.trace);
     ParOutcome {
         finish_ns: drivers.iter().map(|d| d.last_at).max().unwrap_or(0),
         final_clock: shards.iter().map(|s| s.now()).max().unwrap_or(0),
@@ -550,6 +581,7 @@ pub fn run_pattern(topo: &Topology, spec: &PatternSpec, cfg: &FleetConfig) -> Pa
         delivered: Vec::new(),
         stats,
         chaos,
+        trace,
     }
 }
 
@@ -576,6 +608,7 @@ mod tests {
             1,
             None,
             true,
+            false,
         );
         for shards in [1usize, 2, 3, 4] {
             for threads in [1usize, 2, 4] {
@@ -584,6 +617,7 @@ mod tests {
                     threads,
                     chaos: None,
                     record_deliveries: true,
+                    trace: false,
                 };
                 let par =
                     run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
@@ -611,12 +645,14 @@ mod tests {
             1,
             Some(&plan),
             true,
+            false,
         );
         let cfg = FleetConfig {
             shards: 4,
             threads: 2,
             chaos: Some(plan),
             record_deliveries: true,
+            trace: false,
         };
         let par = run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
         assert_eq!(par.delivered, serial.delivered);
@@ -639,12 +675,18 @@ mod tests {
             1,
             None,
             false,
+            false,
         )
         .finish_ns;
         let spec = PatternSpec::ring_allreduce(p, (n / p * 4) as u64);
-        let t_pat =
-            run_pattern(&topo, &spec, &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false })
-                .finish_ns;
+        let serial_cfg = FleetConfig {
+            shards: 1,
+            threads: 1,
+            chaos: None,
+            record_deliveries: false,
+            trace: false,
+        };
+        let t_pat = run_pattern(&topo, &spec, &serial_cfg).finish_ns;
         assert_eq!(t_pat, t_prog);
     }
 
@@ -658,7 +700,13 @@ mod tests {
             let serial = run_pattern(
                 &topo,
                 &spec,
-                &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+                &FleetConfig {
+                    shards: 1,
+                    threads: 1,
+                    chaos: None,
+                    record_deliveries: false,
+                    trace: false,
+                },
             );
             for threads in [2usize, 4] {
                 let par = run_pattern(&topo, &spec, &FleetConfig::threaded(threads));
@@ -668,6 +716,60 @@ mod tests {
                 assert_eq!(par.stats.bytes_sent, serial.stats.bytes_sent);
             }
         }
+    }
+
+    #[test]
+    fn traces_merge_byte_identically_across_shards_and_threads() {
+        let topo = flat();
+        let p = 8;
+        let n = 4 << 10;
+        let serial = run_collective_serial(
+            &topo,
+            p,
+            allreduce_ring(p, n),
+            WireDtype::F32,
+            1,
+            None,
+            false,
+            true,
+        );
+        let st = serial.trace.expect("serial trace recorded");
+        assert!(st.span_count() > 0);
+        // Every rank's completion made it into the trace exactly once.
+        let dones = st
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::TraceEvent::RankDone { .. }))
+            .count();
+        assert_eq!(dones, p);
+        for (shards, threads) in [(2usize, 1usize), (3, 2), (4, 4)] {
+            let cfg = FleetConfig {
+                shards,
+                threads,
+                chaos: None,
+                record_deliveries: false,
+                trace: true,
+            };
+            let par = run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &cfg);
+            assert_eq!(
+                par.trace.as_ref(),
+                Some(&st),
+                "merged trace must equal serial (shards={shards} threads={threads})"
+            );
+        }
+        // And tracing itself never moves the clock.
+        let untraced = run_collective_serial(
+            &topo,
+            p,
+            allreduce_ring(p, n),
+            WireDtype::F32,
+            1,
+            None,
+            false,
+            false,
+        );
+        assert_eq!(untraced.finish_ns, serial.finish_ns);
+        assert!(untraced.trace.is_none());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::collections::{HashMap, VecDeque};
 use super::program::Program;
 use super::quant::WireDtype;
 use crate::fabric::{MsgDesc, NetSim, SimEvent};
+use crate::trace::TraceEvent;
 use crate::{Ns, Priority, Rank};
 
 /// Per-rank execution state of one in-flight collective.
@@ -104,6 +105,16 @@ impl SimCollectives {
             map,
             inv,
         };
+        // One start record per collective: the shard owning program rank 0
+        // emits it, so merged partitioned traces match the serial trace.
+        if sim.trace_enabled() && sim.owns(op.map[0]) {
+            sim.trace_push(TraceEvent::CollStart {
+                coll_id,
+                at: op.posted_at,
+                priority,
+                ranks: p,
+            });
+        }
         let mut done = Vec::new();
         for r in 0..p {
             Self::advance(&mut op, sim, coll_id, r, &mut done);
@@ -182,6 +193,16 @@ impl SimCollectives {
             st.done_at = Some(sim.now());
             // Completions report FABRIC node ids, not program ranks.
             done.push(Completion { coll_id, rank: op.map[r], at: sim.now() });
+            // Owner-gated like CollStart: non-owner shards reach here only
+            // for phantom completions (recv-free ranks), which parexec
+            // filters — the trace must skip them the same way.
+            if sim.trace_enabled() && sim.owns(op.map[r]) {
+                sim.trace_push(TraceEvent::RankDone {
+                    coll_id,
+                    rank: op.map[r],
+                    at: sim.now(),
+                });
+            }
         }
     }
 

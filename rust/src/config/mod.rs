@@ -172,6 +172,11 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.wire = wire;
     cfg.iterations = iterations;
     cfg.record_timeline = args.bool("timeline");
+    // Span tracing: `--trace` (bare, or `--trace out.json` — `mlsl
+    // simulate` treats a non-boolean value as a Chrome-trace output
+    // path, see `docs/TRACING.md`). The config only carries the switch;
+    // path handling stays in the CLI.
+    cfg.trace = args.get("trace").or_else(|| file.get("trace")).is_some();
     cfg.jitter = get("jitter", "0.0").parse().context("--jitter")?;
     cfg.sim_threads = sim_threads;
     // Elastic membership: `--churn leave:3@1,join:3@2` (see the module
@@ -296,6 +301,14 @@ mod tests {
         assert!(engine_config(&args("--nodes 4 --churn nonsense")).is_err());
         assert!(engine_config(&args("--nodes 1 --churn leave:0@1")).is_err());
         assert!(engine_config(&args("--chaos notanumber")).is_err());
+    }
+
+    #[test]
+    fn trace_flag_threads_through() {
+        assert!(!engine_config(&args("")).unwrap().trace);
+        assert!(engine_config(&args("--trace=true")).unwrap().trace);
+        // A path value also turns tracing on (simulate exports to it).
+        assert!(engine_config(&args("--trace out.json")).unwrap().trace);
     }
 
     #[test]

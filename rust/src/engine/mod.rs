@@ -47,6 +47,7 @@ use crate::fabric::topology::{NodeSpec, Topology};
 use crate::fabric::{ChaosPlan, NetSim, SimEvent};
 use crate::metrics::Timeline;
 use crate::mlsl::Distribution;
+use crate::trace::TraceEvent;
 use crate::models::ModelDesc;
 use crate::tuner::SelectionPolicy;
 use crate::{Ns, Priority, Rank};
@@ -181,7 +182,14 @@ pub struct EngineConfig {
     pub wire: WireDtype,
     /// Measured iterations (one extra warmup iteration is always run).
     pub iterations: usize,
+    /// Render [`Report::timeline`] (the node-0 ASCII Gantt). Implies
+    /// span tracing: the timeline is derived from the trace store
+    /// ([`Timeline::from_trace`]), not recorded separately.
     pub record_timeline: bool,
+    /// Record the full span trace into [`Report::trace`]
+    /// (`simulate --trace <out.json>` / `mlsl trace`). Off = the
+    /// simulator's zero-overhead disabled path.
+    pub trace: bool,
     /// Elastic membership: ranks leaving/joining at iteration boundaries
     /// (`--churn`). None = fixed membership.
     pub churn: Option<ChurnPlan>,
@@ -223,6 +231,7 @@ impl EngineConfig {
             wire: WireDtype::F32,
             iterations: 3,
             record_timeline: false,
+            trace: false,
             churn: None,
             chaos: None,
             jitter: 0.0,
@@ -323,6 +332,21 @@ fn tag_of(phase: NodePhase) -> u64 {
     }
 }
 
+/// Inverse of [`tag_of`] for the node-0 Gantt: `f{l}` / `b{l}` labels
+/// for traced compute spans ([`Timeline::from_trace`]); other nodes'
+/// spans stay trace-only so the render matches the pre-trace output.
+pub fn compute_label(node: Rank, tag: u64) -> Option<String> {
+    if node != 0 {
+        return None;
+    }
+    let l = tag & 0xFFFF_FFFF;
+    match tag >> 32 {
+        1 => Some(format!("f{l}")),
+        2 => Some(format!("b{l}")),
+        _ => None,
+    }
+}
+
 /// The simulated training run.
 pub struct Engine {
     cfg: EngineConfig,
@@ -344,7 +368,6 @@ pub struct Engine {
     /// Earliest observed fwd(0) start per iteration index (cluster-level),
     /// feeding [`Report::per_iter_ns`].
     first_starts: Vec<Ns>,
-    pub timeline: Timeline,
 }
 
 impl Engine {
@@ -355,6 +378,10 @@ impl Engine {
         if let Some(plan) = cfg.chaos.clone() {
             sim.set_chaos(plan);
         }
+        // The Gantt renderer is a view over the trace store, so asking
+        // for the timeline turns tracing on too (still zero impact on
+        // the event stream — see `fabric/sim.rs`).
+        sim.set_trace(cfg.trace || cfg.record_timeline);
         let nodes = (0..p)
             .map(|_| NodeState {
                 phase: NodePhase::FwdWait(0),
@@ -377,7 +404,6 @@ impl Engine {
             churn_idx: 0,
             churn_log: Vec::new(),
             first_starts: Vec::new(),
-            timeline: Timeline::new(),
         }
     }
 
@@ -428,7 +454,11 @@ impl Engine {
                 self.on_comm_done(c.coll_id, c.rank);
             }
         }
-        let timeline = std::mem::replace(&mut self.timeline, Timeline::new());
+        let trace = self.sim.take_trace().map(|t| t.normalized());
+        let timeline = trace
+            .as_ref()
+            .map(|t| Timeline::from_trace(t, compute_label))
+            .unwrap_or_default();
         let iter_starts: Vec<Vec<Ns>> =
             self.nodes.iter().map(|n| n.iter_starts.clone()).collect();
         report::build_report(
@@ -438,6 +468,7 @@ impl Engine {
             &self.first_starts,
             self.churn_log.clone(),
             timeline,
+            trace,
         )
     }
 
@@ -523,11 +554,8 @@ impl Engine {
         if self.cfg.gated() {
             self.sim.set_comm_gated(n, true);
         }
-        if self.cfg.record_timeline && n == 0 {
-            let now = self.sim.now();
-            let dir = if fwd { "f" } else { "b" };
-            self.timeline.record(n, now, now + dur, "compute", &format!("{dir}{l}"));
-        }
+        // No timeline recording here: the traced compute span (see
+        // [`NetSim::compute`]) is the single source the Gantt renders.
         self.sim.compute(n, dur, tag_of(phase));
     }
 
@@ -785,14 +813,19 @@ impl Engine {
             let alg = self.cfg.selection.choose_for_members(&self.cfg.topo, &members, ckind, bytes);
             let programs = build(ckind, alg, pm, elems)
                 .expect("selection policies only return buildable algorithms");
-            if self.cfg.record_timeline && members.contains(&0) {
-                let now = self.sim.now();
+            if self.sim.trace_enabled() && members.contains(&0) {
+                let at = self.sim.now();
                 let label = match kind {
                     CommKind::Grad { layer } => format!("g{layer}"),
                     CommKind::FwdAct { layer } => format!("a{layer}"),
                     CommKind::BwdAct { layer } => format!("x{layer}"),
                 };
-                self.timeline.record(0, now, now, "issue", &label);
+                self.sim.trace_push(TraceEvent::Mark {
+                    node: 0,
+                    at,
+                    track: "issue".into(),
+                    label,
+                });
             }
             let completions = self.colls.post_mapped(
                 &mut self.sim,
@@ -1162,6 +1195,34 @@ mod tests {
         // 4 iterations (warmup + 3) → 3 boundary-to-boundary spans.
         assert_eq!(r.per_iter_ns.len(), 3);
         assert!(r.per_iter_ns.iter().all(|&d| d > 0));
+    }
+
+    #[test]
+    fn traced_run_derives_timeline_and_keeps_the_clock() {
+        let mut plain = cfg("resnet50", 4, CommMode::MlslAsync { comm_cores: 2 });
+        plain.iterations = 1;
+        let mut traced = plain.clone();
+        traced.record_timeline = true;
+        let rp = simulate(plain);
+        let rt = simulate(traced);
+        assert_eq!(rp.iter_ns, rt.iter_ns, "tracing must not move the clock");
+        assert_eq!(rp.bytes_per_node, rt.bytes_per_node);
+        assert!(rp.trace.is_none());
+        assert!(rp.timeline.spans.is_empty());
+        let tr = rt.trace.as_ref().unwrap();
+        assert!(tr.span_count() > 0);
+        // The Gantt derives node-0 rows exactly like the old recorder:
+        // f/b compute spans plus instant issue marks.
+        assert!(rt
+            .timeline
+            .spans
+            .iter()
+            .any(|s| s.label == "f0" && s.track == "compute"));
+        assert!(rt.timeline.spans.iter().any(|s| s.label == "b0"));
+        assert!(rt.timeline.spans.iter().any(|s| s.track == "issue"));
+        assert!(rt.timeline.spans.iter().all(|s| s.node == 0));
+        let gantt = rt.timeline.ascii_gantt(60);
+        assert!(gantt.contains("node0"), "{gantt}");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use crate::engine::EngineConfig;
 use crate::fabric::NetSim;
 use crate::metrics::Timeline;
+use crate::trace::Trace;
 use crate::Ns;
 
 /// Result of a simulated training run.
@@ -14,7 +15,7 @@ pub struct Report {
     pub iter_ns: Ns,
     /// Pure compute per iteration per node (no communication).
     pub compute_ns: Ns,
-    /// iter_ns − compute_ns: the communication the schedule failed to hide.
+    /// iter_ns - compute_ns: the communication the schedule failed to hide.
     pub exposed_comm_ns: Ns,
     /// Images (samples) per second across the whole cluster.
     pub throughput_samples_per_s: f64,
@@ -34,7 +35,14 @@ pub struct Report {
     /// Human-readable membership-change log, one line per applied
     /// leave/join, in application order.
     pub churn_log: Vec<String>,
+    /// Node-0 Gantt view derived from the trace
+    /// ([`Timeline::from_trace`]); empty unless
+    /// [`EngineConfig::record_timeline`] (or `trace`) was set.
     pub timeline: Timeline,
+    /// The full normalized span trace ([`EngineConfig::trace`] /
+    /// `record_timeline`); `None` on untraced runs. Feeds the Chrome
+    /// export and critical-path analysis (`docs/TRACING.md`).
+    pub trace: Option<Trace>,
 }
 
 impl Report {
@@ -51,6 +59,7 @@ pub(crate) fn build_report(
     first_starts: &[Ns],
     churn_log: Vec<String>,
     timeline: Timeline,
+    trace: Option<Trace>,
 ) -> Report {
     // Per node: mean delta between consecutive fwd(0) starts, skipping the
     // warmup (delta 0 -> 1). Requires iterations >= 1.
@@ -92,5 +101,6 @@ pub(crate) fn build_report(
         chaos: sim.chaos_stats,
         churn_log,
         timeline,
+        trace,
     }
 }

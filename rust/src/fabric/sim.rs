@@ -69,6 +69,7 @@ use super::event::EventQueue;
 use super::par::{shard_of, Mail};
 use super::topology::Topology;
 use super::MsgDesc;
+use crate::trace::{BusySpan, Cause, ComputeSpan, Trace, TraceBuf, TraceEvent, TrackChan};
 use crate::util::prng::Prng;
 use crate::{Ns, Priority, Rank};
 
@@ -349,8 +350,39 @@ pub struct NetSim {
     part: Option<Part>,
     /// Cross-partition messages awaiting coordinator routing.
     outbox: Vec<Mail>,
+    /// Trace recording buffer ([`NetSim::set_trace`]); None = disabled.
+    /// Every hook is one `if let` on this option and no hook mutates
+    /// state the event loop reads, so the disabled path is byte-
+    /// identical to a build without tracing (see docs/TRACING.md).
+    trace: Option<Box<TraceBuf>>,
     pub stats: SimStats,
     pub chaos_stats: ChaosStats,
+}
+
+/// The trace-track name of an egress channel.
+fn track_of(chan: Chan) -> TrackChan {
+    match chan {
+        Chan::Inter { rail } => TrackChan::Rail(rail),
+        Chan::Shm => TrackChan::Shm,
+    }
+}
+
+/// Content identity of an externally-visible event (what trace spans
+/// record as their [`Cause`]).
+fn cause_of(ev: &SimEvent) -> Cause {
+    match ev {
+        SimEvent::MsgDelivered { msg, at } => Cause::Msg {
+            at: *at,
+            src: msg.src,
+            dst: msg.dst,
+            bytes: msg.bytes,
+            priority: msg.priority,
+            tag: msg.tag,
+        },
+        SimEvent::ComputeDone { node, tag, at } => {
+            Cause::Compute { at: *at, node: *node, tag: *tag }
+        }
+    }
 }
 
 impl NetSim {
@@ -371,8 +403,39 @@ impl NetSim {
             zero_bw_active: 0,
             part: None,
             outbox: Vec::new(),
+            trace: None,
             stats: SimStats::default(),
             chaos_stats: ChaosStats::default(),
+        }
+    }
+
+    /// Enable or disable trace recording. Enabling mid-run records from
+    /// now on (hops already in flight are skipped); disabling drops any
+    /// unretrieved spans. Tracing never changes simulated behavior.
+    pub fn set_trace(&mut self, on: bool) {
+        match (on, self.trace.is_some()) {
+            (true, false) => self.trace = Some(Box::default()),
+            (false, true) => self.trace = None,
+            _ => {}
+        }
+    }
+
+    /// Is trace recording on?
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Move the recorded spans out, leaving the buffer recording.
+    /// `None` when tracing is disabled.
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.trace.as_deref_mut().map(TraceBuf::take)
+    }
+
+    /// Append a fully-formed record (executor/engine hooks). No-op when
+    /// tracing is disabled.
+    pub fn trace_push(&mut self, ev: TraceEvent) {
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.push(ev);
         }
     }
 
@@ -504,6 +567,16 @@ impl NetSim {
         self.stats.bytes_by_priority[msg.priority as usize] += msg.bytes;
         self.inflight.insert(msg_id, InFlight { msg: msg.clone(), egress_left: pieces });
         let now = self.queue.now();
+        if let Some(tr) = self.trace.as_deref_mut() {
+            // Pure service of the max-cost piece: the hop's egress time
+            // with zero contention (the critical-path "service" term).
+            let mut service: Ns = 0;
+            for i in 0..pieces as u64 {
+                let piece = msg.bytes * (i + 1) / pieces as u64 - msg.bytes * i / pieces as u64;
+                service = service.max((overhead + super::wire_ns(piece, gbps)).max(1));
+            }
+            tr.start_hop(msg_id, level, pieces, service, now);
+        }
         for i in 0..pieces as u64 {
             // Balanced split (same arithmetic as program::segments): the
             // pieces partition msg.bytes exactly.
@@ -560,6 +633,17 @@ impl NetSim {
             }
             None => dur_ns,
         };
+        let now = self.queue.now();
+        if let Some(tr) = self.trace.as_deref_mut() {
+            let cause = tr.current_cause;
+            tr.push(TraceEvent::Compute(ComputeSpan {
+                node,
+                start: now,
+                end: now + dur.max(1),
+                tag,
+                cause,
+            }));
+        }
         self.queue.push_in(dur.max(1), Internal::ComputeDone { node, tag });
     }
 
@@ -649,6 +733,22 @@ impl NetSim {
         }
         if let Some(since) = nic.busy_since.take() {
             nic.busy_ns += now - since;
+            if now > since {
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    // The banked interval belongs to the transfer that
+                    // held the wire (still in the slab — EgressDone
+                    // banks its own interval before rescheduling).
+                    let class =
+                        was_running.and_then(|id| nic.slab.get(&id)).map_or(0, |t| t.class);
+                    tr.push(TraceEvent::Busy(BusySpan {
+                        node,
+                        chan: track_of(chan),
+                        class,
+                        start: since,
+                        end: now,
+                    }));
+                }
+            }
         }
         nic.gen += 1;
 
@@ -671,7 +771,10 @@ impl NetSim {
         head.checkpoint = now;
         nic.running = Some(id);
         nic.busy_since = Some(now);
-        let (remaining, gen) = (head.remaining_ns, nic.gen);
+        let (remaining, gen, head_msg) = (head.remaining_ns, nic.gen, head.msg_id);
+        if let Some(tr) = self.trace.as_deref_mut() {
+            tr.note_service(head_msg, now);
+        }
         self.queue
             .push_in(remaining, Internal::EgressDone { node, chan, xfer: id, gen });
     }
@@ -680,6 +783,11 @@ impl NetSim {
     pub fn next(&mut self) -> Option<SimEvent> {
         while let Some((at, ev)) = self.queue.pop() {
             if let Some(out) = self.dispatch(at, ev) {
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    // Work the driver posts while reacting to `out` is
+                    // attributed to it (the critical-path cause link).
+                    tr.current_cause = Some(cause_of(&out));
+                }
                 return Some(out);
             }
         }
@@ -694,6 +802,9 @@ impl NetSim {
         while self.queue.peek_time().is_some_and(|t| t < horizon) {
             let (at, ev) = self.queue.pop().expect("peeked event exists");
             if let Some(out) = self.dispatch(at, ev) {
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.current_cause = Some(cause_of(&out));
+                }
                 return Some(out);
             }
         }
@@ -750,7 +861,10 @@ impl NetSim {
                 Some(SimEvent::MsgDelivered { msg: inf.msg, at })
             }
             Internal::EgressDone { node, chan, xfer, gen } => {
-                let nic = self.chan_mut(node, chan);
+                let nic = match chan {
+                    Chan::Inter { rail } => &mut self.nics[node][rail as usize],
+                    Chan::Shm => &mut self.shms[node],
+                };
                 if nic.gen != gen {
                     return None; // stale: the channel was rescheduled since
                 }
@@ -759,6 +873,17 @@ impl NetSim {
                 nic.running = None;
                 if let Some(since) = nic.busy_since.take() {
                     nic.busy_ns += at - since;
+                    if at > since {
+                        if let Some(tr) = self.trace.as_deref_mut() {
+                            tr.push(TraceEvent::Busy(BusySpan {
+                                node,
+                                chan: track_of(chan),
+                                class: t.class,
+                                start: since,
+                                end: at,
+                            }));
+                        }
+                    }
                 }
                 let msg_id = t.msg_id;
                 // A striped transfer leaves the wire when its LAST rail
@@ -779,17 +904,26 @@ impl NetSim {
                     // the in-flight time — timing only, never the
                     // payload. Counted on the SOURCE shard in
                     // partitioned mode.
-                    let lat = match &self.chaos {
+                    let mult = match &self.chaos {
                         Some(plan) => {
                             let level = self.topo.level_of(src, dst);
-                            let mult = plan.latency_mult_at(level, at);
-                            if mult != 1000 {
+                            let m = plan.latency_mult_at(level, at);
+                            if m != 1000 {
                                 self.chaos_stats.latency_spikes += 1;
                             }
-                            base.saturating_mul(mult) / 1000
+                            m
                         }
-                        None => base,
+                        None => 1000,
                     };
+                    let lat = if mult == 1000 { base } else { base.saturating_mul(mult) / 1000 };
+                    if let Some(tr) = self.trace.as_deref_mut() {
+                        // The hop record closes HERE, on the source
+                        // shard, with the delivery time fully priced —
+                        // the one site that covers both the local-
+                        // delivery and cross-partition mail paths.
+                        let m = &self.inflight[&msg_id].msg;
+                        tr.finish_hop(msg_id, m, at, at.saturating_add(lat), mult);
+                    }
                     if self.owns(dst) {
                         self.queue.push_in(lat, Internal::Deliver { msg_id });
                     } else {
@@ -814,11 +948,13 @@ impl NetSim {
                     self.zero_bw_active += 1;
                     if self.zero_bw_active == 1 {
                         self.chaos_stats.zero_bw_windows += 1;
+                        self.record_gate(at, true);
                         self.set_chaos_gate(true);
                     }
                 } else {
                     self.zero_bw_active = self.zero_bw_active.saturating_sub(1);
                     if self.zero_bw_active == 0 {
+                        self.record_gate(at, false);
                         self.set_chaos_gate(false);
                     }
                 }
@@ -829,6 +965,21 @@ impl NetSim {
                 let RailDeath { node, rail, .. } = plan.rail_deaths[idx];
                 self.kill_rail(node, rail as usize);
                 None
+            }
+        }
+    }
+
+    /// Record a fleet-wide gate transition. Every shard processes the
+    /// same gate events, so only shard 0 records (the serial simulator
+    /// always does) — merged traces carry each transition exactly once.
+    fn record_gate(&mut self, at: Ns, on: bool) {
+        let first_shard = match self.part {
+            Some(p) => p.shard == 0,
+            None => true,
+        };
+        if first_shard {
+            if let Some(tr) = self.trace.as_deref_mut() {
+                tr.push(TraceEvent::ChaosGate { at, on });
             }
         }
     }
@@ -860,6 +1011,15 @@ impl NetSim {
             return; // last rail or already dead: refuse, keep the fabric live
         }
         self.nics[node][rail].dead = true;
+        if let Some(tr) = self.trace.as_deref_mut() {
+            // Only the owning shard schedules RailDie events (set_chaos
+            // filters), so this records exactly once fleet-wide.
+            tr.push(TraceEvent::RailDie {
+                at: self.queue.now(),
+                node,
+                rail: rail as u32,
+            });
+        }
         // Banks the running piece's progress, accrues busy time, bumps
         // the generation (stale EgressDone events die), and — because
         // the rail is now dead — elects nothing.
@@ -1646,5 +1806,110 @@ mod tests {
         let (ev2, st2) = run();
         assert_eq!(ev1, ev2, "chaos must be deterministic under a seed");
         assert_eq!(st1, st2);
+    }
+
+    // -- trace layer ---------------------------------------------------------
+
+    #[test]
+    fn tracing_does_not_perturb_and_records_exact_hops() {
+        let run = |traced: bool| {
+            let mut s = sim();
+            s.set_trace(traced);
+            assert_eq!(s.trace_enabled(), traced);
+            s.send(msg(0, 1, 100_000, 9, 1)); // bulk
+            s.send(msg(0, 2, 1_000, 0, 2)); // urgent, preempts
+            let events = s.drain();
+            (events, s.take_trace())
+        };
+        let (ev_off, tr_off) = run(false);
+        let (ev_on, tr_on) = run(true);
+        assert_eq!(ev_off, ev_on, "tracing must not move a single event");
+        assert!(tr_off.is_none());
+        let tr = tr_on.unwrap().normalized();
+        // Urgent hop: immediate service, egress 100 + 1_000, flight 1_000.
+        let urgent = tr.hops().find(|h| h.tag == 2).unwrap();
+        assert_eq!((urgent.posted_at, urgent.first_service_at), (0, 0));
+        assert_eq!((urgent.egress_done_at, urgent.deliver_at), (1_100, 2_100));
+        assert_eq!(urgent.service_ns, 1_100);
+        assert_eq!(urgent.queue_ns() + urgent.stall_ns(), 0);
+        // Bulk hop: pure service 100_100, stalled exactly the urgent's
+        // wire time, delivered at the timing the plain tests pin.
+        let bulk = tr.hops().find(|h| h.tag == 1).unwrap();
+        assert_eq!(bulk.service_ns, 100_100);
+        assert_eq!(bulk.stall_ns(), 1_100);
+        assert_eq!(bulk.queue_ns(), 0);
+        assert_eq!(bulk.deliver_at, 102_200);
+        // Busy intervals tile the wire-holding time exactly.
+        let busy: Ns = tr
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                crate::trace::TraceEvent::Busy(b) => Some(b.end - b.start),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(busy, 101_200);
+    }
+
+    #[test]
+    fn compute_spans_carry_causes_and_slowdowns() {
+        let mut s = sim();
+        s.set_trace(true);
+        s.send(msg(0, 1, 1_000, 1, 7));
+        let first = s.next().unwrap(); // delivery at 2_100
+        // Posted while reacting to the delivery: cause = that event.
+        s.compute(1, 5_000, 42);
+        s.drain();
+        let tr = s.take_trace().unwrap();
+        let comp = tr
+            .events
+            .iter()
+            .find_map(|e| match e {
+                crate::trace::TraceEvent::Compute(c) => Some(c.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!((comp.start, comp.end), (2_100, 7_100));
+        match (comp.cause, first) {
+            (Some(Cause::Msg { at, tag, .. }), SimEvent::MsgDelivered { msg: m, at: d }) => {
+                assert_eq!((at, tag), (d, m.tag));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn partitioned_traces_merge_to_the_serial_trace() {
+        let topo = Topology::flat("test", 8.0, 1_000, 100, 1 << 20);
+        // Serial reference.
+        let mut s = NetSim::new(topo.clone(), 4);
+        s.set_trace(true);
+        s.send(msg(0, 1, 1_000, 1, 7));
+        s.next().unwrap();
+        s.send(msg(1, 2, 1_000, 2, 8));
+        s.drain();
+        let serial = s.take_trace().unwrap().normalized();
+        // Two shards driving the identical workload.
+        let mut s0 = NetSim::new_partition(topo.clone(), 4, 0, 2);
+        let mut s1 = NetSim::new_partition(topo, 4, 1, 2);
+        s0.set_trace(true);
+        s1.set_trace(true);
+        s0.send(msg(0, 1, 1_000, 1, 7));
+        s0.next().unwrap();
+        s0.send(msg(1, 2, 1_000, 2, 8));
+        assert!(s0.next().is_none());
+        let mail = s0.take_mail();
+        assert_eq!(mail.len(), 1);
+        s1.inject_delivery(mail[0].at, mail[0].msg.clone());
+        s1.next().unwrap();
+        let merged = Trace::merge(vec![
+            s0.take_trace().unwrap(),
+            s1.take_trace().unwrap(),
+        ]);
+        assert_eq!(serial, merged, "per-shard buffers must merge to the serial trace");
+        // The cross-shard hop was recorded once, on the source shard,
+        // with the delivery time fully priced.
+        let hop = merged.hops().find(|h| h.tag == 8).unwrap();
+        assert_eq!(hop.deliver_at, 4_200);
     }
 }

@@ -53,8 +53,13 @@
 //!   `grad_step` via PJRT, gradients are allreduced by this library (with
 //!   per-layer priorities), then `apply_update` runs — Python never on the
 //!   training path.
+//! * [`trace`] — the deterministic observability layer: structured spans
+//!   recorded off the simulator's event hot paths (zero impact when
+//!   disabled), Chrome trace-event export, critical-path analysis and
+//!   windowed utilization; `docs/TRACING.md` is the guided tour.
 //! * [`config`] / [`metrics`] — TOML run configs, manifest loading,
-//!   counters, timelines and CSV emission.
+//!   counters, timelines and CSV emission; counters live in a global
+//!   registry the trace CLI dumps.
 
 pub mod analytic;
 pub mod collectives;
@@ -66,6 +71,7 @@ pub mod mlsl;
 pub mod models;
 pub mod progress;
 pub mod runtime;
+pub mod trace;
 pub mod trainer;
 pub mod tuner;
 pub mod util;

@@ -14,6 +14,10 @@
 //!   (per-tier group size, gbps, latency, overhead, shm flag, rails), so
 //!   suffix-grammar mistakes are inspectable without reading simulator
 //!   output
+//! * `trace     eth10g-x2 --ranks 16 --out t.json` — traced ring
+//!   allreduce on a preset: serial vs partitioned merged-trace identity
+//!   check, critical-path decomposition, windowed utilization, metrics
+//!   counters, optional Chrome trace-event export (`docs/TRACING.md`)
 //! * `train     --artifacts artifacts/small --ranks 2 --steps 100` — the
 //!   REAL data-parallel trainer over PJRT + prioritized collectives
 
@@ -39,15 +43,25 @@ fn main() -> Result<()> {
         Some("scaling") => cmd_scaling(&args),
         Some("tune") => cmd_tune(&args),
         Some("topo") => cmd_topo(&args),
+        Some("trace") => cmd_trace(&args),
         Some("train") => cmd_train(&args),
         Some("chaos") => cmd_chaos(&args),
         other => {
-            eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|train|chaos> [--flags]");
+            eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|trace|train|chaos> [--flags]");
             eprintln!(
                 "  tune: --topo <preset> [--ranks-per-node r] [--rails l] \
                  [--max-ranks n] [--quick] [--sim-threads t] [--out table.json]"
             );
             eprintln!("  topo: <preset> — dump the parsed tier stack (debug aid)");
+            eprintln!(
+                "  trace: <preset> [--ranks p] [--bytes b] [--sim-threads t] \
+                 [--out chrome.json] — traced collective run: merged-trace \
+                 identity check, critical path, utilization (docs/TRACING.md)"
+            );
+            eprintln!(
+                "  simulate --trace[=chrome.json] records spans (critical path \
+                 + optional Chrome trace-event export; docs/TRACING.md)"
+            );
             eprintln!("  simulate/scaling take --tuning-table <t.json> (measured selection)");
             eprintln!(
                 "  topology presets: eth10g | eth25g | omnipath100g (opa), with the \
@@ -145,6 +159,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.wire,
     );
     let timeline = cfg.record_timeline;
+    let rails = cfg.topo.rails as usize;
     let r = simulate(cfg);
     println!("simulated: {desc}");
     println!("  iteration        {}", fmt_ns(r.iter_ns));
@@ -167,10 +182,41 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             r.chaos.slowdowns_applied,
         );
     }
+    if let Some(trace) = &r.trace {
+        println!("spans: {}", trace.span_count());
+        // Critical path of the last collective to finish — under a
+        // steady-state schedule that is the one gating the iteration.
+        if let Some(cp) = last_rank_done(trace)
+            .and_then(|coll| mlsl::trace::critical::critical_path(trace, coll))
+        {
+            print!("{}", cp.render(args.usize_or("top", 5)));
+        }
+        // `--trace out.json` (any non-boolean value) also dumps a Chrome
+        // trace-event file loadable in Perfetto / chrome://tracing.
+        if let Some(path) = args.get("trace").filter(|v| !matches!(*v, "true" | "1" | "yes")) {
+            mlsl::trace::chrome::write_file(trace, rails, std::path::Path::new(path))
+                .with_context(|| format!("write {path}"))?;
+            println!("wrote {path}: Chrome trace-event JSON ({} spans)", trace.span_count());
+        }
+    }
     if timeline {
         println!("{}", r.timeline.ascii_gantt(100));
     }
     Ok(())
+}
+
+/// The collective whose last `RankDone` lands latest in `trace` (the
+/// run's finishing collective), if any rank-done records exist.
+fn last_rank_done(trace: &mlsl::trace::Trace) -> Option<u64> {
+    trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            mlsl::trace::TraceEvent::RankDone { coll_id, at, .. } => Some((*at, *coll_id)),
+            _ => None,
+        })
+        .max()
+        .map(|(_, coll)| coll)
 }
 
 fn cmd_scaling(args: &Args) -> Result<()> {
@@ -338,6 +384,108 @@ fn cmd_topo(args: &Args) -> Result<()> {
         &rows,
     );
     println!("fingerprint: {}", mlsl::tuner::table::fingerprint(&topo));
+    Ok(())
+}
+
+/// Traced collective drill: run one ring allreduce twice — serial and
+/// partitioned (`--sim-threads` shards, default 2) — with span tracing
+/// on, require the merged per-shard buffers to be byte-identical to the
+/// serial trace (the layer's core invariant), then print the analyzers:
+/// span count, critical-path decomposition, windowed utilization and
+/// the process-wide metrics counters. `--out chrome.json` dumps a
+/// Chrome trace-event file loadable in Perfetto. The `spans:`,
+/// `trace merge ok:` and `critical path:` lines are CI grep targets
+/// (docs/TRACING.md).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use mlsl::collectives::parexec::{run_collective, run_collective_serial, FleetConfig};
+    use mlsl::collectives::program::allreduce_ring;
+
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("topo").map(String::from))
+        .unwrap_or_else(|| "eth10g".to_string());
+    let mut topo = Topology::by_name(&name)
+        .ok_or_else(|| anyhow!("unknown topology {name:?} (malformed suffix?)"))?;
+    if let Some(r) = args.get("ranks-per-node") {
+        let r: usize = r.parse().context("--ranks-per-node")?;
+        topo = topo.with_ranks_per_node(r).map_err(|e| anyhow!("--ranks-per-node: {e}"))?;
+    }
+    if let Some(l) = args.get("rails") {
+        let l: u32 = l.parse().context("--rails")?;
+        topo = topo.with_rails(l).map_err(|e| anyhow!("--rails: {e}"))?;
+    }
+    let p = args.usize_or("ranks", 16);
+    if p < 2 {
+        return Err(anyhow!("--ranks must be >= 2"));
+    }
+    let bytes = args.usize_or("bytes", 1 << 20);
+    let n = (bytes / 4).max(1); // f32 wire: 4 bytes/element
+    let threads = args.usize_or("sim-threads", 2).max(1);
+
+    let serial = run_collective_serial(
+        &topo,
+        p,
+        allreduce_ring(p, n),
+        WireDtype::F32,
+        1,
+        None,
+        false,
+        true,
+    );
+    let trace = serial.trace.expect("tracing was enabled");
+    println!(
+        "trace: ring allreduce, p={p}, {} on {} ({} rail(s), finish {})",
+        fmt_bytes(4 * n as u64),
+        topo.name,
+        topo.rails,
+        fmt_ns(serial.finish_ns),
+    );
+    println!("spans: {}", trace.span_count());
+
+    let fleet = FleetConfig {
+        shards: threads,
+        threads,
+        chaos: None,
+        record_deliveries: false,
+        trace: true,
+    };
+    let par = run_collective(&topo, p, allreduce_ring(p, n), WireDtype::F32, 1, &fleet);
+    if par.trace.as_ref() != Some(&trace) {
+        return Err(anyhow!(
+            "trace merge violated: {} shard(s) merged to {} span(s), serial has {}",
+            threads,
+            par.trace.map(|t| t.span_count()).unwrap_or(0),
+            trace.span_count(),
+        ));
+    }
+    println!(
+        "trace merge ok: {threads} shard(s) x {threads} thread(s) reproduce the serial trace"
+    );
+
+    if let Some(cp) =
+        last_rank_done(&trace).and_then(|coll| mlsl::trace::critical::critical_path(&trace, coll))
+    {
+        print!("{}", cp.render(args.usize_or("top", 5)));
+    }
+    // Utilization time series; default window gives ~16 rows per run.
+    let window = args.usize_or("window-ns", 0) as u64;
+    let window = if window > 0 { window } else { (trace.end_time() / 16).max(1) };
+    let util = mlsl::trace::Utilization::compute(&trace, p, topo.rails as usize, window);
+    print!("{}", util.render());
+    let counters = mlsl::metrics::registry::snapshot();
+    if !counters.is_empty() {
+        println!("counters:");
+        for (k, v) in &counters {
+            println!("  {k} {v}");
+        }
+    }
+    if let Some(path) = args.get("out") {
+        mlsl::trace::chrome::write_file(&trace, topo.rails as usize, std::path::Path::new(path))
+            .with_context(|| format!("write {path}"))?;
+        println!("wrote {path}: Chrome trace-event JSON");
+    }
     Ok(())
 }
 

@@ -1,10 +1,74 @@
 //! Counters, timelines and CSV emission for experiments.
+//!
+//! The [`registry`] submodule holds the process-global named counters
+//! ([`util::warn`](crate::util::warn) occurrences, tuner out-of-grid
+//! clamps, probed cells …) so drills and benches can assert on them
+//! without grepping stderr; [`Timeline::from_trace`] renders the
+//! engine's ASCII Gantt from the trace layer's span store
+//! (`docs/TRACING.md`).
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
 
+use crate::trace::{Trace, TraceEvent};
 use crate::{Ns, Rank};
+
+/// Process-global named counters. Monotonic u64s behind a mutex: cheap
+/// enough for warning paths and per-probe bumps, and assertable from
+/// tests and the `mlsl trace` CLI without scraping stderr. Tests that
+/// assert on counts should [`registry::snapshot`] before and after the
+/// exercised call and compare deltas — the registry is shared across
+/// the whole process.
+pub mod registry {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+
+    fn cell() -> &'static Mutex<BTreeMap<String, u64>> {
+        static REGISTRY: OnceLock<Mutex<BTreeMap<String, u64>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+    }
+
+    /// Add `v` to counter `key` (created at 0).
+    pub fn add(key: &str, v: u64) {
+        let mut map = cell().lock().expect("metrics registry poisoned");
+        *map.entry(key.to_string()).or_insert(0) += v;
+    }
+
+    /// Increment counter `key` by one.
+    pub fn inc(key: &str) {
+        add(key, 1);
+    }
+
+    /// Current value of `key` (0 if never touched).
+    pub fn get(key: &str) -> u64 {
+        cell().lock().expect("metrics registry poisoned").get(key).copied().unwrap_or(0)
+    }
+
+    /// Sorted copy of every counter.
+    pub fn snapshot() -> Vec<(String, u64)> {
+        cell()
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    #[cfg(test)]
+    mod tests {
+        #[test]
+        fn registry_counts_and_snapshots() {
+            // Delta-based: other tests in the process share the registry.
+            let key = "metrics.registry.selftest";
+            let before = super::get(key);
+            super::inc(key);
+            super::add(key, 2);
+            assert_eq!(super::get(key), before + 3);
+            assert!(super::snapshot().iter().any(|(k, v)| k == key && *v >= 3));
+        }
+    }
+}
 
 /// Named floating counters.
 #[derive(Debug, Default, Clone)]
@@ -68,6 +132,33 @@ impl Timeline {
 
     pub fn end_time(&self) -> Ns {
         self.spans.iter().map(|s| s.end).max().unwrap_or(0)
+    }
+
+    /// Build a renderable timeline from a recorded [`Trace`]: compute
+    /// spans whose `(node, tag)` the `labeler` names go on the
+    /// `"compute"` track, and every [`TraceEvent::Mark`] becomes an
+    /// instant span on its own track. This is how the engine's ASCII
+    /// Gantt is derived from the span store instead of a parallel
+    /// recording path.
+    pub fn from_trace(
+        trace: &Trace,
+        labeler: impl Fn(Rank, u64) -> Option<String>,
+    ) -> Timeline {
+        let mut tl = Timeline::new();
+        for ev in &trace.events {
+            match ev {
+                TraceEvent::Compute(c) => {
+                    if let Some(label) = labeler(c.node, c.tag) {
+                        tl.record(c.node, c.start, c.end, "compute", &label);
+                    }
+                }
+                TraceEvent::Mark { node, at, track, label } => {
+                    tl.record(*node, *at, *at, track, label);
+                }
+                _ => {}
+            }
+        }
+        tl
     }
 
     /// Render one row per (node, track) with `width` columns.
@@ -157,8 +248,11 @@ mod tests {
     }
 
     #[test]
-    fn csv_output(){
-        let dir = std::env::temp_dir().join("mlsl_test_csv");
+    fn csv_output() {
+        // Unique per-process dir so concurrent test runs never collide;
+        // removed on success (left behind on assert failure for triage).
+        let dir =
+            std::env::temp_dir().join(format!("mlsl_test_csv_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.csv");
         let mut t = Timeline::new();
@@ -166,5 +260,43 @@ mod tests {
         t.write_csv(&path).unwrap();
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.contains("1,10,20,comm,x"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn timeline_derives_from_trace_spans() {
+        use crate::trace::ComputeSpan;
+        let tr = Trace {
+            events: vec![
+                TraceEvent::Compute(ComputeSpan {
+                    node: 0,
+                    start: 0,
+                    end: 50,
+                    tag: (1 << 32) | 3,
+                    cause: None,
+                }),
+                TraceEvent::Compute(ComputeSpan {
+                    node: 1,
+                    start: 0,
+                    end: 50,
+                    tag: (1 << 32) | 3,
+                    cause: None,
+                }),
+                TraceEvent::Mark {
+                    node: 0,
+                    at: 60,
+                    track: "issue".into(),
+                    label: "g3".into(),
+                },
+            ],
+        };
+        let tl = Timeline::from_trace(&tr, |node, tag| {
+            (node == 0 && tag >> 32 == 1).then(|| format!("f{}", tag & 0xffff_ffff))
+        });
+        assert_eq!(tl.spans.len(), 2, "unlabeled nodes are skipped");
+        assert_eq!(tl.spans[0].label, "f3");
+        assert_eq!(tl.spans[0].track, "compute");
+        assert_eq!((tl.spans[1].start, tl.spans[1].end), (60, 60));
+        assert_eq!(tl.spans[1].track, "issue");
     }
 }

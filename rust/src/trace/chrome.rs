@@ -1,0 +1,335 @@
+//! Chrome trace-event JSON export: renders a recorded [`Trace`] into
+//! the `traceEvents` format that Perfetto and `chrome://tracing` load.
+//!
+//! Track layout (docs/TRACING.md §Chrome-trace track layout): one
+//! process per node (`pid` = rank) with fixed thread ids —
+//!
+//! | tid        | track                                  |
+//! |------------|----------------------------------------|
+//! | 0          | compute                                |
+//! | 1          | shm egress channel                     |
+//! | 2 + k      | NIC rail k egress                      |
+//! | 2 + rails  | net (posted→delivered hop spans)       |
+//! | 3 + rails  | marks (engine phases, collective issue)|
+//!
+//! Durations are complete events (`ph:"X"`, `ts`/`dur` in microseconds
+//! as the format requires — nanosecond precision survives as fractional
+//! microseconds); collective starts/finishes, chaos gates and rail
+//! deaths are instants (`ph:"i"`). Span args carry bytes, priority,
+//! tier and collective id so Perfetto queries can slice by them.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::{Trace, TraceEvent, TrackChan};
+use crate::util::json::Json;
+use crate::Ns;
+
+const TID_COMPUTE: u64 = 0;
+const TID_SHM: u64 = 1;
+const TID_RAIL0: u64 = 2;
+
+fn us(ns: Ns) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn complete(
+    pid: usize,
+    tid: u64,
+    name: String,
+    cat: &str,
+    start: Ns,
+    end: Ns,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    obj(vec![
+        ("ph", Json::Str("X".into())),
+        ("pid", num(pid as u64)),
+        ("tid", num(tid)),
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(cat.into())),
+        ("ts", us(start)),
+        ("dur", us(end.saturating_sub(start))),
+        ("args", obj(args)),
+    ])
+}
+
+fn instant(pid: usize, tid: u64, name: String, at: Ns, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("p".into())),
+        ("pid", num(pid as u64)),
+        ("tid", num(tid)),
+        ("name", Json::Str(name)),
+        ("ts", us(at)),
+        ("args", obj(args)),
+    ])
+}
+
+/// Render `trace` as a Chrome trace-event document for a `rails`-rail
+/// fabric. Events are emitted in start-time order, so every track's
+/// spans are time-monotonic.
+pub fn export(trace: &Trace, rails: usize) -> Json {
+    let rails = rails.max(1) as u64;
+    let tid_net = TID_RAIL0 + rails;
+    let tid_mark = tid_net + 1;
+    let mut events: Vec<(Ns, Json)> = Vec::with_capacity(trace.events.len() + 16);
+    let mut pids: BTreeSet<usize> = BTreeSet::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::Compute(c) => {
+                pids.insert(c.node);
+                events.push((
+                    c.start,
+                    complete(
+                        c.node,
+                        TID_COMPUTE,
+                        format!("compute t{}", c.tag),
+                        "compute",
+                        c.start,
+                        c.end,
+                        vec![("tag", num(c.tag))],
+                    ),
+                ));
+            }
+            TraceEvent::Busy(b) => {
+                pids.insert(b.node);
+                let (tid, name) = match b.chan {
+                    TrackChan::Rail(r) => (TID_RAIL0 + r as u64, format!("egress p{}", b.class)),
+                    TrackChan::Shm => (TID_SHM, "shm copy".to_string()),
+                };
+                events.push((
+                    b.start,
+                    complete(
+                        b.node,
+                        tid,
+                        name,
+                        "egress",
+                        b.start,
+                        b.end,
+                        vec![("priority", num(b.class as u64))],
+                    ),
+                ));
+            }
+            TraceEvent::Hop(h) => {
+                pids.insert(h.src);
+                events.push((
+                    h.posted_at,
+                    complete(
+                        h.src,
+                        tid_net,
+                        format!("->{} c{}", h.dst, h.tag),
+                        "net",
+                        h.posted_at,
+                        h.deliver_at,
+                        vec![
+                            ("bytes", num(h.bytes)),
+                            ("priority", num(h.priority as u64)),
+                            ("tier", num(h.level as u64)),
+                            ("coll", num(h.tag)),
+                            ("dst", num(h.dst as u64)),
+                            ("queue_ns", num(h.queue_ns())),
+                            ("service_ns", num(h.service_ns)),
+                            ("stall_ns", num(h.stall_ns())),
+                            ("flight_ns", num(h.flight_ns())),
+                            ("pieces", num(h.pieces as u64)),
+                            ("lat_mult_milli", num(h.lat_mult_milli)),
+                        ],
+                    ),
+                ));
+            }
+            TraceEvent::CollStart { coll_id, at, priority, ranks } => {
+                events.push((
+                    *at,
+                    instant(
+                        0,
+                        tid_mark,
+                        format!("coll {coll_id} start"),
+                        *at,
+                        vec![
+                            ("coll", num(*coll_id)),
+                            ("priority", num(*priority as u64)),
+                            ("ranks", num(*ranks as u64)),
+                        ],
+                    ),
+                ));
+            }
+            TraceEvent::RankDone { coll_id, rank, at } => {
+                pids.insert(*rank);
+                events.push((
+                    *at,
+                    instant(
+                        *rank,
+                        tid_mark,
+                        format!("coll {coll_id} done"),
+                        *at,
+                        vec![("coll", num(*coll_id))],
+                    ),
+                ));
+            }
+            TraceEvent::ChaosGate { at, on } => {
+                events.push((
+                    *at,
+                    instant(
+                        0,
+                        tid_mark,
+                        format!("chaos gate {}", if *on { "open" } else { "close" }),
+                        *at,
+                        vec![("on", Json::Bool(*on))],
+                    ),
+                ));
+            }
+            TraceEvent::RailDie { at, node, rail } => {
+                pids.insert(*node);
+                events.push((
+                    *at,
+                    instant(
+                        *node,
+                        TID_RAIL0 + *rail as u64,
+                        format!("rail {rail} dies"),
+                        *at,
+                        vec![("rail", num(*rail as u64))],
+                    ),
+                ));
+            }
+            TraceEvent::Mark { node, at, track, label } => {
+                pids.insert(*node);
+                events.push((
+                    *at,
+                    instant(
+                        *node,
+                        tid_mark,
+                        format!("{track}:{label}"),
+                        *at,
+                        vec![("track", Json::Str(track.clone()))],
+                    ),
+                ));
+            }
+        }
+    }
+    events.sort_by_key(|(at, _)| *at);
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + pids.len() * 4);
+    // Thread-name metadata first, so viewers label the fixed tids.
+    for &pid in &pids {
+        let mut named: Vec<(u64, String)> = vec![
+            (TID_COMPUTE, "compute".into()),
+            (TID_SHM, "shm".into()),
+            (tid_net, "net".into()),
+            (tid_mark, "marks".into()),
+        ];
+        for r in 0..rails {
+            named.push((TID_RAIL0 + r, format!("nic-rail-{r}")));
+        }
+        for (tid, name) in named {
+            out.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("pid", num(pid as u64)),
+                ("tid", num(tid)),
+                ("name", Json::Str("thread_name".into())),
+                ("args", obj(vec![("name", Json::Str(name))])),
+            ]));
+        }
+    }
+    out.extend(events.into_iter().map(|(_, e)| e));
+    obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Write the exported document to `path`.
+pub fn write_file(trace: &Trace, rails: usize, path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, export(trace, rails).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{BusySpan, ComputeSpan, HopSpan};
+
+    fn sample() -> Trace {
+        Trace {
+            events: vec![
+                TraceEvent::Compute(ComputeSpan {
+                    node: 0,
+                    start: 0,
+                    end: 500,
+                    tag: 1,
+                    cause: None,
+                }),
+                TraceEvent::Busy(BusySpan {
+                    node: 0,
+                    chan: TrackChan::Rail(1),
+                    class: 2,
+                    start: 500,
+                    end: 900,
+                }),
+                TraceEvent::Hop(HopSpan {
+                    src: 0,
+                    dst: 1,
+                    bytes: 4096,
+                    priority: 2,
+                    tag: 1,
+                    level: 1,
+                    posted_at: 500,
+                    first_service_at: 500,
+                    egress_done_at: 900,
+                    deliver_at: 1400,
+                    service_ns: 400,
+                    pieces: 1,
+                    lat_mult_milli: 1000,
+                    cause: None,
+                }),
+                TraceEvent::CollStart { coll_id: 1, at: 0, priority: 2, ranks: 4 },
+                TraceEvent::RankDone { coll_id: 1, rank: 1, at: 1400 },
+            ],
+        }
+    }
+
+    #[test]
+    fn export_roundtrips_and_is_track_monotonic() {
+        let doc = export(&sample(), 2);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("exported JSON parses");
+        let evs = parsed.at(&["traceEvents"]).as_arr().unwrap();
+        assert!(!evs.is_empty());
+        // Per-(pid,tid) complete-event start times are monotonic.
+        let mut last: std::collections::HashMap<(u64, u64), f64> =
+            std::collections::HashMap::new();
+        let mut completes = 0;
+        for e in evs {
+            if e.at(&["ph"]).as_str() != Some("X") {
+                continue;
+            }
+            completes += 1;
+            let key = (
+                e.at(&["pid"]).as_f64().unwrap() as u64,
+                e.at(&["tid"]).as_f64().unwrap() as u64,
+            );
+            let ts = e.at(&["ts"]).as_f64().unwrap();
+            let prev = last.insert(key, ts).unwrap_or(f64::MIN);
+            assert!(ts >= prev, "track {key:?} went backwards");
+            assert!(e.at(&["dur"]).as_f64().unwrap() >= 0.0);
+        }
+        assert_eq!(completes, 3);
+        // The hop span carries its attribution args.
+        let hop = evs
+            .iter()
+            .find(|e| e.at(&["cat"]).as_str() == Some("net"))
+            .unwrap();
+        assert_eq!(hop.at(&["args", "bytes"]).as_usize(), Some(4096));
+        assert_eq!(hop.at(&["args", "tier"]).as_usize(), Some(1));
+        assert_eq!(hop.at(&["args", "coll"]).as_usize(), Some(1));
+        // Thread names exist for the rails.
+        assert!(text.contains("nic-rail-1"));
+        assert!(text.contains("thread_name"));
+    }
+}

@@ -1,0 +1,313 @@
+//! Critical-path analysis over a recorded [`Trace`]: which hop/compute
+//! chain determined a collective's finish time, and where along that
+//! chain the nanoseconds went.
+//!
+//! The walk starts from the hop that delivered last for the collective
+//! (ties broken by content order, so the result is deterministic) and
+//! follows each span's [`Cause`] backwards — the event its sender was
+//! reacting to — until it reaches a span posted up front. Each hop on
+//! the path is decomposed into:
+//!
+//! * **queue** — posted until a wire first served it ([`HopSpan::queue_ns`]);
+//! * **service** — pure egress of the max-cost piece (overhead + bytes/bw);
+//! * **stall** — extra wire-holding time from preemption, gating or
+//!   zero-bandwidth chaos windows ([`HopSpan::stall_ns`]);
+//! * **flight** — post-egress latency (alpha, chaos-stretched)
+//!   ([`HopSpan::flight_ns`]).
+//!
+//! Compute spans on the path contribute their full duration. Per-tier
+//! attribution sums each hop's end-to-end time under its pricing level,
+//! which is how the a6 hierarchical workload's leader-phase inter-tier
+//! bottleneck shows up at large message sizes (`a12_trace_overhead`).
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::{Cause, ComputeSpan, HopSpan, Trace, TraceEvent};
+use crate::Ns;
+
+/// One hop on the critical path with its time decomposition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PathStep {
+    pub hop: HopSpan,
+    pub queue_ns: Ns,
+    pub service_ns: Ns,
+    pub stall_ns: Ns,
+    pub flight_ns: Ns,
+}
+
+/// The resolved critical path of one collective.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CriticalPath {
+    pub coll_id: u64,
+    /// Delivery time of the finishing hop.
+    pub finish_ns: Ns,
+    /// Hops in causal (time-ascending) order, finishing hop last.
+    pub steps: Vec<PathStep>,
+    pub queue_ns: Ns,
+    pub service_ns: Ns,
+    pub stall_ns: Ns,
+    pub flight_ns: Ns,
+    /// Compute time interleaved on the path.
+    pub compute_ns: Ns,
+    /// Per-tier end-to-end hop time (level → ns).
+    pub by_level: BTreeMap<usize, Ns>,
+}
+
+impl CriticalPath {
+    /// Summed hop end-to-end time on the path.
+    pub fn hop_ns(&self) -> Ns {
+        self.queue_ns + self.service_ns + self.stall_ns + self.flight_ns
+    }
+
+    /// Fraction of path hop time spent on tier `level`.
+    pub fn level_share(&self, level: usize) -> f64 {
+        let total: Ns = self.by_level.values().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.by_level.get(&level).copied().unwrap_or(0) as f64 / total as f64
+    }
+
+    /// Human summary plus the top-`k` most expensive hops. The first
+    /// line (`critical path: ...`) is grep-stable for CI smokes.
+    pub fn render(&self, k: usize) -> String {
+        let hop = self.hop_ns().max(1) as f64;
+        let pct = |ns: Ns| format!("{:.0}%", ns as f64 * 100.0 / hop);
+        let mut out = format!(
+            "critical path: coll {} finish {} ns, {} hops (queue {} service {} stall {} flight {}), compute {} ns\n",
+            self.coll_id,
+            self.finish_ns,
+            self.steps.len(),
+            pct(self.queue_ns),
+            pct(self.service_ns),
+            pct(self.stall_ns),
+            pct(self.flight_ns),
+            self.compute_ns,
+        );
+        let tiers: Vec<String> = self
+            .by_level
+            .iter()
+            .map(|(l, ns)| format!("tier {l}: {ns} ns ({:.0}%)", self.level_share(*l) * 100.0))
+            .collect();
+        out.push_str(&format!("  per-tier: {}\n", tiers.join("  ")));
+        let mut ranked: Vec<&PathStep> = self.steps.iter().collect();
+        ranked.sort_by_key(|s| std::cmp::Reverse(s.hop.total_ns()));
+        for (i, s) in ranked.iter().take(k).enumerate() {
+            out.push_str(&format!(
+                "  #{:<2} {}->{} {} B prio {} tier {} [{}..{}] queue {} service {} stall {} flight {}\n",
+                i + 1,
+                s.hop.src,
+                s.hop.dst,
+                s.hop.bytes,
+                s.hop.priority,
+                s.hop.level,
+                s.hop.posted_at,
+                s.hop.deliver_at,
+                s.queue_ns,
+                s.service_ns,
+                s.stall_ns,
+                s.flight_ns,
+            ));
+        }
+        out
+    }
+}
+
+/// Walk the cause chain backwards from the hop that finished `coll_id`.
+/// Returns `None` when the trace holds no hop tagged with `coll_id`.
+pub fn critical_path(trace: &Trace, coll_id: u64) -> Option<CriticalPath> {
+    // Content-identity indexes. Delivery/completion identities are
+    // unique in a valid trace; ties (two identical messages delivered
+    // at the same instant) resolve to the later-sorting span, the same
+    // on serial and merged traces.
+    let mut by_delivery: HashMap<Cause, &HopSpan> = HashMap::new();
+    let mut by_compute: HashMap<Cause, &ComputeSpan> = HashMap::new();
+    let mut target: Option<&HopSpan> = None;
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::Hop(h) => {
+                by_delivery.insert(
+                    Cause::Msg {
+                        at: h.deliver_at,
+                        src: h.src,
+                        dst: h.dst,
+                        bytes: h.bytes,
+                        priority: h.priority,
+                        tag: h.tag,
+                    },
+                    h,
+                );
+                let better = match target {
+                    None => true,
+                    Some(t) => (h.deliver_at, h) > (t.deliver_at, t),
+                };
+                if h.tag == coll_id && better {
+                    target = Some(h);
+                }
+            }
+            TraceEvent::Compute(c) => {
+                by_compute
+                    .insert(Cause::Compute { at: c.end, node: c.node, tag: c.tag }, c);
+            }
+            _ => {}
+        }
+    }
+    let target = target?;
+    let mut steps: Vec<PathStep> = Vec::new();
+    let mut compute_ns: Ns = 0;
+    let mut by_level: BTreeMap<usize, Ns> = BTreeMap::new();
+    let mut cur = target;
+    // Cycle guard: causes strictly precede their spans in time, so the
+    // chain is finite; the cap is belt and braces for malformed traces.
+    for _ in 0..1_000_000 {
+        steps.push(PathStep {
+            hop: cur.clone(),
+            queue_ns: cur.queue_ns(),
+            service_ns: cur.service_ns,
+            stall_ns: cur.stall_ns(),
+            flight_ns: cur.flight_ns(),
+        });
+        *by_level.entry(cur.level).or_insert(0) += cur.total_ns();
+        // Follow compute links until the next message dependency.
+        let mut cause = cur.cause;
+        loop {
+            match cause {
+                Some(c @ Cause::Compute { .. }) => match by_compute.get(&c) {
+                    Some(span) => {
+                        compute_ns += span.end.saturating_sub(span.start);
+                        cause = span.cause;
+                    }
+                    None => {
+                        cause = None;
+                    }
+                },
+                _ => break,
+            }
+        }
+        match cause.and_then(|c| by_delivery.get(&c)) {
+            Some(&prev) if prev.deliver_at <= cur.posted_at => cur = prev,
+            _ => break,
+        }
+    }
+    steps.reverse();
+    let sum = |f: fn(&PathStep) -> Ns| -> Ns { steps.iter().map(f).sum() };
+    Some(CriticalPath {
+        coll_id,
+        finish_ns: target.deliver_at,
+        queue_ns: sum(|s| s.queue_ns),
+        service_ns: sum(|s| s.service_ns),
+        stall_ns: sum(|s| s.stall_ns),
+        flight_ns: sum(|s| s.flight_ns),
+        compute_ns,
+        by_level,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(
+        src: usize,
+        dst: usize,
+        posted: Ns,
+        deliver: Ns,
+        level: usize,
+        tag: u64,
+        cause: Option<Cause>,
+    ) -> HopSpan {
+        HopSpan {
+            src,
+            dst,
+            bytes: 1 << 10,
+            priority: 1,
+            tag,
+            level,
+            posted_at: posted,
+            first_service_at: posted + 5,
+            egress_done_at: deliver - 20,
+            deliver_at: deliver,
+            service_ns: deliver - posted - 40,
+            pieces: 1,
+            lat_mult_milli: 1000,
+            cause,
+        }
+    }
+
+    fn msg_cause(h: &HopSpan) -> Cause {
+        Cause::Msg {
+            at: h.deliver_at,
+            src: h.src,
+            dst: h.dst,
+            bytes: h.bytes,
+            priority: h.priority,
+            tag: h.tag,
+        }
+    }
+
+    #[test]
+    fn walks_the_chain_and_decomposes() {
+        // 0→1 at [0,100], then 1→2 at [100,250], then 2→3 at [250,500].
+        let h0 = hop(0, 1, 0, 100, 0, 1, None);
+        let h1 = hop(1, 2, 100, 250, 1, 1, Some(msg_cause(&h0)));
+        let h2 = hop(2, 3, 250, 500, 1, 1, Some(msg_cause(&h1)));
+        // A red-herring earlier delivery of the same collective.
+        let other = hop(3, 0, 0, 90, 0, 1, None);
+        let tr = Trace {
+            events: vec![
+                TraceEvent::Hop(h1.clone()),
+                TraceEvent::Hop(h0.clone()),
+                TraceEvent::Hop(other),
+                TraceEvent::Hop(h2.clone()),
+            ],
+        }
+        .normalized();
+        let cp = critical_path(&tr, 1).unwrap();
+        assert_eq!(cp.finish_ns, 500);
+        assert_eq!(cp.steps.len(), 3);
+        assert_eq!(cp.steps[0].hop, h0);
+        assert_eq!(cp.steps[2].hop, h2);
+        // Decomposition sums to the hops' end-to-end time.
+        assert_eq!(cp.hop_ns(), 100 + 150 + 250);
+        assert_eq!(cp.by_level.get(&0), Some(&100));
+        assert_eq!(cp.by_level.get(&1), Some(&400));
+        assert!((cp.level_share(1) - 0.8).abs() < 1e-12);
+        let txt = cp.render(2);
+        assert!(txt.starts_with("critical path: coll 1 finish 500 ns, 3 hops"));
+        assert!(txt.contains("per-tier"));
+        assert_eq!(critical_path(&tr, 99), None);
+    }
+
+    #[test]
+    fn compute_links_bridge_message_dependencies() {
+        let h0 = hop(0, 1, 0, 100, 0, 2, None);
+        let comp = ComputeSpan {
+            node: 1,
+            start: 100,
+            end: 180,
+            tag: 7,
+            cause: Some(msg_cause(&h0)),
+        };
+        let h1 = hop(
+            1,
+            2,
+            180,
+            300,
+            0,
+            2,
+            Some(Cause::Compute { at: 180, node: 1, tag: 7 }),
+        );
+        let tr = Trace {
+            events: vec![
+                TraceEvent::Hop(h0.clone()),
+                TraceEvent::Compute(comp),
+                TraceEvent::Hop(h1),
+            ],
+        };
+        let cp = critical_path(&tr, 2).unwrap();
+        assert_eq!(cp.steps.len(), 2, "compute links bridge to the prior hop");
+        assert_eq!(cp.compute_ns, 80);
+        assert_eq!(cp.steps[0].hop, h0);
+    }
+}

@@ -1,0 +1,575 @@
+//! Deterministic trace layer: structured spans recorded from the event
+//! hot paths of [`crate::fabric::NetSim`], the collective executors and
+//! the engine, with analyzers on top.
+//!
+//! Design contract (docs/TRACING.md):
+//!
+//! * **Zero behavioral impact when disabled.** The simulator owns an
+//!   `Option<Box<TraceBuf>>`; every hook is a single `if let` on that
+//!   option, and no hook mutates anything the event loop reads. With
+//!   tracing off the delivered-message stream, completion timestamps and
+//!   stats are byte-identical to a build without this module
+//!   (regression-tested in `tests/prop_trace.rs`, bounded by the
+//!   `a12_trace_overhead` bench).
+//! * **Content identity, not local ids.** Spans carry only simulation
+//!   content (ranks, bytes, priorities, tags, timestamps) — never
+//!   per-shard message ids — so the per-shard buffers of a partitioned
+//!   run ([`crate::collectives::parexec`]) merge into a trace
+//!   byte-identical to the serial run's ([`Trace::normalized`]).
+//! * **Causality built in.** Every hop/compute span records the event
+//!   that triggered its posting ([`Cause`]), which is what the
+//!   critical-path analyzer ([`critical`]) walks backwards.
+//!
+//! Renderers/analyzers over the span store: Chrome trace-event JSON
+//! export ([`chrome`], loads in Perfetto / `chrome://tracing`),
+//! critical-path decomposition ([`critical::critical_path`]), windowed
+//! utilization time series ([`Utilization`]), and the ASCII Gantt
+//! timeline ([`crate::metrics::Timeline::from_trace`]).
+
+pub mod chrome;
+pub mod critical;
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::fabric::MsgDesc;
+use crate::{Ns, Priority, Rank};
+
+/// The event that caused a span to be posted: the simulator event the
+/// driver was reacting to when it issued the send/compute. Identified by
+/// *content* (not ids), so serial and partitioned runs agree exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Cause {
+    /// A message delivery (`SimEvent::MsgDelivered`).
+    Msg { at: Ns, src: Rank, dst: Rank, bytes: u64, priority: Priority, tag: u64 },
+    /// A compute completion (`SimEvent::ComputeDone`).
+    Compute { at: Ns, node: Rank, tag: u64 },
+}
+
+/// Which egress channel a busy interval was measured on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TrackChan {
+    /// One NIC rail (strict-priority, preemptive).
+    Rail(u32),
+    /// The intra-node shared-memory channel (FIFO, one free class).
+    Shm,
+}
+
+/// One point-to-point message's full lifecycle, recorded on the source
+/// node when its last egress piece leaves the wire.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct HopSpan {
+    pub src: Rank,
+    pub dst: Rank,
+    pub bytes: u64,
+    pub priority: Priority,
+    /// Collective id (the executor posts messages tagged with it).
+    pub tag: u64,
+    /// Deepest common tier the hop was priced at.
+    pub level: usize,
+    /// When the send was posted.
+    pub posted_at: Ns,
+    /// When the first piece first held a wire (queueing ends here).
+    pub first_service_at: Ns,
+    /// When the LAST egress piece left the wire.
+    pub egress_done_at: Ns,
+    /// Delivery at the destination (`egress_done_at` + in-flight latency).
+    pub deliver_at: Ns,
+    /// Pure wire service of the max-cost piece (overhead + bytes/bw):
+    /// the egress time the hop needs with zero contention.
+    pub service_ns: Ns,
+    /// Rail pieces the transfer was striped into.
+    pub pieces: u32,
+    /// Chaos latency multiplier applied in flight (1000 = healthy).
+    pub lat_mult_milli: u64,
+    /// Event the posting driver was reacting to (None: posted up front).
+    pub cause: Option<Cause>,
+}
+
+impl HopSpan {
+    /// Queueing delay: posted until a wire first served it.
+    pub fn queue_ns(&self) -> Ns {
+        self.first_service_at.saturating_sub(self.posted_at)
+    }
+
+    /// Preemption/gating stall: wire-holding interval minus pure service.
+    pub fn stall_ns(&self) -> Ns {
+        (self.egress_done_at.saturating_sub(self.first_service_at))
+            .saturating_sub(self.service_ns)
+    }
+
+    /// In-flight (alpha) time after the last piece left the wire.
+    pub fn flight_ns(&self) -> Ns {
+        self.deliver_at.saturating_sub(self.egress_done_at)
+    }
+
+    /// End-to-end posted-to-delivered time.
+    pub fn total_ns(&self) -> Ns {
+        self.deliver_at.saturating_sub(self.posted_at)
+    }
+}
+
+/// A contiguous busy interval of one egress channel.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BusySpan {
+    pub node: Rank,
+    pub chan: TrackChan,
+    /// Urgency class of the transfer that held the wire.
+    pub class: Priority,
+    pub start: Ns,
+    pub end: Ns,
+}
+
+/// A compute timer interval (post to expiry, chaos slowdown included).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ComputeSpan {
+    pub node: Rank,
+    pub start: Ns,
+    pub end: Ns,
+    pub tag: u64,
+    pub cause: Option<Cause>,
+}
+
+/// One structured trace record. The derived `Ord` is the canonical
+/// content order [`Trace::normalized`] sorts into.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceEvent {
+    /// A message hop (see [`HopSpan`]).
+    Hop(HopSpan),
+    /// An egress-channel busy interval.
+    Busy(BusySpan),
+    /// A compute interval.
+    Compute(ComputeSpan),
+    /// A collective was posted to the executor.
+    CollStart { coll_id: u64, at: Ns, priority: Priority, ranks: usize },
+    /// One rank finished its chunk program for `coll_id`.
+    RankDone { coll_id: u64, rank: Rank, at: Ns },
+    /// A zero-bandwidth chaos window opened (`on`) or closed (`!on`).
+    ChaosGate { at: Ns, on: bool },
+    /// A chaos plan killed one NIC rail.
+    RailDie { at: Ns, node: Rank, rail: u32 },
+    /// A labeled engine marker (phase transition, collective issue).
+    Mark { node: Rank, at: Ns, track: String, label: String },
+}
+
+impl TraceEvent {
+    /// Start timestamp used for time-ordered rendering.
+    pub fn start_ns(&self) -> Ns {
+        match self {
+            TraceEvent::Hop(h) => h.posted_at,
+            TraceEvent::Busy(b) => b.start,
+            TraceEvent::Compute(c) => c.start,
+            TraceEvent::CollStart { at, .. }
+            | TraceEvent::RankDone { at, .. }
+            | TraceEvent::ChaosGate { at, .. }
+            | TraceEvent::RailDie { at, .. }
+            | TraceEvent::Mark { at, .. } => *at,
+        }
+    }
+
+    /// End timestamp (== start for instants).
+    pub fn end_ns(&self) -> Ns {
+        match self {
+            TraceEvent::Hop(h) => h.deliver_at,
+            TraceEvent::Busy(b) => b.end,
+            TraceEvent::Compute(c) => c.end,
+            other => other.start_ns(),
+        }
+    }
+}
+
+/// An immutable, mergeable span store.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn span_count(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Latest timestamp any span touches.
+    pub fn end_time(&self) -> Ns {
+        self.events.iter().map(|e| e.end_ns()).max().unwrap_or(0)
+    }
+
+    /// Sort into the canonical content order. Two traces of the same
+    /// simulation — serial or merged from partitioned shards — are
+    /// byte-identical after normalization.
+    pub fn normalized(mut self) -> Trace {
+        self.events.sort();
+        self
+    }
+
+    /// Merge per-shard buffers into one canonical trace. Every record is
+    /// recorded by exactly one shard (the owner of its source/node), so
+    /// concatenation followed by the canonical sort reproduces the
+    /// serial trace exactly.
+    pub fn merge(parts: Vec<Trace>) -> Trace {
+        let mut events = Vec::with_capacity(parts.iter().map(|t| t.events.len()).sum());
+        for mut t in parts {
+            events.append(&mut t.events);
+        }
+        Trace { events }.normalized()
+    }
+
+    /// All hop spans, in store order.
+    pub fn hops(&self) -> impl Iterator<Item = &HopSpan> {
+        self.events.iter().filter_map(|e| match e {
+            TraceEvent::Hop(h) => Some(h),
+            _ => None,
+        })
+    }
+}
+
+/// The live recording buffer a [`crate::fabric::NetSim`] owns while
+/// tracing is enabled. All per-message bookkeeping (pending hops, the
+/// current cause) lives HERE, so the disabled simulator carries no
+/// trace state at all.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    pub events: Vec<TraceEvent>,
+    /// Hops posted but not yet fully off the wire, keyed by the
+    /// simulator's private message id (never exposed in records).
+    pending: HashMap<u64, PendingHop>,
+    /// The event the driver is currently reacting to.
+    pub current_cause: Option<Cause>,
+}
+
+#[derive(Debug)]
+struct PendingHop {
+    level: usize,
+    pieces: u32,
+    posted_at: Ns,
+    first_service_at: Option<Ns>,
+    service_ns: Ns,
+    cause: Option<Cause>,
+}
+
+impl TraceBuf {
+    /// A send was posted: open the hop record.
+    pub fn start_hop(
+        &mut self,
+        msg_id: u64,
+        level: usize,
+        pieces: u32,
+        service_ns: Ns,
+        now: Ns,
+    ) {
+        self.pending.insert(
+            msg_id,
+            PendingHop {
+                level,
+                pieces,
+                posted_at: now,
+                first_service_at: None,
+                service_ns,
+                cause: self.current_cause,
+            },
+        );
+    }
+
+    /// A wire elected a piece of `msg_id` to run (first election wins).
+    pub fn note_service(&mut self, msg_id: u64, now: Ns) {
+        if let Some(p) = self.pending.get_mut(&msg_id) {
+            if p.first_service_at.is_none() {
+                p.first_service_at = Some(now);
+            }
+        }
+    }
+
+    /// The last egress piece left the wire: close and record the hop.
+    pub fn finish_hop(
+        &mut self,
+        msg_id: u64,
+        msg: &MsgDesc,
+        egress_done_at: Ns,
+        deliver_at: Ns,
+        lat_mult_milli: u64,
+    ) {
+        let Some(p) = self.pending.remove(&msg_id) else {
+            return; // injected arrival or tracing enabled mid-flight
+        };
+        self.events.push(TraceEvent::Hop(HopSpan {
+            src: msg.src,
+            dst: msg.dst,
+            bytes: msg.bytes,
+            priority: msg.priority,
+            tag: msg.tag,
+            level: p.level,
+            posted_at: p.posted_at,
+            first_service_at: p.first_service_at.unwrap_or(p.posted_at),
+            egress_done_at,
+            deliver_at,
+            service_ns: p.service_ns,
+            pieces: p.pieces,
+            lat_mult_milli,
+            cause: p.cause,
+        }));
+    }
+
+    /// Push a fully-formed record (executor/engine hooks).
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    /// Move the recorded spans out, leaving the buffer recording.
+    pub fn take(&mut self) -> Trace {
+        Trace { events: std::mem::take(&mut self.events) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed utilization
+// ---------------------------------------------------------------------------
+
+/// Busy-time aggregates for one time window.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct UtilWindow {
+    pub start: Ns,
+    pub end: Ns,
+    /// Busy ns per rail index, summed over nodes.
+    pub rail_busy: Vec<Ns>,
+    /// Busy ns of the shared-memory channels, summed over nodes.
+    pub shm_busy: Ns,
+    /// Busy ns per urgency class (NIC rails only).
+    pub by_class: BTreeMap<Priority, Ns>,
+    /// Wire-holding ns of hops per tier ([`HopSpan::first_service_at`]
+    /// to [`HopSpan::egress_done_at`], attributed to the hop's level).
+    pub by_level: BTreeMap<usize, Ns>,
+}
+
+/// Windowed per-rail / per-class / per-tier busy-fraction time series
+/// computed post-hoc from the recorded [`BusySpan`]s and [`HopSpan`]s —
+/// the read path that replaces ad-hoc counter plumbing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Utilization {
+    pub window_ns: Ns,
+    pub p: usize,
+    pub rails: usize,
+    pub windows: Vec<UtilWindow>,
+}
+
+impl Utilization {
+    /// Slice `trace` into `window_ns`-wide windows over `p` nodes with
+    /// `rails` NIC rails each.
+    pub fn compute(trace: &Trace, p: usize, rails: usize, window_ns: Ns) -> Utilization {
+        let window_ns = window_ns.max(1);
+        let horizon = trace.end_time();
+        let n_windows = (horizon.div_ceil(window_ns)).max(1) as usize;
+        let mut windows: Vec<UtilWindow> = (0..n_windows)
+            .map(|i| UtilWindow {
+                start: i as Ns * window_ns,
+                end: (i as Ns + 1) * window_ns,
+                rail_busy: vec![0; rails.max(1)],
+                ..UtilWindow::default()
+            })
+            .collect();
+        // Distribute [start, end) across the windows it overlaps.
+        fn split(
+            windows: &mut [UtilWindow],
+            window_ns: Ns,
+            start: Ns,
+            end: Ns,
+            add: &mut dyn FnMut(&mut UtilWindow, Ns),
+        ) {
+            let mut t = start;
+            while t < end {
+                let w = (t / window_ns) as usize;
+                let Some(win) = windows.get_mut(w) else { break };
+                let stop = end.min((w as Ns + 1) * window_ns);
+                add(win, stop - t);
+                t = stop;
+            }
+        }
+        for ev in &trace.events {
+            match ev {
+                TraceEvent::Busy(b) => {
+                    let (chan, class) = (b.chan, b.class);
+                    split(&mut windows, window_ns, b.start, b.end, &mut |w, ns| match chan {
+                        TrackChan::Rail(r) => {
+                            if let Some(cell) = w.rail_busy.get_mut(r as usize) {
+                                *cell += ns;
+                            }
+                            *w.by_class.entry(class).or_insert(0) += ns;
+                        }
+                        TrackChan::Shm => w.shm_busy += ns,
+                    });
+                }
+                TraceEvent::Hop(h) => {
+                    let level = h.level;
+                    split(
+                        &mut windows,
+                        window_ns,
+                        h.first_service_at,
+                        h.egress_done_at,
+                        &mut |w, ns| {
+                            *w.by_level.entry(level).or_insert(0) += ns;
+                        },
+                    );
+                }
+                _ => {}
+            }
+        }
+        Utilization { window_ns, p, rails: rails.max(1), windows }
+    }
+
+    /// Busy fraction of rail `r` in window `w` (capacity = p wires).
+    pub fn rail_fraction(&self, w: usize, r: usize) -> f64 {
+        let win = &self.windows[w];
+        let cap = (win.end - win.start) as f64 * self.p as f64;
+        win.rail_busy.get(r).copied().unwrap_or(0) as f64 / cap.max(1.0)
+    }
+
+    /// Render the series as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("window_ns      ");
+        for r in 0..self.rails {
+            out.push_str(&format!("rail{r:<7}"));
+        }
+        out.push_str("shm        tiers (busy ns)        classes (busy ns)\n");
+        for w in &self.windows {
+            let cap = ((w.end - w.start) as f64 * self.p as f64).max(1.0);
+            out.push_str(&format!("{:<15}", w.start));
+            for r in 0..self.rails {
+                out.push_str(&format!(
+                    "{:<11.3}",
+                    w.rail_busy.get(r).copied().unwrap_or(0) as f64 / cap
+                ));
+            }
+            out.push_str(&format!("{:<11.3}", w.shm_busy as f64 / cap));
+            let tiers: Vec<String> =
+                w.by_level.iter().map(|(l, ns)| format!("L{l}:{ns}")).collect();
+            let classes: Vec<String> =
+                w.by_class.iter().map(|(c, ns)| format!("p{c}:{ns}")).collect();
+            out.push_str(&format!("{:<22}", tiers.join(" ")));
+            out.push_str(&classes.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(src: Rank, posted: Ns, deliver: Ns, tag: u64) -> TraceEvent {
+        TraceEvent::Hop(HopSpan {
+            src,
+            dst: src + 1,
+            bytes: 1000,
+            priority: 1,
+            tag,
+            level: 0,
+            posted_at: posted,
+            first_service_at: posted,
+            egress_done_at: deliver.saturating_sub(10),
+            deliver_at: deliver,
+            service_ns: deliver.saturating_sub(posted + 10),
+            pieces: 1,
+            lat_mult_milli: 1000,
+            cause: None,
+        })
+    }
+
+    #[test]
+    fn merge_equals_sorted_concat_regardless_of_shard_split() {
+        let a = hop(0, 0, 100, 1);
+        let b = hop(1, 5, 80, 1);
+        let c = hop(2, 7, 90, 2);
+        let serial = Trace { events: vec![a.clone(), b.clone(), c.clone()] }.normalized();
+        let merged = Trace::merge(vec![
+            Trace { events: vec![c.clone(), a.clone()] },
+            Trace { events: vec![b.clone()] },
+            Trace::default(),
+        ]);
+        assert_eq!(serial, merged);
+        // Normalization is idempotent.
+        assert_eq!(serial.clone().normalized(), serial);
+    }
+
+    #[test]
+    fn hop_decomposition_is_non_negative_and_partitions_total() {
+        let h = HopSpan {
+            src: 0,
+            dst: 1,
+            bytes: 4096,
+            priority: 2,
+            tag: 9,
+            level: 1,
+            posted_at: 100,
+            first_service_at: 150,
+            egress_done_at: 700,
+            deliver_at: 1200,
+            service_ns: 400,
+            pieces: 2,
+            lat_mult_milli: 1000,
+            cause: None,
+        };
+        assert_eq!(h.queue_ns(), 50);
+        assert_eq!(h.stall_ns(), 150); // (700-150) - 400
+        assert_eq!(h.flight_ns(), 500);
+        assert_eq!(
+            h.queue_ns() + h.service_ns + h.stall_ns() + h.flight_ns(),
+            h.total_ns()
+        );
+    }
+
+    #[test]
+    fn pending_hops_resolve_through_the_buffer() {
+        let mut buf = TraceBuf::default();
+        buf.current_cause = Some(Cause::Compute { at: 5, node: 0, tag: 3 });
+        buf.start_hop(42, 1, 2, 300, 10);
+        buf.note_service(42, 25);
+        buf.note_service(42, 60); // later elections don't move the mark
+        let msg = MsgDesc { src: 0, dst: 3, bytes: 2048, priority: 1, tag: 7 };
+        buf.finish_hop(42, &msg, 400, 900, 1000);
+        // Unknown ids (injected cross-partition arrivals) are ignored.
+        buf.finish_hop(99, &msg, 1, 2, 1000);
+        let tr = buf.take();
+        assert_eq!(tr.span_count(), 1);
+        let h = tr.hops().next().unwrap();
+        assert_eq!((h.posted_at, h.first_service_at), (10, 25));
+        assert_eq!((h.egress_done_at, h.deliver_at), (400, 900));
+        assert_eq!(h.cause, Some(Cause::Compute { at: 5, node: 0, tag: 3 }));
+        assert!(buf.take().events.is_empty(), "take drains the buffer");
+    }
+
+    #[test]
+    fn utilization_windows_clip_spans_and_attribute_classes() {
+        let tr = Trace {
+            events: vec![
+                TraceEvent::Busy(BusySpan {
+                    node: 0,
+                    chan: TrackChan::Rail(0),
+                    class: 1,
+                    start: 50,
+                    end: 250,
+                }),
+                TraceEvent::Busy(BusySpan {
+                    node: 1,
+                    chan: TrackChan::Shm,
+                    class: 0,
+                    start: 0,
+                    end: 100,
+                }),
+                hop(0, 0, 260, 1),
+            ],
+        };
+        let u = Utilization::compute(&tr, 2, 1, 100);
+        assert_eq!(u.windows.len(), 3);
+        // Rail busy 50..250 splits 50 / 100 / 50 across the windows.
+        assert_eq!(u.windows[0].rail_busy[0], 50);
+        assert_eq!(u.windows[1].rail_busy[0], 100);
+        assert_eq!(u.windows[2].rail_busy[0], 50);
+        assert_eq!(u.windows[0].shm_busy, 100);
+        assert_eq!(u.windows[1].by_class.get(&1), Some(&100));
+        // Fractions normalize by window × nodes.
+        assert!((u.rail_fraction(1, 0) - 0.5).abs() < 1e-12);
+        let rendered = u.render();
+        assert!(rendered.contains("rail0"));
+        assert!(rendered.contains("L0:"));
+    }
+}

@@ -144,6 +144,9 @@ pub fn measure_ns(
     p: usize,
     bytes: u64,
 ) -> Ns {
+    // Counted here — once per (cell, candidate) measurement — so the
+    // serial and threaded grid walks bump `tuner.probes` identically.
+    crate::metrics::registry::inc("tuner.probes");
     let n = (bytes / 4).max(1) as usize; // f32 elements
     let programs = build(kind, alg, p, n).expect("probe candidates are buildable");
     let mut sim = NetSim::new(topo.clone(), p);
@@ -352,6 +355,14 @@ mod tests {
         }
         // threads=1 is literally the serial path.
         assert_eq!(tune_threaded(&topo, &spec, 1).to_json_string(), serial.to_json_string());
+    }
+
+    #[test]
+    fn probe_measurements_bump_the_metrics_registry() {
+        let before = crate::metrics::registry::get("tuner.probes");
+        measure_ns(&Topology::eth_10g(), CollectiveKind::Allreduce, Algorithm::Ring, 4, 4096);
+        // >= not ==: sibling tests probing concurrently also bump it.
+        assert!(crate::metrics::registry::get("tuner.probes") >= before + 1);
     }
 
     #[test]

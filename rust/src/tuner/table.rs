@@ -200,6 +200,7 @@ impl TuningTable {
         if p < min || p > max {
             let clamped = if p < min { min } else { max };
             OUT_OF_GRID.fetch_add(1, Ordering::Relaxed);
+            crate::metrics::registry::inc("tuner.out_of_grid_clamps");
             if !OUT_OF_GRID_WARNED.swap(true, Ordering::Relaxed) {
                 crate::util::warn::warn(format!(
                     "tuning table for {} has no row at p={p} \

@@ -13,8 +13,12 @@
 //!   [`crate::tuner::table`]) implement their own latching and call
 //!   [`warn`] at most once per process.
 
-/// Emit `warning: {msg}` on stderr.
+/// Emit `warning: {msg}` on stderr and bump the `util.warnings`
+/// counter in [`crate::metrics::registry`], so tests and the `mlsl
+/// trace` counter dump can assert warning counts without capturing
+/// stderr.
 pub fn warn(msg: impl AsRef<str>) {
+    crate::metrics::registry::inc("util.warnings");
     eprintln!("{}", format_warning(msg.as_ref()));
 }
 

@@ -76,8 +76,9 @@ fn prop_partitioned_collectives_match_serial_byte_for_byte() {
                 1,
                 chaos.as_ref(),
                 true,
+                false,
             );
-            let cfg = FleetConfig { shards, threads, chaos, record_deliveries: true };
+            let cfg = FleetConfig { shards, threads, chaos, record_deliveries: true, trace: false };
             let par = run_collective(&topo, p, progs.clone(), WireDtype::F32, 1, &cfg);
             if par.delivered != serial.delivered {
                 return Err(format!("{label}: delivered-message multisets diverged"));
@@ -142,12 +143,24 @@ fn prop_pattern_runs_are_partition_invariant() {
             let serial = run_pattern(
                 &topo,
                 &spec,
-                &FleetConfig { shards: 1, threads: 1, chaos: None, record_deliveries: false },
+                &FleetConfig {
+                    shards: 1,
+                    threads: 1,
+                    chaos: None,
+                    record_deliveries: false,
+                    trace: false,
+                },
             );
             let par = run_pattern(
                 &topo,
                 &spec,
-                &FleetConfig { shards, threads, chaos: None, record_deliveries: false },
+                &FleetConfig {
+                    shards,
+                    threads,
+                    chaos: None,
+                    record_deliveries: false,
+                    trace: false,
+                },
             );
             if par.finish_ns != serial.finish_ns || par.final_clock != serial.final_clock {
                 return Err(format!(

@@ -1,0 +1,181 @@
+//! Property tests for the deterministic trace layer (`mlsl::trace`):
+//! observation is never allowed to change the physics, and partitioning
+//! is never allowed to change the observation.
+//!
+//! For random topologies, collective builders, sizes, chaos plans and
+//! shard/thread grids:
+//!
+//! * **Merge identity** — the merged per-shard trace of a partitioned
+//!   run is byte-identical to the serial run's normalized trace (same
+//!   `Vec<TraceEvent>`, element for element);
+//! * **Heisenberg check** — turning tracing ON leaves the
+//!   delivered-message multiset, per-rank completions, finish time,
+//!   final clock, traffic stats and chaos counters byte-identical to a
+//!   traced-off run.
+//!
+//! See `docs/TRACING.md` for the content-identity design that makes the
+//! first property exact rather than approximate.
+
+use mlsl::collectives::parexec::{run_collective, run_collective_serial, FleetConfig};
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::{Algorithm as A, WireDtype};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::ChaosPlan;
+use mlsl::trace::TraceEvent;
+use mlsl::util::proptest::{run as prop_run, Config};
+
+/// Random test fabric: flat, smp, multi-rail or racked — trace records
+/// must merge exactly across all tier shapes.
+fn random_topo(pick: usize) -> Topology {
+    match pick % 4 {
+        0 => Topology::flat("trtest", 8.0, 1_000, 100, 1 << 20),
+        1 => Topology::by_name("eth10g-x2").unwrap(),
+        2 => Topology::by_name("eth10g-x2e2").unwrap(),
+        _ => Topology::by_name("eth10g-x2r4").unwrap(),
+    }
+}
+
+#[test]
+fn prop_merged_partitioned_trace_equals_serial_trace() {
+    prop_run(
+        Config { cases: 40, seed: 101 },
+        |r| {
+            let topo_pick = r.usize_below(4);
+            let p = 2 + r.usize_below(31); // 2..33
+            let n = 1 + r.usize_below(2_000);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                A::RecursiveDoubling
+            } else {
+                A::Ring
+            };
+            let kind = if r.below(2) == 0 {
+                CollectiveKind::Allreduce
+            } else {
+                CollectiveKind::Allgather
+            };
+            let chaos_seed = if r.below(2) == 0 { Some(r.below(u64::MAX)) } else { None };
+            let shards = 2 + r.usize_below(3); // 2..=4
+            let threads = [1usize, 2, 4][r.usize_below(3)];
+            (topo_pick, p, n, kind, alg, chaos_seed, shards, threads)
+        },
+        |&(topo_pick, p, n, kind, alg, chaos_seed, shards, threads)| {
+            let topo = random_topo(topo_pick);
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            let chaos = chaos_seed.map(|s| ChaosPlan::generate(s, &topo, p, 2_000_000));
+            let label = format!(
+                "{kind:?}/{alg} p={p} n={n} topo={} chaos={chaos_seed:?} \
+                 shards={shards} threads={threads}",
+                topo.name
+            );
+            let serial = run_collective_serial(
+                &topo,
+                p,
+                progs.clone(),
+                WireDtype::F32,
+                1,
+                chaos.as_ref(),
+                false,
+                true,
+            );
+            let st = serial.trace.as_ref().expect("tracing was on");
+            if st.span_count() == 0 {
+                return Err(format!("{label}: serial trace is empty"));
+            }
+            // Exactly one RankDone per rank, regardless of partitioning.
+            let dones = st
+                .events
+                .iter()
+                .filter(|e| matches!(e, TraceEvent::RankDone { .. }))
+                .count();
+            if dones != p {
+                return Err(format!("{label}: {dones} RankDone records, want {p}"));
+            }
+            let cfg = FleetConfig { shards, threads, chaos, record_deliveries: false, trace: true };
+            let par = run_collective(&topo, p, progs.clone(), WireDtype::F32, 1, &cfg);
+            if par.trace.as_ref() != serial.trace.as_ref() {
+                let pt = par.trace.as_ref().map(|t| t.span_count()).unwrap_or(0);
+                return Err(format!(
+                    "{label}: merged trace diverged ({} vs {} spans)",
+                    pt,
+                    st.span_count()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tracing_never_perturbs_the_simulation() {
+    prop_run(
+        Config { cases: 40, seed: 102 },
+        |r| {
+            let topo_pick = r.usize_below(4);
+            let p = 2 + r.usize_below(31);
+            let n = 1 + r.usize_below(2_000);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                A::RecursiveDoubling
+            } else {
+                A::Ring
+            };
+            let kind = if r.below(2) == 0 {
+                CollectiveKind::Allreduce
+            } else {
+                CollectiveKind::Allgather
+            };
+            let chaos_seed = if r.below(2) == 0 { Some(r.below(u64::MAX)) } else { None };
+            let shards = 1 + r.usize_below(4); // 1..=4 (1 = serial shape)
+            (topo_pick, p, n, kind, alg, chaos_seed, shards)
+        },
+        |&(topo_pick, p, n, kind, alg, chaos_seed, shards)| {
+            let topo = random_topo(topo_pick);
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            let chaos = chaos_seed.map(|s| ChaosPlan::generate(s, &topo, p, 2_000_000));
+            let label = format!(
+                "{kind:?}/{alg} p={p} n={n} topo={} chaos={chaos_seed:?} shards={shards}",
+                topo.name
+            );
+            let run = |trace: bool| {
+                let cfg = FleetConfig {
+                    shards,
+                    threads: 1,
+                    chaos: chaos.clone(),
+                    record_deliveries: true,
+                    trace,
+                };
+                run_collective(&topo, p, progs.clone(), WireDtype::F32, 1, &cfg)
+            };
+            let off = run(false);
+            let on = run(true);
+            if off.trace.is_some() {
+                return Err(format!("{label}: untraced run produced a trace"));
+            }
+            if on.trace.as_ref().map(|t| t.span_count()).unwrap_or(0) == 0 {
+                return Err(format!("{label}: traced run produced no spans"));
+            }
+            if on.delivered != off.delivered {
+                return Err(format!("{label}: tracing changed the delivered multiset"));
+            }
+            if on.completions != off.completions
+                || on.finish_ns != off.finish_ns
+                || on.final_clock != off.final_clock
+            {
+                return Err(format!(
+                    "{label}: tracing changed timing (finish {} vs {})",
+                    on.finish_ns, off.finish_ns
+                ));
+            }
+            if on.stats.msgs_sent != off.stats.msgs_sent
+                || on.stats.bytes_sent != off.stats.bytes_sent
+                || on.stats.bytes_by_priority != off.stats.bytes_by_priority
+                || on.stats.preemptions != off.stats.preemptions
+            {
+                return Err(format!("{label}: tracing changed traffic stats"));
+            }
+            if on.chaos != off.chaos {
+                return Err(format!("{label}: tracing changed chaos counters"));
+            }
+            Ok(())
+        },
+    );
+}
