@@ -139,9 +139,9 @@ fn main() {
             .expect("measured cell");
         cell.timings
             .iter()
-            .filter(|(a, _)| legal(*a))
+            .filter(|((a, _), _)| legal(*a))
             .min_by_key(|(_, ns)| *ns)
-            .map(|(a, _)| *a)
+            .map(|((a, _), _)| *a)
             .expect("some legal algorithm")
     };
     assert_eq!(pick, row_best, "tuned pick must be the snapped row's legal argmin");

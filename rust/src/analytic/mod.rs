@@ -257,6 +257,43 @@ pub fn predict_iteration_ns_with_policy(
     compute_ns + exposed
 }
 
+/// [`predict_iteration_ns_with_policy`] with compressed collectives on
+/// the menu: each gradient allreduce is priced at the cheapest
+/// (algorithm × wire-precision) candidate in `wires` — wire bytes at the
+/// compressed width, per-hop (de)quantize cost on the endpoints at
+/// `slowdown_milli` (1000 = healthy). An `&[WireDtype::F32]` menu
+/// reproduces [`predict_iteration_ns_with_policy`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_iteration_ns_wire(
+    model: &ModelDesc,
+    topo: &Topology,
+    node: &NodeSpec,
+    p: usize,
+    batch: usize,
+    comm_cores: usize,
+    policy: &crate::tuner::SelectionPolicy,
+    wires: &[crate::collectives::WireDtype],
+    slowdown_milli: u64,
+) -> u64 {
+    let compute_ns = node.compute_ns(model.step_flops(batch), comm_cores);
+    if p <= 1 {
+        return compute_ns;
+    }
+    let mut comm_ns = 0u64;
+    for (_, layer) in model.weighted_layers() {
+        let bytes = comm_bytes(layer, Parallelism::Data, p, batch);
+        comm_ns += policy.predict_allreduce_ns_wire(
+            topo,
+            p,
+            (bytes as f64 / (2.0 * (p as f64 - 1.0) / p as f64)) as u64,
+            wires,
+            slowdown_milli,
+        );
+    }
+    let bwd_ns = node.compute_ns(model.bwd_flops_per_sample() * batch as f64, comm_cores);
+    compute_ns + comm_ns.saturating_sub(bwd_ns)
+}
+
 /// Weak-scaling efficiency prediction: T(1) / T(P) with per-node batch
 /// fixed.
 pub fn predict_efficiency(
@@ -430,5 +467,29 @@ mod tests {
             predict_iteration_ns_with_policy(&model, &topo, &node, 16, 16, 2, &policy);
         let ratio = tuned as f64 / analytic as f64;
         assert!((0.5..2.0).contains(&ratio), "tuned={tuned} analytic={analytic}");
+    }
+
+    #[test]
+    fn wire_menu_prediction_brackets_the_plain_model() {
+        use crate::collectives::WireDtype;
+        use crate::tuner::SelectionPolicy;
+        let model = ModelDesc::by_name("vgg16").unwrap();
+        let topo = crate::fabric::topology::Topology::eth_10g();
+        let node = crate::fabric::topology::NodeSpec::skylake_6148();
+        let policy = SelectionPolicy::Analytic;
+        let plain = predict_iteration_ns_with_policy(&model, &topo, &node, 8, 16, 2, &policy);
+        // The f32-only menu IS the plain model.
+        let f32_only = predict_iteration_ns_wire(
+            &model, &topo, &node, 8, 16, 2, &policy, &[WireDtype::F32], 1000,
+        );
+        assert_eq!(f32_only, plain);
+        // A full menu can only shave exposed comm, never add to it —
+        // and on 10G ethernet under vgg16's fc layers it really does.
+        let full = predict_iteration_ns_wire(
+            &model, &topo, &node, 8, 16, 2, &policy, &WireDtype::ALL, 1000,
+        );
+        assert!(full < plain, "full-menu={full} plain={plain}");
+        let compute = node.compute_ns(model.step_flops(16), 2);
+        assert!(full >= compute);
     }
 }

@@ -157,7 +157,7 @@ impl std::fmt::Display for GroupStack {
 }
 
 /// Collective algorithm family.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Pipeline ring: bandwidth-optimal, 2(P−1) steps of n/P elements.
     Ring,

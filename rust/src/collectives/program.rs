@@ -54,7 +54,7 @@ pub struct Program {
 }
 
 /// What the collective computes (drives program generation + verification).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollectiveKind {
     Allreduce,
     ReduceScatter,

@@ -18,6 +18,19 @@ use crate::util::bf16::{bf16_bits_to_f32, f32_to_bf16_bits};
 /// Must match `python/compile/kernels/ref.py::QBLOCK`.
 pub const QBLOCK: usize = 256;
 
+/// Fixed per-hop (de)quantize setup cost, ns (buffer walk start-up,
+/// scale table touch). Paid once per hop END-POINT pair by the selector
+/// and tuner cost models; f32 pays nothing.
+pub const BF16_SETUP_NS: u64 = 400;
+/// See [`BF16_SETUP_NS`]; int8 also scans each block twice (absmax +
+/// quantize), so its fixed term is larger.
+pub const INT8_SETUP_NS: u64 = 1_600;
+/// Per-element encode+decode cost in 1/4 ns units (bf16: truncate +
+/// widen ≈ 0.25 ns/elem on a ~GHz-scalar node model).
+const BF16_QUARTER_NS_PER_ELEM: u64 = 1;
+/// int8: absmax scan, scale mul, clamp, dequant mul ≈ 0.5 ns/elem.
+const INT8_QUARTER_NS_PER_ELEM: u64 = 2;
+
 /// Wire element encoding for collective payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum WireDtype {
@@ -50,6 +63,94 @@ impl WireDtype {
             "int8" | "i8" => Some(WireDtype::Int8Block),
             _ => None,
         }
+    }
+
+    /// Every wire dtype, f32 first — the candidate menu the selector and
+    /// tuner enumerate when precision is chosen automatically.
+    pub const ALL: [WireDtype; 3] = [WireDtype::F32, WireDtype::Bf16, WireDtype::Int8Block];
+
+    /// Worst-case RELATIVE round-trip error vs the block absmax: the δ
+    /// in the error-feedback fixed point r* = δ/(1−δ). bf16 keeps 8
+    /// mantissa bits (δ = 2⁻⁸ from truncation); int8 rounds to the
+    /// nearest of 127 steps of absmax (δ = 0.5/127 of absmax — relative
+    /// to the LARGEST element of a block, not each element).
+    pub fn rel_error(&self) -> f64 {
+        match self {
+            WireDtype::F32 => 0.0,
+            WireDtype::Bf16 => 1.0 / 256.0,
+            WireDtype::Int8Block => 0.5 / 127.0,
+        }
+    }
+}
+
+/// Modeled cost of encoding at the sender PLUS decoding at the receiver
+/// for one hop carrying `elems` elements: a fixed setup term and a
+/// per-element term, scaled by the endpoint's chaos compute-slowdown
+/// multiplier (`slowdown_milli` = 1000 → healthy). f32 is a memcpy the
+/// executor never separates from the send and costs nothing here.
+///
+/// This is an arithmetic charge in the selector/tuner cost models — it
+/// never touches `fabric::sim` (the wire itself only sees fewer bytes).
+pub fn quant_hop_ns(elems: usize, dtype: WireDtype, slowdown_milli: u64) -> u64 {
+    let base = match dtype {
+        WireDtype::F32 => return 0,
+        WireDtype::Bf16 => {
+            BF16_SETUP_NS + (elems as u64 * BF16_QUARTER_NS_PER_ELEM).div_ceil(4)
+        }
+        WireDtype::Int8Block => {
+            INT8_SETUP_NS + (elems as u64 * INT8_QUARTER_NS_PER_ELEM).div_ceil(4)
+        }
+    };
+    (base * slowdown_milli).div_ceil(1000)
+}
+
+/// Per-rank error-feedback accumulator (1-bit-SGD / EF-SGD style): the
+/// part of the gradient the wire format dropped is carried into the NEXT
+/// iteration's gradient before encoding, so quantization error cannot
+/// accumulate across iterations — the residual converges to the fixed
+/// point r* ≤ δ·‖g‖/(1−δ) instead of growing linearly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EfState {
+    residual: Vec<f32>,
+}
+
+impl EfState {
+    pub fn new(n: usize) -> Self {
+        EfState { residual: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.residual.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residual.is_empty()
+    }
+
+    /// The error carried toward the next iteration.
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// L∞ norm of the carried residual.
+    pub fn residual_linf(&self) -> f32 {
+        self.residual.iter().fold(0f32, |a, v| a.max(v.abs()))
+    }
+
+    /// Encode `grad + residual` for the wire and bank what the format
+    /// dropped. Returns the wire bytes; the CONTRIBUTED value (what the
+    /// peers will decode) is `decode(bytes) = grad + residual − new
+    /// residual`.
+    pub fn encode_with_feedback(&mut self, grad: &[f32], dtype: WireDtype) -> Vec<u8> {
+        assert_eq!(grad.len(), self.residual.len(), "error-feedback state size mismatch");
+        let compensated: Vec<f32> =
+            grad.iter().zip(&self.residual).map(|(g, r)| g + r).collect();
+        let wire = encode(&compensated, dtype);
+        let sent = decode(&wire, compensated.len(), dtype);
+        for (r, (c, s)) in self.residual.iter_mut().zip(compensated.iter().zip(&sent)) {
+            *r = c - s;
+        }
+        wire
     }
 }
 
@@ -269,5 +370,69 @@ mod tests {
         assert_eq!(ReduceOp::Max.apply(1.0, 2.0), 2.0);
         assert_eq!(ReduceOp::Min.apply(1.0, 2.0), 1.0);
         assert_eq!(ReduceOp::Sum.apply(1.0, 2.0), 3.0);
+    }
+
+    #[test]
+    fn quant_cost_is_zero_for_f32_and_scales_with_slowdown() {
+        assert_eq!(quant_hop_ns(1 << 20, WireDtype::F32, 1000), 0);
+        let b = quant_hop_ns(1 << 20, WireDtype::Bf16, 1000);
+        let i = quant_hop_ns(1 << 20, WireDtype::Int8Block, 1000);
+        assert!(i > b, "int8 quantize costs more than bf16: {i} vs {b}");
+        // Fixed setup dominates tiny payloads; per-element term dominates
+        // big ones (the shape that creates the precision crossover).
+        assert_eq!(quant_hop_ns(0, WireDtype::Bf16, 1000), BF16_SETUP_NS);
+        assert_eq!(quant_hop_ns(0, WireDtype::Int8Block, 1000), INT8_SETUP_NS);
+        // A chaos-slowed endpoint pays proportionally more.
+        assert_eq!(quant_hop_ns(1 << 20, WireDtype::Bf16, 2000), 2 * b);
+    }
+
+    #[test]
+    fn error_feedback_converges_below_one_shot_error() {
+        // Repeatedly allreducing the SAME gradient with error feedback
+        // must leave the long-run residual at the fixed point r* ≈
+        // δ/(1−δ)·g — and the per-iteration CONTRIBUTED error (grad +
+        // old residual − new residual − grad) oscillates around zero
+        // mean: summed over k iterations the total contributed mass is
+        // k·g ± r*, i.e. the ACCUMULATED error stays below the one-shot
+        // quantization error instead of growing like k·δ.
+        let g = data(QBLOCK * 2 + 13);
+        for dtype in [WireDtype::Bf16, WireDtype::Int8Block] {
+            let one_shot = max_roundtrip_error(&g, dtype);
+            let mut ef = EfState::new(g.len());
+            let mut contributed = vec![0f32; g.len()];
+            let iters = 50;
+            for _ in 0..iters {
+                let wire = ef.encode_with_feedback(&g, dtype);
+                let sent = decode(&wire, g.len(), dtype);
+                for (c, s) in contributed.iter_mut().zip(&sent) {
+                    *c += s;
+                }
+                // Residual stays bounded by the fixed point (with slack
+                // for absmax growth of the compensated buffer).
+                assert!(
+                    ef.residual_linf() <= 2.0 * one_shot + 1e-6,
+                    "{dtype}: residual {} vs one-shot {one_shot}",
+                    ef.residual_linf()
+                );
+            }
+            // Accumulated error after `iters` rounds ≤ one residual's
+            // worth — NOT iters × one-shot error.
+            for (i, (c, gi)) in contributed.iter().zip(&g).enumerate() {
+                let err = (c - iters as f32 * gi).abs();
+                assert!(
+                    err <= 2.0 * one_shot + 1e-4,
+                    "{dtype} elem {i}: accumulated err {err} vs one-shot {one_shot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_without_compression_is_exact() {
+        let g = data(300);
+        let mut ef = EfState::new(g.len());
+        let wire = ef.encode_with_feedback(&g, WireDtype::F32);
+        assert_eq!(decode(&wire, g.len(), WireDtype::F32), g);
+        assert_eq!(ef.residual_linf(), 0.0);
     }
 }

@@ -31,7 +31,19 @@
 //! discounted: a striped transfer still pays one overhead and one
 //! latency. Sub-chunk latency-bound messages therefore price (and run)
 //! identically to the single-rail fabric.
+//!
+//! **Wire precision**: the `_wire` variants price the same hop chains
+//! with [`WireDtype`]-compressed bytes in every bandwidth term (alpha
+//! still never discounted — compression cannot shrink a latency) plus a
+//! per-hop endpoint (de)quantize charge ([`quant_hop_ns`]: fixed setup +
+//! per-element term, chaos-compute-slowdown-inclusive). The candidate
+//! grid becomes (algorithm × wire dtype): f32 keeps winning latency-bound
+//! cells where the quantize setup dwarfs the byte saving, bf16/int8 take
+//! over once per-hop payloads outgrow their crossover sizes — which
+//! [`compression_crossover_bytes`] locates by bisection so the tuning
+//! probe can straddle them.
 
+use super::quant::{quant_hop_ns, WireDtype};
 use super::Algorithm;
 use crate::fabric::gbps_to_bytes_per_ns;
 use crate::fabric::topology::Topology;
@@ -419,6 +431,511 @@ pub fn choose_flat_allgather_algorithm(topo: &Topology, p: usize, bytes: u64) ->
         .unwrap()
 }
 
+// ---------------------------------------------------------------------------
+// Wire precision: the (algorithm × wire-dtype) candidate grid
+// ---------------------------------------------------------------------------
+
+/// Elements carried by a gradient payload of `bytes`. Gradients live in
+/// f32 — the WIRE format is what compresses — so `bytes` is always the
+/// f32 buffer size and the element count is bytes/4.
+fn payload_elems(bytes: u64) -> usize {
+    (bytes as usize).div_ceil(4)
+}
+
+/// Per-round element count of a halving-doubling/block-doubling exchange
+/// at partner distance `d` (n·d/p, overflow-safe).
+fn round_elems(elems: usize, d: usize, p: usize) -> usize {
+    ((elems as u128 * d as u128) / p as u128) as usize
+}
+
+/// Transport-only cost of a FLAT algorithm whose hops carry
+/// `wire`-encoded segments: identical hop chain to [`flat_cost`], but
+/// every bandwidth term sees [`WireDtype::wire_bytes`] of the segment's
+/// ELEMENTS instead of 4 bytes each. Alpha is unchanged per hop. The
+/// endpoint (de)quantize charge is priced separately ([`quant_chain_ns`])
+/// so the tuner probe can add it to simulator-measured wire time.
+fn flat_cost_wire(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    elems: usize,
+    wire: WireDtype,
+    layout: Layout,
+) -> f64 {
+    let pf = p as f64;
+    match alg {
+        Algorithm::Ring => {
+            let l = ring_level(topo, p, layout);
+            let m = wire.wire_bytes(elems.div_ceil(p)) as f64;
+            2.0 * (pf - 1.0) * (alpha(topo, l) + m / eff_bw(topo, l, m))
+        }
+        Algorithm::RecursiveDoubling => {
+            let m = wire.wire_bytes(elems) as f64;
+            let mut total = 0.0;
+            let mut d = 1;
+            while d < p {
+                let l = level_at(topo, d, layout);
+                total += alpha(topo, l) + m / eff_bw(topo, l, m);
+                d <<= 1;
+            }
+            total
+        }
+        Algorithm::HalvingDoubling => {
+            let mut total = 0.0;
+            let mut d = p / 2;
+            while d >= 1 {
+                let l = level_at(topo, d, layout);
+                let m = wire.wire_bytes(round_elems(elems, d, p)) as f64;
+                total += 2.0 * (alpha(topo, l) + m / eff_bw(topo, l, m));
+                d /= 2;
+            }
+            total
+        }
+        _ => f64::INFINITY,
+    }
+}
+
+/// Transport-only wire-compressed twin of [`hier_tree_cost`].
+fn hier_tree_cost_wire(
+    topo: &Topology,
+    groups: &super::GroupStack,
+    elems: usize,
+    wire: WireDtype,
+) -> f64 {
+    let m = wire.wire_bytes(elems) as f64;
+    let mut total = 0.0;
+    let mut prev = 1usize;
+    for g in groups.iter() {
+        let branch = g / prev.max(1);
+        if branch > 1 {
+            let rounds = (branch as f64).log2().ceil();
+            let l = topo.level_for_group(g);
+            total += 2.0 * rounds * (alpha(topo, l) + m / eff_bw(topo, l, m));
+        }
+        prev = g;
+    }
+    total
+}
+
+/// Total modeled (de)quantize charge of one allreduce: the per-hop
+/// [`quant_hop_ns`] terms summed over the algorithm's serialized hop
+/// chain — exactly the hops the alpha terms count, so the charge lands
+/// on the same critical path the transport model prices. Zero for f32
+/// and for single ranks. `slowdown_milli` is the endpoint's chaos
+/// compute-slowdown multiplier (1000 = healthy); a degraded rank
+/// quantizes proportionally slower.
+///
+/// Public because the tuner probe adds this to simulator-MEASURED wire
+/// time: `fabric::sim` moves the compressed bytes but never models
+/// endpoint arithmetic.
+pub fn quant_chain_ns(
+    alg: Algorithm,
+    p: usize,
+    elems: usize,
+    wire: WireDtype,
+    slowdown_milli: u64,
+) -> Ns {
+    if p <= 1 || wire == WireDtype::F32 {
+        return 0;
+    }
+    match alg {
+        Algorithm::Ring => {
+            2 * (p as u64 - 1) * quant_hop_ns(elems.div_ceil(p), wire, slowdown_milli)
+        }
+        Algorithm::RecursiveDoubling => {
+            let rounds = usize::BITS - (p - 1).leading_zeros();
+            rounds as u64 * quant_hop_ns(elems, wire, slowdown_milli)
+        }
+        Algorithm::HalvingDoubling => {
+            let mut total = 0u64;
+            let mut d = p / 2;
+            while d >= 1 {
+                total += 2 * quant_hop_ns(round_elems(elems, d, p), wire, slowdown_milli);
+                d /= 2;
+            }
+            total
+        }
+        Algorithm::Hierarchical { groups } => {
+            let mut total = 0u64;
+            let mut prev = 1usize;
+            for g in groups.iter() {
+                let branch = g / prev.max(1);
+                if branch > 1 {
+                    let rounds = (branch as f64).log2().ceil() as u64;
+                    total += 2 * rounds * quant_hop_ns(elems, wire, slowdown_milli);
+                }
+                prev = g;
+            }
+            let outer = groups.outermost().max(1);
+            let leaders = p / outer;
+            if leaders > 1 {
+                let inner = super::program::hierarchical_inner(leaders);
+                total += quant_chain_ns(inner, leaders, elems, wire, slowdown_milli);
+            }
+            total
+        }
+        Algorithm::Auto => 0,
+    }
+}
+
+/// Wire-precision-aware [`predict_allreduce_ns`]: transport priced at
+/// compressed wire bytes plus the [`quant_chain_ns`] endpoint charge.
+/// f32 delegates to the plain model and is bit-identical to it.
+pub fn predict_allreduce_ns_wire(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+    wire: WireDtype,
+    slowdown_milli: u64,
+) -> Ns {
+    if wire == WireDtype::F32 {
+        return predict_allreduce_ns(topo, alg, p, bytes);
+    }
+    if p <= 1 {
+        return 0;
+    }
+    let elems = payload_elems(bytes);
+    let transport = match alg {
+        Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
+            flat_cost_wire(topo, alg, p, elems, wire, Layout::Spaced(1))
+        }
+        Algorithm::Hierarchical { groups } => {
+            if !hier_valid(&groups, p) {
+                return Ns::MAX / 4;
+            }
+            let leaders = p / groups.outermost();
+            let top = if leaders > 1 {
+                let inner = super::program::hierarchical_inner(leaders);
+                let layout = Layout::Spaced(groups.outermost());
+                flat_cost_wire(topo, inner, leaders, elems, wire, layout)
+            } else {
+                0.0
+            };
+            hier_tree_cost_wire(topo, &groups, elems, wire) + top
+        }
+        Algorithm::Auto => {
+            let (best, _) = choose_algorithm_wire(topo, p, bytes, &[wire], slowdown_milli);
+            return predict_allreduce_ns_wire(topo, best, p, bytes, wire, slowdown_milli);
+        }
+    };
+    transport.ceil() as Ns + quant_chain_ns(alg, p, elems, wire, slowdown_milli)
+}
+
+/// Wire-precision-aware [`predict_flat_inter_allreduce_ns`] (every hop
+/// at the top tier — strided communicators).
+pub fn predict_flat_inter_allreduce_ns_wire(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+    wire: WireDtype,
+    slowdown_milli: u64,
+) -> Ns {
+    if wire == WireDtype::F32 {
+        return predict_flat_inter_allreduce_ns(topo, alg, p, bytes);
+    }
+    if p <= 1 {
+        return 0;
+    }
+    let elems = payload_elems(bytes);
+    match alg {
+        Algorithm::Ring | Algorithm::RecursiveDoubling | Algorithm::HalvingDoubling => {
+            flat_cost_wire(topo, alg, p, elems, wire, Layout::AllTop).ceil() as Ns
+                + quant_chain_ns(alg, p, elems, wire, slowdown_milli)
+        }
+        other => predict_allreduce_ns_wire(topo, other, p, bytes, wire, slowdown_milli),
+    }
+}
+
+/// Pick the cheapest (algorithm, wire dtype) pair over the full
+/// [`candidate_algorithms`] menu crossed with `wires`. Pass
+/// [`WireDtype::ALL`] for automatic precision, a single-element slice
+/// for a pinned `--wire-dtype`. Ties break toward the FIRST wire listed
+/// (f32 first in `ALL`, so latency-bound ties stay uncompressed).
+pub fn choose_algorithm_wire(
+    topo: &Topology,
+    p: usize,
+    bytes: u64,
+    wires: &[WireDtype],
+    slowdown_milli: u64,
+) -> (Algorithm, WireDtype) {
+    let fallback_wire = wires.first().copied().unwrap_or_default();
+    if p <= 1 || wires.is_empty() {
+        return (Algorithm::Ring, fallback_wire);
+    }
+    let algs = candidate_algorithms(topo, p);
+    let mut best = (algs[0], fallback_wire);
+    let mut best_t = Ns::MAX;
+    for w in wires {
+        for a in &algs {
+            let t = predict_allreduce_ns_wire(topo, *a, p, bytes, *w, slowdown_milli);
+            if t < best_t {
+                best_t = t;
+                best = (*a, *w);
+            }
+        }
+    }
+    best
+}
+
+/// Like [`choose_algorithm_wire`] but never hierarchical and priced
+/// all top-tier — strided communicators.
+pub fn choose_flat_algorithm_wire(
+    topo: &Topology,
+    p: usize,
+    bytes: u64,
+    wires: &[WireDtype],
+    slowdown_milli: u64,
+) -> (Algorithm, WireDtype) {
+    let fallback_wire = wires.first().copied().unwrap_or_default();
+    if p <= 1 || wires.is_empty() {
+        return (Algorithm::Ring, fallback_wire);
+    }
+    let algs = flat_candidates(p);
+    let mut best = (algs[0], fallback_wire);
+    let mut best_t = Ns::MAX;
+    for w in wires {
+        for a in &algs {
+            let t = predict_flat_inter_allreduce_ns_wire(topo, *a, p, bytes, *w, slowdown_milli);
+            if t < best_t {
+                best_t = t;
+                best = (*a, *w);
+            }
+        }
+    }
+    best
+}
+
+/// Wire-compressed flat allgather cost WITH the per-hop quantize charge
+/// inlined (allgather hops relay already-encoded blocks; bf16
+/// re-truncation and int8 re-quantization of decoded payloads are
+/// idempotent, so one encode+decode per hop is the right charge).
+fn allgather_flat_cost_wire(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    elems: usize,
+    wire: WireDtype,
+    layout: Layout,
+    slowdown_milli: u64,
+) -> f64 {
+    let pf = p as f64;
+    match alg {
+        Algorithm::Ring => {
+            let l = ring_level(topo, p, layout);
+            let e = elems.div_ceil(p);
+            let m = wire.wire_bytes(e) as f64;
+            let q = quant_hop_ns(e, wire, slowdown_milli) as f64;
+            (pf - 1.0) * (alpha(topo, l) + m / eff_bw(topo, l, m) + q)
+        }
+        Algorithm::RecursiveDoubling if p.is_power_of_two() => {
+            let mut total = 0.0;
+            let mut d = 1;
+            while d < p {
+                let l = level_at(topo, d, layout);
+                let e = round_elems(elems, d, p);
+                let m = wire.wire_bytes(e) as f64;
+                total += alpha(topo, l)
+                    + m / eff_bw(topo, l, m)
+                    + quant_hop_ns(e, wire, slowdown_milli) as f64;
+                d <<= 1;
+            }
+            total
+        }
+        _ => f64::INFINITY,
+    }
+}
+
+/// Wire-precision-aware [`predict_allgather_ns`]. f32 delegates to the
+/// plain model and is bit-identical to it.
+pub fn predict_allgather_ns_wire(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+    wire: WireDtype,
+    slowdown_milli: u64,
+) -> Ns {
+    if wire == WireDtype::F32 {
+        return predict_allgather_ns(topo, alg, p, bytes);
+    }
+    if p <= 1 {
+        return 0;
+    }
+    if alg == Algorithm::Auto {
+        let (best, _) = choose_allgather_algorithm_wire(topo, p, bytes, &[wire], slowdown_milli);
+        return predict_allgather_ns_wire(topo, best, p, bytes, wire, slowdown_milli);
+    }
+    let elems = payload_elems(bytes);
+    let t = match alg {
+        Algorithm::Hierarchical { groups } => {
+            if !hier_valid(&groups, p) {
+                return Ns::MAX / 4;
+            }
+            let mut total = 0.0;
+            let mut prev = 1usize;
+            for g in groups.iter() {
+                let branch = g / prev.max(1);
+                if branch > 1 {
+                    let l = topo.level_for_group(g);
+                    let se = round_elems(elems, prev, p);
+                    let share = wire.wire_bytes(se) as f64;
+                    total += (branch as f64 - 1.0)
+                        * (alpha(topo, l)
+                            + share / eff_bw(topo, l, share)
+                            + quant_hop_ns(se, wire, slowdown_milli) as f64);
+                    let rounds = (branch as f64).log2().ceil();
+                    let m = wire.wire_bytes(elems) as f64;
+                    total += rounds
+                        * (alpha(topo, l)
+                            + m / eff_bw(topo, l, m)
+                            + quant_hop_ns(elems, wire, slowdown_milli) as f64);
+                }
+                prev = g;
+            }
+            let leaders = p / groups.outermost();
+            if leaders > 1 {
+                let inner = super::program::hierarchical_ag_inner(leaders);
+                total += allgather_flat_cost_wire(
+                    topo,
+                    inner,
+                    leaders,
+                    elems,
+                    wire,
+                    Layout::Spaced(groups.outermost()),
+                    slowdown_milli,
+                );
+            }
+            total
+        }
+        other => {
+            allgather_flat_cost_wire(topo, other, p, elems, wire, Layout::Spaced(1), slowdown_milli)
+        }
+    };
+    if t.is_finite() {
+        t.ceil() as Ns
+    } else {
+        Ns::MAX / 4
+    }
+}
+
+/// Pick the cheapest (allgather algorithm, wire dtype) pair over
+/// [`allgather_candidates`] × `wires`.
+pub fn choose_allgather_algorithm_wire(
+    topo: &Topology,
+    p: usize,
+    bytes: u64,
+    wires: &[WireDtype],
+    slowdown_milli: u64,
+) -> (Algorithm, WireDtype) {
+    let fallback_wire = wires.first().copied().unwrap_or_default();
+    if p <= 1 || wires.is_empty() {
+        return (Algorithm::Ring, fallback_wire);
+    }
+    let algs = allgather_candidates(topo, p);
+    let mut best = (algs[0], fallback_wire);
+    let mut best_t = Ns::MAX;
+    for w in wires {
+        for a in &algs {
+            let t = predict_allgather_ns_wire(topo, *a, p, bytes, *w, slowdown_milli);
+            if t < best_t {
+                best_t = t;
+                best = (*a, *w);
+            }
+        }
+    }
+    best
+}
+
+/// Like [`choose_allgather_algorithm_wire`] but never hierarchical and
+/// priced all top-tier.
+pub fn choose_flat_allgather_algorithm_wire(
+    topo: &Topology,
+    p: usize,
+    bytes: u64,
+    wires: &[WireDtype],
+    slowdown_milli: u64,
+) -> (Algorithm, WireDtype) {
+    let fallback_wire = wires.first().copied().unwrap_or_default();
+    if p <= 1 || wires.is_empty() {
+        return (Algorithm::Ring, fallback_wire);
+    }
+    let algs = flat_allgather_candidates(p);
+    let elems = payload_elems(bytes);
+    let mut best = (algs[0], fallback_wire);
+    let mut best_t = Ns::MAX;
+    for w in wires {
+        for a in &algs {
+            let t =
+                allgather_flat_cost_wire(topo, *a, p, elems, *w, Layout::AllTop, slowdown_milli);
+            let t = if t.is_finite() { t.ceil() as Ns } else { Ns::MAX / 4 };
+            if t < best_t {
+                best_t = t;
+                best = (*a, *w);
+            }
+        }
+    }
+    best
+}
+
+/// Smallest payload (bytes) at which `wire` first beats f32 — comparing
+/// best-over-candidates at each precision, i.e. the measured quantity
+/// `mlsl tune` reports as the precision's crossover. Located by
+/// bisection up to 1 GiB; `None` when the precision never wins below
+/// that cap (fast fabrics where the per-element quantize cost outruns
+/// the byte saving — compression is not free lunch on 100 Gb links).
+pub fn compression_crossover_bytes(topo: &Topology, p: usize, wire: WireDtype) -> Option<u64> {
+    if wire == WireDtype::F32 || p <= 1 {
+        return None;
+    }
+    let algs = candidate_algorithms(topo, p);
+    let wins = |bytes: u64| {
+        let best_w = algs
+            .iter()
+            .map(|a| predict_allreduce_ns_wire(topo, *a, p, bytes, wire, 1000))
+            .min()
+            .unwrap();
+        let best_f = algs
+            .iter()
+            .map(|a| predict_allreduce_ns(topo, *a, p, bytes))
+            .min()
+            .unwrap();
+        best_w < best_f
+    };
+    let cap: u64 = 1 << 30;
+    if !wins(cap) {
+        return None;
+    }
+    let mut lo: u64 = 1;
+    if wins(lo) {
+        return Some(lo);
+    }
+    let mut hi = cap;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if wins(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// The compression crossover sizes of every non-f32 wire dtype at this
+/// (fabric, p), ascending and deduplicated — the probe size grid adds
+/// these so tuned tables bracket each precision handover.
+pub fn compression_crossover_sizes(topo: &Topology, p: usize) -> Vec<u64> {
+    let mut out: Vec<u64> = WireDtype::ALL
+        .iter()
+        .filter_map(|w| compression_crossover_bytes(topo, p, *w))
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -791,6 +1308,132 @@ mod tests {
             matches!(large_pick, Algorithm::Ring | Algorithm::HalvingDoubling),
             "{large_pick:?}"
         );
+    }
+
+    #[test]
+    fn f32_wire_pricing_is_identical_to_the_plain_model() {
+        // The f32 column of the (alg × wire) grid must be the EXACT
+        // pre-existing model — tuned tables and analytic reproduction
+        // tests depend on bit-identical f32 behavior.
+        let topo = Topology::eth_10g_smp(2);
+        for alg in [
+            Algorithm::Ring,
+            Algorithm::RecursiveDoubling,
+            Algorithm::HalvingDoubling,
+            Algorithm::hier(&[2]),
+        ] {
+            for p in [4usize, 8, 64] {
+                for bytes in [256u64, 1 << 20, 16 << 20] {
+                    assert_eq!(
+                        predict_allreduce_ns_wire(&topo, alg, p, bytes, WireDtype::F32, 1000),
+                        predict_allreduce_ns(&topo, alg, p, bytes),
+                        "{alg:?} p={p} bytes={bytes}"
+                    );
+                    assert_eq!(
+                        predict_flat_inter_allreduce_ns_wire(
+                            &topo, alg, p, bytes, WireDtype::F32, 1000
+                        ),
+                        predict_flat_inter_allreduce_ns(&topo, alg, p, bytes),
+                        "{alg:?} p={p} bytes={bytes} strided"
+                    );
+                    assert_eq!(
+                        predict_allgather_ns_wire(&topo, alg, p, bytes, WireDtype::F32, 1000),
+                        predict_allgather_ns(&topo, alg, p, bytes),
+                        "{alg:?} p={p} bytes={bytes} allgather"
+                    );
+                }
+            }
+        }
+        let (a, w) = choose_algorithm_wire(&topo, 8, 1 << 20, &[WireDtype::F32], 1000);
+        assert_eq!((a, w), (choose_algorithm(&topo, 8, 1 << 20), WireDtype::F32));
+    }
+
+    #[test]
+    fn compression_wins_bandwidth_bound_and_loses_latency_bound() {
+        let topo = Topology::eth_10g();
+        // 256 B over 8 ranks: the per-hop quantize setup dwarfs the byte
+        // saving — the auto grid must stay on the f32 wire.
+        let (_, w_small) = choose_algorithm_wire(&topo, 8, 256, &WireDtype::ALL, 1000);
+        assert_eq!(w_small, WireDtype::F32);
+        // 16 MiB: int8 moves ~4x fewer bytes over the 10G wire and must
+        // win; the full ring ordering int8 < bf16 < f32 must hold.
+        let (_, w_big) = choose_algorithm_wire(&topo, 8, 16 << 20, &WireDtype::ALL, 1000);
+        assert_eq!(w_big, WireDtype::Int8Block);
+        let big = 16u64 << 20;
+        let f = predict_allreduce_ns_wire(&topo, Algorithm::Ring, 8, big, WireDtype::F32, 1000);
+        let b = predict_allreduce_ns_wire(&topo, Algorithm::Ring, 8, big, WireDtype::Bf16, 1000);
+        let i =
+            predict_allreduce_ns_wire(&topo, Algorithm::Ring, 8, big, WireDtype::Int8Block, 1000);
+        assert!(i < b && b < f, "int8={i} bf16={b} f32={f}");
+        // Even net of quantize cost the modeled win is well past the a13
+        // bench gate (~2.4x at this size on the analytic side).
+        assert!(f as f64 / i as f64 > 1.8, "ratio {}", f as f64 / i as f64);
+    }
+
+    #[test]
+    fn compression_crossovers_exist_and_are_ordered_on_slow_fabrics() {
+        let topo = Topology::eth_10g();
+        let bf = compression_crossover_bytes(&topo, 8, WireDtype::Bf16).unwrap();
+        let i8c = compression_crossover_bytes(&topo, 8, WireDtype::Int8Block).unwrap();
+        // bf16's cheaper setup crosses over before int8's.
+        assert!(bf < i8c, "bf16@{bf} int8@{i8c}");
+        // Bisection postcondition: f32 still wins just below, loses at
+        // the reported size.
+        let algs = candidate_algorithms(&topo, 8);
+        let best = |bytes: u64, w: WireDtype| {
+            algs.iter()
+                .map(|a| predict_allreduce_ns_wire(&topo, *a, 8, bytes, w, 1000))
+                .min()
+                .unwrap()
+        };
+        assert!(best(bf, WireDtype::Bf16) < best(bf, WireDtype::F32));
+        assert!(best(bf - 1, WireDtype::Bf16) >= best(bf - 1, WireDtype::F32));
+        assert_eq!(compression_crossover_sizes(&topo, 8), vec![bf, i8c]);
+        // On a 100 Gb fabric the per-element quantize cost outruns the
+        // byte saving at EVERY size — compression never wins there and
+        // the helper must say so.
+        let opa = Topology::omnipath_100g();
+        assert_eq!(compression_crossover_bytes(&opa, 8, WireDtype::Bf16), None);
+        assert_eq!(compression_crossover_bytes(&opa, 8, WireDtype::Int8Block), None);
+        assert!(compression_crossover_sizes(&opa, 8).is_empty());
+    }
+
+    #[test]
+    fn hier_wire_pricing_and_slowdown_scaling() {
+        let topo = Topology::eth_10g_smp(2);
+        let alg = Algorithm::hier(&[2]);
+        let big = 16u64 << 20;
+        // Compressed hierarchical allreduce beats its f32 twin at bulk
+        // sizes: fewer bytes on the slow inter tier.
+        let f = predict_allreduce_ns_wire(&topo, alg, 64, big, WireDtype::F32, 1000);
+        let q = predict_allreduce_ns_wire(&topo, alg, 64, big, WireDtype::Bf16, 1000);
+        assert!(q < f, "bf16={q} f32={f}");
+        // A chaos-slowed endpoint pays exactly proportionally more
+        // quantize time, and ONLY quantize time (transport unchanged).
+        let slowed = predict_allreduce_ns_wire(&topo, alg, 64, big, WireDtype::Bf16, 4000);
+        let chain = quant_chain_ns(alg, 64, payload_elems(big), WireDtype::Bf16, 1000);
+        assert!(chain > 0);
+        assert_eq!(slowed - q, 3 * chain);
+        // f32 is immune to compute slowdown in this model (no quantize).
+        assert_eq!(
+            predict_allreduce_ns_wire(&topo, alg, 64, big, WireDtype::F32, 4000),
+            f
+        );
+    }
+
+    #[test]
+    fn quant_chain_counts_the_alpha_hops() {
+        // Ring: 2(p−1) segment hops; RD: log2(p) full-buffer hops.
+        assert_eq!(quant_chain_ns(Algorithm::Ring, 8, 800, WireDtype::F32, 1000), 0);
+        assert_eq!(
+            quant_chain_ns(Algorithm::Ring, 8, 800, WireDtype::Bf16, 1000),
+            14 * quant_hop_ns(100, WireDtype::Bf16, 1000)
+        );
+        assert_eq!(
+            quant_chain_ns(Algorithm::RecursiveDoubling, 8, 800, WireDtype::Int8Block, 1000),
+            3 * quant_hop_ns(800, WireDtype::Int8Block, 1000)
+        );
+        assert_eq!(quant_chain_ns(Algorithm::Ring, 1, 800, WireDtype::Int8Block, 1000), 0);
     }
 
     #[test]

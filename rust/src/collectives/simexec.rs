@@ -171,6 +171,14 @@ impl SimCollectives {
             let step = &prog.steps[st.pc];
             if let (Some(sd), false) = (&step.send, st.sent_current) {
                 let bytes = op.wire.wire_bytes(sd.range.len) as u64;
+                if op.wire != WireDtype::F32 {
+                    // Wire-format win vs the 4 B/elem f32 payload; the f32
+                    // path stays registry-free (hot loop).
+                    crate::metrics::registry::add(
+                        "quant.bytes_saved",
+                        (4 * sd.range.len as u64).saturating_sub(bytes),
+                    );
+                }
                 sim.send(MsgDesc {
                     src: op.map[r],
                     dst: op.map[sd.to],
@@ -358,6 +366,7 @@ mod tests {
     fn int8_wire_is_faster_than_f32() {
         let p = 8;
         let n = 4 << 20;
+        let saved_before = crate::metrics::registry::get("quant.bytes_saved");
         let t32 = time_collective(&mut sim(p), allreduce_ring(p, n), WireDtype::F32, 1);
         let t8 =
             time_collective(&mut sim(p), allreduce_ring(p, n), WireDtype::Int8Block, 1);
@@ -365,6 +374,10 @@ mod tests {
             (t32 as f64 / t8 as f64) > 3.0,
             "expected ~4x volume win: f32={t32} int8={t8}"
         );
+        // A compressed run banks its wire-format win: ~3 B/elem × the
+        // ring's 2(p−1) segment sends.
+        let saved = crate::metrics::registry::get("quant.bytes_saved") - saved_before;
+        assert!(saved > 0, "quant.bytes_saved not bumped");
     }
 
     #[test]

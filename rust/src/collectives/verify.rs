@@ -11,6 +11,17 @@
 //! strictly in step order; a step's send reads the buffer *now*; messages
 //! between a (src, dst) pair are FIFO. Scheduling is a fair round-robin
 //! over ranks, so a deadlock (circular wait) is detected as "no progress".
+//!
+//! # Wire precision
+//!
+//! Compressed collectives ([`super::quant::WireDtype`]) reuse these exact
+//! programs: the wire dtype changes only how a payload is encoded on the
+//! fabric (bytes per element), never which ranges move between which ranks
+//! in which order. `build` takes no dtype, so a symbolic proof here covers
+//! every wire precision *structurally* — each element of the reduced result
+//! still receives exactly one contribution from every rank. The numeric
+//! side (bounded quantization error, error-feedback convergence) is pinned
+//! separately by `quant::max_roundtrip_error` and `tests/prop_quant.rs`.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -371,6 +382,34 @@ mod tests {
         for p in 1..=9 {
             for root in 0..p {
                 verify(K::Reduce { root }, A::Ring, p, 11).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn every_wire_precision_pick_reuses_a_verified_program() {
+        // The wire-aware selector may pair any precision with any
+        // algorithm; whatever it picks must be a program set this
+        // executor proves correct, because compression never rewrites
+        // the step structure. Sweep the menu across shapes and sizes on
+        // a slow fabric (where compressed candidates actually win).
+        use crate::collectives::quant::WireDtype;
+        use crate::collectives::selector::choose_algorithm_wire;
+        use crate::topo::presets;
+        let topo = presets::eth_10g_smp(8);
+        for p in [2usize, 3, 4, 8, 12, 16] {
+            for bytes in [256u64, 64 << 10, 4 << 20] {
+                for menu in [
+                    &WireDtype::ALL[..],
+                    &[WireDtype::Int8Block][..],
+                    &[WireDtype::Bf16][..],
+                ] {
+                    let (alg, wire) = choose_algorithm_wire(&topo, p, bytes, menu, 1000);
+                    let n = (bytes as usize).div_ceil(4).min(200);
+                    verify(K::Allreduce, alg, p, n).unwrap_or_else(|e| {
+                        panic!("p={p} bytes={bytes} pick={alg:?}@{wire}: {e}")
+                    });
+                }
             }
         }
     }

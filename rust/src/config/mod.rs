@@ -154,9 +154,22 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     let policy_name = get("policy", "bylayer");
     let policy = PriorityPolicy::by_name(&policy_name)
         .ok_or_else(|| anyhow!("unknown policy {policy_name:?}"))?;
-    let wire_name = get("wire", "f32");
-    let wire =
-        WireDtype::by_name(&wire_name).ok_or_else(|| anyhow!("unknown wire dtype {wire_name:?}"))?;
+    // Wire precision: `--wire-dtype auto|fp32|bf16|int8` (the canonical
+    // flag; `--wire` stays as the original alias for a fixed dtype).
+    // `auto` turns every gradient allreduce into an (algorithm ×
+    // wire-precision) selection — see `EngineConfig::wire_auto`.
+    let wire_name = args
+        .get("wire-dtype")
+        .map(String::from)
+        .or_else(|| file.get("wire-dtype").map(String::from))
+        .unwrap_or_else(|| get("wire", "f32"));
+    let (wire, wire_auto) = if wire_name == "auto" {
+        (WireDtype::F32, true)
+    } else {
+        let w = WireDtype::by_name(&wire_name)
+            .ok_or_else(|| anyhow!("unknown wire dtype {wire_name:?} (auto|fp32|bf16|int8)"))?;
+        (w, false)
+    };
     let iterations: usize = get("iterations", "3").parse().context("--iterations")?;
     let sim_threads: usize = get("sim-threads", "1").parse().context("--sim-threads")?;
     if sim_threads == 0 {
@@ -170,6 +183,7 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.mode = mode;
     cfg.policy = policy;
     cfg.wire = wire;
+    cfg.wire_auto = wire_auto;
     cfg.iterations = iterations;
     cfg.record_timeline = args.bool("timeline");
     // Span tracing: `--trace` (bare, or `--trace out.json` — `mlsl
@@ -251,6 +265,29 @@ mod tests {
         assert_eq!(cfg.dist.group_size(), 4);
         assert_eq!(cfg.mode, CommMode::BulkSync);
         assert_eq!(cfg.wire, WireDtype::Int8Block);
+    }
+
+    #[test]
+    fn wire_dtype_flag_covers_fixed_and_auto() {
+        // Default: fixed f32, no auto selection.
+        let cfg = engine_config(&args("")).unwrap();
+        assert_eq!(cfg.wire, WireDtype::F32);
+        assert!(!cfg.wire_auto);
+        // Fixed dtypes through the canonical flag.
+        let cfg = engine_config(&args("--wire-dtype bf16")).unwrap();
+        assert_eq!(cfg.wire, WireDtype::Bf16);
+        assert!(!cfg.wire_auto);
+        // auto → per-collective selection, fixed dtype stays f32.
+        let cfg = engine_config(&args("--wire-dtype auto")).unwrap();
+        assert_eq!(cfg.wire, WireDtype::F32);
+        assert!(cfg.wire_auto);
+        // The canonical flag wins over the legacy alias.
+        let cfg = engine_config(&args("--wire-dtype int8 --wire f32")).unwrap();
+        assert_eq!(cfg.wire, WireDtype::Int8Block);
+        // `--wire auto` is NOT accepted through the alias: auto is a
+        // selection mode, not a dtype.
+        assert!(engine_config(&args("--wire auto")).is_err());
+        assert!(engine_config(&args("--wire-dtype nope")).is_err());
     }
 
     #[test]

@@ -42,7 +42,7 @@ use std::collections::HashMap;
 
 use crate::collectives::program::{build, survivors, CollectiveKind};
 use crate::collectives::simexec::SimCollectives;
-use crate::collectives::{PriorityPolicy, WireDtype};
+use crate::collectives::{Algorithm, PriorityPolicy, WireDtype};
 use crate::fabric::topology::{NodeSpec, Topology};
 use crate::fabric::{ChaosPlan, NetSim, SimEvent};
 use crate::metrics::Timeline;
@@ -51,6 +51,9 @@ use crate::trace::TraceEvent;
 use crate::models::ModelDesc;
 use crate::tuner::SelectionPolicy;
 use crate::{Ns, Priority, Rank};
+
+/// Program-cache key: (kind, algorithm, wire, member count, elems).
+type ProgKey = (CollectiveKind, Algorithm, WireDtype, usize, usize);
 
 /// Communication runtime mode (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -179,7 +182,18 @@ pub struct EngineConfig {
     /// Who picks collective algorithms: the analytic model (default) or a
     /// measured tuning table (`--tuning-table`).
     pub selection: SelectionPolicy,
+    /// Fixed wire precision applied to every collective (`--wire-dtype
+    /// fp32|bf16|int8`). Ignored for gradient allreduces when
+    /// [`EngineConfig::wire_auto`] is set.
     pub wire: WireDtype,
+    /// `--wire-dtype auto`: per-collective (algorithm × wire-precision)
+    /// selection. Gradient allreduces pick the cheapest candidate over
+    /// the full precision menu (quantize cost priced at the worst chaos
+    /// compute slowdown — a slowed endpoint stretches its encode the
+    /// same way it stretches any compute); activation exchanges always
+    /// travel fp32, since only sum-reductions carry error-feedback
+    /// protection (see `collectives/quant.rs`).
+    pub wire_auto: bool,
     /// Measured iterations (one extra warmup iteration is always run).
     pub iterations: usize,
     /// Render [`Report::timeline`] (the node-0 ASCII Gantt). Implies
@@ -229,6 +243,7 @@ impl EngineConfig {
             policy: PriorityPolicy::ByLayer,
             selection: SelectionPolicy::Analytic,
             wire: WireDtype::F32,
+            wire_auto: false,
             iterations: 3,
             record_timeline: false,
             trace: false,
@@ -248,6 +263,52 @@ impl EngineConfig {
 
     fn gated(&self) -> bool {
         matches!(self.mode, CommMode::MpiNonBlocking)
+    }
+
+    /// Worst per-node chaos compute slowdown (1000 = healthy run). The
+    /// wire chooser prices (de)quantization at this rate: selection is
+    /// made once per communicator, so it has to hold for the slowest
+    /// endpoint that might sit on the critical path.
+    pub fn max_chaos_slowdown_milli(&self) -> u64 {
+        self.chaos
+            .as_ref()
+            .and_then(|c| c.slowdown_milli.iter().copied().max())
+            .unwrap_or(1000)
+            .max(1000)
+    }
+
+    /// Standalone collective timing under this config's fabric:
+    /// `sim_threads == 1` runs the exact serial executor, anything more
+    /// routes through the partitioned parallel executor
+    /// ([`crate::collectives::parexec::time_collective_partitioned`],
+    /// exact-equivalent by its lockstep tests — threads change
+    /// wall-clock, never the answer). This is the `--sim-threads`
+    /// surface for one-shot timing questions; the training loop itself
+    /// stays serial (see the module docs).
+    pub fn time_standalone_collective(
+        &self,
+        p: usize,
+        programs: Vec<crate::collectives::program::Program>,
+        wire: WireDtype,
+        priority: Priority,
+    ) -> Ns {
+        if self.sim_threads > 1 {
+            crate::collectives::parexec::time_collective_partitioned(
+                &self.topo,
+                p,
+                programs,
+                wire,
+                priority,
+                self.sim_threads,
+            )
+        } else {
+            crate::collectives::simexec::time_collective(
+                &mut NetSim::new(self.topo.clone(), p),
+                programs,
+                wire,
+                priority,
+            )
+        }
     }
 
     /// Pure compute ns per iteration per node. Sums the SAME per-layer
@@ -363,6 +424,27 @@ pub struct Engine {
     active: Vec<bool>,
     /// Next unapplied event of `cfg.churn`.
     churn_idx: usize,
+    /// Memoized (algorithm, wire) decisions per (kind, member set,
+    /// per-rank elems). The member set is part of the key, so a churn
+    /// rebuild naturally misses and re-selects for the survivor set —
+    /// stale entries are never consulted.
+    sel_cache: HashMap<(CollectiveKind, Vec<Rank>, usize), (Algorithm, WireDtype)>,
+    /// Built programs keyed by (kind, algorithm, WIRE, member count,
+    /// elems). Programs repeat every iteration (same layers, same
+    /// communicators), so steady state is pure reuse. The wire dtype is
+    /// part of the key even though program structure is
+    /// wire-independent: auto selection may flip precision at the
+    /// crossover as churn changes the member count, and an entry must
+    /// never be reused under a different precision label than it was
+    /// selected for (the pair travels together into `post_mapped`).
+    prog_cache: HashMap<ProgKey, Vec<crate::collectives::program::Program>>,
+    /// Error-feedback residual bound per ORIGINAL rank id, in units of
+    /// the gradient magnitude: after a compressed allreduce,
+    /// `r ← δ·(1 + r)` with δ the wire's relative quantization error —
+    /// the telescoping EF-SGD recurrence, converging to δ/(1−δ). Keyed
+    /// by original id (never renumbered), so the state survives churn:
+    /// a rank that leaves and rejoins resumes its own residual.
+    ef_bound: Vec<f64>,
     /// Human-readable record of applied membership changes.
     pub churn_log: Vec<String>,
     /// Earliest observed fwd(0) start per iteration index (cluster-level),
@@ -402,6 +484,9 @@ impl Engine {
             next_id: 1,
             active: vec![true; p],
             churn_idx: 0,
+            sel_cache: HashMap::new(),
+            prog_cache: HashMap::new(),
+            ef_bound: vec![0.0; p],
             churn_log: Vec::new(),
             first_starts: Vec::new(),
         }
@@ -808,11 +893,55 @@ impl Engine {
             // sets, the flat path for strided or post-churn
             // non-contiguous survivor sets) before consulting the
             // configured policy — see
-            // [`SelectionPolicy::choose_for_members`].
+            // [`SelectionPolicy::choose_for_members`]. Decisions are
+            // memoized per (kind, member set, elems): the same layer's
+            // communicator repeats every iteration.
             let bytes = (4 * elems) as u64;
-            let alg = self.cfg.selection.choose_for_members(&self.cfg.topo, &members, ckind, bytes);
-            let programs = build(ckind, alg, pm, elems)
-                .expect("selection policies only return buildable algorithms");
+            let sel_key = (ckind, members.clone(), elems);
+            let (alg, wire) = match self.sel_cache.get(&sel_key) {
+                Some(&cached) => cached,
+                None => {
+                    let picked = if self.cfg.wire_auto {
+                        self.cfg.selection.choose_for_members_wire(
+                            &self.cfg.topo,
+                            &members,
+                            ckind,
+                            bytes,
+                            &WireDtype::ALL,
+                            self.cfg.max_chaos_slowdown_milli(),
+                        )
+                    } else {
+                        (
+                            self.cfg.selection.choose_for_members(
+                                &self.cfg.topo,
+                                &members,
+                                ckind,
+                                bytes,
+                            ),
+                            self.cfg.wire,
+                        )
+                    };
+                    self.sel_cache.insert(sel_key, picked);
+                    picked
+                }
+            };
+            let programs = self
+                .prog_cache
+                .entry((ckind, alg, wire, pm, elems))
+                .or_insert_with(|| {
+                    build(ckind, alg, pm, elems)
+                        .expect("selection policies only return buildable algorithms")
+                })
+                .clone();
+            if ckind == CollectiveKind::Allreduce && wire != WireDtype::F32 {
+                // EF-SGD residual recurrence: each member folds its
+                // quantization error into the next send, so the bound
+                // telescopes instead of accumulating linearly.
+                let delta = wire.rel_error();
+                for &r in &members {
+                    self.ef_bound[r] = delta * (1.0 + self.ef_bound[r]);
+                }
+            }
             if self.sim.trace_enabled() && members.contains(&0) {
                 let at = self.sim.now();
                 let label = match kind {
@@ -832,7 +961,7 @@ impl Engine {
                 id,
                 programs,
                 members,
-                self.cfg.wire,
+                wire,
                 priority,
             );
             for c in completions {
@@ -894,6 +1023,13 @@ impl Engine {
 
     fn total_iters(&self) -> usize {
         self.cfg.iterations + 1
+    }
+
+    /// Per-rank error-feedback residual bound (original rank ids; see
+    /// the field docs). Zero for a rank that never sent a compressed
+    /// gradient; otherwise strictly below δ/(1−δ) for its wire's δ.
+    pub fn ef_residual_bound(&self) -> &[f64] {
+        &self.ef_bound
     }
 
     /// Currently-active ranks (the elastic-membership view; all ranks
@@ -1264,6 +1400,113 @@ mod tests {
         assert!(r.iter_ns > 0);
         assert_eq!(e.active_ranks().len(), 7);
         assert!(e.metas.is_empty());
+    }
+
+    #[test]
+    fn wire_auto_compresses_bulk_gradients_on_ethernet() {
+        // vgg16's fc layers are deep in bandwidth-bound territory on
+        // 10G ethernet: auto precision must pick a compressed wire for
+        // them and beat the all-f32 run, without being told a dtype.
+        let mut f32c = cfg("vgg16", 8, CommMode::BulkSync);
+        f32c.topo = Topology::eth_10g();
+        let mut auto = f32c.clone();
+        auto.wire_auto = true;
+        let rf = simulate(f32c);
+        let mut e = Engine::new(auto);
+        let ra = e.run_to_completion();
+        assert!(
+            (rf.exposed_comm_ns as f64 / ra.exposed_comm_ns as f64) > 1.5,
+            "f32={} auto={}",
+            rf.exposed_comm_ns,
+            ra.exposed_comm_ns
+        );
+        // Every rank sent compressed gradients, so every rank carries a
+        // residual bound — positive, below the δ/(1−δ) fixed point of
+        // the loosest wire, and symmetric across the lockstep cluster.
+        let bounds = e.ef_residual_bound().to_vec();
+        let worst_delta = WireDtype::Int8Block.rel_error();
+        let cap = worst_delta / (1.0 - worst_delta) + 1e-12;
+        for (r, b) in bounds.iter().enumerate() {
+            assert!(*b > 0.0 && *b <= cap, "rank {r}: bound {b} vs cap {cap}");
+        }
+        assert!(bounds.windows(2).all(|w| w[0] == w[1]), "{bounds:?}");
+    }
+
+    #[test]
+    fn ef_residual_state_survives_churn_without_renumbering() {
+        // Rank 2 leaves after iter 1 and rejoins after iter 2. Its
+        // error-feedback residual is keyed by its ORIGINAL id, so it
+        // resumes the bound it left with instead of restarting at zero
+        // — while the ranks that stayed keep compounding theirs.
+        let mut c = cfg("vgg16", 4, CommMode::BulkSync);
+        c.topo = Topology::eth_10g();
+        c.wire = WireDtype::Int8Block;
+        c.iterations = 4;
+        c.churn = Some(ChurnPlan::parse("leave:2@1,join:2@2").unwrap());
+        let mut e = Engine::new(c);
+        let r = e.run_to_completion();
+        assert!(r.iter_ns > 0);
+        let bounds = e.ef_residual_bound();
+        let delta = WireDtype::Int8Block.rel_error();
+        let cap = delta / (1.0 - delta) + 1e-12;
+        for (rk, b) in bounds.iter().enumerate() {
+            assert!(*b > 0.0 && *b <= cap, "rank {rk}: bound {b}");
+        }
+        // The recurrence r ← δ(1+r) is monotone in the iteration count:
+        // the rank that sat out one iteration is strictly behind the
+        // ranks that never left, but strictly past a fresh joiner.
+        assert!(bounds[2] < bounds[0], "{bounds:?}");
+        assert!(bounds[2] > delta, "{bounds:?}");
+    }
+
+    #[test]
+    fn program_and_selection_caches_reach_steady_state() {
+        // Collectives repeat every iteration over the same member sets
+        // and sizes: a longer run must not grow either cache beyond
+        // what the first full iteration established.
+        let mk = |iters: usize| {
+            let mut c = cfg("resnet50", 4, CommMode::MlslAsync { comm_cores: 2 });
+            c.iterations = iters;
+            c
+        };
+        let mut e1 = Engine::new(mk(1));
+        e1.run_to_completion();
+        let mut e3 = Engine::new(mk(3));
+        e3.run_to_completion();
+        assert!(!e1.prog_cache.is_empty());
+        assert_eq!(e1.prog_cache.len(), e3.prog_cache.len());
+        assert_eq!(e1.sel_cache.len(), e3.sel_cache.len());
+    }
+
+    #[test]
+    fn standalone_timing_routes_through_the_partitioned_executor() {
+        // sim_threads > 1 sends one-shot collective timing through
+        // parexec; conservative lookahead is exact, so the answer must
+        // be bit-identical to the serial executor's.
+        use crate::collectives::program::allreduce_ring;
+        let p = 8;
+        let n = 1 << 16;
+        let mut c = cfg("resnet50", p, CommMode::BulkSync);
+        c.topo = Topology::eth_10g();
+        c.sim_threads = 2;
+        let par = c.time_standalone_collective(p, allreduce_ring(p, n), WireDtype::F32, 1);
+        let mut serial_cfg = c.clone();
+        serial_cfg.sim_threads = 1;
+        let serial =
+            serial_cfg.time_standalone_collective(p, allreduce_ring(p, n), WireDtype::F32, 1);
+        assert_eq!(par, serial);
+        assert!(par > 0);
+    }
+
+    #[test]
+    fn chaos_slowdown_feeds_the_wire_pricer() {
+        use crate::fabric::ChaosPlan;
+        let mut c = cfg("resnet50", 4, CommMode::BulkSync);
+        assert_eq!(c.max_chaos_slowdown_milli(), 1000, "healthy default");
+        let mut plan = ChaosPlan::quiet(1, 4);
+        plan.slowdown_milli = vec![1000, 2100, 1000, 1300];
+        c.chaos = Some(plan);
+        assert_eq!(c.max_chaos_slowdown_milli(), 2100);
     }
 
     #[test]

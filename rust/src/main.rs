@@ -50,7 +50,14 @@ fn main() -> Result<()> {
             eprintln!("usage: mlsl <info|simulate|scaling|tune|topo|trace|train|chaos> [--flags]");
             eprintln!(
                 "  tune: --topo <preset> [--ranks-per-node r] [--rails l] \
-                 [--max-ranks n] [--quick] [--sim-threads t] [--out table.json]"
+                 [--max-ranks n] [--quick] [--sim-threads t] [--out table.json] \
+                 — candidates span (algorithm x wire-precision); with --out the \
+                 summary prints where each precision starts winning"
+            );
+            eprintln!(
+                "  wire precision: --wire-dtype auto|fp32|bf16|int8 on \
+                 simulate/scaling (auto = per-collective selection with \
+                 error-feedback bookkeeping; docs/ARCHITECTURE.md)"
             );
             eprintln!("  topo: <preset> — dump the parsed tier stack (debug aid)");
             eprintln!(
@@ -305,15 +312,22 @@ fn cmd_tune(args: &Args) -> Result<()> {
                     .cells(kind)
                     .iter()
                     .find(|c| c.ranks == p)
-                    .and_then(|c| c.best())
-                    .map(|(a, _)| a.to_string())
+                    .and_then(|c| c.best_cand())
+                    .map(|(c, _)| mlsl::tuner::table::cand_key(c))
                     .unwrap_or_default();
-                let xs = table.crossovers(kind, p);
+                let xs = table.crossovers_cand(kind, p);
                 let desc = if xs.is_empty() {
                     "none (single winner)".to_string()
                 } else {
                     xs.iter()
-                        .map(|(b, from, to)| format!("{from}→{to} @ {}", fmt_bytes(*b)))
+                        .map(|(b, from, to)| {
+                            format!(
+                                "{}→{} @ {}",
+                                mlsl::tuner::table::cand_key(*from),
+                                mlsl::tuner::table::cand_key(*to),
+                                fmt_bytes(*b)
+                            )
+                        })
                         .collect::<Vec<_>>()
                         .join(", ")
                 };
@@ -323,6 +337,43 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 &format!("measured crossovers: {key} on {}", topo.name),
                 &["ranks", "small-msg winner", "crossovers"],
                 &rows,
+            );
+        }
+        // Measured precision crossovers: per rank row, the smallest
+        // probed size where a compressed wire's best candidate beats
+        // every fp32 candidate. `precision crossover:` is a CI grep
+        // target (the tune smoke in .github/workflows/ci.yml).
+        let kind = mlsl::collectives::program::CollectiveKind::Allreduce;
+        let wire_best = |c: &mlsl::tuner::table::MeasuredCell, w: WireDtype| {
+            c.timings
+                .iter()
+                .filter(|((_, cw), _)| *cw == w)
+                .map(|(_, t)| *t)
+                .min()
+        };
+        for p in table.rank_rows(kind) {
+            let mut parts = Vec::new();
+            for w in [WireDtype::Bf16, WireDtype::Int8Block] {
+                let first_win = table
+                    .cells(kind)
+                    .iter()
+                    .filter(|c| c.ranks == p)
+                    .find(|c| {
+                        matches!(
+                            (wire_best(c, w), wire_best(c, WireDtype::F32)),
+                            (Some(cw), Some(cf)) if cw < cf
+                        )
+                    })
+                    .map(|c| c.bytes);
+                parts.push(match first_win {
+                    Some(b) => format!("{w} wins from {}", fmt_bytes(b)),
+                    None => format!("{w} never wins"),
+                });
+            }
+            println!(
+                "precision crossover: allreduce p={p} on {}: {}",
+                topo.name,
+                parts.join(", ")
             );
         }
     }

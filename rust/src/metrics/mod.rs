@@ -2,8 +2,9 @@
 //!
 //! The [`registry`] submodule holds the process-global named counters
 //! ([`util::warn`](crate::util::warn) occurrences, tuner out-of-grid
-//! clamps, probed cells …) so drills and benches can assert on them
-//! without grepping stderr; [`Timeline::from_trace`] renders the
+//! clamps, probed cells, `quant.bytes_saved` — wire bytes a compressed
+//! collective avoided sending vs the f32 payload …) so drills and
+//! benches can assert on them without grepping stderr; [`Timeline::from_trace`] renders the
 //! engine's ASCII Gantt from the trace layer's span store
 //! (`docs/TRACING.md`).
 

@@ -32,12 +32,35 @@
 //! (a two-tier table can never silently apply to a three-tier fabric),
 //! the probe's rank grid covers tier-shaped rows, and multi-level
 //! hierarchical candidates are measured like any other. Multi-rail NICs
-//! ride the same path: the `v3` fingerprint hashes every level's rail
+//! ride the same path: the fingerprint hashes every level's rail
 //! count (a table probed single-rail never silently applies to a
 //! striped fabric — `TunedWithFallback` falls back to the analytic
 //! model on mismatch), and the probe's size grid gains a rail dimension
 //! (`ProbeSpec::size_grid_for` adds the whole-chunk stripe-transition
 //! sizes where striping moves the measured crossovers).
+//!
+//! # Candidate-key grammar
+//!
+//! Since `v4`, allreduce candidates span **(algorithm ×
+//! wire-precision)** — compression is a first-class selection dimension,
+//! not a post-hoc override. A table cell's candidate keys read:
+//!
+//! * `ring`, `rdoubling`, `halving`, `hier:<g>[x<g>...]` — bare keys are
+//!   fp32 wire (backward compatible with `v3`-era spellings);
+//! * `ring@bf16`, `ring@int8`, `hier:8x128@bf16` — the same algorithm
+//!   timed with its payloads encoded at the compressed width, the
+//!   endpoint (de)quantize cost included
+//!   ([`crate::collectives::selector::quant_chain_ns`]).
+//!
+//! [`table::cand_key`] / [`table::parse_cand_key`] implement the
+//! grammar. Only reductions carry compressed columns
+//! ([`probe::wire_menu`]): allgather and friends have no error-feedback
+//! protection, so their cells stay fp32-only. The `v4` fingerprint bump
+//! exists purely so an old reader never misparses a candidate key — the
+//! hashed fields are unchanged from `v3`; with `--wire-dtype auto` the
+//! engine answers (algorithm, wire) pairs straight from the table
+//! ([`SelectionPolicy::choose_allreduce_wire`]), and `mlsl tune --out`
+//! prints the measured size where each precision starts winning.
 
 pub mod policy;
 pub mod probe;
@@ -45,4 +68,4 @@ pub mod table;
 
 pub use policy::SelectionPolicy;
 pub use probe::{tune, tune_threaded, ProbeSpec};
-pub use table::{out_of_grid_count, TuningTable};
+pub use table::{out_of_grid_count, Cand, TuningTable};

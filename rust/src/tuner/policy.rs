@@ -15,11 +15,11 @@
 
 use crate::collectives::program::CollectiveKind;
 use crate::collectives::selector;
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, WireDtype};
 use crate::fabric::topology::Topology;
 use crate::Ns;
 
-use super::table::TuningTable;
+use super::table::{Cand, TuningTable};
 
 /// Is `alg` buildable as an allreduce over `p` ranks? Deliberately the
 /// BUILDER'S precondition, not the analytic candidate menu: a tuned
@@ -244,6 +244,132 @@ impl SelectionPolicy {
         let alg = selector::choose_algorithm(topo, p, bytes);
         selector::predict_allreduce_ns(topo, alg, p, bytes)
     }
+
+    // -----------------------------------------------------------------
+    // Wire precision: (algorithm × wire dtype) choices
+    // -----------------------------------------------------------------
+
+    /// Allreduce over a node-aligned communicator, choosing from the
+    /// (algorithm × wire dtype) grid. `wires` is the precision menu
+    /// ([`WireDtype::ALL`] for `--wire-dtype auto`, a single element for
+    /// a pinned precision); `slowdown_milli` is the worst endpoint chaos
+    /// compute-slowdown the quantize charge must assume (1000 = healthy).
+    /// Tuned policies answer from measured candidate columns; the
+    /// analytic model decides otherwise. A `[F32]` menu reproduces
+    /// [`Self::choose_allreduce`] exactly.
+    pub fn choose_allreduce_wire(
+        &self,
+        topo: &Topology,
+        p: usize,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+    ) -> (Algorithm, WireDtype) {
+        if p <= 1 {
+            return (Algorithm::Ring, wires.first().copied().unwrap_or_default());
+        }
+        if let Some(t) = self.table_for(topo) {
+            let legal = |(a, w): Cand| {
+                wires.contains(&w) && fits_tiers(a, topo) && allreduce_legal(a, p)
+            };
+            if let Some(cand) = t.lookup_cand(CollectiveKind::Allreduce, p, bytes, &legal) {
+                return cand;
+            }
+        }
+        selector::choose_algorithm_wire(topo, p, bytes, wires, slowdown_milli)
+    }
+
+    /// Allreduce over a strided / non-aligned communicator with the
+    /// precision menu (table on flat fabrics only — see
+    /// [`Self::choose_flat_allreduce`]).
+    pub fn choose_flat_allreduce_wire(
+        &self,
+        topo: &Topology,
+        p: usize,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+    ) -> (Algorithm, WireDtype) {
+        if p <= 1 {
+            return (Algorithm::Ring, wires.first().copied().unwrap_or_default());
+        }
+        if !topo.is_hierarchical() {
+            if let Some(t) = self.table_for(topo) {
+                let legal = |(a, w): Cand| {
+                    wires.contains(&w)
+                        && !matches!(a, Algorithm::Hierarchical { .. })
+                        && allreduce_legal(a, p)
+                };
+                if let Some(cand) = t.lookup_cand(CollectiveKind::Allreduce, p, bytes, &legal) {
+                    return cand;
+                }
+            }
+        }
+        selector::choose_flat_algorithm_wire(topo, p, bytes, wires, slowdown_milli)
+    }
+
+    /// [`Self::choose_for_members`] over the (algorithm × wire dtype)
+    /// grid. Only reductions are error-feedback-protected, so only
+    /// allreduce consults the precision menu; every other kind keeps its
+    /// algorithm choice and the f32 wire.
+    pub fn choose_for_members_wire(
+        &self,
+        topo: &Topology,
+        members: &[crate::Rank],
+        kind: CollectiveKind,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+    ) -> (Algorithm, WireDtype) {
+        if kind != CollectiveKind::Allreduce {
+            return (self.choose_for_members(topo, members, kind, bytes), WireDtype::F32);
+        }
+        let p = members.len();
+        let depth = topo.aligned_tier_depth(members);
+        let usable = topo.chooser_tier_depth(members);
+        let restricted;
+        let view = if usable >= topo.tiers.len() {
+            topo
+        } else {
+            restricted = topo.restrict_tiers(usable);
+            &restricted
+        };
+        if depth > 0 {
+            self.choose_allreduce_wire(view, p, bytes, wires, slowdown_milli)
+        } else {
+            self.choose_flat_allreduce_wire(topo, p, bytes, wires, slowdown_milli)
+        }
+    }
+
+    /// Wire-precision-aware [`Self::predict_allreduce_ns`]: the predicted
+    /// time of the best (algorithm, wire) pick offered by `wires`.
+    pub fn predict_allreduce_ns_wire(
+        &self,
+        topo: &Topology,
+        p: usize,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+    ) -> Ns {
+        if p <= 1 {
+            return 0;
+        }
+        if let Some(t) = self.table_for(topo) {
+            let cheapest_legal = t
+                .interpolated_cand(CollectiveKind::Allreduce, p, bytes)
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|((a, w), _)| {
+                    wires.contains(w) && fits_tiers(*a, topo) && allreduce_legal(*a, p)
+                })
+                .min_by(|x, y| x.1.partial_cmp(&y.1).expect("measured times are finite"));
+            if let Some((_, ns)) = cheapest_legal {
+                return ns.ceil() as Ns;
+            }
+        }
+        let (alg, wire) = selector::choose_algorithm_wire(topo, p, bytes, wires, slowdown_milli);
+        selector::predict_allreduce_ns_wire(topo, alg, p, bytes, wire, slowdown_milli)
+    }
 }
 
 #[cfg(test)]
@@ -402,6 +528,69 @@ mod tests {
             policy.choose_for_members(&topo, &holed, CollectiveKind::Allreduce, bytes),
             policy.choose_flat_allreduce(&topo, 7, bytes)
         );
+    }
+
+    #[test]
+    fn wire_choices_reduce_to_plain_choices_on_an_f32_menu() {
+        let topo = Topology::eth_10g_smp(2);
+        let f32_only = [WireDtype::F32];
+        let policy = SelectionPolicy::default();
+        for p in [2usize, 6, 8, 16] {
+            for bytes in [1u64 << 10, 1 << 20, 16 << 20] {
+                assert_eq!(
+                    policy.choose_allreduce_wire(&topo, p, bytes, &f32_only, 1000),
+                    (policy.choose_allreduce(&topo, p, bytes), WireDtype::F32)
+                );
+                assert_eq!(
+                    policy.choose_flat_allreduce_wire(&topo, p, bytes, &f32_only, 1000),
+                    (policy.choose_flat_allreduce(&topo, p, bytes), WireDtype::F32)
+                );
+                assert_eq!(
+                    policy.predict_allreduce_ns_wire(&topo, p, bytes, &f32_only, 1000),
+                    policy.predict_allreduce_ns(&topo, p, bytes)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_wire_policy_answers_candidates_from_the_table() {
+        let topo = Topology::eth_10g();
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let table = tune(&topo, &spec);
+        let policy = SelectionPolicy::TunedWithFallback(table.clone());
+        for cell in table.cells(CollectiveKind::Allreduce) {
+            // Full menu: the pick is the cell's measured best candidate.
+            let pick =
+                policy.choose_allreduce_wire(&topo, cell.ranks, cell.bytes, &WireDtype::ALL, 1000);
+            assert_eq!(pick, cell.best_cand().unwrap().0, "p={}", cell.ranks);
+            // f32-pinned menu: the pick is the f32-restricted best — the
+            // same answer the algorithm-only tuned policy gives.
+            let f32_menu = [WireDtype::F32];
+            let (alg, wire) =
+                policy.choose_allreduce_wire(&topo, cell.ranks, cell.bytes, &f32_menu, 1000);
+            assert_eq!(wire, WireDtype::F32);
+            assert_eq!(alg, cell.best().unwrap().0, "p={}", cell.ranks);
+        }
+        // The bulk cells' tuned winner is compressed on 10GbE.
+        let bulk = table
+            .cells(CollectiveKind::Allreduce)
+            .iter()
+            .map(|c| policy.choose_allreduce_wire(&topo, c.ranks, c.bytes, &WireDtype::ALL, 1000))
+            .any(|(_, w)| w != WireDtype::F32);
+        assert!(bulk, "no compressed winner anywhere on the quick grid");
+        // choose_for_members_wire keeps non-reductions on the f32 wire.
+        let members: Vec<usize> = (0..8).collect();
+        let (_, w) = policy.choose_for_members_wire(
+            &topo,
+            &members,
+            CollectiveKind::Allgather,
+            1 << 20,
+            &WireDtype::ALL,
+            1000,
+        );
+        assert_eq!(w, WireDtype::F32);
     }
 
     #[test]

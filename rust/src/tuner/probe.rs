@@ -9,19 +9,53 @@
 //! embarrassingly parallel: [`tune_threaded`] stripes it across worker
 //! threads and produces a byte-identical table (`--sim-threads`).
 
+use crate::collectives::parexec::{run_pattern, FleetConfig, PatternSpec};
 use crate::collectives::program::{build, CollectiveKind};
-use crate::collectives::selector::{allgather_candidates, candidate_algorithms};
+use crate::collectives::selector::{
+    allgather_candidates, candidate_algorithms, compression_crossover_sizes, quant_chain_ns,
+};
 use crate::collectives::simexec::time_collective;
 use crate::collectives::{Algorithm, WireDtype};
 use crate::fabric::topology::Topology;
 use crate::fabric::NetSim;
 use crate::Ns;
 
-use super::table::{MeasuredCell, TuningTable};
+use super::table::{Cand, MeasuredCell, TuningTable};
 
 /// The collectives the probe measures.
 pub const TUNED_KINDS: [CollectiveKind; 2] =
     [CollectiveKind::Allreduce, CollectiveKind::Allgather];
+
+/// Rank rows above this are measured through the pattern driver
+/// ([`crate::collectives::parexec::run_pattern`]) instead of full chunk
+/// programs: at p in the thousands, building and executing per-rank
+/// programs is prohibitive, while the O(p·rounds) pattern walk stays
+/// cheap. Rows at or below the threshold keep the program-accurate path.
+pub const PATTERN_ROW_MIN: usize = 512;
+
+/// The datacenter-scale rank rows appended to the grid when `max_ranks`
+/// reaches them — the first slice of tuning tables that carry measured
+/// rows beyond a few hundred ranks (flat ring / recursive-doubling
+/// candidates only; hierarchical shapes at that scale are future work).
+pub const PATTERN_RANK_ROWS: [usize; 3] = [1024, 2048, 4096];
+
+/// Is this rank row measured through the pattern driver?
+pub fn pattern_row(p: usize) -> bool {
+    p > PATTERN_ROW_MIN
+}
+
+const F32_ONLY: &[WireDtype] = &[WireDtype::F32];
+
+/// Wire dtypes probed per collective kind: gradient allreduce measures
+/// the full (algorithm × precision) menu; every other kind stays f32
+/// (only reductions get error-feedback protection, so compression is
+/// not offered elsewhere).
+pub fn wire_menu(kind: CollectiveKind) -> &'static [WireDtype] {
+    match kind {
+        CollectiveKind::Allreduce => &WireDtype::ALL,
+        _ => F32_ONLY,
+    }
+}
 
 /// Grid description for a tuning run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -47,14 +81,22 @@ impl ProbeSpec {
 
     /// Rank rows: powers of two plus 3·2^k (so ring-only non-power-of-two
     /// cells — and hierarchical cells with non-power-of-two leader counts
-    /// — are measured too), clamped to `max_ranks`.
+    /// — are measured too), clamped to `max_ranks`. The program-accurate
+    /// rows stop at [`PATTERN_ROW_MIN`]; past it the grid jumps to the
+    /// [`PATTERN_RANK_ROWS`] measured through the pattern driver.
     pub fn rank_grid(&self) -> Vec<usize> {
+        let cap = self.max_ranks.min(PATTERN_ROW_MIN);
         let mut out = Vec::new();
         for start in [2usize, 6] {
             let mut p = start;
-            while p <= self.max_ranks {
+            while p <= cap {
                 out.push(p);
                 p *= 2;
+            }
+        }
+        for p in PATTERN_RANK_ROWS {
+            if p <= self.max_ranks {
+                out.push(p);
             }
         }
         out.sort_unstable();
@@ -74,7 +116,7 @@ impl ProbeSpec {
         for s in topo.level_sizes() {
             for m in 1..=4usize {
                 let p = s * m;
-                if p >= 2 && p <= self.max_ranks {
+                if p >= 2 && p <= self.max_ranks.min(PATTERN_ROW_MIN) {
                     out.push(p);
                 }
             }
@@ -84,15 +126,18 @@ impl ProbeSpec {
         out
     }
 
-    /// [`ProbeSpec::size_grid`] extended with the topology's RAIL
-    /// dimension: on a multi-rail fabric the striping discount switches
-    /// on in whole-chunk steps ([`Topology::stripe_count`]), so the grid
-    /// adds the stripe-transition sizes `k · chunk_bytes` for
-    /// k = 1..=max_rails — the buffer sizes at which a full-buffer round
-    /// (recursive doubling's regime) starts occupying its k-th rail.
-    /// The measured latency/bandwidth crossovers move exactly across
-    /// this region, which the generic log-spaced grid can miss.
-    /// Single-rail fabrics keep the generic grid unchanged.
+    /// [`ProbeSpec::size_grid`] extended with two topology-driven
+    /// dimensions the generic log-spaced grid can miss:
+    ///
+    /// * the RAIL dimension — on a multi-rail fabric the striping
+    ///   discount switches on in whole-chunk steps
+    ///   ([`Topology::stripe_count`]), so the grid adds the
+    ///   stripe-transition sizes `k · chunk_bytes` for k = 1..=max_rails;
+    /// * the COMPRESSION crossovers — the analytic sizes where bf16/int8
+    ///   first beat the f32 wire
+    ///   ([`compression_crossover_sizes`], evaluated at both ends of the
+    ///   rank span since the ring's per-hop segment scales with p), so
+    ///   the measured table brackets every precision handover.
     pub fn size_grid_for(&self, topo: &Topology) -> Vec<u64> {
         let mut out = self.size_grid();
         let rails = topo.max_rails() as u64;
@@ -103,9 +148,17 @@ impl ProbeSpec {
                     out.push(b);
                 }
             }
-            out.sort_unstable();
-            out.dedup();
         }
+        let ranks = self.rank_grid();
+        for p in [ranks.first(), ranks.last()].into_iter().flatten() {
+            for b in compression_crossover_sizes(topo, (*p).min(PATTERN_ROW_MIN)) {
+                if (self.min_bytes..=self.max_bytes).contains(&b) {
+                    out.push(b);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
         out
     }
 
@@ -136,7 +189,7 @@ pub fn probe_candidates(topo: &Topology, kind: CollectiveKind, p: usize) -> Vec<
     }
 }
 
-/// Time one collective on an otherwise idle simulated fabric.
+/// Time one collective on an otherwise idle simulated fabric (f32 wire).
 pub fn measure_ns(
     topo: &Topology,
     kind: CollectiveKind,
@@ -144,13 +197,106 @@ pub fn measure_ns(
     p: usize,
     bytes: u64,
 ) -> Ns {
+    measure_cand_ns(topo, kind, alg, p, bytes, WireDtype::F32)
+}
+
+/// Time one (algorithm, wire dtype) candidate: the chunk programs run
+/// through the cycle-accurate simulator with `wire`-compressed payloads
+/// (fewer bytes per hop), plus the modeled endpoint (de)quantize charge
+/// ([`quant_chain_ns`]) the fabric simulator does not execute. f32 adds
+/// nothing and is the pre-existing measurement bit-for-bit.
+pub fn measure_cand_ns(
+    topo: &Topology,
+    kind: CollectiveKind,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+    wire: WireDtype,
+) -> Ns {
     // Counted here — once per (cell, candidate) measurement — so the
     // serial and threaded grid walks bump `tuner.probes` identically.
     crate::metrics::registry::inc("tuner.probes");
     let n = (bytes / 4).max(1) as usize; // f32 elements
     let programs = build(kind, alg, p, n).expect("probe candidates are buildable");
     let mut sim = NetSim::new(topo.clone(), p);
-    time_collective(&mut sim, programs, WireDtype::F32, 1)
+    let wall = time_collective(&mut sim, programs, wire, 1);
+    let quant = if kind == CollectiveKind::Allreduce {
+        quant_chain_ns(alg, p, n, wire, 1000)
+    } else {
+        0
+    };
+    wall + quant
+}
+
+/// Time one flat allreduce through the PATTERN driver — the road to
+/// rank counts in the thousands, where building per-rank chunk programs
+/// is prohibitive. Same fabric, same per-hop wire-compressed bytes,
+/// same endpoint quantize charge as [`measure_cand_ns`]. `None` for
+/// algorithms the pattern driver cannot shape (everything but the ring
+/// and, at power-of-two p, recursive doubling).
+pub fn measure_pattern_ns(
+    topo: &Topology,
+    alg: Algorithm,
+    p: usize,
+    bytes: u64,
+    wire: WireDtype,
+) -> Option<Ns> {
+    let n = (bytes / 4).max(1) as usize; // f32 elements
+    let spec = match alg {
+        Algorithm::Ring => {
+            PatternSpec::ring_allreduce(p, wire.wire_bytes(n.div_ceil(p)) as u64)
+        }
+        Algorithm::RecursiveDoubling if p.is_power_of_two() => {
+            PatternSpec::rdoubling_allreduce(p, wire.wire_bytes(n) as u64)
+        }
+        _ => return None,
+    };
+    crate::metrics::registry::inc("tuner.probes");
+    let wall = run_pattern(topo, &spec, &FleetConfig::threaded(1)).finish_ns;
+    Some(wall + quant_chain_ns(alg, p, n, wire, 1000))
+}
+
+/// The grid as an explicit cell list, in the serial insertion order both
+/// walks share. Pattern rows exist only for allreduce — the pattern
+/// driver has no allgather shape.
+fn grid_cells(topo: &Topology, spec: &ProbeSpec) -> Vec<(CollectiveKind, usize, u64)> {
+    let ranks = spec.rank_grid_for(topo);
+    let sizes = spec.size_grid_for(topo);
+    let mut cells = Vec::new();
+    for kind in TUNED_KINDS {
+        for &p in &ranks {
+            if pattern_row(p) && kind != CollectiveKind::Allreduce {
+                continue;
+            }
+            for &bytes in &sizes {
+                cells.push((kind, p, bytes));
+            }
+        }
+    }
+    cells
+}
+
+/// Measure one grid cell: every candidate algorithm crossed with the
+/// kind's wire menu (program-accurate below [`PATTERN_ROW_MIN`], the
+/// pattern driver above it).
+fn measure_cell(topo: &Topology, kind: CollectiveKind, p: usize, bytes: u64) -> MeasuredCell {
+    let mut timings: Vec<(Cand, Ns)> = Vec::new();
+    if pattern_row(p) {
+        for alg in [Algorithm::Ring, Algorithm::RecursiveDoubling] {
+            for &w in wire_menu(kind) {
+                if let Some(t) = measure_pattern_ns(topo, alg, p, bytes, w) {
+                    timings.push(((alg, w), t));
+                }
+            }
+        }
+    } else {
+        for alg in probe_candidates(topo, kind, p) {
+            for &w in wire_menu(kind) {
+                timings.push(((alg, w), measure_cand_ns(topo, kind, alg, p, bytes, w)));
+            }
+        }
+    }
+    MeasuredCell::new_cand(p, bytes, timings)
 }
 
 /// Measure the whole grid, reporting `(done_cells, total_cells)` after
@@ -160,24 +306,12 @@ pub fn tune_with_progress(
     spec: &ProbeSpec,
     mut progress: impl FnMut(usize, usize),
 ) -> TuningTable {
-    let ranks = spec.rank_grid_for(topo);
-    let sizes = spec.size_grid_for(topo);
-    let total = TUNED_KINDS.len() * ranks.len() * sizes.len();
-    let mut done = 0;
+    let cells = grid_cells(topo, spec);
+    let total = cells.len();
     let mut table = TuningTable::for_topology(topo);
-    for kind in TUNED_KINDS {
-        for &p in &ranks {
-            let cands = probe_candidates(topo, kind, p);
-            for &bytes in &sizes {
-                let timings: Vec<(Algorithm, Ns)> = cands
-                    .iter()
-                    .map(|&a| (a, measure_ns(topo, kind, a, p, bytes)))
-                    .collect();
-                table.insert(kind, MeasuredCell::new(p, bytes, timings));
-                done += 1;
-                progress(done, total);
-            }
-        }
+    for (done, &(kind, p, bytes)) in cells.iter().enumerate() {
+        table.insert(kind, measure_cell(topo, kind, p, bytes));
+        progress(done + 1, total);
     }
     table
 }
@@ -200,16 +334,7 @@ pub fn tune_threaded(topo: &Topology, spec: &ProbeSpec, threads: usize) -> Tunin
     if threads <= 1 {
         return tune(topo, spec);
     }
-    let ranks = spec.rank_grid_for(topo);
-    let sizes = spec.size_grid_for(topo);
-    let mut cells: Vec<(CollectiveKind, usize, u64)> = Vec::new();
-    for kind in TUNED_KINDS {
-        for &p in &ranks {
-            for &bytes in &sizes {
-                cells.push((kind, p, bytes));
-            }
-        }
-    }
+    let cells = grid_cells(topo, spec);
     let nthreads = threads.min(cells.len()).max(1);
     let computed: Vec<Vec<(usize, MeasuredCell)>> = std::thread::scope(|scope| {
         let cells = &cells;
@@ -223,12 +348,7 @@ pub fn tune_threaded(topo: &Topology, spec: &ProbeSpec, threads: usize) -> Tunin
                     let mut i = w;
                     while i < cells.len() {
                         let (kind, p, bytes) = cells[i];
-                        let cands = probe_candidates(topo, kind, p);
-                        let timings: Vec<(Algorithm, Ns)> = cands
-                            .iter()
-                            .map(|&a| (a, measure_ns(topo, kind, a, p, bytes)))
-                            .collect();
-                        out.push((i, MeasuredCell::new(p, bytes, timings)));
+                        out.push((i, measure_cell(topo, kind, p, bytes)));
                         i += nthreads;
                     }
                     out
@@ -272,7 +392,12 @@ mod tests {
         for kind in TUNED_KINDS {
             for cell in table.cells(kind) {
                 let want = probe_candidates(&topo, kind, cell.ranks);
-                assert_eq!(cell.timings.len(), want.len(), "{kind:?} p={}", cell.ranks);
+                assert_eq!(
+                    cell.timings.len(),
+                    want.len() * wire_menu(kind).len(),
+                    "{kind:?} p={}",
+                    cell.ranks
+                );
                 for alg in want {
                     let t = cell.time_of(alg).unwrap_or_else(|| {
                         panic!("{kind:?} p={} missing {alg:?}", cell.ranks)
@@ -315,11 +440,25 @@ mod tests {
 
     #[test]
     fn size_grid_gains_a_rail_dimension_on_striped_fabrics() {
+        use crate::collectives::selector::compression_crossover_sizes;
         let spec =
             ProbeSpec { max_ranks: 8, min_bytes: 1 << 10, max_bytes: 4 << 20, size_points: 3 };
-        // Single-rail fabrics keep the generic grid.
+        // On fast flat fabrics (no rails, no compression win) the grid is
+        // exactly the generic one.
+        assert_eq!(spec.size_grid_for(&Topology::omnipath_100g()), spec.size_grid());
+        // On slow ethernet the extra points are exactly the compression
+        // crossovers at the rank-span ends.
         let flat = Topology::eth_10g(); // chunk 256 KiB
-        assert_eq!(spec.size_grid_for(&flat), spec.size_grid());
+        let grid_flat = spec.size_grid_for(&flat);
+        for b in spec.size_grid() {
+            assert!(grid_flat.contains(&b), "{grid_flat:?} missing generic {b}");
+        }
+        for extra in grid_flat.iter().filter(|b| !spec.size_grid().contains(b)) {
+            let from_crossover = [2usize, 8].iter().any(|p| {
+                compression_crossover_sizes(&flat, *p).contains(extra)
+            });
+            assert!(from_crossover, "unexplained grid point {extra}");
+        }
         // Multi-rail fabrics add the stripe-transition sizes k·chunk.
         let e4 = flat.clone().with_rails(4).unwrap();
         let grid = spec.size_grid_for(&e4);
@@ -329,7 +468,7 @@ mod tests {
         assert!(grid.windows(2).all(|w| w[0] < w[1]), "sorted+deduped: {grid:?}");
         // Out-of-range transitions are clamped away.
         let tiny =
-            ProbeSpec { max_ranks: 8, min_bytes: 1 << 10, max_bytes: 64 << 10, size_points: 3 };
+            ProbeSpec { max_ranks: 8, min_bytes: 40 << 20, max_bytes: 64 << 20, size_points: 3 };
         assert_eq!(tiny.size_grid_for(&e4), tiny.size_grid());
         // The probed table measures those cells like any other.
         let quick = ProbeSpec { max_ranks: 4, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 2 };
@@ -363,6 +502,72 @@ mod tests {
         measure_ns(&Topology::eth_10g(), CollectiveKind::Allreduce, Algorithm::Ring, 4, 4096);
         // >= not ==: sibling tests probing concurrently also bump it.
         assert!(crate::metrics::registry::get("tuner.probes") >= before + 1);
+    }
+
+    #[test]
+    fn pattern_rows_extend_the_rank_grid_at_datacenter_scale() {
+        // Below the threshold nothing changes…
+        let small =
+            ProbeSpec { max_ranks: 64, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 2 };
+        assert!(small.rank_grid().iter().all(|&p| !pattern_row(p)));
+        // …above it the generic rows stop at PATTERN_ROW_MIN and the
+        // pattern rows take over (no program-built rows in between).
+        let big =
+            ProbeSpec { max_ranks: 2048, min_bytes: 1 << 10, max_bytes: 1 << 20, size_points: 2 };
+        let grid = big.rank_grid();
+        assert!(grid.contains(&512) && grid.contains(&1024) && grid.contains(&2048), "{grid:?}");
+        assert!(!grid.contains(&4096), "{grid:?}");
+        assert!(grid.iter().all(|&p| p <= PATTERN_ROW_MIN || PATTERN_RANK_ROWS.contains(&p)));
+        // Pattern rows never reach the allgather grid (no pattern shape).
+        let topo = Topology::eth_10g();
+        let cells = grid_cells(&topo, &big);
+        assert!(cells.iter().any(|c| c.0 == CollectiveKind::Allreduce && pattern_row(c.1)));
+        assert!(!cells.iter().any(|c| c.0 == CollectiveKind::Allgather && pattern_row(c.1)));
+    }
+
+    #[test]
+    fn pattern_measurement_scales_to_thousands_of_ranks() {
+        // Recursive doubling at p=1024 is 10 rounds — cheap to drive even
+        // in debug builds — and must time every wire dtype, compressed
+        // wires strictly cheaper at bandwidth-bound sizes.
+        let topo = Topology::eth_10g();
+        let bytes = 4u64 << 20;
+        let rd = Algorithm::RecursiveDoubling;
+        let f = measure_pattern_ns(&topo, rd, 1024, bytes, WireDtype::F32).unwrap();
+        let i = measure_pattern_ns(&topo, rd, 1024, bytes, WireDtype::Int8Block).unwrap();
+        assert!(i < f, "int8={i} f32={f}");
+        // The driver has no shape for halving-doubling or hierarchy.
+        assert!(measure_pattern_ns(&topo, Algorithm::HalvingDoubling, 1024, bytes, WireDtype::F32)
+            .is_none());
+        // Ring agrees with the program-accurate measurement at small p
+        // (same rounds, same segment bytes — the pattern is the program).
+        let ring_pat =
+            measure_pattern_ns(&topo, Algorithm::Ring, 8, 1 << 20, WireDtype::F32).unwrap();
+        let ring_prog = measure_ns(&topo, CollectiveKind::Allreduce, Algorithm::Ring, 8, 1 << 20);
+        let ratio = ring_pat as f64 / ring_prog as f64;
+        assert!((0.5..2.0).contains(&ratio), "pattern {ring_pat} vs program {ring_prog}");
+    }
+
+    #[test]
+    fn allreduce_cells_carry_wire_columns_and_int8_wins_bulk() {
+        let topo = Topology::eth_10g();
+        let spec =
+            ProbeSpec { max_ranks: 4, min_bytes: 1 << 10, max_bytes: 4 << 20, size_points: 2 };
+        let table = tune(&topo, &spec);
+        let cells = table.cells(CollectiveKind::Allreduce);
+        let bulk = cells.iter().find(|c| c.ranks == 4 && c.bytes == 4 << 20).unwrap();
+        // Full (algorithm × precision) menu measured…
+        assert!(bulk.time_of_cand((Algorithm::Ring, WireDtype::Int8Block)).is_some());
+        assert!(bulk.time_of_cand((Algorithm::Ring, WireDtype::Bf16)).is_some());
+        // …the compressed wire wins the bandwidth-bound cell, while the
+        // algorithm-only view still reports a pure-f32 winner.
+        let ((_, wire), _) = bulk.best_cand().unwrap();
+        assert_eq!(wire, WireDtype::Int8Block, "{bulk:?}");
+        assert!(bulk.best().is_some());
+        // Allgather cells stay f32-only.
+        for cell in table.cells(CollectiveKind::Allgather) {
+            assert!(cell.timings.iter().all(|((_, w), _)| *w == WireDtype::F32), "{cell:?}");
+        }
     }
 
     #[test]

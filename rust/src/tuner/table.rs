@@ -1,11 +1,16 @@
 //! Persisted tuning tables: measured (collective, rank count, message
-//! size) → per-algorithm timings, keyed by a topology fingerprint.
+//! size) → per-candidate timings, keyed by a topology fingerprint.
+//!
+//! A *candidate* is an (algorithm × wire precision) pair ([`Cand`]):
+//! `ring@int8` and `ring` (bare = fp32) are separate measured columns of
+//! the same cell, so the measured fp32→bf16→int8 crossovers live in the
+//! table alongside the algorithm crossovers.
 //!
 //! A [`TuningTable`] is produced by [`crate::tuner::probe`] and consumed
 //! by [`crate::tuner::SelectionPolicy`]. A lookup snaps the rank count to
 //! the nearest measured row (log distance, ties to the smaller row), then
-//! log-interpolates each algorithm's time between the two bracketing size
-//! cells (clamped at the grid edges) and picks the cheapest algorithm
+//! log-interpolates each candidate's time between the two bracketing size
+//! cells (clamped at the grid edges) and picks the cheapest candidate
 //! that is LEGAL at the actual rank count — a row measured at p = 8 may
 //! prefer recursive doubling, which does not exist at p = 6. Tables
 //! serialize via [`crate::util::json`] so a grid probed once on a
@@ -15,10 +20,13 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use crate::collectives::program::CollectiveKind;
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, WireDtype};
 use crate::fabric::topology::Topology;
 use crate::util::json::Json;
 use crate::Ns;
+
+/// One tuning candidate: an algorithm at a wire precision.
+pub type Cand = (Algorithm, WireDtype);
 
 /// Process-wide count of lookups whose rank count fell OUTSIDE the
 /// probed grid (below the smallest or above the largest measured row)
@@ -40,11 +48,15 @@ pub fn out_of_grid_count() -> u64 {
 /// two-tier fabric never silently applies to a three-tier one, and (v3)
 /// every level's RAIL count — rail striping moves the measured
 /// latency/bandwidth crossovers, so a table probed single-rail must
-/// never silently apply to a striped fabric. The pre-rail `v2` and
-/// pre-tier-stack `v1` formats can never match and fall back cleanly.
+/// never silently apply to a striped fabric. `v4` hashes NOTHING new —
+/// the bump exists because v4 tables carry (algorithm × precision)
+/// candidate keys (`ring@int8`) that pre-precision consumers would
+/// misread, so old and new tables must never silently cross-apply. The
+/// pre-precision `v3`, pre-rail `v2` and pre-tier-stack `v1` formats can
+/// never match and fall back cleanly.
 pub fn fingerprint(t: &Topology) -> String {
     let mut s = format!(
-        "v3|g{}|l{}|o{}|c{}|e{}",
+        "v4|g{}|l{}|o{}|c{}|e{}",
         t.link_gbps, t.latency_ns, t.per_msg_overhead_ns, t.chunk_bytes, t.rails,
     );
     for tier in &t.tiers {
@@ -98,29 +110,77 @@ pub fn parse_alg_key(s: &str) -> Option<Algorithm> {
     }
 }
 
+/// Stable serialization key of an (algorithm × precision) candidate:
+/// [`alg_key`] with a `@bf16` / `@int8` suffix; fp32 stays bare
+/// (`"ring"` ≡ `"ring@fp32"`), so pre-precision keys read back as the
+/// f32 columns they always were. Examples: `ring@int8`,
+/// `hier:8x128@bf16`.
+pub fn cand_key(cand: Cand) -> String {
+    let (alg, wire) = cand;
+    match wire {
+        WireDtype::F32 => alg_key(alg),
+        other => format!("{}@{other}", alg_key(alg)),
+    }
+}
+
+/// Inverse of [`cand_key`]. Accepts `@fp32`/`@f32` spelled out too.
+pub fn parse_cand_key(s: &str) -> Option<Cand> {
+    match s.rsplit_once('@') {
+        None => Some((parse_alg_key(s)?, WireDtype::F32)),
+        Some((alg, wire)) => Some((parse_alg_key(alg)?, WireDtype::by_name(wire)?)),
+    }
+}
+
 /// One measured grid cell: every candidate's simulated time at (ranks,
 /// bytes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MeasuredCell {
     pub ranks: usize,
     pub bytes: u64,
-    /// (algorithm, measured ns), canonically sorted by [`alg_key`] so
-    /// tie-breaks and JSON round-trips are deterministic.
-    pub timings: Vec<(Algorithm, Ns)>,
+    /// ((algorithm, wire), measured ns), canonically sorted by
+    /// [`cand_key`] so tie-breaks and JSON round-trips are deterministic.
+    pub timings: Vec<(Cand, Ns)>,
 }
 
 impl MeasuredCell {
-    pub fn new(ranks: usize, bytes: u64, mut timings: Vec<(Algorithm, Ns)>) -> Self {
-        timings.sort_by(|a, b| alg_key(a.0).cmp(&alg_key(b.0)));
+    /// fp32-only constructor (the pre-precision surface — existing
+    /// benches and tests build algorithm-keyed cells through this).
+    pub fn new(ranks: usize, bytes: u64, timings: Vec<(Algorithm, Ns)>) -> Self {
+        Self::new_cand(
+            ranks,
+            bytes,
+            timings.into_iter().map(|(a, t)| ((a, WireDtype::F32), t)).collect(),
+        )
+    }
+
+    pub fn new_cand(ranks: usize, bytes: u64, mut timings: Vec<(Cand, Ns)>) -> Self {
+        timings.sort_by(|a, b| cand_key(a.0).cmp(&cand_key(b.0)));
         Self { ranks, bytes, timings }
     }
 
+    /// Measured time of `alg` at fp32 (the pre-precision query).
     pub fn time_of(&self, alg: Algorithm) -> Option<Ns> {
-        self.timings.iter().find(|(a, _)| *a == alg).map(|(_, t)| *t)
+        self.time_of_cand((alg, WireDtype::F32))
     }
 
-    /// Measured-best algorithm (ties break on canonical key order).
+    pub fn time_of_cand(&self, cand: Cand) -> Option<Ns> {
+        self.timings.iter().find(|(c, _)| *c == cand).map(|(_, t)| *t)
+    }
+
+    /// Measured-best algorithm AT fp32 (ties break on canonical key
+    /// order) — the algorithm-crossover view; see [`Self::best_cand`]
+    /// for the full (algorithm × precision) winner.
     pub fn best(&self) -> Option<(Algorithm, Ns)> {
+        self.timings
+            .iter()
+            .filter(|((_, w), _)| *w == WireDtype::F32)
+            .map(|((a, _), t)| (*a, *t))
+            .min_by_key(|(_, t)| *t)
+    }
+
+    /// Measured-best candidate over every (algorithm × precision)
+    /// column (ties break on canonical key order).
+    pub fn best_cand(&self) -> Option<(Cand, Ns)> {
         self.timings.iter().copied().min_by_key(|(_, t)| *t)
     }
 }
@@ -230,18 +290,18 @@ impl TuningTable {
         Some(self.cells(kind).iter().filter(|c| c.ranks == row_p).collect())
     }
 
-    /// Per-algorithm times at (p, bytes): nearest rank row, then
+    /// Per-candidate times at (p, bytes): nearest rank row, then
     /// log-interpolated between the bracketing size cells (clamped at the
     /// grid edges). At an exactly-measured grid point this returns the
     /// cell's timings verbatim.
-    pub fn interpolated(
+    pub fn interpolated_cand(
         &self,
         kind: CollectiveKind,
         p: usize,
         bytes: u64,
-    ) -> Option<Vec<(Algorithm, f64)>> {
+    ) -> Option<Vec<(Cand, f64)>> {
         let row = self.nearest_row(kind, p)?;
-        let verbatim = |c: &MeasuredCell| -> Vec<(Algorithm, f64)> {
+        let verbatim = |c: &MeasuredCell| -> Vec<(Cand, f64)> {
             c.timings.iter().map(|(a, t)| (*a, *t as f64)).collect()
         };
         let first = *row.first()?;
@@ -258,13 +318,13 @@ impl TuningTable {
         let (lo_cell, hi_cell) = (row[hi - 1], row[hi]);
         let f = ((bytes as f64).ln() - (lo_cell.bytes as f64).ln())
             / ((hi_cell.bytes as f64).ln() - (lo_cell.bytes as f64).ln());
-        let out: Vec<(Algorithm, f64)> = lo_cell
+        let out: Vec<(Cand, f64)> = lo_cell
             .timings
             .iter()
-            .filter_map(|(alg, t0)| {
+            .filter_map(|(cand, t0)| {
                 hi_cell
-                    .time_of(*alg)
-                    .map(|t1| (*alg, *t0 as f64 * (1.0 - f) + t1 as f64 * f))
+                    .time_of_cand(*cand)
+                    .map(|t1| (*cand, *t0 as f64 * (1.0 - f) + t1 as f64 * f))
             })
             .collect();
         if out.is_empty() {
@@ -274,9 +334,30 @@ impl TuningTable {
         }
     }
 
-    /// Tuned pick: the cheapest interpolated algorithm passing `legal`
-    /// (None when nothing measured here is legal at the actual `p` — the
-    /// policy then falls back to the analytic chooser).
+    /// [`Self::interpolated_cand`] restricted to the fp32 columns — the
+    /// pre-precision query surface the algorithm-only policy path uses.
+    pub fn interpolated(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+    ) -> Option<Vec<(Algorithm, f64)>> {
+        let out: Vec<(Algorithm, f64)> = self
+            .interpolated_cand(kind, p, bytes)?
+            .into_iter()
+            .filter(|((_, w), _)| *w == WireDtype::F32)
+            .map(|((a, _), t)| (a, t))
+            .collect();
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Tuned pick at fp32: the cheapest interpolated algorithm passing
+    /// `legal` (None when nothing measured here is legal at the actual
+    /// `p` — the policy then falls back to the analytic chooser).
     pub fn lookup(
         &self,
         kind: CollectiveKind,
@@ -291,7 +372,25 @@ impl TuningTable {
             .map(|(a, _)| a)
     }
 
-    /// Interpolated time of `alg` at (p, bytes), if it was measured there.
+    /// Tuned pick over the full (algorithm × precision) grid: the
+    /// cheapest interpolated candidate passing `legal` (which gates both
+    /// algorithm legality at the actual `p` AND the wire-precision menu
+    /// — a `--wire-dtype int8` run filters to int8 columns).
+    pub fn lookup_cand(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+        legal: &dyn Fn(Cand) -> bool,
+    ) -> Option<Cand> {
+        self.interpolated_cand(kind, p, bytes)?
+            .into_iter()
+            .filter(|(c, _)| legal(*c))
+            .min_by(|x, y| x.1.partial_cmp(&y.1).expect("measured times are finite"))
+            .map(|(c, _)| c)
+    }
+
+    /// Interpolated time of `alg` at fp32 at (p, bytes), if measured.
     pub fn time_ns(
         &self,
         kind: CollectiveKind,
@@ -299,16 +398,29 @@ impl TuningTable {
         bytes: u64,
         alg: Algorithm,
     ) -> Option<Ns> {
-        self.interpolated(kind, p, bytes)?
+        self.time_ns_cand(kind, p, bytes, (alg, WireDtype::F32))
+    }
+
+    /// Interpolated time of a candidate at (p, bytes), if measured.
+    pub fn time_ns_cand(
+        &self,
+        kind: CollectiveKind,
+        p: usize,
+        bytes: u64,
+        cand: Cand,
+    ) -> Option<Ns> {
+        self.interpolated_cand(kind, p, bytes)?
             .into_iter()
-            .find(|(a, _)| *a == alg)
+            .find(|(c, _)| *c == cand)
             .map(|(_, t)| t.ceil() as Ns)
     }
 
-    /// Winner-change points along the size axis of one measured rank row:
-    /// (bytes where the new winner takes over, previous winner, new
-    /// winner). This is the measured analogue of the analytic model's
-    /// latency/bandwidth crossover.
+    /// Winner-change points along the size axis of one measured rank row
+    /// AT fp32: (bytes where the new winner takes over, previous winner,
+    /// new winner). This is the measured analogue of the analytic
+    /// model's latency/bandwidth crossover; see [`Self::crossovers_cand`]
+    /// for the (algorithm × precision) winners including the measured
+    /// fp32→bf16→int8 compression crossovers.
     pub fn crossovers(
         &self,
         kind: CollectiveKind,
@@ -318,6 +430,29 @@ impl TuningTable {
         let mut prev: Option<Algorithm> = None;
         for c in self.cells(kind).iter().filter(|c| c.ranks == ranks) {
             let Some((w, _)) = c.best() else { continue };
+            if let Some(p0) = prev {
+                if p0 != w {
+                    out.push((c.bytes, p0, w));
+                }
+            }
+            prev = Some(w);
+        }
+        out
+    }
+
+    /// [`Self::crossovers`] over the full candidate grid: where the
+    /// measured (algorithm × precision) winner changes along the size
+    /// axis — in particular the sizes where bf16 and int8 start beating
+    /// fp32 once wire-byte savings outweigh the (de)quantize cost.
+    pub fn crossovers_cand(
+        &self,
+        kind: CollectiveKind,
+        ranks: usize,
+    ) -> Vec<(u64, Cand, Cand)> {
+        let mut out = Vec::new();
+        let mut prev: Option<Cand> = None;
+        for c in self.cells(kind).iter().filter(|c| c.ranks == ranks) {
+            let Some((w, _)) = c.best_cand() else { continue };
             if let Some(p0) = prev {
                 if p0 != w {
                     out.push((c.bytes, p0, w));
@@ -342,7 +477,7 @@ impl TuningTable {
                     let timings: BTreeMap<String, Json> = c
                         .timings
                         .iter()
-                        .map(|(a, t)| (alg_key(*a), Json::Num(*t as f64)))
+                        .map(|(cand, t)| (cand_key(*cand), Json::Num(*t as f64)))
                         .collect();
                     m.insert("timings".to_string(), Json::Obj(timings));
                     Json::Obj(m)
@@ -394,13 +529,13 @@ impl TuningTable {
                     return Err("cell missing timings".into());
                 };
                 let mut ts = Vec::new();
-                for (ak, tv) in timings {
-                    let alg =
-                        parse_alg_key(ak).ok_or_else(|| format!("bad algorithm key {ak:?}"))?;
+                for (ck, tv) in timings {
+                    let cand =
+                        parse_cand_key(ck).ok_or_else(|| format!("bad candidate key {ck:?}"))?;
                     let t = tv.as_f64().ok_or("timing must be a number")? as Ns;
-                    ts.push((alg, t));
+                    ts.push((cand, t));
                 }
-                table.insert(kind, MeasuredCell::new(ranks, bytes, ts));
+                table.insert(kind, MeasuredCell::new_cand(ranks, bytes, ts));
             }
         }
         Ok(table)
@@ -540,7 +675,7 @@ mod tests {
         let single = Topology::by_name("eth10g-x2").unwrap();
         let striped = Topology::by_name("eth10g-x2e2").unwrap();
         let wider = Topology::by_name("eth10g-x2e4").unwrap();
-        assert!(fingerprint(&single).starts_with("v3|"));
+        assert!(fingerprint(&single).starts_with("v4|"));
         assert_ne!(fingerprint(&single), fingerprint(&striped));
         assert_ne!(fingerprint(&striped), fingerprint(&wider));
         // Flat fabrics hash their top-tier rails too.
@@ -577,6 +712,86 @@ mod tests {
     }
 
     #[test]
+    fn cand_keys_roundtrip_and_fp32_stays_bare() {
+        use WireDtype as W;
+        for cand in [
+            (A::Ring, W::F32),
+            (A::Ring, W::Bf16),
+            (A::Ring, W::Int8Block),
+            (A::RecursiveDoubling, W::Int8Block),
+            (A::hier(&[8, 128]), W::Bf16),
+        ] {
+            assert_eq!(parse_cand_key(&cand_key(cand)), Some(cand), "{cand:?}");
+        }
+        // The grammar from the module doc, verbatim.
+        assert_eq!(cand_key((A::Ring, W::Int8Block)), "ring@int8");
+        assert_eq!(cand_key((A::hier(&[8, 128]), W::Bf16)), "hier:8x128@bf16");
+        // fp32 serializes bare — pre-precision tables' keys ARE the f32
+        // columns, no migration needed.
+        assert_eq!(cand_key((A::Ring, W::F32)), "ring");
+        assert_eq!(parse_cand_key("ring"), Some((A::Ring, W::F32)));
+        assert_eq!(parse_cand_key("ring@fp32"), Some((A::Ring, W::F32)));
+        assert_eq!(parse_cand_key("ring@nope"), None);
+        assert_eq!(parse_cand_key("nope@int8"), None);
+    }
+
+    #[test]
+    fn precision_columns_have_their_own_winners_and_crossovers() {
+        use WireDtype as W;
+        let mut t = TuningTable::for_topology(&Topology::eth_10g());
+        // Latency-bound cell: f32 wins (no quantize setup to pay).
+        t.insert(
+            K::Allreduce,
+            MeasuredCell::new_cand(
+                8,
+                1 << 10,
+                vec![
+                    ((A::Ring, W::F32), 100),
+                    ((A::Ring, W::Bf16), 140),
+                    ((A::Ring, W::Int8Block), 200),
+                ],
+            ),
+        );
+        // Bandwidth-bound cell: int8 wins.
+        t.insert(
+            K::Allreduce,
+            MeasuredCell::new_cand(
+                8,
+                1 << 24,
+                vec![
+                    ((A::Ring, W::F32), 8_000),
+                    ((A::Ring, W::Bf16), 4_500),
+                    ((A::Ring, W::Int8Block), 2_600),
+                ],
+            ),
+        );
+        let any = |_: Cand| true;
+        assert_eq!(t.lookup_cand(K::Allreduce, 8, 1 << 10, &any), Some((A::Ring, W::F32)));
+        assert_eq!(
+            t.lookup_cand(K::Allreduce, 8, 1 << 24, &any),
+            Some((A::Ring, W::Int8Block))
+        );
+        // A fixed-precision menu filters the columns.
+        let bf16_only = |(_, w): Cand| w == W::Bf16;
+        assert_eq!(
+            t.lookup_cand(K::Allreduce, 8, 1 << 10, &bf16_only),
+            Some((A::Ring, W::Bf16))
+        );
+        // The algorithm-only surface still sees pure-f32 columns…
+        assert_eq!(t.lookup(K::Allreduce, 8, 1 << 24, &|_| true), Some(A::Ring));
+        assert_eq!(t.crossovers(K::Allreduce, 8), vec![]);
+        // …while the candidate crossovers report the compression switch.
+        assert_eq!(
+            t.crossovers_cand(K::Allreduce, 8),
+            vec![(1 << 24, (A::Ring, W::F32), (A::Ring, W::Int8Block))]
+        );
+        // And the whole thing round-trips through @-suffixed JSON keys.
+        let back = TuningTable::parse(&t.to_json_string()).unwrap();
+        assert_eq!(t, back);
+        assert!(t.to_json_string().contains("ring@int8"));
+    }
+
+    #[test]
     fn alg_keys_roundtrip_including_hierarchical() {
         for alg in [
             A::Ring,
@@ -609,7 +824,7 @@ mod tests {
             .iter()
             .find(|c| c.ranks == 8 && c.bytes == 1 << 10)
             .unwrap();
-        assert_eq!(replaced.timings, vec![(A::Ring, 1)]);
+        assert_eq!(replaced.timings, vec![((A::Ring, WireDtype::F32), 1)]);
         // Untunable kinds are ignored.
         t.insert(K::Barrier, cell(8, 1, &[(A::Ring, 1)]));
         assert_eq!(t.cell_count(), before);

@@ -1,0 +1,203 @@
+//! Compressed-collective invariants: encode/decode round-trips stay
+//! within each wire dtype's declared error bound, error-feedback
+//! accumulation drives the long-run quantization error of a repeated
+//! allreduce below the one-shot error, and every (algorithm ×
+//! wire-precision) pick a selection policy can emit is buildable
+//! (randomized over p ∈ 2..33 across fabric presets).
+
+use mlsl::collectives::program::{self, CollectiveKind};
+use mlsl::collectives::quant::{
+    decode, encode, max_roundtrip_error, EfState, WireDtype,
+};
+use mlsl::fabric::topology::Topology;
+use mlsl::tuner::{probe, ProbeSpec, SelectionPolicy};
+use mlsl::util::proptest::{run as prop_run, Config};
+
+fn random_grad(r: &mut mlsl::util::prng::Prng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| r.range_f32(-scale, scale)).collect()
+}
+
+#[test]
+fn prop_roundtrip_error_within_the_dtype_bound() {
+    // decode(encode(x)) must stay within max_roundtrip_error(x) — the
+    // same bound the trainer's quantization guard and the engine's
+    // error-feedback bookkeeping are derived from — and the wire size
+    // must match the dtype's advertised bytes-per-element exactly.
+    prop_run(
+        Config { cases: 200, seed: 0x9A17 },
+        |r| {
+            let n = 1 + r.usize_below(1500);
+            let scale = 0.01 + 100.0 * r.f64() as f32;
+            (random_grad(r, n, scale), r.usize_below(3))
+        },
+        |(x, wi)| {
+            let wire = WireDtype::ALL[*wi];
+            let bytes = encode(x, wire);
+            if bytes.len() != wire.wire_bytes(x.len()) {
+                return Err(format!(
+                    "{wire}: wire size {} != advertised {}",
+                    bytes.len(),
+                    wire.wire_bytes(x.len())
+                ));
+            }
+            let back = decode(&bytes, x.len(), wire);
+            let bound = max_roundtrip_error(x, wire) * (1.0 + 1e-5) + f32::EPSILON;
+            for (i, (a, b)) in x.iter().zip(&back).enumerate() {
+                let err = (a - b).abs();
+                if err > bound {
+                    return Err(format!("{wire} elem {i}: |{a} - {b}| = {err} > {bound}"));
+                }
+            }
+            if wire == WireDtype::F32 && x != &back {
+                return Err("f32 round-trip must be exact".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_error_feedback_beats_one_shot_quantization() {
+    // Repeatedly allreducing a FIXED gradient with error feedback: each
+    // round sends quantize(g + residual) and banks what the format
+    // dropped, so the sent values telescope — after K rounds the total
+    // contributed error is just the final residual, and the per-round
+    // error |r_K|/K falls well below the one-shot quantization error.
+    // Meanwhile the residual itself stays bounded (≈ δ/(1−δ) scaled),
+    // never drifting: 2× the one-shot error covers it.
+    prop_run(
+        Config { cases: 60, seed: 0xEF5D },
+        |r| {
+            let n = 1 + r.usize_below(1024);
+            let scale = 0.05 + 20.0 * r.f64() as f32;
+            (random_grad(r, n, scale), 1 + r.usize_below(2))
+        },
+        |(g, wi)| {
+            let wire = WireDtype::ALL[*wi]; // Bf16 or Int8Block
+            let delta = wire.rel_error() as f32;
+            let absmax = g.iter().fold(0f32, |a, v| a.max(v.abs()));
+            if absmax <= 0.0 {
+                return Ok(()); // degenerate all-zero draw
+            }
+            // Dtype-level one-shot error bound; the measured one-shot
+            // error must sit under it (sanity for the bound itself).
+            let one_shot_bound = delta * absmax * (1.0 + 1e-5) + f32::EPSILON * absmax;
+            if max_roundtrip_error(g, wire) > 2.0 * one_shot_bound {
+                return Err(format!(
+                    "{wire}: one-shot error {} escaped its δ·|g|∞ bound {one_shot_bound}",
+                    max_roundtrip_error(g, wire)
+                ));
+            }
+            const K: usize = 32;
+            let mut ef = EfState::new(g.len());
+            let mut worst_residual = 0f32;
+            for _ in 0..K {
+                let _wire_bytes = ef.encode_with_feedback(g, wire);
+                worst_residual = worst_residual.max(ef.residual_linf());
+            }
+            // Bounded, K-independent residual: |r| ≤ δ(|g| + |r|) per
+            // element (per block for int8) gives the δ/(1−δ) fixed
+            // point; 4δ·|g|∞ covers it with rounding headroom.
+            let cap = 4.0 * delta * absmax + 4.0 * f32::EPSILON * absmax;
+            if worst_residual > cap {
+                return Err(format!(
+                    "{wire}: residual {worst_residual} escaped the {cap} bound"
+                ));
+            }
+            // Telescoping: K sends contribute K·g − r_K, so the whole
+            // run's error is one bounded residual — amortized per round
+            // it falls K× below the one-shot error bound.
+            let amortized = ef.residual_linf() / K as f32;
+            if amortized >= one_shot_bound {
+                return Err(format!(
+                    "{wire}: amortized error {amortized} not below one-shot bound {one_shot_bound}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_precision_picks_are_always_buildable() {
+    // Whatever (algorithm, wire) pair a policy answers — analytic
+    // crossover model or measured table, contiguous world or flat
+    // strided communicator — the algorithm must build at the queried
+    // rank count. The wire dimension must never smuggle in a candidate
+    // the legality filters would have rejected.
+    let setups: Vec<(Topology, Vec<SelectionPolicy>)> = [
+        Topology::eth_10g(),
+        Topology::eth_10g_smp(2),
+        Topology::omnipath_100g_smp(4),
+    ]
+    .into_iter()
+    .map(|t| {
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 16;
+        let table = probe::tune(&t, &spec);
+        let policies = vec![
+            SelectionPolicy::Analytic,
+            SelectionPolicy::Tuned(table.clone()),
+            SelectionPolicy::TunedWithFallback(table),
+        ];
+        (t, policies)
+    })
+    .collect();
+    prop_run(
+        Config { cases: 200, seed: 0x5E1E },
+        |r| {
+            (
+                r.usize_below(3),
+                2 + r.usize_below(31), // p in 2..33
+                1 + r.usize_below(1 << 22),
+                r.usize_below(3), // menu: full / int8-only / bf16-only
+            )
+        },
+        |&(ti, p, n, mi)| {
+            let (topo, policies) = &setups[ti];
+            let bytes = (4 * n) as u64;
+            let menus: [&[WireDtype]; 3] = [
+                &WireDtype::ALL,
+                &[WireDtype::Int8Block],
+                &[WireDtype::Bf16],
+            ];
+            let menu = menus[mi];
+            let members: Vec<usize> = (0..p).collect();
+            for policy in policies {
+                let (alg, wire) = policy.choose_allreduce_wire(topo, p, bytes, menu, 1000);
+                if !menu.contains(&wire) {
+                    return Err(format!("[{}] wire {wire} not on the menu", policy.name()));
+                }
+                program::build(CollectiveKind::Allreduce, alg, p, n)
+                    .map_err(|e| format!("[{}] {alg}@{wire} p={p}: {e}", policy.name()))?;
+                let (flat, fwire) =
+                    policy.choose_flat_allreduce_wire(topo, p, bytes, menu, 1000);
+                if !menu.contains(&fwire) {
+                    return Err(format!("[{}] flat wire {fwire} off-menu", policy.name()));
+                }
+                program::build(CollectiveKind::Allreduce, flat, p, n)
+                    .map_err(|e| format!("[{}] flat {flat}@{fwire} p={p}: {e}", policy.name()))?;
+                let (malg, mwire) = policy.choose_for_members_wire(
+                    topo,
+                    &members,
+                    CollectiveKind::Allreduce,
+                    bytes,
+                    menu,
+                    1000,
+                );
+                if !menu.contains(&mwire) {
+                    return Err(format!("[{}] member wire {mwire} off-menu", policy.name()));
+                }
+                program::build(CollectiveKind::Allreduce, malg, p, n)
+                    .map_err(|e| format!("[{}] members {malg}@{mwire} p={p}: {e}", policy.name()))?;
+                // The wire-aware predictor must answer something finite
+                // for every pick it can make.
+                let t = policy.predict_allreduce_ns_wire(topo, p, bytes, menu, 1000);
+                if t == 0 || t >= u64::MAX / 8 {
+                    return Err(format!("[{}] absurd prediction {t}", policy.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
