@@ -1,0 +1,275 @@
+//! **Ablation A14**: the multi-tenant fabric — fairness under symmetric
+//! contention, bounded straggler damage, and contention-aware selection
+//! beating the quiet-fabric table under saturating background traffic.
+//!
+//! The paper's scaling numbers assume a quiet fabric; arXiv 1609.06870's
+//! survey shows shared Cloud/HPC fabrics are anything but. The
+//! observable contract this bench ASSERTS:
+//!
+//! * **fair sharing** — two identical colocated tenants time-sharing one
+//!   fabric split the egress wires near-evenly: Jain's index over their
+//!   per-tenant busy time >= 0.9 (strict-priority rails have no
+//!   starvation mode for same-priority peers);
+//! * **no straggler cascade** — one node computing 2x slower stretches
+//!   the synchronous iteration by AT MOST ~2x (the straggler's own
+//!   factor): lockstep waits expose the slowdown, they never amplify it;
+//! * **contention-aware wins under load** — a tuning table measured on
+//!   the QUIET fabric mis-ranks algorithms once saturating background
+//!   flows stall every round; the contention-aware pick (derated-fabric
+//!   re-rank from OBSERVED utilization) strictly beats the quiet-table
+//!   pick when both are timed under the same background load.
+//!
+//! Emits `BENCH_multitenant.json` (repo root).
+//!
+//! Run: `cargo bench --bench a14_multitenant`
+
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::simexec::SimCollectives;
+use mlsl::collectives::WireDtype;
+use mlsl::engine::{simulate, simulate_tenants, CommMode, EngineConfig, TenantSpec};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::{BgFlow, BgPlan, NetSim, StragglerPlan};
+use mlsl::metrics::print_table;
+use mlsl::models::ModelDesc;
+use mlsl::trace::Utilization;
+use mlsl::tuner::{tune, Contention, ProbeSpec, SelectionPolicy};
+
+const P: usize = 8;
+
+fn engine_cfg(p: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new(
+        ModelDesc::by_name("resnet50").expect("model exists"),
+        Topology::eth_10g(),
+        p,
+    );
+    cfg.mode = CommMode::BulkSync;
+    cfg.iterations = 2;
+    cfg
+}
+
+/// Saturating same-priority background: every node streams 512 KiB to
+/// its neighbor on a period matching the service time, so the NICs are
+/// ~100% busy for `horizon_ns` and every collective round queues.
+fn saturating_bg(p: usize, horizon_ns: u64) -> BgPlan {
+    let bytes: u64 = 512 << 10;
+    let period_ns = 420_000; // ~512 KiB / 1.25 GB/s, back to back
+    let reps = (horizon_ns / period_ns + 1).min(10_000) as u32;
+    let flows = (0..p)
+        .map(|src| BgFlow {
+            src,
+            dst: (src + 1) % p,
+            bytes,
+            start_ns: 0,
+            period_ns,
+            reps,
+            priority: 1,
+        })
+        .collect();
+    BgPlan { seed: 0, flows }
+}
+
+/// Time one allreduce (max rank-completion ns) under a background plan.
+fn time_under_bg(
+    topo: &Topology,
+    alg: mlsl::collectives::Algorithm,
+    elems: usize,
+    bg: &BgPlan,
+) -> u64 {
+    let progs = build(CollectiveKind::Allreduce, alg, P, elems).expect("legal algorithm");
+    let mut sim = NetSim::new(topo.clone(), P);
+    sim.set_background(bg.clone());
+    let mut exec = SimCollectives::new();
+    let mut completions = exec.post(&mut sim, 1, progs, WireDtype::F32, 1);
+    while exec.in_flight() > 0 {
+        let ev = sim.next().expect("deadlock under background");
+        exec.on_event_into(&mut sim, &ev, &mut completions);
+    }
+    completions.iter().map(|c| c.at).max().expect("ranks completed")
+}
+
+fn main() {
+    let topo = Topology::eth_10g();
+
+    // -- claim 1: two symmetric colocated tenants share fairly ----------
+    let cfg = engine_cfg(4);
+    let single = simulate(cfg.clone());
+    let two = simulate_tenants(&cfg, &TenantSpec { jobs: 2, disjoint: false }, false);
+    println!("{}", two.fairness_line());
+    let mut rows = vec![vec![
+        "1 (alone)".to_string(),
+        format!("{:.2}", single.iter_ns as f64 / 1e6),
+        "1.000".to_string(),
+    ]];
+    for (t, r) in two.reports.iter().enumerate() {
+        rows.push(vec![
+            format!("2, tenant {t}"),
+            format!("{:.2}", r.iter_ns as f64 / 1e6),
+            format!("{:.3}", r.iter_ns as f64 / single.iter_ns as f64),
+        ]);
+    }
+    print_table(
+        "A14: colocated tenants on eth10g p=4 (resnet50, bulk)",
+        &["tenants", "iter ms", "vs alone"],
+        &rows,
+    );
+    assert!(
+        two.jain >= 0.9,
+        "symmetric tenants must share near-evenly: jain = {:.3} ({:?} busy shares)",
+        two.jain,
+        two.egress_share
+    );
+    for r in &two.reports {
+        assert!(
+            r.iter_ns > single.iter_ns,
+            "sharing a fabric must cost something: {} vs alone {}",
+            r.iter_ns,
+            single.iter_ns
+        );
+    }
+
+    // -- claim 2: a 2x straggler is bounded by its own factor -----------
+    let healthy = simulate(engine_cfg(4));
+    let mut cfg = engine_cfg(4);
+    cfg.straggler = Some(StragglerPlan::parse("0:2.0", 4).expect("valid spec"));
+    let straggled = simulate(cfg);
+    let ratio = straggled.iter_ns as f64 / healthy.iter_ns as f64;
+    println!(
+        "\nstraggler: healthy {:.2} ms -> one 2x straggler {:.2} ms ({ratio:.2}x, \
+         report max {:.2}x)",
+        healthy.iter_ns as f64 / 1e6,
+        straggled.iter_ns as f64 / 1e6,
+        straggled.straggler_max_milli as f64 / 1000.0,
+    );
+    assert_eq!(straggled.straggler_max_milli, 2000, "report must surface the factor");
+    assert!(ratio > 1.0, "a 2x straggler must slow the lockstep iteration");
+    assert!(
+        ratio <= 2.05,
+        "straggler damage must not cascade past its own factor: {ratio:.3}x"
+    );
+
+    // -- claim 3: contention-aware beats the quiet table under load -----
+    // Measure a quiet-fabric tuning table at p=8 …
+    let mut spec = ProbeSpec::quick();
+    spec.max_ranks = P;
+    let table = tune(&topo, &spec);
+    let policy = SelectionPolicy::Tuned(table);
+    // … observe utilization under saturating background (one allreduce
+    // riding the loaded fabric, traced), exactly as the engine's
+    // contention-aware mode does …
+    let bg = saturating_bg(P, 60_000_000);
+    let contention = {
+        let progs = build(CollectiveKind::Allreduce, mlsl::collectives::Algorithm::Ring, P, 1 << 18)
+            .expect("ring builds");
+        let mut sim = NetSim::new(topo.clone(), P);
+        sim.set_background(bg.clone());
+        sim.set_trace(true);
+        let mut exec = SimCollectives::new();
+        let mut completions = exec.post(&mut sim, 1, progs, WireDtype::F32, 1);
+        while exec.in_flight() > 0 {
+            let ev = sim.next().expect("deadlock in utilization probe");
+            exec.on_event_into(&mut sim, &ev, &mut completions);
+        }
+        let trace = sim.take_trace().expect("tracing was on").normalized();
+        let u = Utilization::compute(&trace, P, 1, sim.now().max(1));
+        Contention::from_utilization(&u, &topo)
+    };
+    assert!(
+        !contention.is_quiet(),
+        "saturating background must register as observed contention: {contention:?}"
+    );
+    println!(
+        "\nobserved contention under saturating bg: avail {:?} milli",
+        contention.avail_milli
+    );
+
+    // … scan sizes for one where the quiet table and the contention
+    // correction disagree, then time BOTH picks under the same load.
+    let members: Vec<usize> = (0..P).collect();
+    let menu = [WireDtype::F32];
+    let mut flip = None;
+    let mut pick_rows = Vec::new();
+    for kb in [64u64, 128, 256, 384, 512, 768, 1024, 2048] {
+        let bytes = kb << 10;
+        let (quiet_pick, _) = policy.choose_for_members_wire(
+            &topo,
+            &members,
+            CollectiveKind::Allreduce,
+            bytes,
+            &menu,
+            1000,
+        );
+        let (aware_pick, _) = policy.choose_for_members_wire_contended(
+            &topo,
+            &members,
+            CollectiveKind::Allreduce,
+            bytes,
+            &menu,
+            1000,
+            Some(&contention),
+        );
+        pick_rows.push(vec![
+            format!("{kb} KiB"),
+            quiet_pick.to_string(),
+            aware_pick.to_string(),
+        ]);
+        if quiet_pick != aware_pick && flip.is_none() {
+            flip = Some((bytes, quiet_pick, aware_pick));
+        }
+    }
+    print_table(
+        &format!("A14: allreduce picks at p={P}, eth10g (quiet table vs contention-aware)"),
+        &["bytes/rank", "quiet-table pick", "contention-aware pick"],
+        &pick_rows,
+    );
+    let (bytes, quiet_pick, aware_pick) =
+        flip.expect("contention must re-rank at least one scanned size");
+    let quiet_t = time_under_bg(&topo, quiet_pick, (bytes / 4) as usize, &bg);
+    let aware_t = time_under_bg(&topo, aware_pick, (bytes / 4) as usize, &bg);
+    let speedup = quiet_t as f64 / aware_t as f64;
+    println!(
+        "\nunder saturating bg at {} KiB/rank: quiet-table {quiet_pick} {:.2} ms vs \
+         contention-aware {aware_pick} {:.2} ms ({speedup:.2}x)",
+        bytes >> 10,
+        quiet_t as f64 / 1e6,
+        aware_t as f64 / 1e6,
+    );
+    assert!(
+        aware_t < quiet_t,
+        "the contention-aware pick must strictly beat the quiet-table pick under \
+         the load that motivated it: {aware_pick} {aware_t} ns vs {quiet_pick} {quiet_t} ns"
+    );
+
+    // -- emit BENCH_multitenant.json at the repo root -------------------
+    let json = format!(
+        "{{\n  \"bench\": \"a14_multitenant\",\n  \"topology\": \"{}\",\n\
+         \"jain_two_tenants\": {:.4},\n  \"tenant_iter_ns\": [{}, {}],\n\
+         \"single_iter_ns\": {},\n\
+         \"straggler_factor\": 2.0,\n  \"straggler_ratio\": {:.4},\n\
+         \"contention_avail_milli\": {:?},\n\
+         \"flip_bytes\": {},\n  \"quiet_pick\": \"{}\",\n  \"aware_pick\": \"{}\",\n\
+         \"quiet_pick_ns\": {},\n  \"aware_pick_ns\": {},\n  \"aware_speedup\": {:.4}\n}}\n",
+        topo.name,
+        two.jain,
+        two.reports[0].iter_ns,
+        two.reports[1].iter_ns,
+        single.iter_ns,
+        ratio,
+        contention.avail_milli,
+        bytes,
+        quiet_pick,
+        aware_pick,
+        quiet_t,
+        aware_t,
+        speedup,
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_multitenant.json");
+    std::fs::write(out, &json).expect("write BENCH_multitenant.json");
+    println!("wrote {out}");
+
+    println!("\nexpected shape: two identical tenants halve the fabric (Jain ~1.0) and each");
+    println!("iteration stretches; a lone 2x straggler costs at most its own factor because");
+    println!("lockstep sync waits, it does not amplify. Under saturating background the");
+    println!("quiet-measured table still ranks by quiet-fabric wire time, but every round");
+    println!("now pays a queueing stall — the observed-utilization re-rank trades wire");
+    println!("efficiency for fewer rounds and wins back the difference. OK");
+}

@@ -215,6 +215,21 @@ fn aggregate_stats(shards: &[NetSim]) -> (SimStats, ChaosStats) {
         {
             *acc += b;
         }
+        // Per-tenant accounting (egress bytes/msgs owner-counted on the
+        // source shard, busy ns on the rail's shard): elementwise sums,
+        // resized up so a partitioned multi-tenant run loses nothing.
+        for (dst, src) in [
+            (&mut stats.tenant_bytes, &s.stats.tenant_bytes),
+            (&mut stats.tenant_msgs, &s.stats.tenant_msgs),
+            (&mut stats.tenant_busy_ns, &s.stats.tenant_busy_ns),
+        ] {
+            if dst.len() < src.len() {
+                dst.resize(src.len(), 0);
+            }
+            for (acc, v) in dst.iter_mut().zip(src.iter()) {
+                *acc += v;
+            }
+        }
         chaos.zero_bw_windows = chaos.zero_bw_windows.max(s.chaos_stats.zero_bw_windows);
         chaos.latency_spikes += s.chaos_stats.latency_spikes;
         chaos.rails_killed += s.chaos_stats.rails_killed;

@@ -216,6 +216,38 @@ pub fn engine_config(args: &Args) -> Result<EngineConfig> {
         cfg.chaos =
             Some(crate::fabric::ChaosPlan::generate(seed, &cfg.topo, cfg.dist.world(), horizon));
     }
+    // Persistent stragglers: `--straggler node:factor[,node:factor…]`
+    // (`all:factor` pins every node). Unlike `--chaos` slowdown windows
+    // these never expire; they compose multiplicatively with chaos.
+    // Validated against the world size here, same as `--churn`.
+    if let Some(spec) = args.get("straggler").or_else(|| file.get("straggler")) {
+        let plan = crate::fabric::StragglerPlan::parse(spec, cfg.dist.world())
+            .map_err(|e| anyhow!("--straggler: {e}"))?;
+        if !plan.is_quiet() {
+            cfg.straggler = Some(plan);
+        }
+    }
+    // Background traffic: `--background <seed>` installs a seeded
+    // noisy-neighbor plan ([`crate::fabric::BgPlan::generate`]) over the
+    // same horizon the chaos planner uses — deterministic in (seed,
+    // topology, world, horizon), so noisy runs replay exactly.
+    if let Some(seed) = args.get("background").or_else(|| file.get("background")) {
+        let seed: u64 = seed.parse().context("--background")?;
+        let horizon = cfg
+            .compute_ns_per_iter()
+            .saturating_mul((cfg.iterations as u64 + 1) * 2)
+            .max(1_000_000);
+        cfg.background =
+            Some(crate::fabric::BgPlan::generate(seed, &cfg.topo, cfg.dist.world(), horizon));
+    }
+    // Adaptive precision backoff threshold: with `--wire-dtype auto`,
+    // a layer whose error-feedback residual bound approaches this is
+    // floored back to wider wire dtypes (see `EngineConfig::ef_tolerance`).
+    let ef_tol: f64 = get("ef-tolerance", "0.05").parse().context("--ef-tolerance")?;
+    if !(0.0..=1.0).contains(&ef_tol) {
+        return Err(anyhow!("--ef-tolerance must lie in [0, 1], got {ef_tol}"));
+    }
+    cfg.ef_tolerance = ef_tol;
     // Measured collective selection: `--tuning-table <path>` loads a table
     // produced by `mlsl tune` and installs it with analytic fallback (a
     // table whose fingerprint does not match this topology is ignored at
@@ -338,6 +370,41 @@ mod tests {
         assert!(engine_config(&args("--nodes 4 --churn nonsense")).is_err());
         assert!(engine_config(&args("--nodes 1 --churn leave:0@1")).is_err());
         assert!(engine_config(&args("--chaos notanumber")).is_err());
+    }
+
+    #[test]
+    fn straggler_background_and_tolerance_flags_thread_through() {
+        let cfg = engine_config(&args("")).unwrap();
+        assert!(cfg.straggler.is_none());
+        assert!(cfg.background.is_none());
+        assert_eq!(cfg.ef_tolerance, 0.05);
+        // Stragglers parse and validate against the world size.
+        let cfg = engine_config(&args("--nodes 4 --straggler 1:2.0,3:1.5")).unwrap();
+        let plan = cfg.straggler.unwrap();
+        assert_eq!(plan.factor_milli, vec![1000, 2000, 1000, 1500]);
+        // An all-healthy spec installs nothing (stays on the quiet path).
+        assert!(engine_config(&args("--nodes 4 --straggler all:1.0"))
+            .unwrap()
+            .straggler
+            .is_none());
+        assert!(engine_config(&args("--nodes 4 --straggler 9:2.0")).is_err());
+        assert!(engine_config(&args("--nodes 4 --straggler 0:200.0")).is_err());
+        assert!(engine_config(&args("--nodes 4 --straggler nonsense")).is_err());
+        // Background plans are deterministic in the seed.
+        let a = engine_config(&args("--nodes 8 --background 7")).unwrap();
+        let b = engine_config(&args("--nodes 8 --background 7")).unwrap();
+        assert_eq!(a.background, b.background);
+        assert!(a.background.is_some());
+        let c = engine_config(&args("--nodes 8 --background 8")).unwrap();
+        assert_ne!(a.background, c.background);
+        assert!(engine_config(&args("--background notanumber")).is_err());
+        // EF tolerance parses and is range-checked.
+        assert_eq!(
+            engine_config(&args("--ef-tolerance 0.01")).unwrap().ef_tolerance,
+            0.01
+        );
+        assert!(engine_config(&args("--ef-tolerance 1.5")).is_err());
+        assert!(engine_config(&args("--ef-tolerance nope")).is_err());
     }
 
     #[test]

@@ -35,8 +35,10 @@
 //! §"Partitioned mode".
 
 pub mod report;
+pub mod tenants;
 
 pub use report::Report;
+pub use tenants::{simulate_tenants, TenantSpec, TenantsReport};
 
 use std::collections::HashMap;
 
@@ -44,12 +46,12 @@ use crate::collectives::program::{build, survivors, CollectiveKind};
 use crate::collectives::simexec::SimCollectives;
 use crate::collectives::{Algorithm, PriorityPolicy, WireDtype};
 use crate::fabric::topology::{NodeSpec, Topology};
-use crate::fabric::{ChaosPlan, NetSim, SimEvent};
+use crate::fabric::{BgPlan, ChaosPlan, NetSim, SimEvent, StragglerPlan, TENANT_TAG_SHIFT};
 use crate::metrics::Timeline;
 use crate::mlsl::Distribution;
 use crate::trace::TraceEvent;
 use crate::models::ModelDesc;
-use crate::tuner::SelectionPolicy;
+use crate::tuner::{Contention, SelectionPolicy};
 use crate::{Ns, Priority, Rank};
 
 /// Program-cache key: (kind, algorithm, wire, member count, elems).
@@ -210,6 +212,20 @@ pub struct EngineConfig {
     /// Seeded fault injection installed into the fabric (`--chaos`):
     /// link flaps, dead NIC rails, node slowdowns. None = healthy run.
     pub chaos: Option<ChaosPlan>,
+    /// Persistent per-node compute slowdown factors (`--straggler`) —
+    /// unlike chaos's transient windows these hold for the whole run.
+    /// None = all nodes healthy.
+    pub straggler: Option<StragglerPlan>,
+    /// Seeded deterministic background traffic injected into the fabric
+    /// (`--background`): foreign flows that contend for egress but are
+    /// invisible to the collectives layer. None = quiet fabric.
+    pub background: Option<BgPlan>,
+    /// Error-feedback residual tolerance driving adaptive precision
+    /// backoff under `--wire-dtype auto`: when a gradient layer's
+    /// projected EF residual bound would cross this value, the layer's
+    /// wire menu is floored to the next-safer precision for subsequent
+    /// iterations (one-shot warning + `quant.backoff` counter).
+    pub ef_tolerance: f64,
     /// Per-(node, layer, iteration) compute jitter: relative std-dev of a
     /// deterministic log-normal-ish perturbation. Real clusters have
     /// stragglers (OS noise, memory layout, thermal); every
@@ -249,6 +265,9 @@ impl EngineConfig {
             trace: false,
             churn: None,
             chaos: None,
+            straggler: None,
+            background: None,
+            ef_tolerance: 0.05,
             jitter: 0.0,
             sim_threads: 1,
         }
@@ -275,6 +294,14 @@ impl EngineConfig {
             .and_then(|c| c.slowdown_milli.iter().copied().max())
             .unwrap_or(1000)
             .max(1000)
+    }
+
+    /// Worst combined per-node compute slowdown: the worst chaos window
+    /// compounded with the worst persistent straggler factor (both 1000
+    /// = healthy). This is what the wire chooser prices quantization at.
+    pub fn max_slowdown_milli(&self) -> u64 {
+        let s = self.straggler.as_ref().map_or(1000, |s| s.max_milli()).max(1000);
+        self.max_chaos_slowdown_milli() * s / 1000
     }
 
     /// Standalone collective timing under this config's fabric:
@@ -384,13 +411,18 @@ struct NodeState {
     compute_busy_ns: Ns,
 }
 
-/// Opaque compute tag encoding (phase, layer).
-fn tag_of(phase: NodePhase) -> u64 {
-    match phase {
+/// Opaque compute tag encoding (tenant, phase, layer): the tenant rides
+/// bits 48.., the phase discriminant bits 32..48, the layer the low 32.
+/// (Message tags use a DIFFERENT tenant encoding — collective-id bit
+/// [`TENANT_TAG_SHIFT`] — because compute tags never cross a wire; the
+/// multi-tenant driver routes `ComputeDone` by `tag >> 48` alone.)
+fn tag_of(tenant: usize, phase: NodePhase) -> u64 {
+    let base = match phase {
         NodePhase::FwdCompute(l) => 1 << 32 | l as u64,
         NodePhase::BwdCompute(l) => 2 << 32 | l as u64,
         _ => unreachable!("only computes carry tags"),
-    }
+    };
+    (tenant as u64) << 48 | base
 }
 
 /// Inverse of [`tag_of`] for the node-0 Gantt: `f{l}` / `b{l}` labels
@@ -401,17 +433,29 @@ pub fn compute_label(node: Rank, tag: u64) -> Option<String> {
         return None;
     }
     let l = tag & 0xFFFF_FFFF;
-    match tag >> 32 {
+    match (tag >> 32) & 0xFFFF {
         1 => Some(format!("f{l}")),
         2 => Some(format!("b{l}")),
         _ => None,
     }
 }
 
-/// The simulated training run.
-pub struct Engine {
+/// One training job's complete driver state — everything the simulated
+/// run owns EXCEPT the fabric. The single-job [`Engine`] pairs one
+/// `Job` with its own [`NetSim`]; the multi-tenant driver
+/// ([`tenants::simulate_tenants`]) runs several `Job`s over one shared
+/// fabric, which is why every method borrows `sim` instead of owning
+/// it.
+pub(crate) struct Job {
     cfg: EngineConfig,
-    sim: NetSim,
+    /// Accounting slot in the shared fabric (0 for the single-job
+    /// engine). Collective ids carry it at [`TENANT_TAG_SHIFT`];
+    /// compute tags at bit 48 (see [`tag_of`]).
+    tenant: usize,
+    /// Fabric rank of this job's local rank 0: 0 for colocated tenancy
+    /// (jobs share nodes and contend for egress), `tenant · p` for
+    /// disjoint tenancy (bitwise-isolated rank blocks).
+    base: Rank,
     colls: SimCollectives,
     nodes: Vec<NodeState>,
     metas: HashMap<u64, CommMeta>,
@@ -427,8 +471,11 @@ pub struct Engine {
     /// Memoized (algorithm, wire) decisions per (kind, member set,
     /// per-rank elems). The member set is part of the key, so a churn
     /// rebuild naturally misses and re-selects for the survivor set —
-    /// stale entries are never consulted.
-    sel_cache: HashMap<(CollectiveKind, Vec<Rank>, usize), (Algorithm, WireDtype)>,
+    /// stale entries are never consulted. The final component is the
+    /// wire-menu length offered at selection time, so a precision
+    /// backoff (which shrinks a layer's menu) naturally misses and
+    /// re-selects instead of replaying the pre-backoff pick.
+    sel_cache: HashMap<(CollectiveKind, Vec<Rank>, usize, usize), (Algorithm, WireDtype)>,
     /// Built programs keyed by (kind, algorithm, WIRE, member count,
     /// elems). Programs repeat every iteration (same layers, same
     /// communicators), so steady state is pure reuse. The wire dtype is
@@ -445,6 +492,20 @@ pub struct Engine {
     /// by original id (never renumbered), so the state survives churn:
     /// a rank that leaves and rejoins resumes its own residual.
     ef_bound: Vec<f64>,
+    /// Per-LAYER EF residual bound (symmetric across the lockstep
+    /// members, so one scalar per gradient bucket suffices). Feeds the
+    /// adaptive precision backoff against [`EngineConfig::ef_tolerance`].
+    ef_layer: Vec<f64>,
+    /// Per-layer wire-menu floor under `--wire-dtype auto`: the layer's
+    /// candidate menu is `WireDtype::ALL[..ALL.len() - floor]`, so a
+    /// backed-off bucket can never re-pick the precision that tripped
+    /// its residual bound.
+    wire_floor: Vec<usize>,
+    /// One-shot latch for the backoff warning.
+    backoff_warned: bool,
+    /// Observed-load correction applied to selection (multi-tenant
+    /// driver, `--contention-aware`). None = trust the quiet tables.
+    contention: Option<Contention>,
     /// Human-readable record of applied membership changes.
     pub churn_log: Vec<String>,
     /// Earliest observed fwd(0) start per iteration index (cluster-level),
@@ -452,18 +513,10 @@ pub struct Engine {
     first_starts: Vec<Ns>,
 }
 
-impl Engine {
-    pub fn new(cfg: EngineConfig) -> Self {
+impl Job {
+    pub(crate) fn new(cfg: EngineConfig, tenant: usize, base: Rank) -> Self {
         let p = cfg.dist.world();
         let nl = cfg.model.layers.len();
-        let mut sim = NetSim::new(cfg.topo.clone(), p);
-        if let Some(plan) = cfg.chaos.clone() {
-            sim.set_chaos(plan);
-        }
-        // The Gantt renderer is a view over the trace store, so asking
-        // for the timeline turns tracing on too (still zero impact on
-        // the event stream — see `fabric/sim.rs`).
-        sim.set_trace(cfg.trace || cfg.record_timeline);
         let nodes = (0..p)
             .map(|_| NodeState {
                 phase: NodePhase::FwdWait(0),
@@ -476,85 +529,63 @@ impl Engine {
             .collect();
         Self {
             cfg,
-            sim,
+            tenant,
+            base,
             colls: SimCollectives::new(),
             nodes,
             metas: HashMap::new(),
             open: HashMap::new(),
-            next_id: 1,
+            // Disjoint per-tenant collective-id spaces: tenant 0 counts
+            // from 1 exactly like the pre-tenant engine, so single-job
+            // runs stay bitwise identical.
+            next_id: 1 + ((tenant as u64) << TENANT_TAG_SHIFT),
             active: vec![true; p],
             churn_idx: 0,
             sel_cache: HashMap::new(),
             prog_cache: HashMap::new(),
             ef_bound: vec![0.0; p],
+            ef_layer: vec![0.0; nl],
+            wire_floor: vec![0; nl],
+            backoff_warned: false,
+            contention: None,
             churn_log: Vec::new(),
             first_starts: Vec::new(),
         }
     }
 
-    /// Run the configured number of iterations; produce the report.
-    pub fn run(mut self) -> Report {
-        self.run_to_completion()
+    /// Every node finished its configured iterations.
+    fn done(&self) -> bool {
+        self.nodes.iter().all(|n| n.phase == NodePhase::Done)
     }
 
-    /// [`Engine::run`] on a borrowed engine (tests inspect post-run
-    /// bookkeeping, e.g. that `metas` was garbage-collected).
-    fn run_to_completion(&mut self) -> Report {
-        let p = self.cfg.dist.world();
-        let total_iters = self.cfg.iterations + 1; // + warmup
-        for n in 0..p {
-            self.try_advance(n);
+    /// Slowest node's iteration index (the job's lockstep progress).
+    fn min_iter(&self) -> usize {
+        self.nodes.iter().map(|n| n.iter).min().unwrap_or(0)
+    }
+
+    /// Install (or replace) the observed-load correction; memoized
+    /// selections are dropped so every communicator re-ranks under it.
+    fn set_contention(&mut self, c: Contention) {
+        self.sel_cache.clear();
+        self.contention = Some(c);
+    }
+
+    /// Feed one fabric event through this job's collective executor and
+    /// its completion handlers. Deliveries tagged for other tenants (or
+    /// background flows) miss `colls`' id table and are ignored — the
+    /// multi-tenant driver routes by tag anyway, this is the backstop.
+    fn on_sim_event(
+        &mut self,
+        sim: &mut NetSim,
+        ev: &SimEvent,
+        completions: &mut Vec<crate::collectives::simexec::Completion>,
+    ) {
+        completions.clear();
+        self.colls.on_event_into(sim, ev, completions);
+        for i in 0..completions.len() {
+            let (cid, rank) = (completions[i].coll_id, completions[i].rank);
+            self.on_comm_done(sim, cid, rank);
         }
-        // Event loop. One scratch completion buffer serves the whole
-        // run — on_event_into appends into it instead of allocating a
-        // fresh Vec per delivered message (this loop is the L3 hot path).
-        let mut completions: Vec<crate::collectives::simexec::Completion> = Vec::new();
-        while self.nodes.iter().any(|n| n.phase != NodePhase::Done) {
-            let Some(ev) = self.sim.next() else {
-                panic!(
-                    "simulation deadlock: phases={:?}",
-                    self.nodes.iter().map(|n| (n.iter, n.phase)).collect::<Vec<_>>()
-                );
-            };
-            match ev {
-                SimEvent::ComputeDone { node, tag, at } => {
-                    self.on_compute_done(node, tag, at, total_iters);
-                }
-                ev => {
-                    completions.clear();
-                    self.colls.on_event_into(&mut self.sim, &ev, &mut completions);
-                    for c in completions.drain(..) {
-                        self.on_comm_done(c.coll_id, c.rank);
-                    }
-                }
-            }
-        }
-        // Drain trailing collectives (the last iteration's gradient
-        // exchanges) so traffic accounting is policy-independent.
-        while self.colls.in_flight() > 0 {
-            let Some(ev) = self.sim.next() else { break };
-            completions.clear();
-            self.colls.on_event_into(&mut self.sim, &ev, &mut completions);
-            for c in completions.drain(..) {
-                self.on_comm_done(c.coll_id, c.rank);
-            }
-        }
-        let trace = self.sim.take_trace().map(|t| t.normalized());
-        let timeline = trace
-            .as_ref()
-            .map(|t| Timeline::from_trace(t, compute_label))
-            .unwrap_or_default();
-        let iter_starts: Vec<Vec<Ns>> =
-            self.nodes.iter().map(|n| n.iter_starts.clone()).collect();
-        report::build_report(
-            &self.cfg,
-            &self.sim,
-            &iter_starts,
-            &self.first_starts,
-            self.churn_log.clone(),
-            timeline,
-            trace,
-        )
     }
 
     // -- state machine ------------------------------------------------------
@@ -589,7 +620,7 @@ impl Engine {
     }
 
     /// Try to move node `n` forward through waits; start computes.
-    fn try_advance(&mut self, n: Rank) {
+    fn try_advance(&mut self, sim: &mut NetSim, n: Rank) {
         loop {
             match self.nodes[n].phase {
                 NodePhase::FwdWait(l) => {
@@ -602,7 +633,7 @@ impl Engine {
                         return; // blocked on last iteration's gradient
                     }
                     if l == 0 {
-                        let now = self.sim.now();
+                        let now = sim.now();
                         self.nodes[n].iter_starts.push(now);
                         // Cluster-level first start of this iteration
                         // index (sim time is monotonic, so the first
@@ -614,11 +645,11 @@ impl Engine {
                         self.first_starts[iter] = self.first_starts[iter].min(now);
                     }
                     self.nodes[n].phase = NodePhase::FwdCompute(l);
-                    self.start_compute(n, NodePhase::FwdCompute(l));
+                    self.start_compute(sim, n, NodePhase::FwdCompute(l));
                     return;
                 }
                 NodePhase::BwdCompute(l) => {
-                    self.start_compute(n, NodePhase::BwdCompute(l));
+                    self.start_compute(sim, n, NodePhase::BwdCompute(l));
                     return;
                 }
                 NodePhase::FwdAct(_) | NodePhase::BwdAct(_) | NodePhase::BulkWait => return,
@@ -628,7 +659,7 @@ impl Engine {
         }
     }
 
-    fn start_compute(&mut self, n: Rank, phase: NodePhase) {
+    fn start_compute(&mut self, sim: &mut NetSim, n: Rank, phase: NodePhase) {
         let (l, fwd) = match phase {
             NodePhase::FwdCompute(l) => (l, true),
             NodePhase::BwdCompute(l) => (l, false),
@@ -637,27 +668,29 @@ impl Engine {
         let dur = self.compute_ns_for(n, self.nodes[n].iter, l, fwd);
         self.nodes[n].compute_busy_ns += dur;
         if self.cfg.gated() {
-            self.sim.set_comm_gated(n, true);
+            sim.set_comm_gated(self.base + n, true);
         }
         // No timeline recording here: the traced compute span (see
         // [`NetSim::compute`]) is the single source the Gantt renders.
-        self.sim.compute(n, dur, tag_of(phase));
+        sim.compute(self.base + n, dur, tag_of(self.tenant, phase));
     }
 
-    fn on_compute_done(&mut self, n: Rank, tag: u64, _at: Ns, total_iters: usize) {
+    /// Handle a compute completion. `n` is the JOB-LOCAL rank (the
+    /// caller subtracts `base`); `tag` still carries the tenant bits.
+    fn on_compute_done(&mut self, sim: &mut NetSim, n: Rank, tag: u64, _at: Ns, total_iters: usize) {
         if self.cfg.gated() {
-            self.sim.set_comm_gated(n, false);
+            sim.set_comm_gated(self.base + n, false);
         }
         let l = (tag & 0xFFFF_FFFF) as usize;
-        let is_fwd = tag >> 32 == 1;
+        let is_fwd = (tag >> 32) & 0xFFFF == 1;
         if is_fwd {
             debug_assert_eq!(self.nodes[n].phase, NodePhase::FwdCompute(l));
             // Within-group activation exchange (hybrid/model parallel).
-            if self.issue_act(n, l, true) {
+            if self.issue_act(sim, n, l, true) {
                 self.nodes[n].phase = NodePhase::FwdAct(l);
             } else {
                 self.nodes[n].phase = NodePhase::FwdWait(l + 1);
-                self.try_advance(n);
+                self.try_advance(sim, n);
             }
         } else {
             debug_assert_eq!(self.nodes[n].phase, NodePhase::BwdCompute(l));
@@ -665,21 +698,21 @@ impl Engine {
             if self.cfg.model.layers[l].has_weights() && self.cfg.dist.num_groups() > 1 {
                 match self.cfg.mode {
                     CommMode::BulkSync => {} // deferred to end of backward
-                    _ => self.issue_grad(n, l),
+                    _ => self.issue_grad(sim, n, l),
                 }
             }
-            if self.issue_act(n, l, false) {
+            if self.issue_act(sim, n, l, false) {
                 self.nodes[n].phase = NodePhase::BwdAct(l);
             } else {
-                self.after_bwd_step(n, l, total_iters);
+                self.after_bwd_step(sim, n, l, total_iters);
             }
         }
     }
 
-    fn after_bwd_step(&mut self, n: Rank, l: usize, total_iters: usize) {
+    fn after_bwd_step(&mut self, sim: &mut NetSim, n: Rank, l: usize, total_iters: usize) {
         if l > 0 {
             self.nodes[n].phase = NodePhase::BwdCompute(l - 1);
-            self.try_advance(n);
+            self.try_advance(sim, n);
             return;
         }
         // Backward finished.
@@ -690,17 +723,17 @@ impl Engine {
                 .filter(|l| self.cfg.model.layers[*l].has_weights())
                 .collect();
             for l in layers {
-                self.issue_grad(n, l);
+                self.issue_grad(sim, n, l);
             }
             if self.nodes[n].grads_outstanding > 0 {
                 self.nodes[n].phase = NodePhase::BulkWait;
                 return;
             }
         }
-        self.finish_iteration(n, total_iters);
+        self.finish_iteration(sim, n, total_iters);
     }
 
-    fn finish_iteration(&mut self, n: Rank, total_iters: usize) {
+    fn finish_iteration(&mut self, sim: &mut NetSim, n: Rank, total_iters: usize) {
         self.nodes[n].iter += 1;
         // Elastic churn: park at the first boundary past the next
         // unapplied event; the change applies once the whole cluster is
@@ -712,7 +745,7 @@ impl Engine {
         });
         if must_hold {
             self.nodes[n].phase = NodePhase::Hold;
-            self.maybe_apply_churn(total_iters);
+            self.maybe_apply_churn(sim, total_iters);
             return;
         }
         if self.nodes[n].iter >= total_iters {
@@ -720,7 +753,7 @@ impl Engine {
             return;
         }
         self.nodes[n].phase = NodePhase::FwdWait(0);
-        self.try_advance(n);
+        self.try_advance(sim, n);
     }
 
     /// Apply every churn event due at the current boundary once the
@@ -728,7 +761,7 @@ impl Engine {
     /// the event's iteration, nothing in flight, nothing half-joined.
     /// Then release the held survivors (and any joiners) into the next
     /// iteration. Safe to call eagerly — it is a no-op until quiesced.
-    fn maybe_apply_churn(&mut self, total_iters: usize) {
+    fn maybe_apply_churn(&mut self, sim: &mut NetSim, total_iters: usize) {
         let nl = self.layer_count();
         let mut applied = false;
         loop {
@@ -794,7 +827,7 @@ impl Engine {
                     self.nodes[i].phase = NodePhase::Done;
                 } else {
                     self.nodes[i].phase = NodePhase::FwdWait(0);
-                    self.try_advance(i);
+                    self.try_advance(sim, i);
                 }
             }
         }
@@ -805,7 +838,7 @@ impl Engine {
     /// Issue (or join) the gradient allreduce for layer `l`. Non-blocking:
     /// completion flips `grad_done[l]` consumed by the NEXT iteration's
     /// forward pass.
-    fn issue_grad(&mut self, n: Rank, l: usize) {
+    fn issue_grad(&mut self, sim: &mut NetSim, n: Rank, l: usize) {
         let iter = self.nodes[n].iter;
         self.nodes[n].grad_done[l] = false;
         self.nodes[n].grads_outstanding += 1;
@@ -820,12 +853,12 @@ impl Engine {
             }
             _ => 128,
         };
-        self.join_or_post(CommKind::Grad { layer: l }, iter, group_key, n, members, elems, priority);
+        self.join_or_post(sim, CommKind::Grad { layer: l }, iter, group_key, n, members, elems, priority);
     }
 
     /// Issue (or join) the within-group activation exchange after layer
     /// `l`; returns false when none is needed.
-    fn issue_act(&mut self, n: Rank, l: usize, fwd: bool) -> bool {
+    fn issue_act(&mut self, sim: &mut NetSim, n: Rank, l: usize, fwd: bool) -> bool {
         let g = self.cfg.dist.group_size();
         if g <= 1 || self.cfg.model.layers[l].out_act_elems == 0 {
             return false;
@@ -838,15 +871,17 @@ impl Engine {
         let elems = self.cfg.model.layers[l].out_act_elems * self.cfg.batch * g;
         let kind = if fwd { CommKind::FwdAct { layer: l } } else { CommKind::BwdAct { layer: l } };
         // "activation communication must be prioritized": class 0.
-        self.join_or_post(kind, iter, group_key, n, members, elems, 0);
+        self.join_or_post(sim, kind, iter, group_key, n, members, elems, 0);
         true
     }
 
     /// Join a pending collective or create it; post to the fabric once the
-    /// last member joins.
+    /// last member joins. `members` are job-local ranks; the fabric sees
+    /// them shifted by `base`.
     #[allow(clippy::too_many_arguments)]
     fn join_or_post(
         &mut self,
+        sim: &mut NetSim,
         kind: CommKind,
         iter: usize,
         group_key: usize,
@@ -857,7 +892,7 @@ impl Engine {
     ) {
         if members.len() <= 1 {
             // Degenerate communicator: instantly complete.
-            self.complete_comm_for(kind, n);
+            self.complete_comm_for(sim, kind, n);
             return;
         }
         let key = (kind, iter, group_key);
@@ -897,24 +932,52 @@ impl Engine {
             // memoized per (kind, member set, elems): the same layer's
             // communicator repeats every iteration.
             let bytes = (4 * elems) as u64;
-            let sel_key = (ckind, members.clone(), elems);
+            // The fabric-rank view of the communicator: identical to the
+            // local view for the single-job engine (base 0), shifted for
+            // disjoint-tenancy jobs — tier alignment is a property of
+            // where the ranks actually sit on the fabric.
+            let gmembers: Vec<Rank> =
+                members.iter().map(|r| r + self.base).collect();
+            // Adaptive precision backoff floors a gradient layer's wire
+            // menu once its EF residual bound nears the tolerance.
+            let menu: &[WireDtype] = match kind {
+                CommKind::Grad { layer } if self.cfg.wire_auto => {
+                    &WireDtype::ALL[..WireDtype::ALL.len() - self.wire_floor[layer]]
+                }
+                _ => &WireDtype::ALL,
+            };
+            let sel_key = (ckind, members.clone(), elems, menu.len());
             let (alg, wire) = match self.sel_cache.get(&sel_key) {
                 Some(&cached) => cached,
                 None => {
                     let picked = if self.cfg.wire_auto {
-                        self.cfg.selection.choose_for_members_wire(
+                        self.cfg.selection.choose_for_members_wire_contended(
                             &self.cfg.topo,
-                            &members,
+                            &gmembers,
                             ckind,
                             bytes,
-                            &WireDtype::ALL,
-                            self.cfg.max_chaos_slowdown_milli(),
+                            menu,
+                            self.cfg.max_slowdown_milli(),
+                            self.contention.as_ref(),
                         )
+                    } else if self.contention.is_some() {
+                        // Fixed wire: contention re-ranks the algorithm
+                        // only, the precision stays what the user asked.
+                        let (alg, _) = self.cfg.selection.choose_for_members_wire_contended(
+                            &self.cfg.topo,
+                            &gmembers,
+                            ckind,
+                            bytes,
+                            &[self.cfg.wire],
+                            self.cfg.max_slowdown_milli(),
+                            self.contention.as_ref(),
+                        );
+                        (alg, self.cfg.wire)
                     } else {
                         (
                             self.cfg.selection.choose_for_members(
                                 &self.cfg.topo,
-                                &members,
+                                &gmembers,
                                 ckind,
                                 bytes,
                             ),
@@ -941,15 +1004,20 @@ impl Engine {
                 for &r in &members {
                     self.ef_bound[r] = delta * (1.0 + self.ef_bound[r]);
                 }
+                if let CommKind::Grad { layer } = kind {
+                    let bound = delta * (1.0 + self.ef_layer[layer]);
+                    self.ef_layer[layer] = bound;
+                    self.maybe_backoff(layer, wire, bound);
+                }
             }
-            if self.sim.trace_enabled() && members.contains(&0) {
-                let at = self.sim.now();
+            if self.tenant == 0 && sim.trace_enabled() && members.contains(&0) {
+                let at = sim.now();
                 let label = match kind {
                     CommKind::Grad { layer } => format!("g{layer}"),
                     CommKind::FwdAct { layer } => format!("a{layer}"),
                     CommKind::BwdAct { layer } => format!("x{layer}"),
                 };
-                self.sim.trace_push(TraceEvent::Mark {
+                sim.trace_push(TraceEvent::Mark {
                     node: 0,
                     at,
                     track: "issue".into(),
@@ -957,20 +1025,52 @@ impl Engine {
                 });
             }
             let completions = self.colls.post_mapped(
-                &mut self.sim,
+                sim,
                 id,
                 programs,
-                members,
+                gmembers,
                 wire,
                 priority,
             );
             for c in completions {
-                self.on_comm_done(c.coll_id, c.rank);
+                self.on_comm_done(sim, c.coll_id, c.rank);
             }
         }
     }
 
-    fn on_comm_done(&mut self, coll_id: u64, node: Rank) {
+    /// Adaptive precision backoff: if the NEXT compressed exchange at
+    /// `wire` would push `layer`'s EF residual bound past the configured
+    /// tolerance, floor the layer's auto menu below `wire` so subsequent
+    /// iterations re-select from the safer precisions only.
+    fn maybe_backoff(&mut self, layer: usize, wire: WireDtype, bound: f64) {
+        if !self.cfg.wire_auto
+            || wire.rel_error() * (1.0 + bound) <= self.cfg.ef_tolerance
+        {
+            return;
+        }
+        let Some(idx) = WireDtype::ALL.iter().position(|w| *w == wire) else {
+            return;
+        };
+        let floor = WireDtype::ALL.len() - idx; // menu shrinks to ALL[..idx]
+        if idx == 0 || self.wire_floor[layer] >= floor {
+            return; // f32 cannot back off further / already floored
+        }
+        self.wire_floor[layer] = floor;
+        crate::metrics::registry::inc("quant.backoff");
+        if !self.backoff_warned {
+            self.backoff_warned = true;
+            crate::util::warn(format!(
+                "quantization backoff: layer {layer} EF residual bound {bound:.5} \
+                 near tolerance {:.5} — wire menu floored below {wire:?}",
+                self.cfg.ef_tolerance
+            ));
+        }
+    }
+
+    /// Handle one rank's collective completion. `rank` is the FABRIC
+    /// rank simexec reports; job-local bookkeeping subtracts `base`.
+    fn on_comm_done(&mut self, sim: &mut NetSim, coll_id: u64, rank: Rank) {
+        let node = rank - self.base;
         let meta = self.metas.get_mut(&coll_id).expect("known collective");
         let kind = meta.kind;
         meta.remaining = meta.remaining.saturating_sub(1);
@@ -979,7 +1079,7 @@ impl Engine {
             // meta so `metas` stays bounded across iterations.
             self.metas.remove(&coll_id);
         }
-        self.complete_comm_for(kind, node);
+        self.complete_comm_for(sim, kind, node);
         // A completion may have been the last thing churn was quiescing
         // on (held nodes' trailing gradient exchanges draining).
         if self
@@ -989,21 +1089,21 @@ impl Engine {
             .is_some_and(|c| self.churn_idx < c.events.len())
         {
             let total = self.total_iters();
-            self.maybe_apply_churn(total);
+            self.maybe_apply_churn(sim, total);
         }
     }
 
-    fn complete_comm_for(&mut self, kind: CommKind, node: Rank) {
+    fn complete_comm_for(&mut self, sim: &mut NetSim, kind: CommKind, node: Rank) {
         match kind {
             CommKind::Grad { layer } => {
                 self.nodes[node].grad_done[layer] = true;
                 self.nodes[node].grads_outstanding =
                     self.nodes[node].grads_outstanding.saturating_sub(1);
                 match self.nodes[node].phase {
-                    NodePhase::FwdWait(l) if l == layer => self.try_advance(node),
+                    NodePhase::FwdWait(l) if l == layer => self.try_advance(sim, node),
                     NodePhase::BulkWait if self.nodes[node].grads_outstanding == 0 => {
                         let total = self.total_iters();
-                        self.finish_iteration(node, total);
+                        self.finish_iteration(sim, node, total);
                     }
                     _ => {}
                 }
@@ -1011,12 +1111,12 @@ impl Engine {
             CommKind::FwdAct { layer } => {
                 debug_assert_eq!(self.nodes[node].phase, NodePhase::FwdAct(layer));
                 self.nodes[node].phase = NodePhase::FwdWait(layer + 1);
-                self.try_advance(node);
+                self.try_advance(sim, node);
             }
             CommKind::BwdAct { layer } => {
                 debug_assert_eq!(self.nodes[node].phase, NodePhase::BwdAct(layer));
                 let total = self.total_iters();
-                self.after_bwd_step(node, layer, total);
+                self.after_bwd_step(sim, node, layer, total);
             }
         }
     }
@@ -1041,6 +1141,119 @@ impl Engine {
             .filter(|(_, a)| **a)
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// Sum over iteration indices of the spread between the first and
+    /// last node to reach that iteration's fwd(0) — the synchronization
+    /// cost a straggler induces at every lockstep boundary.
+    fn boundary_spread_ns(&self) -> Ns {
+        let longest = self.nodes.iter().map(|n| n.iter_starts.len()).max().unwrap_or(0);
+        let mut total = 0;
+        for i in 0..longest {
+            let starts = self.nodes.iter().filter_map(|n| n.iter_starts.get(i).copied());
+            let (mut lo, mut hi, mut any) = (Ns::MAX, 0, false);
+            for s in starts {
+                lo = lo.min(s);
+                hi = hi.max(s);
+                any = true;
+            }
+            if any {
+                total += hi - lo;
+            }
+        }
+        total
+    }
+}
+
+/// The simulated training run: one [`Job`] driving its own fabric.
+pub struct Engine {
+    sim: NetSim,
+    job: Job,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let p = cfg.dist.world();
+        let mut sim = NetSim::new(cfg.topo.clone(), p);
+        if let Some(plan) = cfg.chaos.clone() {
+            sim.set_chaos(plan);
+        }
+        if let Some(plan) = cfg.straggler.clone() {
+            sim.set_stragglers(plan);
+        }
+        if let Some(plan) = cfg.background.clone() {
+            sim.set_background(plan);
+        }
+        // The Gantt renderer is a view over the trace store, so asking
+        // for the timeline turns tracing on too (still zero impact on
+        // the event stream — see `fabric/sim.rs`).
+        sim.set_trace(cfg.trace || cfg.record_timeline);
+        Engine { sim, job: Job::new(cfg, 0, 0) }
+    }
+
+    /// Run the configured number of iterations; produce the report.
+    pub fn run(mut self) -> Report {
+        self.run_to_completion()
+    }
+
+    /// [`Engine::run`] on a borrowed engine (tests inspect post-run
+    /// bookkeeping, e.g. that `metas` was garbage-collected).
+    fn run_to_completion(&mut self) -> Report {
+        let p = self.job.cfg.dist.world();
+        let total_iters = self.job.cfg.iterations + 1; // + warmup
+        for n in 0..p {
+            self.job.try_advance(&mut self.sim, n);
+        }
+        // Event loop. One scratch completion buffer serves the whole
+        // run — on_event_into appends into it instead of allocating a
+        // fresh Vec per delivered message (this loop is the L3 hot path).
+        let mut completions: Vec<crate::collectives::simexec::Completion> = Vec::new();
+        while !self.job.done() {
+            let Some(ev) = self.sim.next() else {
+                panic!(
+                    "simulation deadlock: phases={:?}",
+                    self.job.nodes.iter().map(|n| (n.iter, n.phase)).collect::<Vec<_>>()
+                );
+            };
+            match ev {
+                SimEvent::ComputeDone { node, tag, at } => {
+                    self.job.on_compute_done(&mut self.sim, node, tag, at, total_iters);
+                }
+                ev => self.job.on_sim_event(&mut self.sim, &ev, &mut completions),
+            }
+        }
+        // Drain trailing collectives (the last iteration's gradient
+        // exchanges) so traffic accounting is policy-independent.
+        while self.job.colls.in_flight() > 0 {
+            let Some(ev) = self.sim.next() else { break };
+            self.job.on_sim_event(&mut self.sim, &ev, &mut completions);
+        }
+        let trace = self.sim.take_trace().map(|t| t.normalized());
+        let timeline = trace
+            .as_ref()
+            .map(|t| Timeline::from_trace(t, compute_label))
+            .unwrap_or_default();
+        let iter_starts: Vec<Vec<Ns>> =
+            self.job.nodes.iter().map(|n| n.iter_starts.clone()).collect();
+        report::build_report(
+            &self.job.cfg,
+            &self.sim,
+            &iter_starts,
+            &self.job.first_starts,
+            self.job.churn_log.clone(),
+            timeline,
+            trace,
+        )
+    }
+
+    /// Per-rank error-feedback residual bound (see [`Job::ef_residual_bound`]).
+    pub fn ef_residual_bound(&self) -> &[f64] {
+        self.job.ef_residual_bound()
+    }
+
+    /// Currently-active ranks (the elastic-membership view).
+    pub fn active_ranks(&self) -> Vec<Rank> {
+        self.job.active_ranks()
     }
 }
 
@@ -1222,8 +1435,8 @@ mod tests {
         let mut e = Engine::new(c);
         let r = e.run_to_completion();
         assert!(r.iter_ns > 0);
-        assert!(e.metas.is_empty(), "{} metas leaked", e.metas.len());
-        assert!(e.open.is_empty(), "{} open entries leaked", e.open.len());
+        assert!(e.job.metas.is_empty(), "{} metas leaked", e.job.metas.len());
+        assert!(e.job.open.is_empty(), "{} open entries leaked", e.job.open.len());
     }
 
     #[test]
@@ -1288,11 +1501,11 @@ mod tests {
         assert_eq!(r.churn_log.len(), 1);
         assert!(r.churn_log[0].contains("leave rank 3"), "{:?}", r.churn_log);
         // Quiesce leaves no dangling bookkeeping behind.
-        assert!(e.metas.is_empty());
-        assert!(e.open.is_empty());
+        assert!(e.job.metas.is_empty());
+        assert!(e.job.open.is_empty());
         // The leaver ran iterations 0 and 1 only.
-        assert_eq!(e.nodes[3].iter_starts.len(), 2);
-        assert_eq!(e.nodes[0].iter_starts.len(), 4);
+        assert_eq!(e.job.nodes[3].iter_starts.len(), 2);
+        assert_eq!(e.job.nodes[0].iter_starts.len(), 4);
     }
 
     #[test]
@@ -1307,8 +1520,8 @@ mod tests {
         assert_eq!(r.churn_log.len(), 2);
         // Rank 2 sat out exactly one iteration (iter 2): starts for
         // iters 0, 1, 3, 4 only.
-        assert_eq!(e.nodes[2].iter_starts.len(), 4);
-        assert_eq!(e.nodes[0].iter_starts.len(), 5);
+        assert_eq!(e.job.nodes[2].iter_starts.len(), 4);
+        assert_eq!(e.job.nodes[0].iter_starts.len(), 5);
     }
 
     #[test]
@@ -1399,7 +1612,7 @@ mod tests {
         let r = e.run_to_completion();
         assert!(r.iter_ns > 0);
         assert_eq!(e.active_ranks().len(), 7);
-        assert!(e.metas.is_empty());
+        assert!(e.job.metas.is_empty());
     }
 
     #[test]
@@ -1473,9 +1686,9 @@ mod tests {
         e1.run_to_completion();
         let mut e3 = Engine::new(mk(3));
         e3.run_to_completion();
-        assert!(!e1.prog_cache.is_empty());
-        assert_eq!(e1.prog_cache.len(), e3.prog_cache.len());
-        assert_eq!(e1.sel_cache.len(), e3.sel_cache.len());
+        assert!(!e1.job.prog_cache.is_empty());
+        assert_eq!(e1.job.prog_cache.len(), e3.job.prog_cache.len());
+        assert_eq!(e1.job.sel_cache.len(), e3.job.sel_cache.len());
     }
 
     #[test]

@@ -32,6 +32,14 @@ pub struct Report {
     /// Fault-injection accounting for the run (all zeros when no
     /// [`crate::fabric::ChaosPlan`] was installed).
     pub chaos: crate::fabric::ChaosStats,
+    /// Worst per-node compute slowdown factor the run was configured
+    /// with: the chaos plan's per-node `slowdown_milli` compounded with
+    /// the persistent straggler plan (1000 = every node healthy). The
+    /// chaos factors used to be write-only in the report path — a
+    /// straggler run was undiagnosable without a trace.
+    pub straggler_max_milli: u64,
+    /// Mean of the same combined per-node factor (rounded down).
+    pub straggler_mean_milli: u64,
     /// Human-readable membership-change log, one line per applied
     /// leave/join, in application order.
     pub churn_log: Vec<String>,
@@ -60,6 +68,24 @@ pub(crate) fn build_report(
     churn_log: Vec<String>,
     timeline: Timeline,
     trace: Option<Trace>,
+) -> Report {
+    build_report_with(cfg, sim, iter_starts, first_starts, churn_log, timeline, trace, None)
+}
+
+/// [`build_report`] with an explicit total-bytes figure for the job.
+/// The single-job engine owns every byte the fabric moved; a
+/// multi-tenant driver passes this job's slice of the per-tenant
+/// accounting instead ([`crate::fabric::sim::SimStats::tenant_bytes`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn build_report_with(
+    cfg: &EngineConfig,
+    sim: &NetSim,
+    iter_starts: &[Vec<Ns>],
+    first_starts: &[Ns],
+    churn_log: Vec<String>,
+    timeline: Timeline,
+    trace: Option<Trace>,
+    total_bytes: Option<u64>,
 ) -> Report {
     // Per node: mean delta between consecutive fwd(0) starts, skipping the
     // warmup (delta 0 -> 1). Requires iterations >= 1.
@@ -90,15 +116,39 @@ pub(crate) fn build_report(
     // Every node contributes `batch` samples regardless of grouping.
     let global_batch = (cfg.batch * p) as f64;
     let throughput = if iter_ns > 0 { global_batch * 1e9 / iter_ns as f64 } else { 0.0 };
+    // Combined per-node slowdown: chaos windows × persistent stragglers
+    // (both 1000 = healthy). Surfaced so a slowed run is diagnosable
+    // from the report alone.
+    let combined: Vec<u64> = (0..p)
+        .map(|i| {
+            let c = cfg
+                .chaos
+                .as_ref()
+                .and_then(|pl| pl.slowdown_milli.get(i).copied())
+                .unwrap_or(1000);
+            let s = cfg
+                .straggler
+                .as_ref()
+                .and_then(|pl| pl.factor_milli.get(i).copied())
+                .unwrap_or(1000);
+            c * s / 1000
+        })
+        .collect();
     Report {
         iter_ns: iter_ns.max(1),
         compute_ns,
         exposed_comm_ns: iter_ns.saturating_sub(compute_ns),
         throughput_samples_per_s: throughput,
-        bytes_per_node: sim.stats.bytes_sent / p as u64,
+        bytes_per_node: total_bytes.unwrap_or(sim.stats.bytes_sent) / p as u64,
         preemptions: sim.stats.preemptions,
         per_iter_ns,
         chaos: sim.chaos_stats,
+        straggler_max_milli: combined.iter().copied().max().unwrap_or(1000),
+        straggler_mean_milli: if combined.is_empty() {
+            1000
+        } else {
+            combined.iter().sum::<u64>() / combined.len() as u64
+        },
         churn_log,
         timeline,
         trace,

@@ -1,0 +1,393 @@
+//! Multi-tenant driver: N independent training jobs time-sharing ONE
+//! discrete-event fabric.
+//!
+//! The paper's whole premise is synchronous SGD on *shared* Cloud/HPC
+//! fabrics; arXiv 1609.06870 shows contention and stragglers — not peak
+//! bandwidth — cap real scaling. This module is where that pressure is
+//! applied: [`simulate_tenants`] runs `n` copies of a training job over
+//! one [`NetSim`], optionally with seeded background traffic
+//! ([`crate::fabric::BgPlan`]) and persistent per-node stragglers
+//! ([`crate::fabric::StragglerPlan`]) installed, then reports per-tenant
+//! results plus fairness metrics (per-tenant egress share, Jain's
+//! index, straggler-induced boundary spread).
+//!
+//! # Tenancy models
+//!
+//! * **Colocated** (`--tenants <n>`): all jobs run on the SAME `p`
+//!   fabric nodes. Egress contention is per-source-NIC, so colocated
+//!   jobs genuinely fight for the strict-priority rails — this is the
+//!   "noisy neighbor on my own box" regime.
+//! * **Disjoint** (`--tenants <n>:disjoint`): job `t` owns the
+//!   contiguous fabric rank block `[t·p, (t+1)·p)`. Jobs never share a
+//!   NIC, so their event streams are bitwise independent — the
+//!   isolation property `prop_tenant.rs` asserts.
+//!
+//! # Determinism contract
+//!
+//! Identical to chaos ([`crate::fabric::ChaosPlan`]): one seed/spec ⇒
+//! byte-identical event streams. Background traffic and stragglers bend
+//! *timing* only — the delivered training-message multiset is
+//! unchanged, and `--tenants 1` with a quiet fabric reproduces the
+//! single-job engine bitwise (tenant 0's collective ids and compute
+//! tags are numerically identical to the pre-tenant encoding).
+//!
+//! # Contention-aware selection
+//!
+//! With `contention_aware`, the driver lets every job finish one full
+//! iteration under load, snapshots the span trace, computes per-tier
+//! utilization ([`Utilization`]), and installs the resulting
+//! [`Contention`] correction into each job's selection path — tuned
+//! picks re-rank against observed effective bandwidth instead of
+//! trusting the quiet-fabric table (see
+//! [`crate::tuner::SelectionPolicy::choose_for_members_wire_contended`]).
+//!
+//! One caveat: [`CommMode::MpiNonBlocking`](super::CommMode) gates a
+//! node's comm while it computes via a per-NODE flag, so two colocated
+//! jobs toggling the same node's gate interleave their windows — timing
+//! bends slightly, correctness does not. Use mlsl/bulk modes for
+//! colocated fairness measurements.
+
+use super::report::{build_report_with, Report};
+use super::{compute_label, EngineConfig, Job};
+use crate::fabric::{tenant_of_tag, NetSim, SimEvent, BG_TAG};
+use crate::metrics::{jain, Timeline};
+use crate::trace::Utilization;
+use crate::tuner::Contention;
+use crate::Ns;
+
+/// Parsed `--tenants` spec: `<n>` (colocated) or `<n>:disjoint`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub jobs: usize,
+    pub disjoint: bool,
+}
+
+impl TenantSpec {
+    pub fn parse(spec: &str) -> Result<TenantSpec, String> {
+        let (n_s, disjoint) = match spec.split_once(':') {
+            Some((n_s, "disjoint")) => (n_s, true),
+            Some((_, other)) => {
+                return Err(format!("--tenants {spec:?}: unknown placement {other:?} (disjoint)"))
+            }
+            None => (spec, false),
+        };
+        let jobs: usize =
+            n_s.parse().map_err(|_| format!("--tenants {spec:?}: bad job count {n_s:?}"))?;
+        if jobs == 0 {
+            return Err("--tenants: need at least one job".into());
+        }
+        Ok(TenantSpec { jobs, disjoint })
+    }
+}
+
+/// Result of a multi-tenant run: one [`Report`] per job plus the
+/// cross-tenant fairness view.
+#[derive(Debug, Clone)]
+pub struct TenantsReport {
+    /// Per-tenant training reports. `bytes_per_node` in each is that
+    /// tenant's OWN traffic; `preemptions` stays fabric-global.
+    pub reports: Vec<Report>,
+    /// Bytes each tenant's collectives pushed onto the fabric.
+    pub tenant_bytes: Vec<u64>,
+    /// Bytes the background injector pushed.
+    pub bg_bytes: u64,
+    /// Egress-wire busy share per tenant, background last — fractions
+    /// of total busy ns (all zeros if the fabric never went busy).
+    pub egress_share: Vec<f64>,
+    /// Jain's fairness index over the training tenants' egress busy ns
+    /// (background excluded): 1.0 = perfectly fair, 1/n = one tenant
+    /// starved the rest.
+    pub jain: f64,
+    /// Per-tenant straggler-induced exposed time: the summed spread
+    /// between the first and last node reaching each iteration
+    /// boundary. Zero on a balanced healthy run.
+    pub straggler_spread_ns: Vec<Ns>,
+}
+
+impl TenantsReport {
+    /// Grep-stable one-line fairness summary (CI asserts on the
+    /// `fairness:` prefix — keep it).
+    pub fn fairness_line(&self) -> String {
+        let shares: Vec<String> =
+            self.egress_share.iter().map(|s| format!("{s:.3}")).collect();
+        format!(
+            "fairness: jain={:.3} egress_share=[{}] bg_bytes={}",
+            self.jain,
+            shares.join(","),
+            self.bg_bytes
+        )
+    }
+}
+
+/// Drive `spec.jobs` copies of the `cfg` training job over one shared
+/// fabric. `cfg.background` / `cfg.straggler` / `cfg.chaos` install
+/// into that shared fabric; `contention_aware` turns on the observed
+/// effective-bandwidth correction for every job's selection.
+pub fn simulate_tenants(
+    cfg: &EngineConfig,
+    spec: &TenantSpec,
+    contention_aware: bool,
+) -> TenantsReport {
+    let n = spec.jobs;
+    let p_job = cfg.dist.world();
+    let sim_p = if spec.disjoint { n * p_job } else { p_job };
+    let mut sim = NetSim::new(cfg.topo.clone(), sim_p);
+    if let Some(plan) = cfg.chaos.clone() {
+        sim.set_chaos(plan);
+    }
+    if let Some(plan) = cfg.straggler.clone() {
+        sim.set_stragglers(plan);
+    }
+    if let Some(plan) = cfg.background.clone() {
+        sim.set_background(plan);
+    }
+    sim.set_tenants(n);
+    // The utilization probe reads the span trace, so contention
+    // awareness implies tracing (same zero-event-impact contract).
+    sim.set_trace(cfg.trace || cfg.record_timeline || contention_aware);
+    let mut jobs: Vec<Job> = (0..n)
+        .map(|t| Job::new(cfg.clone(), t, if spec.disjoint { t * p_job } else { 0 }))
+        .collect();
+    let total_iters = cfg.iterations + 1; // + warmup
+    for job in &mut jobs {
+        for r in 0..p_job {
+            job.try_advance(&mut sim, r);
+        }
+    }
+    let mut completions: Vec<crate::collectives::simexec::Completion> = Vec::new();
+    let mut contention_pending = contention_aware;
+    while jobs.iter().any(|j| !j.done()) {
+        let Some(ev) = sim.next() else {
+            panic!(
+                "multi-tenant simulation deadlock: iters={:?}",
+                jobs.iter().map(|j| j.min_iter()).collect::<Vec<_>>()
+            );
+        };
+        match ev {
+            SimEvent::ComputeDone { node, tag, at } => {
+                // Compute tags carry the tenant at bit 48 (`tag_of`).
+                let t = ((tag >> 48) as usize).min(n - 1);
+                let base = jobs[t].base;
+                jobs[t].on_compute_done(&mut sim, node - base, tag, at, total_iters);
+            }
+            ev @ SimEvent::MsgDelivered { .. } => {
+                let SimEvent::MsgDelivered { msg, .. } = &ev else { unreachable!() };
+                if msg.tag & BG_TAG != 0 {
+                    continue; // background flows contend for wires only
+                }
+                let t = tenant_of_tag(msg.tag, n);
+                jobs[t].on_sim_event(&mut sim, &ev, &mut completions);
+            }
+        }
+        // Once every job has one full iteration of load behind it, the
+        // trace holds a representative busy profile: measure per-tier
+        // utilization and re-rank every job's selections under it.
+        if contention_pending && jobs.iter().all(|j| j.min_iter() >= 1) {
+            contention_pending = false;
+            if let Some(tr) = sim.trace_snapshot() {
+                let u = Utilization::compute(
+                    &tr,
+                    sim_p,
+                    cfg.topo.rails.max(1) as usize,
+                    sim.now().max(1),
+                );
+                let c = Contention::from_utilization(&u, &cfg.topo);
+                if !c.is_quiet() {
+                    for job in &mut jobs {
+                        job.set_contention(c.clone());
+                    }
+                }
+            }
+        }
+    }
+    // Drain trailing collectives (last iteration's gradient exchanges)
+    // so per-tenant traffic accounting is complete.
+    while jobs.iter().any(|j| j.colls.in_flight() > 0) {
+        let Some(ev) = sim.next() else { break };
+        if let SimEvent::MsgDelivered { msg, .. } = &ev {
+            if msg.tag & BG_TAG != 0 {
+                continue;
+            }
+            let t = tenant_of_tag(msg.tag, n);
+            jobs[t].on_sim_event(&mut sim, &ev, &mut completions);
+        }
+    }
+    let mut trace = sim.take_trace().map(|t| t.normalized());
+    let mut timeline =
+        trace.as_ref().map(|t| Some(Timeline::from_trace(t, compute_label))).unwrap_or_default();
+    let tenant_bytes: Vec<u64> =
+        (0..n).map(|t| sim.stats.tenant_bytes.get(t).copied().unwrap_or(0)).collect();
+    let bg_bytes = sim.stats.tenant_bytes.get(n).copied().unwrap_or(0);
+    let busy: Vec<f64> =
+        (0..=n).map(|t| sim.stats.tenant_busy_ns.get(t).copied().unwrap_or(0) as f64).collect();
+    let total_busy: f64 = busy.iter().sum();
+    let egress_share: Vec<f64> = busy
+        .iter()
+        .map(|b| if total_busy > 0.0 { b / total_busy } else { 0.0 })
+        .collect();
+    let fairness = jain(&busy[..n]);
+    let straggler_spread_ns: Vec<Ns> = jobs.iter().map(|j| j.boundary_spread_ns()).collect();
+    let reports: Vec<Report> = jobs
+        .iter()
+        .enumerate()
+        .map(|(t, j)| {
+            let iter_starts: Vec<Vec<Ns>> =
+                j.nodes.iter().map(|nd| nd.iter_starts.clone()).collect();
+            build_report_with(
+                &j.cfg,
+                &sim,
+                &iter_starts,
+                &j.first_starts,
+                j.churn_log.clone(),
+                // The node-0 Gantt and full trace describe the shared
+                // fabric; tenant 0's report carries them.
+                timeline.take().unwrap_or_default(),
+                trace.take(),
+                Some(tenant_bytes[t]),
+            )
+        })
+        .collect();
+    TenantsReport {
+        reports,
+        tenant_bytes,
+        bg_bytes,
+        egress_share,
+        jain: fairness,
+        straggler_spread_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{simulate, CommMode, EngineConfig};
+    use super::*;
+    use crate::fabric::{BgPlan, StragglerPlan, Topology};
+    use crate::models::ModelDesc;
+
+    fn cfg(p: usize) -> EngineConfig {
+        let mut c = EngineConfig::new(
+            ModelDesc::by_name("resnet50").unwrap(),
+            Topology::eth_10g(),
+            p,
+        );
+        c.mode = CommMode::BulkSync;
+        c.iterations = 2;
+        c
+    }
+
+    #[test]
+    fn tenant_spec_parses_and_validates() {
+        assert_eq!(TenantSpec::parse("2").unwrap(), TenantSpec { jobs: 2, disjoint: false });
+        assert_eq!(
+            TenantSpec::parse("3:disjoint").unwrap(),
+            TenantSpec { jobs: 3, disjoint: true }
+        );
+        for bad in ["", "0", "x", "2:weird", ":disjoint"] {
+            assert!(TenantSpec::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn single_tenant_reproduces_the_plain_engine_bitwise() {
+        let c = cfg(4);
+        let single = simulate(c.clone());
+        let multi =
+            simulate_tenants(&c, &TenantSpec { jobs: 1, disjoint: false }, false);
+        let r = &multi.reports[0];
+        assert_eq!(r.iter_ns, single.iter_ns);
+        assert_eq!(r.bytes_per_node, single.bytes_per_node);
+        assert_eq!(r.per_iter_ns, single.per_iter_ns);
+        assert_eq!(r.exposed_comm_ns, single.exposed_comm_ns);
+        assert_eq!(multi.tenant_bytes[0], single.bytes_per_node * 4);
+        assert_eq!(multi.bg_bytes, 0);
+    }
+
+    #[test]
+    fn colocated_tenants_contend_for_shared_egress() {
+        let c = cfg(4);
+        let single = simulate(c.clone());
+        let multi =
+            simulate_tenants(&c, &TenantSpec { jobs: 2, disjoint: false }, false);
+        assert_eq!(multi.reports.len(), 2);
+        // Two jobs on the same NICs: each one's iteration stretches.
+        for r in &multi.reports {
+            assert!(
+                r.iter_ns > single.iter_ns,
+                "tenant={} single={}",
+                r.iter_ns,
+                single.iter_ns
+            );
+        }
+        // Symmetric jobs split the wire near-evenly.
+        assert!(multi.jain > 0.9, "jain={}", multi.jain);
+        assert!(multi.fairness_line().starts_with("fairness: jain="));
+        // Every byte is accounted to exactly one tenant.
+        assert_eq!(multi.tenant_bytes[0], multi.tenant_bytes[1]);
+    }
+
+    #[test]
+    fn disjoint_tenants_are_timing_isolated() {
+        // Disjoint rank blocks never share a source NIC: each job runs
+        // exactly the single-job timeline, bit for bit.
+        let c = cfg(4);
+        let single = simulate(c.clone());
+        let multi =
+            simulate_tenants(&c, &TenantSpec { jobs: 2, disjoint: true }, false);
+        for r in &multi.reports {
+            assert_eq!(r.iter_ns, single.iter_ns);
+            assert_eq!(r.bytes_per_node, single.bytes_per_node);
+            assert_eq!(r.per_iter_ns, single.per_iter_ns);
+        }
+        assert_eq!(multi.tenant_bytes[0], multi.tenant_bytes[1]);
+    }
+
+    #[test]
+    fn background_traffic_bends_timing_but_not_volume() {
+        let mut noisy = cfg(4);
+        let quiet_run =
+            simulate_tenants(&noisy, &TenantSpec { jobs: 1, disjoint: false }, false);
+        noisy.background = Some(BgPlan::generate(11, &noisy.topo, 4, 50_000_000));
+        let noisy_run =
+            simulate_tenants(&noisy, &TenantSpec { jobs: 1, disjoint: false }, false);
+        assert!(noisy_run.bg_bytes > 0);
+        assert_eq!(
+            noisy_run.reports[0].bytes_per_node, quiet_run.reports[0].bytes_per_node,
+            "background must never change training traffic"
+        );
+        assert!(
+            noisy_run.reports[0].iter_ns >= quiet_run.reports[0].iter_ns,
+            "noisy={} quiet={}",
+            noisy_run.reports[0].iter_ns,
+            quiet_run.reports[0].iter_ns
+        );
+        // Same seed ⇒ byte-identical rerun.
+        let again =
+            simulate_tenants(&noisy, &TenantSpec { jobs: 1, disjoint: false }, false);
+        assert_eq!(again.reports[0].iter_ns, noisy_run.reports[0].iter_ns);
+        assert_eq!(again.bg_bytes, noisy_run.bg_bytes);
+    }
+
+    #[test]
+    fn stragglers_surface_in_the_report_and_stretch_iterations() {
+        let healthy = simulate(cfg(4));
+        assert_eq!(healthy.straggler_max_milli, 1000);
+        let mut c = cfg(4);
+        c.straggler = Some(StragglerPlan::parse("1:2.0", 4).unwrap());
+        let slow = simulate(c);
+        assert_eq!(slow.straggler_max_milli, 2000);
+        assert_eq!(slow.straggler_mean_milli, 1250);
+        assert!(
+            slow.iter_ns > healthy.iter_ns,
+            "straggled={} healthy={}",
+            slow.iter_ns,
+            healthy.iter_ns
+        );
+        // Lockstep sync bounds the damage at the straggler's own factor.
+        assert!(
+            slow.iter_ns <= healthy.iter_ns * 21 / 10,
+            "no cascade: straggled={} healthy={}",
+            slow.iter_ns,
+            healthy.iter_ns
+        );
+    }
+}

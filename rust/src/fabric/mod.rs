@@ -41,7 +41,10 @@ pub mod shm;
 pub mod sim;
 pub mod topology;
 
-pub use sim::{ChaosPlan, ChaosStats, FlapWindow, NetSim, RailDeath, SimEvent};
+pub use sim::{
+    tenant_of_tag, BgFlow, BgPlan, ChaosPlan, ChaosStats, FlapWindow, NetSim, RailDeath,
+    SimEvent, StragglerPlan, BG_TAG, TENANT_TAG_SHIFT,
+};
 pub use topology::{NodeSpec, Topology};
 
 use crate::{Ns, Priority, Rank};

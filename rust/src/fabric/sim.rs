@@ -48,6 +48,18 @@
 //!   slowdown factors. Every fault is scheduled from the plan alone, so
 //!   the same seed yields a byte-identical event stream — faults bend
 //!   *timing*, never payloads.
+//! * **Multi-tenant mode**: transfers carry a tenant id recovered from
+//!   the message tag ([`tenant_of_tag`]) — per-tenant collectives run in
+//!   disjoint tag spaces (tenant in bits [`TENANT_TAG_SHIFT`]..63) and
+//!   background flows set the [`BG_TAG`] bit. Tenants share the
+//!   strict-priority egress rails with no reservations (contention is
+//!   the point), while [`SimStats`] splits bytes/messages/wire-busy per
+//!   tenant so fairness metrics (egress share, Jain's index) fall out of
+//!   the accounting. A seeded [`BgPlan`] injects deterministic
+//!   background flows (same one-seed/byte-identical contract as
+//!   [`ChaosPlan`]) and a [`StragglerPlan`] pins *persistent* per-node
+//!   compute slowdowns — distinct from chaos's transient windows and
+//!   composing multiplicatively with them.
 //! * **Partitioned mode** ([`super::par`]): a `NetSim` can be built as
 //!   one shard of a node-partitioned fleet
 //!   ([`NetSim::new_partition`]). A shard silently ignores work posted
@@ -102,6 +114,8 @@ enum Internal {
     ChaosGate { on: bool },
     /// Scheduled death of `plan.rail_deaths[idx]`.
     RailDie { idx: usize },
+    /// Repetition `rep` of background flow `flow` enters the fabric.
+    BgInject { flow: u32, rep: u32 },
 }
 
 struct Transfer {
@@ -113,6 +127,8 @@ struct Transfer {
     /// Urgency class the piece was enqueued under — carried so a
     /// rail-death migration can re-enqueue it at the same priority.
     class: Priority,
+    /// Owning tenant (accounting slot) — 0 outside multi-tenant mode.
+    tenant: u16,
 }
 
 /// Per-NIC egress queue. Transfers live in `slab`; `order` is a
@@ -162,11 +178,28 @@ pub struct SimStats {
     /// accounting branch- and alloc-free on the event-loop hot path.
     pub bytes_by_priority: [u64; 256],
     pub preemptions: u64,
+    /// Bytes sent per tenant, slot `n_tenants` = background traffic.
+    /// Empty until [`NetSim::set_tenants`] — single-tenant runs pay
+    /// nothing for the multi-tenant accounting.
+    pub tenant_bytes: Vec<u64>,
+    /// Messages sent per tenant (same slot layout as `tenant_bytes`).
+    pub tenant_msgs: Vec<u64>,
+    /// Egress-wire busy ns attributed per tenant (summed over every
+    /// rail and the shm channels; same slot layout as `tenant_bytes`).
+    pub tenant_busy_ns: Vec<u64>,
 }
 
 impl Default for SimStats {
     fn default() -> Self {
-        Self { msgs_sent: 0, bytes_sent: 0, bytes_by_priority: [0; 256], preemptions: 0 }
+        Self {
+            msgs_sent: 0,
+            bytes_sent: 0,
+            bytes_by_priority: [0; 256],
+            preemptions: 0,
+            tenant_bytes: Vec::new(),
+            tenant_msgs: Vec::new(),
+            tenant_busy_ns: Vec::new(),
+        }
     }
 }
 
@@ -302,6 +335,176 @@ pub struct ChaosStats {
     pub slowdowns_applied: u64,
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant mode: tenant tag spaces, background traffic, stragglers
+// ---------------------------------------------------------------------------
+
+/// Bit 63 of a message tag marks background-injector traffic. Collective
+/// executors key operations on the full tag, so background messages can
+/// never collide with (or be mistaken for) a collective's traffic.
+pub const BG_TAG: u64 = 1 << 63;
+
+/// Per-tenant collective-id spaces live in tag bits
+/// `[TENANT_TAG_SHIFT, 63)`: drivers derive tenant `t`'s collective ids
+/// from `1 + ((t as u64) << TENANT_TAG_SHIFT)`, which keeps tenant 0's
+/// tags numerically identical to the single-job path (bitwise replay of
+/// pre-tenant runs).
+pub const TENANT_TAG_SHIFT: u32 = 40;
+
+/// Recover the accounting slot owning a message tag: background traffic
+/// maps to the extra slot `n_tenants`, everything else to the tag's
+/// tenant bits (clamped, so foreign tags account to the last real tenant
+/// instead of panicking). With `n_tenants == 0` (single-tenant mode)
+/// everything is slot 0.
+pub fn tenant_of_tag(tag: u64, n_tenants: usize) -> usize {
+    if n_tenants == 0 {
+        return 0;
+    }
+    if tag & BG_TAG != 0 {
+        return n_tenants;
+    }
+    (((tag >> TENANT_TAG_SHIFT) & 0x7F_FFFF) as usize).min(n_tenants - 1)
+}
+
+/// One periodic background flow: `reps` messages of `bytes` from `src`
+/// to `dst`, the first at `start_ns`, one every `period_ns` after.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BgFlow {
+    pub src: Rank,
+    pub dst: Rank,
+    pub bytes: u64,
+    pub start_ns: Ns,
+    pub period_ns: Ns,
+    pub reps: u32,
+    /// Urgency class the flow contends under (1 = bulk neighbor).
+    pub priority: Priority,
+}
+
+/// A seeded background-traffic schedule — the "noisy neighbor" model.
+/// Like [`ChaosPlan`], the plan is pure data derived from its seed up
+/// front: the same plan yields a byte-identical event stream, and
+/// background traffic bends *timing* only — foreground payloads are
+/// never touched (asserted in `tests/prop_tenant.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BgPlan {
+    pub seed: u64,
+    pub flows: Vec<BgFlow>,
+}
+
+impl BgPlan {
+    /// A plan with no flows (baseline in tests and benches).
+    pub fn quiet(seed: u64) -> Self {
+        Self { seed, flows: Vec::new() }
+    }
+
+    /// Derive a moderate background load from `seed` for a `p`-rank run
+    /// of roughly `horizon_ns`: one to `p/2` periodic NIC-tier flows
+    /// (never shm — the injector models fabric neighbors, not in-node
+    /// copies), each 64 KiB–1 MiB every ~1/40 of the horizon, bulk
+    /// class. Deterministic in its arguments, same contract as
+    /// [`ChaosPlan::generate`].
+    pub fn generate(seed: u64, topo: &Topology, p: usize, horizon_ns: Ns) -> Self {
+        let mut r = Prng::seed(seed);
+        let horizon = horizon_ns.max(1000);
+        let mut flows = Vec::new();
+        if p >= 2 {
+            for _ in 0..1 + r.below((p as u64 / 2).max(1)) {
+                let src = r.usize_below(p);
+                // First peer ahead of src whose hop rides a NIC tier.
+                let mut dst = (src + 1) % p;
+                for k in 1..p {
+                    let c = (src + k) % p;
+                    if !topo.same_node(src, c) {
+                        dst = c;
+                        break;
+                    }
+                }
+                if topo.same_node(src, dst) {
+                    continue; // single-node fabric: no NIC tier to load
+                }
+                let bytes = (64 + r.below(961)) * 1024;
+                let start_ns = r.below(horizon / 4 + 1);
+                let period_ns = (horizon / 40).max(1) + r.below((horizon / 40).max(1));
+                let reps =
+                    (horizon.saturating_sub(start_ns) / period_ns + 1).min(10_000) as u32;
+                flows.push(BgFlow { src, dst, bytes, start_ns, period_ns, reps, priority: 1 });
+            }
+        }
+        Self { seed, flows }
+    }
+
+    /// Total bytes the plan will inject (all flows, all repetitions).
+    pub fn total_bytes(&self) -> u64 {
+        self.flows.iter().map(|f| f.bytes * f.reps as u64).sum()
+    }
+}
+
+/// Persistent per-node compute slowdowns — the classic straggler model
+/// (arxiv 1609.06870): unlike [`ChaosPlan::slowdown_milli`] these never
+/// expire, and they compose multiplicatively with chaos slowdowns.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StragglerPlan {
+    /// Per-node factor in milli-units (1000 = healthy, 2000 = 2×).
+    pub factor_milli: Vec<u64>,
+}
+
+impl StragglerPlan {
+    /// Every node healthy.
+    pub fn healthy(p: usize) -> Self {
+        Self { factor_milli: vec![1000; p] }
+    }
+
+    /// Parse `node:factor[,node:factor…]` (e.g. `3:2.0,7:1.5`);
+    /// `all:factor` pins every node. Factors must lie in [0.1, 100].
+    pub fn parse(spec: &str, p: usize) -> Result<Self, String> {
+        let mut plan = Self::healthy(p);
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (node_s, f_s) = part
+                .split_once(':')
+                .ok_or_else(|| format!("straggler `{part}`: expected node:factor"))?;
+            let f: f64 = f_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("straggler `{part}`: bad factor `{}`", f_s.trim()))?;
+            if !(0.1..=100.0).contains(&f) {
+                return Err(format!("straggler `{part}`: factor must be in [0.1, 100]"));
+            }
+            let milli = (f * 1000.0).round() as u64;
+            if node_s.trim() == "all" {
+                plan.factor_milli = vec![milli; p];
+            } else {
+                let node: usize = node_s
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("straggler `{part}`: bad node `{}`", node_s.trim()))?;
+                if node >= p {
+                    return Err(format!("straggler `{part}`: node {node} out of range (p={p})"));
+                }
+                plan.factor_milli[node] = milli;
+            }
+        }
+        Ok(plan)
+    }
+
+    /// No node slowed?
+    pub fn is_quiet(&self) -> bool {
+        self.factor_milli.iter().all(|&m| m == 1000)
+    }
+
+    /// Largest per-node factor in milli-units (1000 when empty).
+    pub fn max_milli(&self) -> u64 {
+        self.factor_milli.iter().copied().max().unwrap_or(1000)
+    }
+
+    /// Mean per-node factor in milli-units (1000 when empty).
+    pub fn mean_milli(&self) -> u64 {
+        if self.factor_milli.is_empty() {
+            return 1000;
+        }
+        self.factor_milli.iter().sum::<u64>() / self.factor_milli.len() as u64
+    }
+}
+
 /// A logical message with egress pieces still on the wires (or, for an
 /// injected cross-partition arrival, waiting on its Deliver event).
 /// Entries are removed at delivery, so the map is bounded by the
@@ -343,6 +546,13 @@ pub struct NetSim {
     next_xfer_id: u64,
     /// Installed fault schedule ([`NetSim::set_chaos`]); None = healthy.
     chaos: Option<ChaosPlan>,
+    /// Installed background-traffic schedule ([`NetSim::set_background`]).
+    bg: Option<BgPlan>,
+    /// Persistent straggler factors ([`NetSim::set_stragglers`]).
+    stragglers: Option<StragglerPlan>,
+    /// Tenant count for per-tenant accounting; 0 = single-tenant mode
+    /// (the accounting vectors stay empty and untouched).
+    n_tenants: usize,
     /// Active zero-bandwidth windows (they may overlap).
     zero_bw_active: u32,
     /// Partitioned mode: which shard this instance owns; None = the
@@ -400,6 +610,9 @@ impl NetSim {
             next_msg_id: 0,
             next_xfer_id: 0,
             chaos: None,
+            bg: None,
+            stragglers: None,
+            n_tenants: 0,
             zero_bw_active: 0,
             part: None,
             outbox: Vec::new(),
@@ -437,6 +650,14 @@ impl NetSim {
         if let Some(tr) = self.trace.as_deref_mut() {
             tr.push(ev);
         }
+    }
+
+    /// Clone the spans recorded so far WITHOUT draining the buffer —
+    /// mid-run probes (e.g. the contention-aware selection feedback loop
+    /// sampling per-tier utilization) that must not disturb the final
+    /// [`NetSim::take_trace`]. `None` when tracing is disabled.
+    pub fn trace_snapshot(&self) -> Option<Trace> {
+        self.trace.as_deref().map(|tr| Trace { events: tr.events.clone() })
     }
 
     /// Build shard `shard` of a `shards`-way node-partitioned fleet.
@@ -486,6 +707,51 @@ impl NetSim {
         let mut plan = plan;
         plan.slowdown_milli.resize(self.p, 1000);
         self.chaos = Some(plan);
+    }
+
+    /// Install a background-traffic schedule: every flow's repetitions
+    /// become queued injection events relative to `now`. Like chaos, the
+    /// plan is pure data — same plan ⇒ same event stream. In partitioned
+    /// mode each shard schedules only the flows whose source it owns.
+    pub fn set_background(&mut self, plan: BgPlan) {
+        let now = self.queue.now();
+        for (i, f) in plan.flows.iter().enumerate() {
+            assert!(f.src < self.p && f.dst < self.p, "background flow rank out of range");
+            assert_ne!(f.src, f.dst, "background flow self-send");
+            if f.reps > 0 && self.owns(f.src) {
+                self.queue.push_in(
+                    f.start_ns.saturating_sub(now),
+                    Internal::BgInject { flow: i as u32, rep: 0 },
+                );
+            }
+        }
+        self.bg = Some(plan);
+    }
+
+    /// Install persistent straggler factors: every subsequent
+    /// [`NetSim::compute`] on a slowed node stretches by its factor
+    /// (composing multiplicatively with any chaos slowdown). Messages
+    /// are never slowed — stragglers are a compute pathology.
+    pub fn set_stragglers(&mut self, plan: StragglerPlan) {
+        let mut plan = plan;
+        plan.factor_milli.resize(self.p, 1000);
+        self.stragglers = Some(plan);
+    }
+
+    /// Turn on per-tenant accounting for `n` tenants: sizes the
+    /// [`SimStats`] tenant vectors to `n + 1` slots (the extra slot
+    /// collects background traffic). Transfers are attributed by their
+    /// tag's tenant bits ([`tenant_of_tag`]).
+    pub fn set_tenants(&mut self, n: usize) {
+        self.n_tenants = n;
+        self.stats.tenant_bytes = vec![0; n + 1];
+        self.stats.tenant_msgs = vec![0; n + 1];
+        self.stats.tenant_busy_ns = vec![0; n + 1];
+    }
+
+    /// Tenant count accounting runs under (0 = single-tenant mode).
+    pub fn num_tenants(&self) -> usize {
+        self.n_tenants
     }
 
     /// Is `rail` of `node` dead (killed by the chaos plan)?
@@ -565,6 +831,17 @@ impl NetSim {
         self.stats.msgs_sent += 1;
         self.stats.bytes_sent += msg.bytes;
         self.stats.bytes_by_priority[msg.priority as usize] += msg.bytes;
+        // Tenant attribution rides the tag (tenant id bits / BG bit);
+        // outside multi-tenant mode the vectors are empty and the hot
+        // path pays one predictable branch.
+        let tenant = if self.n_tenants > 0 {
+            let t = tenant_of_tag(msg.tag, self.n_tenants);
+            self.stats.tenant_msgs[t] += 1;
+            self.stats.tenant_bytes[t] += msg.bytes;
+            t as u16
+        } else {
+            0
+        };
         self.inflight.insert(msg_id, InFlight { msg: msg.clone(), egress_left: pieces });
         let now = self.queue.now();
         if let Some(tr) = self.trace.as_deref_mut() {
@@ -601,6 +878,7 @@ impl NetSim {
                     checkpoint: now,
                     running: false,
                     class,
+                    tenant,
                 },
             );
             nic.order.push(Reverse((class, id)));
@@ -623,7 +901,7 @@ impl NetSim {
         if !self.owns(node) {
             return;
         }
-        let dur = match &self.chaos {
+        let mut dur = match &self.chaos {
             Some(plan) => {
                 let m = plan.slowdown_milli.get(node).copied().unwrap_or(1000);
                 if m != 1000 {
@@ -633,6 +911,14 @@ impl NetSim {
             }
             None => dur_ns,
         };
+        // Persistent stragglers compose multiplicatively with chaos's
+        // transient slowdowns (a straggler stays slow; chaos passes).
+        if let Some(s) = &self.stragglers {
+            let m = s.factor_milli.get(node).copied().unwrap_or(1000);
+            if m != 1000 {
+                dur = dur.saturating_mul(m) / 1000;
+            }
+        }
         let now = self.queue.now();
         if let Some(tr) = self.trace.as_deref_mut() {
             let cause = tr.current_cause;
@@ -733,13 +1019,17 @@ impl NetSim {
         }
         if let Some(since) = nic.busy_since.take() {
             nic.busy_ns += now - since;
+            // The banked interval belongs to the transfer that held the
+            // wire (still in the slab — EgressDone banks its own
+            // interval before rescheduling).
+            let (class, tenant) = was_running
+                .and_then(|id| nic.slab.get(&id))
+                .map_or((0, 0), |t| (t.class, t.tenant));
+            if let Some(slot) = self.stats.tenant_busy_ns.get_mut(tenant as usize) {
+                *slot += now - since;
+            }
             if now > since {
                 if let Some(tr) = self.trace.as_deref_mut() {
-                    // The banked interval belongs to the transfer that
-                    // held the wire (still in the slab — EgressDone
-                    // banks its own interval before rescheduling).
-                    let class =
-                        was_running.and_then(|id| nic.slab.get(&id)).map_or(0, |t| t.class);
                     tr.push(TraceEvent::Busy(BusySpan {
                         node,
                         chan: track_of(chan),
@@ -873,6 +1163,9 @@ impl NetSim {
                 nic.running = None;
                 if let Some(since) = nic.busy_since.take() {
                     nic.busy_ns += at - since;
+                    if let Some(slot) = self.stats.tenant_busy_ns.get_mut(t.tenant as usize) {
+                        *slot += at - since;
+                    }
                     if at > since {
                         if let Some(tr) = self.trace.as_deref_mut() {
                             tr.push(TraceEvent::Busy(BusySpan {
@@ -964,6 +1257,22 @@ impl NetSim {
                 let Some(plan) = &self.chaos else { return None };
                 let RailDeath { node, rail, .. } = plan.rail_deaths[idx];
                 self.kill_rail(node, rail as usize);
+                None
+            }
+            Internal::BgInject { flow, rep } => {
+                let Some(plan) = &self.bg else { return None };
+                let f = plan.flows[flow as usize];
+                if rep + 1 < f.reps {
+                    self.queue
+                        .push_in(f.period_ns.max(1), Internal::BgInject { flow, rep: rep + 1 });
+                }
+                self.send(MsgDesc {
+                    src: f.src,
+                    dst: f.dst,
+                    bytes: f.bytes,
+                    priority: f.priority,
+                    tag: BG_TAG | flow as u64,
+                });
                 None
             }
         }
@@ -1911,5 +2220,200 @@ mod tests {
         // with the delivery time fully priced.
         let hop = merged.hops().find(|h| h.tag == 8).unwrap();
         assert_eq!(hop.deliver_at, 4_200);
+    }
+
+    // -- multi-tenant fabric -------------------------------------------------
+
+    #[test]
+    fn tenant_of_tag_routes_tag_spaces() {
+        assert_eq!(tenant_of_tag(1, 0), 0, "single-tenant mode: everything slot 0");
+        assert_eq!(tenant_of_tag(1, 2), 0);
+        assert_eq!(tenant_of_tag(1 + (1u64 << TENANT_TAG_SHIFT), 2), 1);
+        assert_eq!(tenant_of_tag(BG_TAG | 3, 2), 2, "background slot is last");
+        assert_eq!(tenant_of_tag(7u64 << TENANT_TAG_SHIFT, 2), 1, "foreign tags clamp");
+    }
+
+    #[test]
+    fn background_flows_inject_deterministically_and_carry_the_bg_tag() {
+        let mut s = sim();
+        s.set_background(BgPlan {
+            seed: 0,
+            flows: vec![BgFlow {
+                src: 2,
+                dst: 3,
+                bytes: 1_000,
+                start_ns: 500,
+                period_ns: 10_000,
+                reps: 2,
+                priority: 1,
+            }],
+        });
+        // First injection at 500: egress 100 + 1_000, delivery 1_000 later.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { msg: m, at } => {
+                assert_eq!((m.src, m.dst), (2, 3));
+                assert_ne!(m.tag & BG_TAG, 0, "background traffic is tagged");
+                assert_eq!(at, 500 + 2_100);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Second (and last) repetition at 10_500.
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 10_500 + 2_100),
+            other => panic!("{other:?}"),
+        }
+        assert!(s.idle(), "reps bound the injector");
+        assert_eq!(s.stats.msgs_sent, 2);
+    }
+
+    #[test]
+    fn background_traffic_bends_foreground_timing_but_never_payloads() {
+        let fg = msg(0, 1, 10_000, 1, 7);
+        let run = |bg: Option<BgPlan>| {
+            let mut s = sim();
+            if let Some(plan) = bg {
+                s.set_background(plan);
+            }
+            // Park until t=100 so the background flow holds the wire
+            // before the foreground message is posted.
+            s.compute(3, 100, 1);
+            while let Some(ev) = s.next() {
+                if matches!(ev, SimEvent::ComputeDone { .. }) {
+                    break;
+                }
+            }
+            s.send(fg.clone());
+            let mut fg_at = None;
+            while let Some(ev) = s.next() {
+                if let SimEvent::MsgDelivered { msg: m, at } = ev {
+                    if m.tag & BG_TAG == 0 {
+                        assert_eq!(m, fg, "payloads are never bent by background traffic");
+                        fg_at = Some(at);
+                    }
+                }
+            }
+            fg_at.expect("foreground message delivered")
+        };
+        let quiet_at = run(None);
+        assert_eq!(quiet_at, 100 + 10_100 + 1_000);
+        // A same-class neighbor on rank 0's NIC from t=0 delays it.
+        let noisy_at = run(Some(BgPlan {
+            seed: 1,
+            flows: vec![BgFlow {
+                src: 0,
+                dst: 2,
+                bytes: 50_000,
+                start_ns: 0,
+                period_ns: 1,
+                reps: 1,
+                priority: 1,
+            }],
+        }));
+        assert_eq!(noisy_at, 50_100 + 10_100 + 1_000, "queued behind the neighbor");
+    }
+
+    #[test]
+    fn per_tenant_accounting_splits_bytes_and_busy_time() {
+        let mut s = sim();
+        s.set_tenants(2);
+        s.send(msg(0, 1, 1_000, 1, 1)); // tenant 0's tag space
+        s.send(msg(2, 3, 2_000, 1, 1 + (1u64 << TENANT_TAG_SHIFT))); // tenant 1
+        s.set_background(BgPlan {
+            seed: 0,
+            flows: vec![BgFlow {
+                src: 1,
+                dst: 2,
+                bytes: 4_000,
+                start_ns: 0,
+                period_ns: 1,
+                reps: 1,
+                priority: 1,
+            }],
+        });
+        s.drain();
+        assert_eq!(s.num_tenants(), 2);
+        assert_eq!(s.stats.tenant_bytes, vec![1_000, 2_000, 4_000]);
+        assert_eq!(s.stats.tenant_msgs, vec![1, 1, 1]);
+        // Wire-busy lands on the owning tenant: overhead + bytes at 1 B/ns,
+        // each sender on its own uncontended NIC.
+        assert_eq!(s.stats.tenant_busy_ns, vec![1_100, 2_100, 4_100]);
+        // The aggregate stats are unchanged by the split.
+        assert_eq!(s.stats.bytes_sent, 7_000);
+        assert_eq!(s.stats.msgs_sent, 3);
+    }
+
+    #[test]
+    fn stragglers_persist_and_compose_with_chaos() {
+        let mut s = sim();
+        s.set_stragglers(StragglerPlan::parse("1:2.0", 4).unwrap());
+        s.compute(0, 10_000, 1);
+        s.compute(1, 10_000, 2);
+        assert_eq!(s.next().unwrap(), SimEvent::ComputeDone { node: 0, tag: 1, at: 10_000 });
+        assert_eq!(s.next().unwrap(), SimEvent::ComputeDone { node: 1, tag: 2, at: 20_000 });
+        // Still slow later (persistent, unlike chaos windows), and a
+        // chaos slowdown composes multiplicatively: 1.5 × 2.0 = 3×.
+        let mut slow = vec![1000u64; 4];
+        slow[1] = 1_500;
+        s.set_chaos(ChaosPlan { seed: 0, flaps: vec![], rail_deaths: vec![], slowdown_milli: slow });
+        s.compute(1, 10_000, 3);
+        assert_eq!(s.next().unwrap(), SimEvent::ComputeDone { node: 1, tag: 3, at: 50_000 });
+        // Messages are never slowed by stragglers.
+        s.send(msg(1, 2, 1_000, 1, 9));
+        match s.next().unwrap() {
+            SimEvent::MsgDelivered { at, .. } => assert_eq!(at, 50_000 + 2_100),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn straggler_plans_parse_and_validate() {
+        let p = StragglerPlan::parse("3:2.0, 1:1.5", 4).unwrap();
+        assert_eq!(p.factor_milli, vec![1000, 1500, 1000, 2000]);
+        assert_eq!(p.max_milli(), 2000);
+        assert_eq!(p.mean_milli(), 1375);
+        assert!(!p.is_quiet());
+        let all = StragglerPlan::parse("all:1.2", 3).unwrap();
+        assert_eq!(all.factor_milli, vec![1200; 3]);
+        assert!(StragglerPlan::parse("9:2.0", 4).is_err(), "node out of range");
+        assert!(StragglerPlan::parse("1", 4).is_err(), "missing factor");
+        assert!(StragglerPlan::parse("1:zero", 4).is_err(), "bad factor");
+        assert!(StragglerPlan::parse("1:0.0", 4).is_err(), "factor below range");
+        assert!(StragglerPlan::healthy(2).is_quiet());
+    }
+
+    #[test]
+    fn background_plan_generation_is_deterministic_and_valid() {
+        let topo = Topology::flat("t", 8.0, 1_000, 100, 1 << 20);
+        let a = BgPlan::generate(5, &topo, 8, 1_000_000);
+        let b = BgPlan::generate(5, &topo, 8, 1_000_000);
+        assert_eq!(a, b, "same seed must derive the same plan");
+        assert!(!a.flows.is_empty());
+        assert!(a.total_bytes() > 0);
+        for f in &a.flows {
+            assert!(f.src < 8 && f.dst < 8 && f.src != f.dst);
+            assert!(!topo.same_node(f.src, f.dst), "background flows ride NIC tiers");
+            assert!(f.reps >= 1 && f.period_ns >= 1);
+        }
+        assert_ne!(a, BgPlan::generate(6, &topo, 8, 1_000_000));
+        assert!(BgPlan::quiet(5).flows.is_empty());
+        // Shm peers are skipped in favor of NIC-tier partners.
+        let s = smp();
+        let g = BgPlan::generate(7, s.topology(), 4, 1_000_000);
+        for f in &g.flows {
+            assert!(!s.topology().same_node(f.src, f.dst));
+        }
+    }
+
+    #[test]
+    fn single_tenant_paths_are_untouched_by_tenant_machinery() {
+        // Default-constructed sim: tenant vectors stay empty, timings as
+        // every other test in this file pins them.
+        let mut s = sim();
+        s.send(msg(0, 1, 1_000, 1, 7));
+        s.drain();
+        assert!(s.stats.tenant_bytes.is_empty());
+        assert!(s.stats.tenant_msgs.is_empty());
+        assert!(s.stats.tenant_busy_ns.is_empty());
+        assert_eq!(s.num_tenants(), 0);
     }
 }

@@ -103,6 +103,28 @@ fn main() -> Result<()> {
                  with op in leave|join (e.g. --churn leave:3@1,join:3@2)"
             );
             eprintln!(
+                "  multi-tenant fabric: --tenants <n>[:disjoint] runs n \
+                 concurrent jobs over one fabric (colocated by default; \
+                 :disjoint gives each job its own rank block) and prints \
+                 per-tenant reports + a fairness: line (Jain's index)"
+            );
+            eprintln!(
+                "  background traffic: --background <seed> installs a seeded \
+                 noisy-neighbor flow schedule (same seed = same flows; bends \
+                 timing only, never training payloads)"
+            );
+            eprintln!(
+                "  stragglers: --straggler node:factor[,node:factor...] (or \
+                 all:factor) pins persistent per-node compute slowdowns, e.g. \
+                 --straggler 3:2.0 — unlike --chaos windows they never expire"
+            );
+            eprintln!(
+                "  contention-aware selection: --contention-aware re-ranks \
+                 collective picks from observed per-tier utilization after \
+                 one loaded iteration; --ef-tolerance <f> floors compressed \
+                 wire dtypes once the error-feedback residual bound nears f"
+            );
+            eprintln!(
                 "  chaos: --seed s [--churn spec] [simulate flags] — seeded \
                  chaos run, replayed twice (determinism check) + post-churn \
                  collective verification"
@@ -155,6 +177,22 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = engine_config(args)?;
+    // Multi-tenant path: `--tenants <n>[:disjoint]` runs n concurrent
+    // copies of this job over ONE shared fabric; `--contention-aware`
+    // re-ranks algorithm selection from observed per-tier utilization
+    // (works with one tenant too — background traffic alone is enough
+    // to shift picks). Either flag routes through the tenants driver.
+    let tenants = args
+        .get("tenants")
+        .map(mlsl::engine::TenantSpec::parse)
+        .transpose()
+        .map_err(|e| anyhow!(e))?;
+    let contention_aware = args.bool("contention-aware");
+    if tenants.is_some() || contention_aware {
+        let spec = tenants
+            .unwrap_or(mlsl::engine::TenantSpec { jobs: 1, disjoint: false });
+        return cmd_simulate_tenants(&cfg, spec, contention_aware);
+    }
     let desc = format!(
         "{} on {} nodes ({}, {:?}, group={}, batch={}/node, wire={})",
         cfg.model.name,
@@ -175,6 +213,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("  throughput       {:.1} samples/s", r.throughput_samples_per_s);
     println!("  bytes/node/run   {}", fmt_bytes(r.bytes_per_node));
     println!("  NIC preemptions  {}", r.preemptions);
+    // Surfaced straggler factors (chaos × persistent): these used to be
+    // write-only config — a slowed run was undiagnosable from the report.
+    if r.straggler_max_milli != 1000 {
+        println!(
+            "  straggler        max {:.2}x, mean {:.2}x per-node compute slowdown",
+            r.straggler_max_milli as f64 / 1000.0,
+            r.straggler_mean_milli as f64 / 1000.0,
+        );
+    }
     for line in &r.churn_log {
         println!("  churn            {line}");
     }
@@ -209,6 +256,49 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if timeline {
         println!("{}", r.timeline.ascii_gantt(100));
     }
+    Ok(())
+}
+
+/// Multi-tenant simulate: N concurrent jobs time-sharing one fabric,
+/// with optional background traffic, stragglers and contention-aware
+/// selection. Prints one `tenant <t>:` line per job plus the
+/// grep-stable `fairness:` summary — both are CI smoke targets.
+fn cmd_simulate_tenants(
+    cfg: &mlsl::engine::EngineConfig,
+    spec: mlsl::engine::TenantSpec,
+    contention_aware: bool,
+) -> Result<()> {
+    let tr = mlsl::engine::simulate_tenants(cfg, &spec, contention_aware);
+    println!(
+        "simulated: {} tenant(s) of {} on {} node(s) each ({}, {:?}, {}{})",
+        spec.jobs,
+        cfg.model.name,
+        cfg.dist.world(),
+        cfg.topo.name,
+        cfg.mode,
+        if spec.disjoint { "disjoint rank blocks" } else { "colocated" },
+        if contention_aware { ", contention-aware selection" } else { "" },
+    );
+    for (t, r) in tr.reports.iter().enumerate() {
+        println!(
+            "tenant {t}: iter {}, exposed comm {}, {}/node, straggler spread {}",
+            fmt_ns(r.iter_ns),
+            fmt_ns(r.exposed_comm_ns),
+            fmt_bytes(r.bytes_per_node),
+            fmt_ns(tr.straggler_spread_ns[t]),
+        );
+        if r.straggler_max_milli != 1000 {
+            println!(
+                "  straggler factors: max {:.2}x, mean {:.2}x (chaos × persistent)",
+                r.straggler_max_milli as f64 / 1000.0,
+                r.straggler_mean_milli as f64 / 1000.0,
+            );
+        }
+        for line in &r.churn_log {
+            println!("  churn            {line}");
+        }
+    }
+    println!("{}", tr.fairness_line());
     Ok(())
 }
 

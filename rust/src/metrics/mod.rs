@@ -15,6 +15,23 @@ use std::path::Path;
 use crate::trace::{Trace, TraceEvent};
 use crate::{Ns, Rank};
 
+/// Jain's fairness index over per-entity allocations:
+/// `J = (Σx)² / (n · Σx²)`. 1.0 = perfectly fair, `1/n` = one entity
+/// holds everything; 1.0 by convention for empty or all-zero inputs
+/// (nothing was allocated, so nothing was unfair).
+pub fn jain(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (n as f64 * sq)
+}
+
 /// Process-global named counters. Monotonic u64s behind a mutex: cheap
 /// enough for warning paths and per-probe bumps, and assertable from
 /// tests and the `mlsl trace` CLI without scraping stderr. Tests that
@@ -299,5 +316,15 @@ mod tests {
         assert_eq!(tl.spans[0].track, "compute");
         assert_eq!((tl.spans[1].start, tl.spans[1].end), (60, 60));
         assert_eq!(tl.spans[1].track, "issue");
+    }
+
+    #[test]
+    fn jain_index_brackets_fairness() {
+        assert_eq!(jain(&[]), 1.0);
+        assert_eq!(jain(&[0.0, 0.0]), 1.0);
+        assert!((jain(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12, "equal shares");
+        assert!((jain(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12, "one hog → 1/n");
+        let mid = jain(&[3.0, 1.0]);
+        assert!(mid > 0.5 && mid < 1.0, "{mid}");
     }
 }

@@ -66,6 +66,6 @@ pub mod policy;
 pub mod probe;
 pub mod table;
 
-pub use policy::SelectionPolicy;
+pub use policy::{Contention, SelectionPolicy};
 pub use probe::{tune, tune_threaded, ProbeSpec};
 pub use table::{out_of_grid_count, Cand, TuningTable};

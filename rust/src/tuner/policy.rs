@@ -17,6 +17,7 @@ use crate::collectives::program::CollectiveKind;
 use crate::collectives::selector;
 use crate::collectives::{Algorithm, WireDtype};
 use crate::fabric::topology::Topology;
+use crate::trace::Utilization;
 use crate::Ns;
 
 use super::table::{Cand, TuningTable};
@@ -67,6 +68,99 @@ fn fits_tiers(alg: Algorithm, topo: &Topology) -> bool {
             groups.iter().all(|g| sizes.contains(&g))
         }
         _ => true,
+    }
+}
+
+/// Observed fabric congestion, per NIC level, in milli-units of
+/// AVAILABLE egress fraction (1000 = quiet; 300 = 70% of the tier's
+/// wires busy with other tenants' traffic). Built from the trace
+/// layer's windowed utilization ([`Contention::from_utilization`]) and
+/// consumed by the `_contended` choosers: a quiet-fabric tuning table is
+/// measurably wrong next to a saturating neighbor, so tuned picks are
+/// re-ranked by each candidate's *predicted degradation* on a derated
+/// topology view instead of being trusted verbatim.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Contention {
+    /// Available egress fraction per topology level, milli-units.
+    /// Missing levels count as quiet (1000).
+    pub avail_milli: Vec<u64>,
+}
+
+impl Contention {
+    /// A quiet fabric (no correction — the choosers delegate bitwise).
+    pub fn quiet() -> Self {
+        Self::default()
+    }
+
+    /// No level observed under load?
+    pub fn is_quiet(&self) -> bool {
+        self.avail_milli.iter().all(|&a| a >= 1000)
+    }
+
+    /// Available fraction at `level` (milli-units), clamped to
+    /// [50, 1000] — even a fully-saturated tier leaves the correction
+    /// finite.
+    pub fn avail_at(&self, level: usize) -> u64 {
+        self.avail_milli.get(level).copied().unwrap_or(1000).clamp(50, 1000)
+    }
+
+    /// Mean observed per-level egress utilization over the whole
+    /// windowed series, normalized by each level's aggregate wire
+    /// capacity (`p × rails_at(level)`). This measures TOTAL load —
+    /// including the observer's own traffic — which overstates the
+    /// correction slightly; the derate clamp keeps that benign.
+    pub fn from_utilization(u: &Utilization, topo: &Topology) -> Self {
+        let levels = topo.num_levels();
+        let mut busy: Vec<u128> = vec![0; levels];
+        let mut span: u128 = 0;
+        for w in &u.windows {
+            span += (w.end - w.start) as u128;
+            for (&level, &ns) in &w.by_level {
+                if let Some(b) = busy.get_mut(level) {
+                    *b += ns as u128;
+                }
+            }
+        }
+        let mut avail_milli = vec![1000u64; levels];
+        if span > 0 && u.p > 0 {
+            for (level, slot) in avail_milli.iter_mut().enumerate() {
+                let wires = (u.p as u128) * topo.rails_at(level).max(1) as u128;
+                let used = (busy[level] * 1000 / (span * wires)).min(950) as u64;
+                *slot = 1000 - used;
+            }
+        }
+        Self { avail_milli }
+    }
+
+    /// A topology view bent to the observed load: each NIC tier's
+    /// bandwidth scales by its available fraction AND its per-message
+    /// overhead inflates by the expected queueing delay
+    /// `u/(1−u) × one chunk's quiet service time` (M/M/1-flavored).
+    /// The overhead term is what makes the correction rank-aware: under
+    /// saturating same-class neighbors every ROUND of a collective pays
+    /// a queueing stall, penalizing round-heavy algorithms — a pure
+    /// bandwidth derate would miss that and re-rank the wrong way.
+    pub fn derate(&self, topo: &Topology) -> Topology {
+        let mut t = topo.clone();
+        for level in topo.nic_levels() {
+            let avail = self.avail_at(level);
+            if avail >= 1000 {
+                continue;
+            }
+            let used = 1000 - avail;
+            let gbps = topo.gbps_at(level) * avail as f64 / 1000.0;
+            let service =
+                topo.overhead_at(level) + crate::fabric::wire_ns(topo.chunk_bytes, topo.gbps_at(level));
+            let stall = service.saturating_mul(used) / avail;
+            if level < t.tiers.len() {
+                t.tiers[level].gbps = gbps;
+                t.tiers[level].per_msg_overhead_ns += stall;
+            } else {
+                t.link_gbps = gbps;
+                t.per_msg_overhead_ns += stall;
+            }
+        }
+        t
     }
 }
 
@@ -341,6 +435,92 @@ impl SelectionPolicy {
         }
     }
 
+    /// [`Self::choose_for_members_wire`] with an observed-contention
+    /// correction. `None` (or a quiet [`Contention`]) delegates to the
+    /// plain chooser BITWISE — single-tenant runs cannot drift. Under
+    /// load, tuned policies re-rank their measured quiet-fabric cells by
+    /// each candidate's analytically-predicted degradation on the
+    /// derated topology (measured × derated/quiet ratio), and the
+    /// analytic policy simply chooses on the derated fabric.
+    #[allow(clippy::too_many_arguments)]
+    pub fn choose_for_members_wire_contended(
+        &self,
+        topo: &Topology,
+        members: &[crate::Rank],
+        kind: CollectiveKind,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+        contention: Option<&Contention>,
+    ) -> (Algorithm, WireDtype) {
+        let Some(c) = contention.filter(|c| !c.is_quiet()) else {
+            return self.choose_for_members_wire(topo, members, kind, bytes, wires, slowdown_milli);
+        };
+        if kind != CollectiveKind::Allreduce {
+            return (self.choose_for_members(topo, members, kind, bytes), WireDtype::F32);
+        }
+        let p = members.len();
+        if p <= 1 {
+            return (Algorithm::Ring, wires.first().copied().unwrap_or_default());
+        }
+        let derated = c.derate(topo);
+        let depth = topo.aligned_tier_depth(members);
+        let usable = topo.chooser_tier_depth(members);
+        // Quiet and derated views share the tier structure, so the
+        // alignment gate resolves identically on both.
+        let (restricted_q, restricted_d);
+        let (qview, dview) = if usable >= topo.tiers.len() {
+            (topo, &derated)
+        } else {
+            restricted_q = topo.restrict_tiers(usable);
+            restricted_d = derated.restrict_tiers(usable);
+            (&restricted_q, &restricted_d)
+        };
+        if depth > 0 {
+            self.choose_allreduce_wire_contended(qview, dview, p, bytes, wires, slowdown_milli)
+        } else {
+            selector::choose_flat_algorithm_wire(&derated, p, bytes, wires, slowdown_milli)
+        }
+    }
+
+    /// Aligned-communicator allreduce pick under contention: table cells
+    /// (measured on the QUIET fabric) are re-ranked by the analytic
+    /// quiet→derated time ratio of each candidate, so a measured winner
+    /// whose advantage evaporates under per-round queueing stalls loses
+    /// to a candidate that degrades less. Falls back to choosing
+    /// analytically on the derated fabric when no table cell applies.
+    fn choose_allreduce_wire_contended(
+        &self,
+        quiet: &Topology,
+        derated: &Topology,
+        p: usize,
+        bytes: u64,
+        wires: &[WireDtype],
+        slowdown_milli: u64,
+    ) -> (Algorithm, WireDtype) {
+        if let Some(t) = self.table_for(quiet) {
+            let reranked = t
+                .interpolated_cand(CollectiveKind::Allreduce, p, bytes)
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|((a, w), _)| {
+                    wires.contains(w) && fits_tiers(*a, quiet) && allreduce_legal(*a, p)
+                })
+                .map(|((a, w), measured)| {
+                    let q = selector::predict_allreduce_ns_wire(quiet, a, p, bytes, w, slowdown_milli)
+                        .max(1);
+                    let d =
+                        selector::predict_allreduce_ns_wire(derated, a, p, bytes, w, slowdown_milli);
+                    ((a, w), measured * d as f64 / q as f64)
+                })
+                .min_by(|x, y| x.1.partial_cmp(&y.1).expect("predicted times are finite"));
+            if let Some((cand, _)) = reranked {
+                return cand;
+            }
+        }
+        selector::choose_algorithm_wire(derated, p, bytes, wires, slowdown_milli)
+    }
+
     /// Wire-precision-aware [`Self::predict_allreduce_ns`]: the predicted
     /// time of the best (algorithm, wire) pick offered by `wires`.
     pub fn predict_allreduce_ns_wire(
@@ -591,6 +771,144 @@ mod tests {
             1000,
         );
         assert_eq!(w, WireDtype::F32);
+    }
+
+    #[test]
+    fn quiet_contention_delegates_to_the_plain_chooser_bitwise() {
+        let topo = Topology::eth_10g_smp(2);
+        let mut spec = ProbeSpec::quick();
+        spec.max_ranks = 8;
+        let policy = SelectionPolicy::Tuned(tune(&topo, &spec));
+        let members: Vec<usize> = (0..8).collect();
+        for bytes in [1u64 << 10, 1 << 20, 16 << 20] {
+            let plain =
+                policy.choose_for_members_wire(&topo, &members, CollectiveKind::Allreduce, bytes, &WireDtype::ALL, 1000);
+            for c in [None, Some(Contention::quiet())] {
+                assert_eq!(
+                    policy.choose_for_members_wire_contended(
+                        &topo,
+                        &members,
+                        CollectiveKind::Allreduce,
+                        bytes,
+                        &WireDtype::ALL,
+                        1000,
+                        c.as_ref(),
+                    ),
+                    plain,
+                    "bytes={bytes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contention_derates_bandwidth_and_inflates_overhead() {
+        let topo = Topology::eth_10g();
+        let c = Contention { avail_milli: vec![250] }; // top tier 75% busy
+        assert!(!c.is_quiet());
+        let d = c.derate(&topo);
+        assert!((d.link_gbps - topo.link_gbps * 0.25).abs() < 1e-9);
+        assert!(d.per_msg_overhead_ns > topo.per_msg_overhead_ns, "queueing stall term");
+        // A quiet contention leaves the topology untouched.
+        let q = Contention::quiet().derate(&topo);
+        assert_eq!(q.link_gbps, topo.link_gbps);
+        assert_eq!(q.per_msg_overhead_ns, topo.per_msg_overhead_ns);
+        // Saturation clamps: avail never below 5%.
+        let full = Contention { avail_milli: vec![0] };
+        assert_eq!(full.avail_at(0), 50);
+        assert!(full.derate(&topo).link_gbps > 0.0);
+    }
+
+    #[test]
+    fn contention_from_utilization_reads_per_level_busy_fractions() {
+        use crate::trace::UtilWindow;
+        let topo = Topology::eth_10g(); // flat: level 0, 1 rail
+        // Hand-built series: one 1000 ns window, level 0 busy 800 of the
+        // 1000 × p(=1) wire-ns capacity.
+        let mut w = UtilWindow { start: 0, end: 1_000, rail_busy: vec![800], ..Default::default() };
+        w.by_level.insert(0, 800);
+        let u = Utilization { window_ns: 1_000, p: 1, rails: 1, windows: vec![w] };
+        let c = Contention::from_utilization(&u, &topo);
+        assert_eq!(c.avail_milli, vec![200]);
+        assert!(!c.is_quiet());
+        // An empty series is quiet.
+        let empty = Utilization { window_ns: 1_000, p: 1, rails: 1, windows: vec![] };
+        assert!(Contention::from_utilization(&empty, &topo).is_quiet());
+    }
+
+    #[test]
+    fn analytic_contended_pick_equals_choosing_on_the_derated_fabric() {
+        let policy = SelectionPolicy::default();
+        let c = Contention { avail_milli: vec![100, 100, 100] };
+        for topo in [Topology::eth_10g(), Topology::by_name("eth10g-x2").unwrap()] {
+            let derated = c.derate(&topo);
+            let members: Vec<usize> = (0..8).collect();
+            for bytes in [1u64 << 12, 1 << 20, 16 << 20] {
+                let contended = policy.choose_for_members_wire_contended(
+                    &topo,
+                    &members,
+                    CollectiveKind::Allreduce,
+                    bytes,
+                    &WireDtype::ALL,
+                    1000,
+                    Some(&c),
+                );
+                let on_derated = policy.choose_for_members_wire(
+                    &derated,
+                    &members,
+                    CollectiveKind::Allreduce,
+                    bytes,
+                    &WireDtype::ALL,
+                    1000,
+                );
+                assert_eq!(contended, on_derated, "{} bytes={bytes}", topo.name);
+            }
+        }
+    }
+
+    #[test]
+    fn contention_reranks_a_near_tied_table_toward_fewer_rounds() {
+        use crate::tuner::table::MeasuredCell;
+        // Quiet measurements: ring narrowly beats recursive doubling at
+        // 1 MiB over p=8 on 10GbE. Under a 95%-busy spine every round
+        // pays a queueing stall, and ring runs ~4.7× the rounds — the
+        // re-ranked pick must flip to the round-light candidate.
+        let topo = Topology::eth_10g();
+        let mut table = crate::tuner::TuningTable::for_topology(&topo);
+        table.insert(
+            CollectiveKind::Allreduce,
+            MeasuredCell::new(
+                8,
+                1 << 20,
+                vec![(Algorithm::Ring, 100_000), (Algorithm::RecursiveDoubling, 110_000)],
+            ),
+        );
+        let policy = SelectionPolicy::Tuned(table);
+        let members: Vec<usize> = (0..8).collect();
+        let quiet_pick = policy.choose_for_members_wire(
+            &topo,
+            &members,
+            CollectiveKind::Allreduce,
+            1 << 20,
+            &[WireDtype::F32],
+            1000,
+        );
+        assert_eq!(quiet_pick.0, Algorithm::Ring, "quiet table prefers ring");
+        let c = Contention { avail_milli: vec![50] };
+        let contended_pick = policy.choose_for_members_wire_contended(
+            &topo,
+            &members,
+            CollectiveKind::Allreduce,
+            1 << 20,
+            &[WireDtype::F32],
+            1000,
+            Some(&c),
+        );
+        assert_eq!(
+            contended_pick.0,
+            Algorithm::RecursiveDoubling,
+            "re-rank must favor the round-light algorithm under saturation"
+        );
     }
 
     #[test]

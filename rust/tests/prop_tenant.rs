@@ -1,0 +1,283 @@
+//! Property tests for the multi-tenant fabric: tenants share WIRES,
+//! never payloads — and the single-tenant path is bitwise unchanged.
+//!
+//! Three invariant families (the PR's determinism contract):
+//!
+//! * **tenant isolation** — two jobs on disjoint rank blocks never
+//!   exchange a message: every delivered training message stays inside
+//!   its tenant's block and carries that tenant's tag bits, and each
+//!   disjoint tenant's report is bitwise equal to the single-job run
+//!   (sharing a fabric with an idle-NIC neighbor changes nothing);
+//! * **single-tenant equivalence** — `simulate_tenants` with one
+//!   colocated tenant and a quiet fabric reproduces `simulate`'s report
+//!   field for field across randomized configs;
+//! * **background bends timing only** — a seeded [`BgPlan`] may delay
+//!   training messages but never changes their multiset (sources,
+//!   destinations, byte counts) nor the training byte volume, and the
+//!   same seed replays a byte-identical event stream.
+
+use mlsl::collectives::program::{build, CollectiveKind};
+use mlsl::collectives::simexec::SimCollectives;
+use mlsl::collectives::{Algorithm as A, WireDtype};
+use mlsl::engine::{simulate, simulate_tenants, CommMode, EngineConfig, TenantSpec};
+use mlsl::fabric::topology::Topology;
+use mlsl::fabric::{tenant_of_tag, BgPlan, NetSim, SimEvent, StragglerPlan, BG_TAG, TENANT_TAG_SHIFT};
+use mlsl::models::ModelDesc;
+use mlsl::util::proptest::{run as prop_run, Config};
+
+fn engine_cfg(model: &str, p: usize, mode: CommMode, iters: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new(
+        ModelDesc::by_name(model).expect("test model exists"),
+        Topology::eth_10g(),
+        p,
+    );
+    cfg.mode = mode;
+    cfg.iterations = iters;
+    cfg
+}
+
+#[test]
+fn prop_disjoint_tenants_never_exchange_payloads() {
+    prop_run(
+        Config { cases: 50, seed: 91 },
+        |r| {
+            let p = 2 + r.usize_below(5); // per-tenant ranks, 2..7
+            let n = 1 + r.usize_below(4_000);
+            let alg = if p.is_power_of_two() && r.below(2) == 0 {
+                A::RecursiveDoubling
+            } else {
+                A::Ring
+            };
+            let kind = if r.below(2) == 0 {
+                CollectiveKind::Allreduce
+            } else {
+                CollectiveKind::Allgather
+            };
+            (p, n, kind, alg)
+        },
+        |&(p, n, kind, alg)| {
+            // Two tenants, disjoint blocks [0,p) and [p,2p), one fabric.
+            let topo = Topology::flat("tenanttest", 8.0, 1_000, 100, 512);
+            let mut sim = NetSim::new(topo, 2 * p);
+            sim.set_tenants(2);
+            let progs = build(kind, alg, p, n).map_err(|e| e.to_string())?;
+            let mut exec = SimCollectives::new();
+            let mut completions = Vec::new();
+            for t in 0..2u64 {
+                let map: Vec<usize> = (0..p).map(|r| r + (t as usize) * p).collect();
+                let done = exec.post_mapped(
+                    &mut sim,
+                    1 + (t << TENANT_TAG_SHIFT),
+                    progs.clone(),
+                    map,
+                    WireDtype::F32,
+                    1,
+                );
+                completions.extend(done);
+            }
+            while exec.in_flight() > 0 {
+                let ev = sim
+                    .next()
+                    .ok_or_else(|| format!("{kind:?}/{alg} p={p}: deadlock"))?;
+                if let SimEvent::MsgDelivered { msg, .. } = &ev {
+                    let t = tenant_of_tag(msg.tag, 2);
+                    let block = t * p..(t + 1) * p;
+                    if !block.contains(&msg.src) || !block.contains(&msg.dst) {
+                        return Err(format!(
+                            "{kind:?}/{alg} p={p}: tenant {t} message {}→{} escaped \
+                             its rank block {block:?}",
+                            msg.src, msg.dst
+                        ));
+                    }
+                }
+                exec.on_event_into(&mut sim, &ev, &mut completions);
+            }
+            if completions.len() != 2 * p {
+                return Err(format!(
+                    "{kind:?}/{alg} p={p}: {} of {} ranks completed",
+                    completions.len(),
+                    2 * p
+                ));
+            }
+            // Symmetric tenants on symmetric blocks: identical accounting.
+            if sim.stats.tenant_bytes[0] != sim.stats.tenant_bytes[1]
+                || sim.stats.tenant_msgs[0] != sim.stats.tenant_msgs[1]
+            {
+                return Err(format!(
+                    "{kind:?}/{alg} p={p}: symmetric tenants accounted differently \
+                     ({:?} bytes, {:?} msgs)",
+                    sim.stats.tenant_bytes, sim.stats.tenant_msgs
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_disjoint_tenant_reports_match_the_single_job_bitwise() {
+    prop_run(
+        Config { cases: 8, seed: 92 },
+        |r| {
+            let p = [2, 4][r.usize_below(2)];
+            let model = ["resnet50", "vgg16"][r.usize_below(2)];
+            let jobs = 2 + r.usize_below(2); // 2..4 tenants
+            (p, model, jobs)
+        },
+        |&(p, model, jobs)| {
+            let cfg = engine_cfg(model, p, CommMode::BulkSync, 2);
+            let single = simulate(cfg.clone());
+            let multi = simulate_tenants(&cfg, &TenantSpec { jobs, disjoint: true }, false);
+            for (t, r) in multi.reports.iter().enumerate() {
+                if r.iter_ns != single.iter_ns
+                    || r.per_iter_ns != single.per_iter_ns
+                    || r.bytes_per_node != single.bytes_per_node
+                    || r.exposed_comm_ns != single.exposed_comm_ns
+                {
+                    return Err(format!(
+                        "{model} p={p} jobs={jobs}: disjoint tenant {t} diverged from \
+                         the single job (iter {} vs {})",
+                        r.iter_ns, single.iter_ns
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_tenant_is_bitwise_the_plain_engine() {
+    prop_run(
+        Config { cases: 10, seed: 93 },
+        |r| {
+            let p = [2, 4, 8][r.usize_below(3)];
+            let model = ["resnet50", "googlenet"][r.usize_below(2)];
+            let mode =
+                [CommMode::BulkSync, CommMode::MlslAsync { comm_cores: 2 }][r.usize_below(2)];
+            (p, model, mode)
+        },
+        |&(p, model, mode)| {
+            let cfg = engine_cfg(model, p, mode, 2);
+            let single = simulate(cfg.clone());
+            let multi = simulate_tenants(&cfg, &TenantSpec { jobs: 1, disjoint: false }, false);
+            let r = &multi.reports[0];
+            if r.iter_ns != single.iter_ns
+                || r.per_iter_ns != single.per_iter_ns
+                || r.bytes_per_node != single.bytes_per_node
+                || r.exposed_comm_ns != single.exposed_comm_ns
+                || r.preemptions != single.preemptions
+            {
+                return Err(format!(
+                    "{model} p={p} {mode:?}: --tenants 1 diverged from the plain \
+                     engine (iter {} vs {}, bytes {} vs {})",
+                    r.iter_ns, single.iter_ns, r.bytes_per_node, single.bytes_per_node
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_background_bends_timing_never_payloads() {
+    prop_run(
+        Config { cases: 40, seed: 94 },
+        |r| {
+            let p = 2 + r.usize_below(7); // 2..9
+            let n = 1 + r.usize_below(3_000);
+            let seed = r.below(u64::MAX);
+            (p, n, seed)
+        },
+        |&(p, n, seed)| {
+            type Delivered = Vec<(usize, usize, u64)>;
+            let topo = Topology::flat("bgtest", 8.0, 1_000, 100, 512);
+            let progs =
+                build(CollectiveKind::Allreduce, A::Ring, p, n).map_err(|e| e.to_string())?;
+            let run = |bg: Option<BgPlan>| -> Result<(Delivered, Vec<SimEvent>), String> {
+                let mut sim = NetSim::new(topo.clone(), p);
+                sim.set_tenants(1);
+                if let Some(plan) = bg {
+                    sim.set_background(plan);
+                }
+                let mut exec = SimCollectives::new();
+                let mut completions =
+                    exec.post(&mut sim, 1, progs.clone(), WireDtype::F32, 1);
+                let mut training = Vec::new();
+                let mut events = Vec::new();
+                while exec.in_flight() > 0 {
+                    let ev =
+                        sim.next().ok_or_else(|| format!("p={p}: deadlock under bg"))?;
+                    if let SimEvent::MsgDelivered { msg, .. } = &ev {
+                        if msg.tag & BG_TAG == 0 {
+                            training.push((msg.src, msg.dst, msg.bytes));
+                        }
+                    }
+                    events.push(ev.clone());
+                    exec.on_event_into(&mut sim, &ev, &mut completions);
+                }
+                training.sort_unstable();
+                Ok((training, events))
+            };
+            let (quiet, _) = run(None)?;
+            // Horizon spanning the collective so flows actually overlap it.
+            let plan = BgPlan::generate(seed, &topo, p, 500_000);
+            let (noisy, ev_a) = run(Some(plan.clone()))?;
+            if noisy != quiet {
+                return Err(format!(
+                    "p={p} seed={seed}: background changed the delivered \
+                     training-message multiset"
+                ));
+            }
+            // Same seed ⇒ byte-identical event stream (bg messages included).
+            let (_, ev_b) = run(Some(plan))?;
+            if ev_a != ev_b {
+                return Err(format!("p={p} seed={seed}: bg event streams diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stragglers_bend_timing_never_traffic() {
+    prop_run(
+        Config { cases: 6, seed: 95 },
+        |r| {
+            let p = [2, 4][r.usize_below(2)];
+            let node = r.usize_below(p);
+            let factor = 1.5 + (r.below(30) as f64) / 10.0; // 1.5x..4.5x
+            (p, node, factor)
+        },
+        |&(p, node, factor)| {
+            let healthy = simulate(engine_cfg("resnet50", p, CommMode::BulkSync, 2));
+            let mut cfg = engine_cfg("resnet50", p, CommMode::BulkSync, 2);
+            cfg.straggler =
+                Some(StragglerPlan::parse(&format!("{node}:{factor}"), p).unwrap());
+            let slow = simulate(cfg);
+            if slow.bytes_per_node != healthy.bytes_per_node {
+                return Err(format!(
+                    "p={p} straggler {node}:{factor}: traffic changed ({} vs {})",
+                    slow.bytes_per_node, healthy.bytes_per_node
+                ));
+            }
+            if slow.iter_ns < healthy.iter_ns {
+                return Err(format!(
+                    "p={p} straggler {node}:{factor}: run got FASTER ({} vs {})",
+                    slow.iter_ns, healthy.iter_ns
+                ));
+            }
+            // Lockstep sync bounds the damage at the straggler's own
+            // factor: compute scales by it, communication does not.
+            let bound = (healthy.iter_ns as f64 * (factor + 0.05)) as u64;
+            if slow.iter_ns > bound {
+                return Err(format!(
+                    "p={p} straggler {node}:{factor}: slowdown cascaded \
+                     ({} vs healthy {}, bound {})",
+                    slow.iter_ns, healthy.iter_ns, bound
+                ));
+            }
+            Ok(())
+        },
+    );
+}
